@@ -1,0 +1,66 @@
+//! Quickstart: the library's public GEMM API in five minutes.
+//!
+//! Multiplies a ternary activation matrix by pre-packed ternary weights
+//! three ways — the emulated-NEON driver (the paper's exact instruction
+//! sequences), the native fast path, and the scalar oracle — and checks
+//! they agree. Then does the same for binary and ternary-binary products.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tbgemm::gemm::driver::{GemmDriver, Lhs};
+use tbgemm::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
+use tbgemm::gemm::native::{BitRows, PlaneRows};
+use tbgemm::gemm::reference::gemm_i8;
+use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2022);
+    // A 72×256 ternary activation matrix times a 256×24 ternary weight
+    // matrix — one point of the paper's experimental grid.
+    let (m, k, n) = (72, 256, 24);
+
+    // --- TNN ---------------------------------------------------------
+    let a = MatI8::random_ternary(m, k, &mut rng);
+    let b = MatI8::random_ternary(k, n, &mut rng);
+
+    // 1. Pack the weights once, offline (the paper's PackedB).
+    let driver = GemmDriver::new_tnn(&b);
+    // 2. Multiply with the emulated NEON microkernels.
+    let c_emu = driver.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+    // 3. Multiply with the native fast path.
+    let ap = PlaneRows::from_ternary(&a);
+    let bt = PlaneRows::from_ternary_transposed(&b);
+    let mut c_native = MatI32::zeros(m, n);
+    tnn_gemm(&ap, &bt, &mut c_native);
+    // 4. Check both against the scalar oracle.
+    let oracle = gemm_i8(&a, &b);
+    assert_eq!(c_emu.data, oracle.data);
+    assert_eq!(c_native.data, oracle.data);
+    println!("TNN {m}×{k} · {k}×{n}: emulated ≡ native ≡ oracle ✓");
+
+    // --- TBN: ternary activations × binary weights --------------------
+    let bw = MatI8::random_binary(k, n, &mut rng);
+    let c_emu = GemmDriver::new_tbn(&bw).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+    let mut c_native = MatI32::zeros(m, n);
+    tbn_gemm(&ap, &BitRows::from_binary_transposed(&bw), &mut c_native);
+    let oracle = gemm_i8(&a, &bw);
+    assert_eq!(c_emu.data, oracle.data);
+    assert_eq!(c_native.data, oracle.data);
+    println!("TBN {m}×{k} · {k}×{n}: emulated ≡ native ≡ oracle ✓");
+
+    // --- BNN: binary × binary -----------------------------------------
+    let ab = MatI8::random_binary(m, k, &mut rng);
+    let c_emu = GemmDriver::new_bnn(&bw).multiply_emulated(Lhs::I8(&ab)).unwrap_i32();
+    let mut c_native = MatI32::zeros(m, n);
+    bnn_gemm(&BitRows::from_binary(&ab), &BitRows::from_binary_transposed(&bw), &mut c_native);
+    let oracle = gemm_i8(&ab, &bw);
+    assert_eq!(c_emu.data, oracle.data);
+    assert_eq!(c_native.data, oracle.data);
+    println!("BNN {m}×{k} · {k}×{n}: emulated ≡ native ≡ oracle ✓");
+
+    println!("\nAll three low-bit multiplications verified. Next steps:");
+    println!("  repro table2            # regenerate the paper's Table II");
+    println!("  repro table3 --smoke    # a quick Table III run");
+    println!("  cargo run --release --example cnn_inference");
+}

@@ -1,0 +1,69 @@
+//! Reproduce every table of the paper in one run:
+//!
+//! * Table I  — truth tables (verified exhaustively),
+//! * Table II — microkernel instruction counts (measured on the emulated
+//!   NEON path),
+//! * Table III — the efficiency-ratio matrix, both *predicted* by the
+//!   Cortex-A73 cost model and *measured* on this host's native paths
+//!   (a reduced grid by default; pass `--full` for all 64 points).
+//!
+//! Run: `cargo run --release --example table_repro [-- --full]`
+
+use tbgemm::bench::{grid, predicted, ratio};
+use tbgemm::costmodel::table2;
+use tbgemm::gemm::encode;
+use tbgemm::gemm::Kind;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+
+    // ---- Table I ------------------------------------------------------
+    println!("=== Table I: exhaustive truth-table check ===");
+    let mut checked = 0;
+    for x in [-1i8, 0, 1] {
+        for y in [-1i8, 0, 1] {
+            let (xp, xm) = encode::encode_ternary(x);
+            let (yp, ym) = encode::encode_ternary(y);
+            let (zp, zm) = encode::ternary_mul(xp, xm, yp, ym);
+            assert_eq!(encode::decode_ternary(zp, zm), x * y);
+            checked += 1;
+        }
+        for y in [-1i8, 1] {
+            let (xp, xm) = encode::encode_ternary(x);
+            let (up, um) = encode::tbn_mul(xp, xm, encode::encode_binary(y));
+            assert_eq!(encode::decode_ternary(up, um), x * y);
+            checked += 1;
+        }
+    }
+    println!("all {checked} ternary / ternary-binary products correct ✓\n");
+
+    // ---- Table II -------------------------------------------------------
+    println!("=== Table II ===");
+    let rows = table2::generate();
+    print!("{}", table2::render(&rows));
+    println!();
+
+    // ---- Table III (predicted) -----------------------------------------
+    println!("=== Table III, predicted by the Cortex-A73 cost model ===");
+    let g = grid::paper_grid();
+    let m = ratio::ratio_matrix(&predicted::predict_grid(&g));
+    print!("{}", ratio::render_ratio_table(&m, "predicted over the full 64-point grid"));
+    println!();
+
+    // ---- Table III (measured) -------------------------------------------
+    let g = if full { grid::paper_grid() } else { grid::smoke_grid() };
+    println!("=== Table III, measured on this host ({} grid points) ===", g.len());
+    let times: Vec<_> = Kind::ALL
+        .iter()
+        .map(|&k| {
+            eprintln!("  timing {}...", k.label());
+            grid::time_algorithm(k, &g, 3, 5, 0x7AB1E5)
+        })
+        .collect();
+    let m = ratio::ratio_matrix(&times);
+    print!("{}", ratio::render_ratio_table(&m, "measured (native paths, x86-64 host)"));
+    println!("\nheadline claims:");
+    for (desc, ours, paper) in ratio::headline(&m) {
+        println!("  {desc:<40} ours {ours:>5.2}  paper {paper:>5.2}");
+    }
+}

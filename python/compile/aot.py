@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the L2 model and standalone L1 kernel entry points
+to HLO **text** artifacts the Rust runtime loads.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import lowbit
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default HLO printer elides large constant literals as
+    # "{...}", which xla_extension's text *parser* silently zero-fills —
+    # a model with folded weights then runs but outputs garbage/zeros.
+    # Print with large constants included (and verify none were elided).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The old parser rejects newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant literal"
+    return text
+
+
+def lower_model(weights: model.ModelWeights):
+    """The serving model: f32[B,H,W,C] -> f32[B,CLASSES] with weights
+    folded in as constants (packed once, offline)."""
+
+    def fn(x):
+        return (model.forward(weights, x),)
+
+    spec = jax.ShapeDtypeStruct(
+        (model.BATCH, model.INPUT_HW, model.INPUT_HW, model.INPUT_C), jnp.float32
+    )
+    return jax.jit(fn).lower(spec)
+
+
+def lower_tnn_gemm(m=72, n=24, k=256):
+    """Standalone ternary GEMM on a paper-grid shape; f32 I/O (0/1 plane
+    matrices in, f32 accumulators out) so the Rust side stays literal-
+    friendly."""
+
+    def fn(ap, am, bp, bm):
+        out = lowbit.tnn_gemm(
+            ap.astype(jnp.int8), am.astype(jnp.int8),
+            bp.astype(jnp.int8), bm.astype(jnp.int8),
+        )
+        return (out.astype(jnp.float32),)
+
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return jax.jit(fn).lower(a, a, b, b)
+
+
+def lower_bnn_gemm(m=72, n=24, k=256):
+    def fn(ab, bb):
+        out = lowbit.bnn_gemm(ab.astype(jnp.int8), bb.astype(jnp.int8))
+        return (out.astype(jnp.float32),)
+
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return jax.jit(fn).lower(a, b)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    weights = model.ModelWeights(seed=args.seed)
+    artifacts = {
+        "model.hlo.txt": lower_model(weights),
+        "tnn_gemm.hlo.txt": lower_tnn_gemm(),
+        "bnn_gemm.hlo.txt": lower_bnn_gemm(),
+    }
+    for name, lowered in artifacts.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import lowbit, ref  # noqa: F401

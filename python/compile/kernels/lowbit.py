@@ -1,0 +1,133 @@
+"""L1 — Pallas kernels for the paper's low-bit matrix products, adapted
+from ARM NEON to the TPU execution model.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU
+kernels exist because CPUs have no sub-8-bit datapath — they emulate one
+with XOR/AND + popcount over 128-bit registers. A TPU's throughput lives
+in the MXU systolic array, which natively contracts int8/bf16 operands
+with wide accumulation, so the *encoding stays* (the 2-bit (+,−) planes /
+1-bit binary planes are the storage and interchange format — 16× smaller
+HBM traffic than f32) and the *popcount trick is replaced* by on-the-fly
+plane reconstruction feeding the MXU:
+
+* TNN:  C = (A⁺ − A⁻) @ (B⁺ − B⁻)   (operands in {−1,0,1} as int8)
+* TBN:  C = (A⁺ − A⁻) @ (1 − 2·B♭)
+* BNN:  C = (1 − 2·A♭) @ (1 − 2·B♭)  — algebraically identical to the
+  paper's eq. (6) `k − 2·popcount(a⊕b)`.
+
+The paper's cache blocking (Ablock/Bblock in L1) becomes BlockSpec tiling
+(HBM→VMEM): the grid walks (M/bm, N/bn) tiles with the full depth per
+tile (depths in the paper's grid, ≤512, keep a (bm,K)+(K,bn)+(bm,bn)
+working set far below VMEM); the 16×8 register microkernel becomes the
+MXU's native 128×128 tile. Kernels run with interpret=True (CPU PJRT
+cannot execute Mosaic custom-calls); on real TPU hardware the same code
+lowers to MXU matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest divisor of `dim` that is ≤ preferred (tiles must divide the
+    padded dims; the wrappers pad M/N to multiples of 8 first)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _pad_rows(x, mult):
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+def _pad_cols(x, mult):
+    n = x.shape[1]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
+def _tiled_matmul(x, y, *, interpret=True):
+    """Shared Pallas driver: int8 operands in {−1,0,1}, int32 output.
+    Grid over (M/bm, N/bn); each kernel instance contracts the full depth
+    on the (emulated) MXU with int32 accumulation."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"depth mismatch {k} vs {k2}"
+    bm = _pick_block(m)
+    bn = _pick_block(n)
+
+    def kernel(x_ref, y_ref, o_ref):
+        xv = x_ref[...].astype(jnp.int32)
+        yv = y_ref[...].astype(jnp.int32)
+        o_ref[...] = jax.lax.dot_general(
+            xv, yv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tnn_gemm(ap, am, bp, bm, *, interpret=True):
+    """Ternary GEMM from 2-bit planes (0/1 int8): C = (A⁺−A⁻)(B⁺−B⁻).
+
+    M and N are padded to a multiple of 8 (zero planes = the ternary
+    value 0, contributing nothing) and the result is sliced back — the
+    paper's edge-tile handling.
+    """
+    m, n = ap.shape[0], bp.shape[1]
+    x = (ap.astype(jnp.int8) - am.astype(jnp.int8))
+    y = (bp.astype(jnp.int8) - bm.astype(jnp.int8))
+    x = _pad_rows(x, 8)
+    y = _pad_cols(y, 8)
+    return _tiled_matmul(x, y, interpret=interpret)[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tbn_gemm(ap, am, bb, *, interpret=True):
+    """Ternary×binary GEMM: ternary planes × binary bits (1→0, −1→1)."""
+    m, n = ap.shape[0], bb.shape[1]
+    x = (ap.astype(jnp.int8) - am.astype(jnp.int8))
+    y = (1 - 2 * bb.astype(jnp.int8))
+    x = _pad_rows(x, 8)
+    # Binary has no zero: pad columns of the ±1 operand, then slice —
+    # padded outputs are discarded so the pad value is irrelevant.
+    y = _pad_cols(y, 8)
+    return _tiled_matmul(x, y, interpret=interpret)[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bnn_gemm(ab, bb, *, interpret=True):
+    """Binary GEMM from bit matrices (1→0, −1→1): eq. (6) in MXU form."""
+    m, n = ab.shape[0], bb.shape[1]
+    x = (1 - 2 * ab.astype(jnp.int8))
+    y = (1 - 2 * bb.astype(jnp.int8))
+    x = _pad_rows(x, 8)
+    y = _pad_cols(y, 8)
+    return _tiled_matmul(x, y, interpret=interpret)[:m, :n]
+
+
+def vmem_bytes(m: int, n: int, k: int) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf):
+    int8 x-tile + int8 y-tile + int32 out-tile."""
+    bm_, bn = _pick_block(m), _pick_block(n)
+    return bm_ * k + k * bn + bm_ * bn * 4

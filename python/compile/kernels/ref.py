@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the low-bit matrix products — the L1 correctness
+ground truth.
+
+Values are dense int8 in {-1,0,1} (ternary) or {-1,1} (binary); the
+oracles are straight dense matmuls, against which the Pallas kernels'
+plane-decomposition outputs are asserted exactly (integer arithmetic, no
+tolerance needed).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    """Dense integer GEMM oracle: int32 C = A @ B."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def ternary_planes(x):
+    """The paper's 2-bit encoding as dense 0/1 planes: x -> (x+, x-)."""
+    xp = (x > 0).astype(jnp.int8)
+    xm = (x < 0).astype(jnp.int8)
+    return xp, xm
+
+
+def binary_bits(x):
+    """The paper's 1-bit encoding: +1 -> 0, -1 -> 1."""
+    return (x < 0).astype(jnp.int8)
+
+
+def tnn_ref_from_planes(ap, am, bp, bm):
+    """eq. (7) as plane matmuls:
+    C = (A+ B+ + A- B-) - (A+ B- + A- B+)."""
+    ap, am = ap.astype(jnp.int32), am.astype(jnp.int32)
+    bp, bm = bp.astype(jnp.int32), bm.astype(jnp.int32)
+    return (ap @ bp + am @ bm) - (ap @ bm + am @ bp)
+
+
+def tbn_ref_from_planes(ap, am, bb):
+    """TBN with binary bits: y+ = 1-bb, y- = bb."""
+    ap, am, bb = ap.astype(jnp.int32), am.astype(jnp.int32), bb.astype(jnp.int32)
+    bp, bm = 1 - bb, bb
+    return (ap @ bp + am @ bm) - (ap @ bm + am @ bp)
+
+
+def bnn_ref_from_bits(ab, bb, k):
+    """eq. (6): C = k - 2 * xor-popcount, where the xor-sum expands to
+    a(1-b) + (1-a)b over the 0/1 bit matrices."""
+    ab, bb = ab.astype(jnp.int32), bb.astype(jnp.int32)
+    xor_sum = ab @ (1 - bb) + (1 - ab) @ bb
+    return k - 2 * xor_sum

@@ -1,0 +1,150 @@
+"""L2 — the QNN model as a JAX computation calling the L1 kernels.
+
+A small ternary CNN classifier (the mobile-recognition workload the
+paper's introduction motivates): input quantize → ternary conv (via
+im2col + `tnn_gemm`) → maxpool → ternary conv → pool → ternary dense →
+f32 head. Weights are seeded, ternarized at trace time and folded into
+the lowered HLO as constants — the paper's "weights packed once,
+offline" (PackedB) in AOT form. Python never runs at serving time; the
+Rust runtime executes the lowered artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lowbit, ref
+
+# Model hyper-parameters (kept small: the artifact is compiled for CPU
+# PJRT in interpret mode; batch is fixed at AOT time).
+INPUT_HW = 12
+INPUT_C = 1
+CLASSES = 10
+BATCH = 8
+DELTA = 0.4  # ternary activation threshold
+
+
+def ternarize_weights(key, shape, thr_ratio=0.75):
+    """TWN-style ternarization of random Gaussian weights; returns the
+    2-bit planes and the scaling factor α."""
+    w = jax.random.normal(key, shape) * 0.2
+    delta = thr_ratio * jnp.mean(jnp.abs(w))
+    t = jnp.where(w > delta, 1, jnp.where(w < -delta, -1, 0)).astype(jnp.int8)
+    kept = jnp.abs(w) * (t != 0)
+    alpha = jnp.sum(kept) / jnp.maximum(jnp.sum(t != 0), 1)
+    return ref.ternary_planes(t), alpha
+
+
+def ternary_act(x, delta=DELTA):
+    """Ternary activation quantizer → planes (0/1 int8)."""
+    xp = (x > delta).astype(jnp.int8)
+    xm = (x < -delta).astype(jnp.int8)
+    return xp, xm
+
+
+def im2col(x, hk, wk):
+    """Unroll NHWC `x` into (N, OH, OW, hk·wk·C) patches, SAME padding,
+    stride 1, patch order (ky, kx, c) — matching the Rust engine."""
+    n, h, w, c = x.shape
+    ph, pw = hk // 2, wk // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for ky in range(hk):
+        for kx in range(wk):
+            cols.append(jax.lax.dynamic_slice(xp, (0, ky, kx, 0), (n, h, w, c)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv_ternary(x_planes, w_planes, scale, interpret=True):
+    """Ternary 3×3 SAME conv via im2col + the TNN Pallas kernel.
+    `x_planes` = (x⁺, x⁻) NHWC; `w_planes` = (w⁺, w⁻) of shape
+    (9·C_in, C_out). Returns f32 NHWC activations (scaled accumulators).
+    """
+    xp, xm = x_planes
+    n, h, w, _ = xp.shape
+    cp = im2col(xp, 3, 3)
+    cm = im2col(xm, 3, 3)
+    depth = cp.shape[-1]
+    ap = cp.reshape(n * h * w, depth)
+    am = cm.reshape(n * h * w, depth)
+    wp, wm = w_planes
+    acc = lowbit.tnn_gemm(ap, am, wp, wm, interpret=interpret)
+    out = acc.astype(jnp.float32) * scale
+    return out.reshape(n, h, w, -1)
+
+
+def maxpool2(x):
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+class ModelWeights:
+    """Seeded, ternarized weights (built once at trace/AOT time)."""
+
+    def __init__(self, seed=0):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+        # Folded scales normalize each layer's integer accumulator to
+        # ~unit variance (acc std ≈ 0.67·√depth for random ternary dot
+        # products), so activations straddle the ternary threshold —
+        # the BN-fold a trained QNN would have.
+        self.conv1, _ = ternarize_weights(keys[0], (9 * INPUT_C, 16))
+        self.s1 = 2.0 / np.sqrt(9 * INPUT_C)
+        self.conv2, _ = ternarize_weights(keys[1], (9 * 16, 32))
+        self.s2 = 2.0 / np.sqrt(9 * 16)
+        flat = (INPUT_HW // 4) * (INPUT_HW // 4) * 32
+        self.dense, _ = ternarize_weights(keys[2], (flat, 64))
+        self.s3 = 2.0 / np.sqrt(flat)
+        self.head_w = jax.random.normal(keys[3], (64, CLASSES)) * 0.1
+        self.head_b = jnp.zeros((CLASSES,))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _forward(x, conv1p, conv1m, s1, conv2p, conv2m, s2, densep, densem, s3,
+             head_w, head_b, *, interpret=True):
+    a = ternary_act(x)
+    h1 = conv_ternary(a, (conv1p, conv1m), s1, interpret)
+    h1 = maxpool2(h1)
+    a1 = ternary_act(h1)
+    h2 = conv_ternary(a1, (conv2p, conv2m), s2, interpret)
+    h2 = maxpool2(h2)
+    a2p, a2m = ternary_act(h2)
+    n = a2p.shape[0]
+    acc = lowbit.tnn_gemm(
+        a2p.reshape(n, -1), a2m.reshape(n, -1), densep, densem, interpret=interpret
+    )
+    feats = acc.astype(jnp.float32) * s3
+    return feats @ head_w + head_b
+
+
+def forward(weights: ModelWeights, x, interpret=True):
+    """Full model forward: f32 NHWC images → f32 logits (N, CLASSES)."""
+    w = weights
+    (c1p, c1m), (c2p, c2m), (dp, dm) = w.conv1, w.conv2, w.dense
+    return _forward(x, c1p, c1m, w.s1, c2p, c2m, w.s2, dp, dm, w.s3,
+                    w.head_w, w.head_b, interpret=interpret)
+
+
+def reference_forward(weights: ModelWeights, x):
+    """Oracle forward: identical math with dense jnp matmuls (no Pallas).
+    Used by pytest to validate the kernel-backed forward exactly."""
+    w = weights
+
+    def conv_ref(planes, wplanes, scale):
+        xp, xm = planes
+        n, h, ww, _ = xp.shape
+        cp = im2col(xp, 3, 3).reshape(n * h * ww, -1)
+        cm = im2col(xm, 3, 3).reshape(n * h * ww, -1)
+        acc = ref.tnn_ref_from_planes(cp, cm, *wplanes)
+        return (acc.astype(jnp.float32) * scale).reshape(n, h, ww, -1)
+
+    a = ternary_act(x)
+    h1 = maxpool2(conv_ref(a, w.conv1, w.s1))
+    a1 = ternary_act(h1)
+    h2 = maxpool2(conv_ref(a1, w.conv2, w.s2))
+    a2p, a2m = ternary_act(h2)
+    n = a2p.shape[0]
+    acc = ref.tnn_ref_from_planes(a2p.reshape(n, -1), a2m.reshape(n, -1), *w.dense)
+    feats = acc.astype(jnp.float32) * w.s3
+    return feats @ w.head_w + w.head_b

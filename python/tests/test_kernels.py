@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Integer arithmetic throughout → exact equality, no tolerances.
+Hypothesis sweeps shapes (including non-multiples of the tile size) and
+value distributions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lowbit, ref
+
+dims = st.integers(min_value=1, max_value=96)
+depths = st.integers(min_value=1, max_value=160)
+seeds = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def random_ternary(rng, m, n):
+    return rng.integers(-1, 2, size=(m, n)).astype(np.int8)
+
+
+def random_binary(rng, m, n):
+    return (rng.integers(0, 2, size=(m, n)) * 2 - 1).astype(np.int8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=depths, seed=seeds)
+def test_tnn_gemm_matches_oracle(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = random_ternary(rng, m, k)
+    b = random_ternary(rng, k, n)
+    ap, am = ref.ternary_planes(jnp.asarray(a))
+    bp, bm = ref.ternary_planes(jnp.asarray(b))
+    got = lowbit.tnn_gemm(ap, am, bp, bm)
+    want = ref.gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=depths, seed=seeds)
+def test_tbn_gemm_matches_oracle(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = random_ternary(rng, m, k)
+    b = random_binary(rng, k, n)
+    ap, am = ref.ternary_planes(jnp.asarray(a))
+    bb = ref.binary_bits(jnp.asarray(b))
+    got = lowbit.tbn_gemm(ap, am, bb)
+    want = ref.gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=depths, seed=seeds)
+def test_bnn_gemm_matches_oracle(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = random_binary(rng, m, k)
+    b = random_binary(rng, k, n)
+    ab = ref.binary_bits(jnp.asarray(a))
+    bb = ref.binary_bits(jnp.asarray(b))
+    got = lowbit.bnn_gemm(ab, bb)
+    want = ref.gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_plane_ref_identity_matches_dense():
+    """eq. (7) plane decomposition is an identity."""
+    rng = np.random.default_rng(7)
+    a = random_ternary(rng, 33, 70)
+    b = random_ternary(rng, 70, 21)
+    ap, am = ref.ternary_planes(jnp.asarray(a))
+    bp, bm = ref.ternary_planes(jnp.asarray(b))
+    got = ref.tnn_ref_from_planes(ap, am, bp, bm)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.gemm_ref(jnp.asarray(a), jnp.asarray(b)))
+    )
+
+
+def test_bnn_eq6_identity():
+    """eq. (6): k − 2·xor-popcount equals the dense product."""
+    rng = np.random.default_rng(8)
+    a = random_binary(rng, 17, 40)
+    b = random_binary(rng, 40, 9)
+    ab = ref.binary_bits(jnp.asarray(a))
+    bb = ref.binary_bits(jnp.asarray(b))
+    got = ref.bnn_ref_from_bits(ab, bb, 40)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.gemm_ref(jnp.asarray(a), jnp.asarray(b)))
+    )
+
+
+@pytest.mark.parametrize("m,n,k", [(72, 24, 128), (120, 48, 256), (16, 8, 8)])
+def test_paper_grid_shapes_exact(m, n, k):
+    rng = np.random.default_rng(m * 1000 + n * 10 + k)
+    a = random_ternary(rng, m, k)
+    b = random_ternary(rng, k, n)
+    ap, am = ref.ternary_planes(jnp.asarray(a))
+    bp, bm = ref.ternary_planes(jnp.asarray(b))
+    got = lowbit.tnn_gemm(ap, am, bp, bm)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.gemm_ref(jnp.asarray(a), jnp.asarray(b)))
+    )
+
+
+def test_zero_ternary_matrix_gives_zero():
+    z = jnp.zeros((16, 32), jnp.int8)
+    ap, am = ref.ternary_planes(z)
+    rng = np.random.default_rng(9)
+    b = random_ternary(rng, 32, 8)
+    bp, bm = ref.ternary_planes(jnp.asarray(b))
+    out = lowbit.tnn_gemm(ap, am, bp, bm)
+    assert not np.asarray(out).any()
+
+
+def test_vmem_estimate_within_budget():
+    """DESIGN.md §Perf: one grid step's working set must sit far below
+    the 16 MiB VMEM of a TPU core for every paper-grid shape."""
+    for m in (72, 120, 240, 360):
+        for n in (24, 48, 72, 96):
+            for k in (128, 256, 384, 512):
+                assert lowbit.vmem_bytes(m, n, k) < 4 * 1024 * 1024

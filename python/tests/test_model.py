@@ -1,0 +1,90 @@
+"""L2 correctness: the kernel-backed model forward vs the dense oracle
+forward, plus structural checks on the ternarized weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return model.ModelWeights(seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(42)
+    return jax.random.normal(
+        key, (model.BATCH, model.INPUT_HW, model.INPUT_HW, model.INPUT_C)
+    )
+
+
+def test_forward_shape_and_finite(weights, batch):
+    logits = model.forward(weights, batch)
+    assert logits.shape == (model.BATCH, model.CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_matches_reference_exactly(weights, batch):
+    """Pallas-kernel forward ≡ dense-oracle forward (same integer
+    arithmetic, same f32 epilogues → bitwise-identical logits)."""
+    got = model.forward(weights, batch)
+    want = model.reference_forward(weights, batch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_network_is_not_dead(weights, batch):
+    """Regression: mis-scaled folded affines once zeroed every activation
+    after conv2, producing constant-zero logits. The network must produce
+    non-trivial, image-dependent outputs."""
+    logits = np.asarray(model.forward(weights, batch))
+    assert np.abs(logits).max() > 0.1
+    assert len(set(np.argmax(logits, axis=1).tolist())) > 1
+
+
+def test_weights_are_valid_ternary(weights):
+    for planes in (weights.conv1, weights.conv2, weights.dense):
+        p, m = planes
+        p, m = np.asarray(p), np.asarray(m)
+        assert set(np.unique(p)) <= {0, 1}
+        assert set(np.unique(m)) <= {0, 1}
+        # (1,1) is an invalid 2-bit code
+        assert not np.logical_and(p == 1, m == 1).any()
+        # weights are not degenerate (both signs present)
+        assert p.sum() > 0 and m.sum() > 0
+
+
+def test_forward_deterministic(weights, batch):
+    a = model.forward(weights, batch)
+    b = model.forward(weights, batch)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ternary_act_planes_valid():
+    x = jnp.asarray([[-1.0, -0.2, 0.0, 0.2, 1.0]])
+    xp, xm = model.ternary_act(x, delta=0.4)
+    np.testing.assert_array_equal(np.asarray(xp), [[0, 0, 0, 0, 1]])
+    np.testing.assert_array_equal(np.asarray(xm), [[1, 0, 0, 0, 0]])
+
+
+def test_im2col_patch_order():
+    """Patch order must be (ky, kx, c) to match the Rust engine."""
+    x = jnp.arange(9.0).reshape(1, 3, 3, 1)
+    cols = model.im2col(x, 3, 3)
+    assert cols.shape == (1, 3, 3, 9)
+    # Center pixel (1,1): its patch is the whole image flattened.
+    np.testing.assert_array_equal(np.asarray(cols[0, 1, 1]), np.arange(9.0))
+    # Corner (0,0): taps at ky=0 and kx=0 read SAME-padding zeros; the
+    # full (ky, kx)-ordered patch is the padded 3×3 window around (0,0).
+    patch = np.asarray(cols[0, 0, 0])
+    np.testing.assert_array_equal(patch, [0, 0, 0, 0, 0, 1, 0, 3, 4])
+
+
+def test_maxpool2():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    p = model.maxpool2(x)
+    assert p.shape == (1, 2, 2, 1)
+    np.testing.assert_array_equal(np.asarray(p[0, :, :, 0]), [[5, 7], [13, 15]])

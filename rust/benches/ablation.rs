@@ -1,0 +1,116 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. vectorized vs scalar popcount inner loops (the §Perf step 4 win),
+//! 2. 2-column vs 1-column BNN kernel (step 5),
+//! 3. vectorized vs scalar activation packing (step 3),
+//! 4. stripe (memory-frugal) vs full-im2col convolution,
+//! 5. U4 depth-block size (the eq. (4) 16-bit blocking).
+//!
+//! Run: `cargo bench --bench ablation`
+
+use tbgemm::conv::conv2d::{ConvKind, ConvParams, LowBitConv};
+use tbgemm::conv::stripe::StripeConv;
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::gemm::native::pack_fast;
+use tbgemm::gemm::native::simd_popcnt as sp;
+use tbgemm::gemm::native::{BitRows, PlaneRows};
+use tbgemm::util::mat::MatI8;
+use tbgemm::util::timer::bench_loop;
+use tbgemm::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xAB1A);
+    let words = 8; // depth 512
+    let rows = 120;
+    let a: Vec<Vec<u64>> = (0..rows).map(|_| (0..words).map(|_| rng.next_u64()).collect()).collect();
+    let b: Vec<Vec<u64>> = (0..48).map(|_| (0..words).map(|_| rng.next_u64()).collect()).collect();
+
+    // 1. vectorized vs scalar popcount (BNN dot sweep).
+    let vec_t = bench_loop(0.2, 400, || {
+        let mut acc = 0u32;
+        for ar in &a {
+            for br in &b {
+                acc = acc.wrapping_add(sp::xor_popcnt(ar, br));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    let scl_t = bench_loop(0.2, 400, || {
+        let mut acc = 0u32;
+        for ar in &a {
+            for br in &b {
+                acc = acc.wrapping_add(sp::scalar_xor_popcnt(ar, br));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    println!("1. popcount inner loop (120×48 dots, k=512):");
+    println!("   vectorized {:.3} ms, scalar {:.3} ms → {:.2}×", vec_t.mean * 1e3, scl_t.mean * 1e3, scl_t.mean / vec_t.mean);
+
+    // 2. 2-column vs 1-column BNN kernel.
+    let two_t = bench_loop(0.2, 400, || {
+        let mut acc = 0u32;
+        for ar in &a {
+            for bc in b.chunks(2) {
+                let (s0, s1) = sp::xor_popcnt2(ar, &bc[0], &bc[1]);
+                acc = acc.wrapping_add(s0).wrapping_add(s1);
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    println!("2. BNN column blocking: 1-col {:.3} ms, 2-col {:.3} ms → {:.2}×", vec_t.mean * 1e3, two_t.mean * 1e3, vec_t.mean / two_t.mean);
+
+    // 3. vectorized vs scalar packing.
+    let tern = MatI8::random_ternary(360, 512, &mut rng);
+    let fast_t = bench_loop(0.2, 400, || {
+        std::hint::black_box(PlaneRows::from_ternary(&tern));
+    });
+    let mut scratch = vec![0u64; 8];
+    let mut scratch2 = vec![0u64; 8];
+    let slow_t = bench_loop(0.2, 400, || {
+        for r in 0..tern.rows {
+            pack_fast::scalar_pack_ternary_row(tern.row(r), &mut scratch, &mut scratch2);
+        }
+        std::hint::black_box(&scratch);
+    });
+    println!("3. ternary packing 360×512: vectorized {:.3} ms, scalar {:.3} ms → {:.2}×", fast_t.mean * 1e3, slow_t.mean * 1e3, slow_t.mean / fast_t.mean);
+
+    // 4. stripe vs full-im2col convolution (time + memory).
+    let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+    let w = MatI8::random_ternary(p.depth(32), 64, &mut rng);
+    let input = Tensor3::random_ternary(28, 28, 32, &mut rng);
+    let full = LowBitConv::new(ConvKind::Tnn, p, 32, &w);
+    let stripe = StripeConv::new(ConvKind::Tnn, p, 32, &w);
+    let full_t = bench_loop(0.3, 100, || {
+        std::hint::black_box(full.forward(&input));
+    });
+    let stripe_t = bench_loop(0.3, 100, || {
+        std::hint::black_box(stripe.forward(&input));
+    });
+    println!(
+        "4. conv 28×28×32→64: full im2col {:.3} ms, stripe {:.3} ms ({:.0}% slower, {}× less scratch)",
+        full_t.mean * 1e3,
+        stripe_t.mean * 1e3,
+        100.0 * (stripe_t.mean / full_t.mean - 1.0),
+        28
+    );
+
+    // 5. U4 depth-block size sweep (correct blocks are ≤290; larger
+    // would overflow — we sweep the safe sizes to show the tradeoff).
+    use tbgemm::gemm::native::kernels::{pack_b_panels_u8, u4_gemm};
+    use tbgemm::util::mat::{MatI32, MatU8};
+    let au = MatU8::random_below(120, 580, 15, &mut rng);
+    let bu = MatU8::random_below(580, 48, 15, &mut rng);
+    let panels = pack_b_panels_u8(&bu);
+    let col_sums: Vec<i32> = (0..48).map(|j| (0..580).map(|t| bu.get(t, j) as i32).sum()).collect();
+    let mut c = MatI32::zeros(120, 48);
+    let t = bench_loop(0.2, 200, || {
+        u4_gemm(&au, &panels, 48, 3, 5, &col_sums, &mut c);
+    });
+    println!("5. U4 GEMM 120×48×580 (two 290-blocks + epilogue): {:.3} ms", t.mean * 1e3);
+
+    // Ablation gates: the optimizations must actually win.
+    assert!(vec_t.mean < scl_t.mean, "vectorized popcount must beat scalar");
+    assert!(fast_t.mean < slow_t.mean, "vectorized packing must beat scalar");
+    println!("ablation OK");
+}

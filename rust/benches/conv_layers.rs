@@ -1,0 +1,49 @@
+//! Benchmark of GeMM-based convolution layers across the three low-bit
+//! kinds — the paper's deployment scenario (§IV discussion: "numbers of
+//! channels ... should be multiples of 8" for maximal efficiency).
+//! Also measures the penalty at non-multiple-of-8 channel counts.
+//!
+//! Run: `cargo bench --bench conv_layers`
+
+use tbgemm::conv::conv2d::{ConvKind, ConvParams, LowBitConv};
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::util::mat::MatI8;
+use tbgemm::util::timer::bench_loop;
+use tbgemm::util::Rng;
+
+fn bench_conv(kind: ConvKind, h: usize, w: usize, cin: usize, cout: usize) -> f64 {
+    let mut rng = Rng::new(9);
+    let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+    let weights = match kind {
+        ConvKind::Tnn => MatI8::random_ternary(p.depth(cin), cout, &mut rng),
+        _ => MatI8::random_binary(p.depth(cin), cout, &mut rng),
+    };
+    let conv = LowBitConv::new(kind, p, cin, &weights);
+    let input = match kind {
+        ConvKind::Bnn => Tensor3::random_binary(h, w, cin, &mut rng),
+        _ => Tensor3::random_ternary(h, w, cin, &mut rng),
+    };
+    bench_loop(0.3, 200, || {
+        std::hint::black_box(conv.forward(&input));
+    })
+    .mean
+}
+
+fn main() {
+    println!("3×3 SAME conv, 28×28 input, low-bit GEMM path:");
+    for (cin, cout) in [(32, 64), (64, 64), (64, 128)] {
+        println!("  C_in={cin} C_out={cout}:");
+        for kind in [ConvKind::Tnn, ConvKind::Tbn, ConvKind::Bnn] {
+            let t = bench_conv(kind, 28, 28, cin, cout);
+            let macs = (28 * 28 * 9 * cin * cout) as f64;
+            println!("    {kind:?}: {:>7.3} ms   {:>6.2} GMAC/s", t * 1e3, macs / t / 1e9);
+        }
+    }
+
+    println!("\nchannel-alignment penalty (paper: multiples of 8 are optimal):");
+    for cout in [64, 63, 65] {
+        let t = bench_conv(ConvKind::Tnn, 28, 28, 64, cout);
+        println!("  TNN C_out={cout}: {:>7.3} ms", t * 1e3);
+    }
+    println!("conv_layers OK");
+}

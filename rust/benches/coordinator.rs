@@ -1,0 +1,58 @@
+//! Benchmark of the serving coordinator: throughput and latency vs batch
+//! size, plus the coordinator's overhead over bare engine calls (DESIGN.md
+//! §Perf target: <5% at batch 8).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use tbgemm::conv::conv2d::ConvKind;
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
+    let requests = 128usize;
+    let mut rng = Rng::new(17);
+    let images: Vec<Tensor3<f32>> = (0..requests).map(|_| Tensor3::random(28, 28, 1, &mut rng)).collect();
+
+    // Bare engine baseline (no coordinator).
+    let net = build_from_config(&cfg, 0xCAFE);
+    let t0 = std::time::Instant::now();
+    for img in &images {
+        std::hint::black_box(net.logits(img));
+    }
+    let bare = t0.elapsed().as_secs_f64();
+    println!("bare engine:      {requests} images in {:.3} s ({:.1} img/s)", bare, requests as f64 / bare);
+
+    let mut batch8_time = None;
+    for max_batch in [1usize, 4, 8, 16] {
+        let net = build_from_config(&cfg, 0xCAFE);
+        let server = InferenceServer::start(
+            Box::new(NativeEngine::new(net, "bench")),
+            BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+            256,
+        );
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = images.iter().map(|img| server.submit(img.clone())).collect();
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        println!(
+            "coordinator b={max_batch:>2}: {requests} images in {:.3} s ({:.1} img/s), mean batch {:.2}, p95 {} µs",
+            dt,
+            requests as f64 / dt,
+            m.mean_batch_size,
+            m.p95_latency_us
+        );
+        if max_batch == 8 {
+            batch8_time = Some(dt);
+        }
+    }
+    let overhead = (batch8_time.unwrap() - bare) / bare * 100.0;
+    println!("\ncoordinator overhead at batch 8: {overhead:.1}% (target < 5%, single-producer load)");
+    println!("coordinator OK");
+}

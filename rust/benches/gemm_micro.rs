@@ -1,0 +1,56 @@
+//! Microbenchmark of the native GEMM kernels at a single paper-grid point
+//! (120×48×256), reporting absolute time, GMAC/s, and the speedup ladder.
+//!
+//! Run: `cargo bench --bench gemm_micro`
+
+use tbgemm::bench::grid::time_algorithm;
+use tbgemm::gemm::Kind;
+use tbgemm::util::timer::bench_loop;
+use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::util::Rng;
+use tbgemm::gemm::native::kernels::tnn_gemm;
+use tbgemm::gemm::native::PlaneRows;
+
+fn main() {
+    let point = (120usize, 48usize, 256usize);
+    let macs = (point.0 * point.1 * point.2) as f64;
+    println!("native kernels at H×W×D = {point:?} ({:.1} MMAC):", macs / 1e6);
+    let mut baseline_f32 = None;
+    for kind in Kind::ALL {
+        let gt = time_algorithm(kind, &[point], 5, 5, 42);
+        let t = gt.times[0].1;
+        if kind == Kind::F32 {
+            baseline_f32 = Some(t);
+        }
+        let speedup = baseline_f32.map(|b| b / t).unwrap_or(1.0);
+        println!(
+            "  {:<6} {:>9.3} ms   {:>7.2} GMAC/s   {:>5.2}× vs F32",
+            kind.label(),
+            t * 1e3,
+            macs / t / 1e9,
+            speedup
+        );
+    }
+
+    // Packing-vs-kernel split for TNN (how much of the timed region is
+    // the A-repacking Algorithm 2 performs per call).
+    let mut rng = Rng::new(7);
+    let a = MatI8::random_ternary(point.0, point.2, &mut rng);
+    let b = MatI8::random_ternary(point.2, point.1, &mut rng);
+    let bt = PlaneRows::from_ternary_transposed(&b);
+    let pack_stats = bench_loop(0.2, 200, || {
+        std::hint::black_box(PlaneRows::from_ternary(&a));
+    });
+    let ap = PlaneRows::from_ternary(&a);
+    let mut c = MatI32::zeros(point.0, point.1);
+    let kernel_stats = bench_loop(0.2, 200, || {
+        tnn_gemm(&ap, &bt, &mut c);
+    });
+    println!(
+        "\nTNN split: pack-A {:.3} ms, kernel {:.3} ms ({:.0}% packing)",
+        pack_stats.mean * 1e3,
+        kernel_stats.mean * 1e3,
+        100.0 * pack_stats.mean / (pack_stats.mean + kernel_stats.mean)
+    );
+    println!("gemm_micro OK");
+}

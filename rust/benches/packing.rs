@@ -1,0 +1,51 @@
+//! Benchmark of the packing routines (§III-B/C/D reordering): bytes/s for
+//! each Ablock/Bblock format plus the native bit/plane packers. The paper
+//! argues packing must be cheap relative to the microkernel — this bench
+//! quantifies it.
+//!
+//! Run: `cargo bench --bench packing`
+
+use tbgemm::gemm::native::{BitRows, PlaneRows};
+use tbgemm::gemm::pack;
+use tbgemm::util::mat::MatI8;
+use tbgemm::util::timer::bench_loop;
+use tbgemm::util::Rng;
+
+fn main() {
+    let (m, k) = (360, 512);
+    let mut rng = Rng::new(3);
+    let tern = MatI8::random_ternary(m, k, &mut rng);
+    let bin = MatI8::random_binary(m, k, &mut rng);
+    let elems = (m * k) as f64;
+
+    let report = |name: &str, mean_s: f64| {
+        println!("  {name:<28} {:>8.3} ms   {:>7.1} Melem/s", mean_s * 1e3, elems / mean_s / 1e6);
+    };
+
+    println!("packing {m}×{k}:");
+    let s = bench_loop(0.2, 500, || {
+        for r0 in (0..m).step_by(16) {
+            std::hint::black_box(pack::pack_a_bnn(&bin, r0, k));
+        }
+    });
+    report("emu pack_a_bnn (all panels)", s.mean);
+    let s = bench_loop(0.2, 500, || {
+        for r0 in (0..m).step_by(16) {
+            std::hint::black_box(pack::pack_a_tnn(&tern, r0, k));
+        }
+    });
+    report("emu pack_a_tnn (all panels)", s.mean);
+    let s = bench_loop(0.2, 500, || {
+        std::hint::black_box(BitRows::from_binary(&bin));
+    });
+    report("native BitRows", s.mean);
+    let s = bench_loop(0.2, 500, || {
+        std::hint::black_box(PlaneRows::from_ternary(&tern));
+    });
+    report("native PlaneRows", s.mean);
+    let s = bench_loop(0.2, 500, || {
+        std::hint::black_box(BitRows::from_binary_transposed(&bin));
+    });
+    report("native BitRows (transposed)", s.mean);
+    println!("packing OK");
+}

@@ -1,0 +1,25 @@
+//! Bench target for the paper's Table II: regenerates the per-iteration
+//! instruction counts from the emulated microkernels and prints the table
+//! (plus per-mnemonic breakdowns). Deterministic — no timing involved.
+//!
+//! Run: `cargo bench --bench table2_counts`
+
+use tbgemm::costmodel::table2;
+
+fn main() {
+    let rows = table2::generate();
+    print!("{}", table2::render(&rows));
+    println!("\nper-mnemonic breakdown:");
+    for r in &rows {
+        println!("{}:", r.kind.label());
+        for (m, n) in &r.trace.by_mnemonic {
+            println!("    {m:<12} {n}");
+        }
+    }
+    // Sanity gates (the bench fails loudly if a refactor changes counts):
+    let bnn = rows.iter().find(|r| r.kind == tbgemm::gemm::Kind::Bnn).unwrap();
+    assert_eq!((bnn.com, bnn.ld, bnn.mov), (32, 2, 8), "BNN must match the paper exactly");
+    let f32r = rows.iter().find(|r| r.kind == tbgemm::gemm::Kind::F32).unwrap();
+    assert_eq!((f32r.com, f32r.ld, f32r.mov), (24, 5, 0), "F32 must match the paper exactly");
+    println!("\ntable2_counts OK");
+}

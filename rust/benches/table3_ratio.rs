@@ -1,0 +1,64 @@
+//! Bench target for the paper's Table III: measures all seven algorithms
+//! over the paper's H×W×D grid with the paper's protocol and prints the
+//! ratio matrix next to the paper's values, followed by the predicted
+//! (cost-model) matrix.
+//!
+//! Env knobs: `TABLE3_REPS` (default 3; the paper used 50),
+//! `TABLE3_INNER` (default 5 = the paper's median-of-5),
+//! `TABLE3_SMOKE=1` for the 4-point grid.
+//!
+//! Run: `cargo bench --bench table3_ratio`
+
+use tbgemm::bench::{grid, predicted, ratio};
+use tbgemm::gemm::Kind;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let reps = env_usize("TABLE3_REPS", 3);
+    let inner = env_usize("TABLE3_INNER", 5);
+    let smoke = std::env::var("TABLE3_SMOKE").is_ok();
+    let g = if smoke { grid::smoke_grid() } else { grid::paper_grid() };
+
+    eprintln!("table3_ratio: {} grid points, reps={reps}, inner={inner}", g.len());
+    let times: Vec<_> = Kind::ALL
+        .iter()
+        .map(|&k| {
+            eprintln!("  timing {}...", k.label());
+            grid::time_algorithm(k, &g, reps, inner, 0x7AB1E6)
+        })
+        .collect();
+    let m = ratio::ratio_matrix(&times);
+    print!("{}", ratio::render_ratio_table(&m, "Table III (measured, native paths)"));
+
+    println!("\nabsolute times (ms) at the grid corners:");
+    for t in &times {
+        let first = t.times.first().unwrap();
+        let last = t.times.last().unwrap();
+        println!(
+            "  {:<6} {:?}: {:.3} ms   {:?}: {:.3} ms",
+            t.kind.label(),
+            first.0,
+            first.1 * 1e3,
+            last.0,
+            last.1 * 1e3
+        );
+    }
+
+    println!("\nheadline claims:");
+    for (desc, ours, paper) in ratio::headline(&m) {
+        println!("  {desc:<40} ours {ours:>5.2}  paper {paper:>5.2}");
+    }
+
+    let pm = ratio::ratio_matrix(&predicted::predict_grid(&grid::paper_grid()));
+    print!("\n{}", ratio::render_ratio_table(&pm, "Table III (predicted, Cortex-A73 cost model)"));
+
+    // Shape gates: the orderings the paper reports must hold in the
+    // measurement (who wins), even though absolute factors shift hosts.
+    assert!(m.get(Kind::F32, Kind::Tnn) > 1.0, "TNN must beat F32");
+    assert!(m.get(Kind::Tnn, Kind::Bnn) > 1.0, "BNN must beat TNN");
+    assert!(m.get(Kind::Tbn, Kind::Bnn) > 1.0, "BNN must beat TBN");
+    println!("\ntable3_ratio OK");
+}

@@ -1,0 +1,157 @@
+//! The paper's experimental grid and timed per-algorithm runs.
+//!
+//! §IV-B: "We ran time measurements for different values of height
+//! (H ∈ {72,120,240,360}), width (W ∈ {24,48,72,96}) and depth
+//! (D ∈ {128,256,384,512}). Those values are chosen to be multiples of
+//! the microkernel size for each algorithm... For each value of
+//! parameters, we took the median of 5 measurements... and repeated the
+//! whole experiment [50] times, taking the average."
+
+use crate::gemm::native::kernels as nk;
+use crate::gemm::native::{BitRows, PlaneRows};
+use crate::gemm::Kind;
+use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
+use crate::util::timer::paper_protocol;
+use crate::util::Rng;
+
+/// One (height, width, depth) point of the grid.
+pub type GridPoint = (usize, usize, usize);
+
+/// The paper's H×W×D grid (64 points).
+pub fn paper_grid() -> Vec<GridPoint> {
+    let hs = [72usize, 120, 240, 360];
+    let ws = [24usize, 48, 72, 96];
+    let ds = [128usize, 256, 384, 512];
+    let mut g = Vec::with_capacity(64);
+    for &h in &hs {
+        for &w in &ws {
+            for &d in &ds {
+                g.push((h, w, d));
+            }
+        }
+    }
+    g
+}
+
+/// A reduced grid for quick smoke runs (one point per corner).
+pub fn smoke_grid() -> Vec<GridPoint> {
+    vec![(72, 24, 128), (72, 96, 512), (360, 24, 512), (360, 96, 128)]
+}
+
+/// Measured seconds per grid point for one algorithm.
+#[derive(Clone, Debug)]
+pub struct GridTimes {
+    pub kind: Kind,
+    pub times: Vec<(GridPoint, f64)>,
+}
+
+/// Time one algorithm over `grid` with the paper's protocol
+/// (`reps` × median-of-`inner`). The right matrix is pre-packed outside
+/// the timed region ("one can reorder it... beforehand"); packing the
+/// left matrix is part of the timed multiplication, as in Algorithm 2.
+pub fn time_algorithm(kind: Kind, grid: &[GridPoint], reps: usize, inner: usize, seed: u64) -> GridTimes {
+    let mut rng = Rng::new(seed);
+    let mut times = Vec::with_capacity(grid.len());
+    for &(h, w, d) in grid {
+        let t = match kind {
+            Kind::Bnn => {
+                let a = MatI8::random_binary(h, d, &mut rng);
+                let b = MatI8::random_binary(d, w, &mut rng);
+                let bt = BitRows::from_binary_transposed(&b);
+                let mut c = MatI32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    let ab = BitRows::from_binary(&a);
+                    nk::bnn_gemm(&ab, &bt, &mut c);
+                })
+            }
+            Kind::Tnn => {
+                let a = MatI8::random_ternary(h, d, &mut rng);
+                let b = MatI8::random_ternary(d, w, &mut rng);
+                let bt = PlaneRows::from_ternary_transposed(&b);
+                let mut c = MatI32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    let ap = PlaneRows::from_ternary(&a);
+                    nk::tnn_gemm(&ap, &bt, &mut c);
+                })
+            }
+            Kind::Tbn => {
+                let a = MatI8::random_ternary(h, d, &mut rng);
+                let b = MatI8::random_binary(d, w, &mut rng);
+                let bt = BitRows::from_binary_transposed(&b);
+                let mut c = MatI32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    let ap = PlaneRows::from_ternary(&a);
+                    nk::tbn_gemm(&ap, &bt, &mut c);
+                })
+            }
+            Kind::DaBnn => {
+                let a = MatI8::random_binary(h, d, &mut rng);
+                let b = MatI8::random_binary(d, w, &mut rng);
+                let bt = BitRows::from_binary_transposed(&b);
+                let mut c = MatF32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    let ab = BitRows::from_binary(&a);
+                    nk::dabnn_gemm(&ab, &bt, &mut c);
+                })
+            }
+            Kind::F32 => {
+                let a = MatF32::random(h, d, &mut rng);
+                let b = MatF32::random(d, w, &mut rng);
+                let panels = nk::pack_b_panels_f32(&b);
+                let mut c = MatF32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    nk::f32_gemm(&a, &panels, w, &mut c);
+                })
+            }
+            Kind::U8 => {
+                let a = MatU8::random(h, d, &mut rng);
+                let b = MatU8::random(d, w, &mut rng);
+                let panels = nk::pack_b_panels_u8(&b);
+                let col_sums: Vec<i32> = (0..w).map(|j| (0..d).map(|t| b.get(t, j) as i32).sum()).collect();
+                let mut c = MatI32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    nk::u8_gemm(&a, &panels, w, 3, 5, &col_sums, &mut c);
+                })
+            }
+            Kind::U4 => {
+                let a = MatU8::random_below(h, d, 15, &mut rng);
+                let b = MatU8::random_below(d, w, 15, &mut rng);
+                let panels = nk::pack_b_panels_u8(&b);
+                let col_sums: Vec<i32> = (0..w).map(|j| (0..d).map(|t| b.get(t, j) as i32).sum()).collect();
+                let mut c = MatI32::zeros(h, w);
+                paper_protocol(reps, inner, || {
+                    nk::u4_gemm(&a, &panels, w, 3, 5, &col_sums, &mut c);
+                })
+            }
+        };
+        times.push(((h, w, d), t));
+    }
+    GridTimes { kind, times }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_is_64_points_of_the_right_values() {
+        let g = paper_grid();
+        assert_eq!(g.len(), 64);
+        assert!(g.contains(&(72, 24, 128)));
+        assert!(g.contains(&(360, 96, 512)));
+        for (h, w, d) in g {
+            assert!([72, 120, 240, 360].contains(&h));
+            assert!([24, 48, 72, 96].contains(&w));
+            assert!([128, 256, 384, 512].contains(&d));
+        }
+    }
+
+    #[test]
+    fn timing_one_point_gives_positive_times() {
+        for kind in [Kind::Bnn, Kind::Tnn] {
+            let gt = time_algorithm(kind, &[(72, 24, 128)], 1, 2, 42);
+            assert_eq!(gt.times.len(), 1);
+            assert!(gt.times[0].1 > 0.0);
+        }
+    }
+}

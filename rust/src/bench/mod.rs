@@ -1,0 +1,18 @@
+//! Benchmark harness reproducing the paper's §IV evaluation.
+//!
+//! * [`grid`] — the paper's experimental grid: heights {72,120,240,360},
+//!   widths {24,48,72,96}, depths {128,256,384,512}; workload generation
+//!   and per-algorithm timed runs under the paper's protocol (median of 5
+//!   inner runs, averaged over repetitions).
+//! * [`ratio`] — the Table III efficiency-ratio matrix `E[T_B/T_A]` and
+//!   its rendering, plus the abstract's headline numbers.
+//! * [`predicted`] — the same ratio matrix *predicted* by the Cortex-A73
+//!   cost model from the emulated microkernel traces (the analytical
+//!   counterpart run when ARM hardware is unavailable).
+
+pub mod grid;
+pub mod predicted;
+pub mod ratio;
+
+pub use grid::{paper_grid, time_algorithm, GridPoint, GridTimes};
+pub use ratio::{headline, ratio_matrix, render_ratio_table, RatioMatrix};

@@ -1,0 +1,158 @@
+//! The paper's Table III: the efficiency-ratio matrix.
+//!
+//! "Each cell compares algorithms A and B as E_θ(T_B(θ)/T_A(θ))" over the
+//! grid θ — i.e. cell (row A, column B) is the mean over grid points of
+//! (time of row algorithm / time of column algorithm)... note the paper's
+//! header is `B\A`, so cell (row, col) = E[T_row / T_col]: values > 1
+//! mean the *column* algorithm is faster.
+
+use crate::bench::grid::GridTimes;
+use crate::gemm::Kind;
+
+/// The 7×7 ratio matrix over the algorithm order of [`Kind::ALL`].
+#[derive(Clone, Debug)]
+pub struct RatioMatrix {
+    pub kinds: Vec<Kind>,
+    /// `ratios[i][j] = E[T_kinds[i] / T_kinds[j]]`.
+    pub ratios: Vec<Vec<f64>>,
+}
+
+/// Compute the ratio matrix from per-algorithm grid times. All inputs
+/// must cover the same grid in the same order.
+pub fn ratio_matrix(times: &[GridTimes]) -> RatioMatrix {
+    assert!(!times.is_empty());
+    let npoints = times[0].times.len();
+    for t in times {
+        assert_eq!(t.times.len(), npoints, "grids must match");
+    }
+    let n = times.len();
+    let mut ratios = vec![vec![0f64; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..npoints {
+                debug_assert_eq!(times[i].times[p].0, times[j].times[p].0);
+                acc += times[i].times[p].1 / times[j].times[p].1;
+            }
+            ratios[i][j] = acc / npoints as f64;
+        }
+    }
+    RatioMatrix { kinds: times.iter().map(|t| t.kind).collect(), ratios }
+}
+
+impl RatioMatrix {
+    /// Ratio `E[T_a / T_b]` (how much faster `b` is than `a`).
+    pub fn get(&self, a: Kind, b: Kind) -> f64 {
+        let i = self.kinds.iter().position(|&k| k == a).expect("row kind");
+        let j = self.kinds.iter().position(|&k| k == b).expect("col kind");
+        self.ratios[i][j]
+    }
+}
+
+/// The paper's Table III reference values, `paper[i][j] = E[T_i/T_j]` in
+/// [`Kind::ALL`] order (F32, U8, U4, TNN, TBN, BNN, daBNN).
+pub fn paper_table3() -> Vec<Vec<f64>> {
+    vec![
+        vec![1.00, 1.44, 2.52, 3.63, 3.75, 10.9, 9.60],
+        vec![0.69, 1.00, 1.75, 2.51, 2.60, 7.52, 6.63],
+        vec![0.40, 0.57, 1.00, 1.44, 1.49, 4.32, 3.81],
+        vec![0.28, 0.40, 0.70, 1.00, 1.03, 2.99, 2.64],
+        vec![0.27, 0.39, 0.67, 0.97, 1.00, 2.90, 2.55],
+        vec![0.093, 0.13, 0.23, 0.34, 0.35, 1.00, 0.88],
+        vec![0.11, 0.15, 0.27, 0.39, 0.40, 1.15, 1.00],
+    ]
+}
+
+/// Render a ratio matrix side by side with the paper's values.
+pub fn render_ratio_table(m: &RatioMatrix, title: &str) -> String {
+    let paper = paper_table3();
+    let mut s = format!("{title}\n");
+    s.push_str("rows = algorithm A, cols = algorithm B; cell = E[T_A/T_B] (ours | paper)\n");
+    s.push_str(&format!("{:>7}", "B\\A"));
+    for k in &m.kinds {
+        s.push_str(&format!(" {:>13}", k.label()));
+    }
+    s.push('\n');
+    for (i, ka) in m.kinds.iter().enumerate() {
+        s.push_str(&format!("{:>7}", ka.label()));
+        for j in 0..m.kinds.len() {
+            s.push_str(&format!(" {:>6.2} |{:>5.2}", m.ratios[i][j], paper[i][j]));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// The abstract's headline comparisons extracted from a ratio matrix:
+/// (description, ours, paper).
+pub fn headline(m: &RatioMatrix) -> Vec<(&'static str, f64, f64)> {
+    vec![
+        ("TNN vs F32 (×, higher = TNN faster)", m.get(Kind::F32, Kind::Tnn), 3.63),
+        ("TNN vs U8", m.get(Kind::U8, Kind::Tnn), 2.51),
+        ("TNN vs U4", m.get(Kind::U4, Kind::Tnn), 1.44),
+        ("TBN vs F32", m.get(Kind::F32, Kind::Tbn), 3.75),
+        ("BNN vs F32", m.get(Kind::F32, Kind::Bnn), 10.9),
+        ("BNN vs TNN", m.get(Kind::Tnn, Kind::Bnn), 2.99),
+        ("BNN vs TBN", m.get(Kind::Tbn, Kind::Bnn), 2.90),
+        ("BNN vs daBNN", m.get(Kind::DaBnn, Kind::Bnn), 1.15),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::grid::GridTimes;
+
+    fn fake_times(kind: Kind, t: f64) -> GridTimes {
+        GridTimes { kind, times: vec![((72, 24, 128), t), ((120, 48, 256), 2.0 * t)] }
+    }
+
+    #[test]
+    fn ratio_matrix_of_constant_factors() {
+        let times = vec![fake_times(Kind::F32, 4.0), fake_times(Kind::Tnn, 1.0)];
+        let m = ratio_matrix(&times);
+        assert!((m.get(Kind::F32, Kind::Tnn) - 4.0).abs() < 1e-12);
+        assert!((m.get(Kind::Tnn, Kind::F32) - 0.25).abs() < 1e-12);
+        assert!((m.get(Kind::F32, Kind::F32) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_table3_is_consistent() {
+        // Diagonal of ones, and (i,j)·(j,i) ≈ 1 within the paper's
+        // two-significant-digit rounding.
+        let p = paper_table3();
+        for i in 0..7 {
+            assert_eq!(p[i][i], 1.00);
+            for j in 0..7 {
+                let prod = p[i][j] * p[j][i];
+                assert!((prod - 1.0).abs() < 0.12, "({i},{j}): {prod}");
+            }
+        }
+    }
+
+    #[test]
+    fn headline_pulls_correct_cells() {
+        let times = vec![
+            fake_times(Kind::F32, 36.3),
+            fake_times(Kind::U8, 25.1),
+            fake_times(Kind::U4, 14.4),
+            fake_times(Kind::Tnn, 10.0),
+            fake_times(Kind::Tbn, 9.7),
+            fake_times(Kind::Bnn, 3.34),
+            fake_times(Kind::DaBnn, 3.85),
+        ];
+        let m = ratio_matrix(&times);
+        let h = headline(&m);
+        let tnn_f32 = h.iter().find(|x| x.0.starts_with("TNN vs F32")).unwrap();
+        assert!((tnn_f32.1 - 3.63).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_mentions_all_kinds() {
+        let times: Vec<GridTimes> = Kind::ALL.iter().map(|&k| fake_times(k, 1.0)).collect();
+        let s = render_ratio_table(&ratio_matrix(&times), "test");
+        for k in Kind::ALL {
+            assert!(s.contains(k.label()));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Convolution parameters, the direct (oracle) convolution, and the
+//! GeMM-based convolution built on im2col + the low-bit drivers.
+
+use crate::conv::im2col::im2col;
+use crate::conv::tensor::Tensor3;
+use crate::gemm::native::{BitRows, PlaneRows};
+use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
+use crate::util::mat::{MatI32, MatI8};
+
+/// Square-window convolution hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvParams {
+    pub hk: usize,
+    pub wk: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvParams {
+    /// Output spatial dimensions for an `h × w` input.
+    pub fn out_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        let oh = (h + 2 * self.pad).saturating_sub(self.hk) / self.stride + 1;
+        let ow = (w + 2 * self.pad).saturating_sub(self.wk) / self.stride + 1;
+        (oh, ow)
+    }
+
+    /// GEMM depth after im2col for `c_in` channels.
+    pub fn depth(&self, c_in: usize) -> usize {
+        self.hk * self.wk * c_in
+    }
+}
+
+/// Direct (nested-loop) convolution over i8 values — the oracle.
+/// `weights` is `(hk·wk·c_in) × c_out` in `(ky, kx, c)`-major depth order,
+/// matching im2col. Out-of-bounds taps read `pad_value`.
+pub fn direct_conv_i8(input: &Tensor3<i8>, weights: &MatI8, p: &ConvParams, pad_value: i8) -> Tensor3<i32> {
+    let c_out = weights.cols;
+    assert_eq!(weights.rows, p.depth(input.c));
+    let (oh, ow) = p.out_dims(input.h, input.w);
+    let mut out = Tensor3::zeros(oh, ow, c_out);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for f in 0..c_out {
+                let mut acc = 0i32;
+                let mut d = 0;
+                for ky in 0..p.hk {
+                    for kx in 0..p.wk {
+                        let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                        let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                        for ch in 0..input.c {
+                            let v = if iy >= 0 && (iy as usize) < input.h && ix >= 0 && (ix as usize) < input.w {
+                                input.get(iy as usize, ix as usize, ch)
+                            } else {
+                                pad_value
+                            };
+                            acc += v as i32 * weights.get(d, f) as i32;
+                            d += 1;
+                        }
+                    }
+                }
+                out.set(oy, ox, f, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Which low-bit multiplication implements the convolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvKind {
+    /// Binary activations × binary weights.
+    Bnn,
+    /// Ternary activations × ternary weights.
+    Tnn,
+    /// Ternary activations × binary weights (the TBN of ref. [28]).
+    Tbn,
+}
+
+/// A convolution layer with pre-packed weights, executed as
+/// im2col + native low-bit GEMM (the deployment path of the paper).
+pub struct LowBitConv {
+    pub kind: ConvKind,
+    pub params: ConvParams,
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Weights packed offline: bit rows (binary) or plane rows (ternary)
+    /// of the transposed weight matrix.
+    packed_bits: Option<BitRows>,
+    packed_planes: Option<PlaneRows>,
+}
+
+impl LowBitConv {
+    /// Pack `weights` (`depth × c_out`, im2col depth order) offline.
+    pub fn new(kind: ConvKind, params: ConvParams, c_in: usize, weights: &MatI8) -> Self {
+        assert_eq!(weights.rows, params.depth(c_in), "weight depth mismatch");
+        let c_out = weights.cols;
+        let (packed_bits, packed_planes) = match kind {
+            ConvKind::Bnn | ConvKind::Tbn => {
+                assert!(weights.is_binary(), "{kind:?} weights must be ±1");
+                (Some(BitRows::from_binary_transposed(weights)), None)
+            }
+            ConvKind::Tnn => {
+                assert!(weights.is_ternary());
+                (None, Some(PlaneRows::from_ternary_transposed(weights)))
+            }
+        };
+        LowBitConv { kind, params, c_in, c_out, packed_bits, packed_planes }
+    }
+
+    /// Run the convolution. Binary activations pad with `+1`, ternary
+    /// with `0`.
+    pub fn forward(&self, input: &Tensor3<i8>) -> Tensor3<i32> {
+        assert_eq!(input.c, self.c_in);
+        let (oh, ow) = self.params.out_dims(input.h, input.w);
+        let pad_value = match self.kind {
+            ConvKind::Bnn => 1i8,
+            ConvKind::Tnn | ConvKind::Tbn => 0i8,
+        };
+        let (cols, rows, depth) = im2col(input, &self.params, pad_value);
+        let a = MatI8 { rows, cols: depth, data: cols };
+        let mut c = MatI32::zeros(rows, self.c_out);
+        match self.kind {
+            ConvKind::Bnn => {
+                let ab = BitRows::from_binary(&a);
+                bnn_gemm(&ab, self.packed_bits.as_ref().unwrap(), &mut c);
+            }
+            ConvKind::Tnn => {
+                let ap = PlaneRows::from_ternary(&a);
+                tnn_gemm(&ap, self.packed_planes.as_ref().unwrap(), &mut c);
+            }
+            ConvKind::Tbn => {
+                let ap = PlaneRows::from_ternary(&a);
+                tbn_gemm(&ap, self.packed_bits.as_ref().unwrap(), &mut c);
+            }
+        }
+        Tensor3 { h: oh, w: ow, c: self.c_out, data: c.data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Rng;
+
+    fn random_conv_case(rng: &mut Rng, kind: ConvKind) {
+        let c_in = 1 + rng.below(6);
+        let c_out = 1 + rng.below(10);
+        let h = 3 + rng.below(8);
+        let w = 3 + rng.below(8);
+        let hk = 1 + rng.below(3);
+        let wk = 1 + rng.below(3);
+        let stride = 1 + rng.below(2);
+        let pad = rng.below(2);
+        let p = ConvParams { hk, wk, stride, pad };
+        let depth = p.depth(c_in);
+        let input = match kind {
+            ConvKind::Bnn => Tensor3::random_binary(h, w, c_in, rng),
+            _ => Tensor3::random_ternary(h, w, c_in, rng),
+        };
+        let weights = match kind {
+            ConvKind::Tnn => MatI8::random_ternary(depth, c_out, rng),
+            _ => MatI8::random_binary(depth, c_out, rng),
+        };
+        let pad_value = if kind == ConvKind::Bnn { 1 } else { 0 };
+        let conv = LowBitConv::new(kind, p, c_in, &weights);
+        let got = conv.forward(&input);
+        let want = direct_conv_i8(&input, &weights, &p, pad_value);
+        assert_eq!(got.data, want.data, "kind={kind:?} h={h} w={w} cin={c_in} cout={c_out} k={hk}x{wk} s={stride} p={pad}");
+    }
+
+    #[test]
+    fn bnn_conv_matches_direct() {
+        check(Config { cases: 20, base_seed: 0xD0 }, "bnn conv", |rng| random_conv_case(rng, ConvKind::Bnn));
+    }
+
+    #[test]
+    fn tnn_conv_matches_direct() {
+        check(Config { cases: 20, base_seed: 0xD1 }, "tnn conv", |rng| random_conv_case(rng, ConvKind::Tnn));
+    }
+
+    #[test]
+    fn tbn_conv_matches_direct() {
+        check(Config { cases: 20, base_seed: 0xD2 }, "tbn conv", |rng| random_conv_case(rng, ConvKind::Tbn));
+    }
+
+    #[test]
+    fn out_dims_formulas() {
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        assert_eq!(p.out_dims(28, 28), (28, 28));
+        let p2 = ConvParams { hk: 2, wk: 2, stride: 2, pad: 0 };
+        assert_eq!(p2.out_dims(28, 28), (14, 14));
+    }
+
+    #[test]
+    fn depth_is_hk_wk_cin() {
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        assert_eq!(p.depth(64), 576);
+    }
+}

@@ -1,0 +1,94 @@
+//! The im2col transformation: unroll a feature map into the left GEMM
+//! matrix. Row `(oy·W_out + ox)` holds the receptive field of output
+//! pixel `(oy, ox)`, laid out `(ky, kx, c)`-major; the matching weight
+//! matrix is `(H_k·W_k·C_in) × C_out` in the same depth order.
+
+use crate::conv::conv2d::ConvParams;
+use crate::conv::tensor::Tensor3;
+
+/// Unroll `input` (HWC) for the convolution `p`, padding out-of-bounds
+/// taps with `pad_value`. Output: `(out_h·out_w) × (hk·wk·c)` row-major.
+pub fn im2col<T: Copy + Default>(input: &Tensor3<T>, p: &ConvParams, pad_value: T) -> (Vec<T>, usize, usize) {
+    let (oh, ow) = p.out_dims(input.h, input.w);
+    let depth = p.hk * p.wk * input.c;
+    let mut out = vec![T::default(); oh * ow * depth];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let base = row * depth;
+            let mut idx = base;
+            for ky in 0..p.hk {
+                let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                for kx in 0..p.wk {
+                    let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                    if iy >= 0 && (iy as usize) < input.h && ix >= 0 && (ix as usize) < input.w {
+                        let (iy, ix) = (iy as usize, ix as usize);
+                        let src = (iy * input.w + ix) * input.c;
+                        out[idx..idx + input.c].copy_from_slice(&input.data[src..src + input.c]);
+                    } else {
+                        for v in &mut out[idx..idx + input.c] {
+                            *v = pad_value;
+                        }
+                    }
+                    idx += input.c;
+                }
+            }
+        }
+    }
+    (out, oh * ow, depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_no_pad() {
+        // 1×1 kernel, stride 1, no pad: im2col is the pixel list itself.
+        let t = Tensor3::from_fn(2, 2, 3, |y, x, c| (y * 100 + x * 10 + c) as i32);
+        let p = ConvParams { hk: 1, wk: 1, stride: 1, pad: 0 };
+        let (m, rows, depth) = im2col(&t, &p, 0);
+        assert_eq!((rows, depth), (4, 3));
+        assert_eq!(m, t.data);
+    }
+
+    #[test]
+    fn three_by_three_padded_shape() {
+        let t: Tensor3<i8> = Tensor3::zeros(5, 7, 2);
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        let (m, rows, depth) = im2col(&t, &p, 0);
+        assert_eq!(rows, 35); // same-size output
+        assert_eq!(depth, 18);
+        assert_eq!(m.len(), 35 * 18);
+    }
+
+    #[test]
+    fn padding_taps_use_pad_value() {
+        let t = Tensor3::from_fn(2, 2, 1, |_, _, _| 5i32);
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        let (m, _, depth) = im2col(&t, &p, 9);
+        // Output pixel (0,0): top-left taps fall outside → pad value 9.
+        let row0 = &m[0..depth];
+        assert_eq!(row0[0], 9); // (ky=0,kx=0)
+        assert_eq!(row0[4], 5); // (ky=1,kx=1) = input (0,0)
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let t = Tensor3::from_fn(4, 4, 1, |y, x, _| (y * 4 + x) as i32);
+        let p = ConvParams { hk: 1, wk: 1, stride: 2, pad: 0 };
+        let (m, rows, _) = im2col(&t, &p, 0);
+        assert_eq!(rows, 4);
+        assert_eq!(m, vec![0, 2, 8, 10]);
+    }
+
+    #[test]
+    fn receptive_field_order_is_ky_kx_c() {
+        let t = Tensor3::from_fn(3, 3, 2, |y, x, c| (y * 100 + x * 10 + c) as i32);
+        let p = ConvParams { hk: 2, wk: 2, stride: 1, pad: 0 };
+        let (m, rows, depth) = im2col(&t, &p, -1);
+        assert_eq!((rows, depth), (4, 8));
+        // Row for output (0,0): taps (0,0),(0,1),(1,0),(1,1), channels inner.
+        assert_eq!(&m[0..8], &[0, 1, 10, 11, 100, 101, 110, 111]);
+    }
+}

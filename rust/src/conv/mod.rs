@@ -1,0 +1,24 @@
+//! GeMM-based convolution (§I / §II of the paper): the `im2col`
+//! transformation plus the low-bit GEMM drivers turn a convolution into
+//! one matrix multiplication, exactly the deployment path the paper
+//! targets ("Our algorithms can be used in the GeMM-based convolution
+//! implementations of CNNs").
+//!
+//! Tensors are single-image HWC (height × width × channels) so that each
+//! im2col row — one output pixel's receptive field, `(ky, kx, c)`-major —
+//! is assembled from contiguous channel runs.
+//!
+//! Padding values follow the encodings: ternary activations pad with `0`
+//! (which contributes nothing to a dot product); binary activations have
+//! no zero, so binary convolutions pad with `+1`, the convention used by
+//! XNOR-Net-style BNNs.
+
+pub mod conv2d;
+pub mod im2col;
+pub mod stripe;
+pub mod tensor;
+
+pub use conv2d::{direct_conv_i8, ConvParams};
+pub use im2col::im2col;
+pub use stripe::StripeConv;
+pub use tensor::Tensor3;

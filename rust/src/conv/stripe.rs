@@ -1,0 +1,169 @@
+//! Memory-frugal stripe convolution — the paper's memory theme made
+//! concrete.
+//!
+//! §II of the paper motivates its Algorithm 2 variant with mobile memory
+//! limits ("buffer A_buf is noticeably smaller ... That can help the
+//! inference on mobile devices where memory is limited") and cites the
+//! authors' p-im2col (ref. [13]) as the established way to trade im2col
+//! memory for time. This module implements that idea for the low-bit
+//! kernels: instead of materializing the full `(OH·OW) × depth` im2col
+//! matrix, it materializes **one output row's** patch matrix at a time
+//! (`OW × depth`), runs the native low-bit GEMM on the stripe, and reuses
+//! the buffer — peak extra memory drops from `O(OH·OW·depth)` to
+//! `O(OW·depth)` (an `OH`-fold reduction) with identical results.
+
+use crate::conv::conv2d::{ConvKind, ConvParams};
+use crate::conv::tensor::Tensor3;
+use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
+use crate::gemm::native::{BitRows, PlaneRows};
+use crate::util::mat::{MatI32, MatI8};
+
+/// A convolution layer computed stripe-by-stripe. Weights are packed
+/// offline exactly as in [`crate::conv::conv2d::LowBitConv`].
+pub struct StripeConv {
+    pub kind: ConvKind,
+    pub params: ConvParams,
+    pub c_in: usize,
+    pub c_out: usize,
+    packed_bits: Option<BitRows>,
+    packed_planes: Option<PlaneRows>,
+}
+
+impl StripeConv {
+    pub fn new(kind: ConvKind, params: ConvParams, c_in: usize, weights: &MatI8) -> Self {
+        assert_eq!(weights.rows, params.depth(c_in), "weight depth mismatch");
+        let c_out = weights.cols;
+        let (packed_bits, packed_planes) = match kind {
+            ConvKind::Bnn | ConvKind::Tbn => {
+                assert!(weights.is_binary());
+                (Some(BitRows::from_binary_transposed(weights)), None)
+            }
+            ConvKind::Tnn => {
+                assert!(weights.is_ternary());
+                (None, Some(PlaneRows::from_ternary_transposed(weights)))
+            }
+        };
+        StripeConv { kind, params, c_in, c_out, packed_bits, packed_planes }
+    }
+
+    /// Peak scratch elements this convolution allocates (one stripe).
+    pub fn stripe_scratch_elems(&self, in_w: usize) -> usize {
+        let (_, ow) = self.params.out_dims(in_w, in_w);
+        ow * self.params.depth(self.c_in)
+    }
+
+    /// Run the convolution with one-row stripes.
+    pub fn forward(&self, input: &Tensor3<i8>) -> Tensor3<i32> {
+        assert_eq!(input.c, self.c_in);
+        let p = &self.params;
+        let (oh, ow) = p.out_dims(input.h, input.w);
+        let depth = p.depth(self.c_in);
+        let pad_value = if self.kind == ConvKind::Bnn { 1i8 } else { 0i8 };
+        let mut out = Tensor3::zeros(oh, ow, self.c_out);
+        // Reused stripe buffers.
+        let mut stripe = MatI8::zeros(ow, depth);
+        let mut c = MatI32::zeros(ow, self.c_out);
+        for oy in 0..oh {
+            // Fill the stripe: patch rows for output row oy.
+            for ox in 0..ow {
+                let mut idx = 0;
+                for ky in 0..p.hk {
+                    let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                    for kx in 0..p.wk {
+                        let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                        for ch in 0..self.c_in {
+                            let v = if iy >= 0
+                                && (iy as usize) < input.h
+                                && ix >= 0
+                                && (ix as usize) < input.w
+                            {
+                                input.get(iy as usize, ix as usize, ch)
+                            } else {
+                                pad_value
+                            };
+                            stripe.set(ox, idx, v);
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+            match self.kind {
+                ConvKind::Bnn => {
+                    bnn_gemm(&BitRows::from_binary(&stripe), self.packed_bits.as_ref().unwrap(), &mut c)
+                }
+                ConvKind::Tnn => {
+                    tnn_gemm(&PlaneRows::from_ternary(&stripe), self.packed_planes.as_ref().unwrap(), &mut c)
+                }
+                ConvKind::Tbn => {
+                    tbn_gemm(&PlaneRows::from_ternary(&stripe), self.packed_bits.as_ref().unwrap(), &mut c)
+                }
+            }
+            for ox in 0..ow {
+                for f in 0..self.c_out {
+                    out.set(oy, ox, f, c.get(ox, f));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv2d::{direct_conv_i8, LowBitConv};
+    use crate::util::proptest::{check, Config};
+    use crate::util::Rng;
+
+    fn random_case(rng: &mut Rng, kind: ConvKind) {
+        let c_in = 1 + rng.below(5);
+        let c_out = 1 + rng.below(9);
+        let h = 4 + rng.below(7);
+        let w = 4 + rng.below(7);
+        let p = ConvParams { hk: 1 + rng.below(3), wk: 1 + rng.below(3), stride: 1 + rng.below(2), pad: rng.below(2) };
+        let depth = p.depth(c_in);
+        let input = match kind {
+            ConvKind::Bnn => Tensor3::random_binary(h, w, c_in, rng),
+            _ => Tensor3::random_ternary(h, w, c_in, rng),
+        };
+        let weights = match kind {
+            ConvKind::Tnn => MatI8::random_ternary(depth, c_out, rng),
+            _ => MatI8::random_binary(depth, c_out, rng),
+        };
+        let stripe = StripeConv::new(kind, p, c_in, &weights);
+        let full = LowBitConv::new(kind, p, c_in, &weights);
+        let got = stripe.forward(&input);
+        let via_full = full.forward(&input);
+        assert_eq!(got.data, via_full.data, "stripe ≡ full im2col, {kind:?}");
+        let pad_value = if kind == ConvKind::Bnn { 1 } else { 0 };
+        let oracle = direct_conv_i8(&input, &weights, &p, pad_value);
+        assert_eq!(got.data, oracle.data, "stripe ≡ direct, {kind:?}");
+    }
+
+    #[test]
+    fn stripe_matches_full_and_direct_tnn() {
+        check(Config { cases: 16, base_seed: 0xAB0 }, "stripe tnn", |rng| random_case(rng, ConvKind::Tnn));
+    }
+
+    #[test]
+    fn stripe_matches_full_and_direct_bnn() {
+        check(Config { cases: 16, base_seed: 0xAB1 }, "stripe bnn", |rng| random_case(rng, ConvKind::Bnn));
+    }
+
+    #[test]
+    fn stripe_matches_full_and_direct_tbn() {
+        check(Config { cases: 16, base_seed: 0xAB2 }, "stripe tbn", |rng| random_case(rng, ConvKind::Tbn));
+    }
+
+    /// The memory claim: stripe scratch is OH× smaller than full im2col.
+    #[test]
+    fn scratch_is_one_row() {
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        let mut rng = Rng::new(0xAB3);
+        let w = MatI8::random_ternary(p.depth(8), 16, &mut rng);
+        let conv = StripeConv::new(ConvKind::Tnn, p, 8, &w);
+        let stripe_elems = conv.stripe_scratch_elems(28);
+        let full_elems = 28 * 28 * p.depth(8);
+        assert_eq!(stripe_elems * 28, full_elems);
+    }
+}

@@ -1,0 +1,86 @@
+//! Single-image HWC tensors.
+
+use crate::util::Rng;
+
+/// A height × width × channels tensor, row-major with channels innermost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3<T> {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor3<T> {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Tensor3 { h, w, c, data: vec![T::default(); h * w * c] }
+    }
+
+    pub fn from_fn(h: usize, w: usize, c: usize, mut f: impl FnMut(usize, usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(h * w * c);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    data.push(f(y, x, ch));
+                }
+            }
+        }
+        Tensor3 { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> T {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: T) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    /// Number of pixels (`h·w`) — the GEMM "height" after im2col.
+    pub fn pixels(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+impl Tensor3<i8> {
+    pub fn random_binary(h: usize, w: usize, c: usize, rng: &mut Rng) -> Self {
+        Tensor3::from_fn(h, w, c, |_, _, _| rng.binary())
+    }
+
+    pub fn random_ternary(h: usize, w: usize, c: usize, rng: &mut Rng) -> Self {
+        Tensor3::from_fn(h, w, c, |_, _, _| rng.ternary())
+    }
+}
+
+impl Tensor3<f32> {
+    pub fn random(h: usize, w: usize, c: usize, rng: &mut Rng) -> Self {
+        Tensor3::from_fn(h, w, c, |_, _, _| rng.normalish())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hwc_indexing() {
+        let t = Tensor3::from_fn(2, 3, 4, |y, x, c| (y * 100 + x * 10 + c) as i32);
+        assert_eq!(t.get(1, 2, 3), 123);
+        assert_eq!(t.data.len(), 24);
+        // channels innermost
+        assert_eq!(t.data[0], 0);
+        assert_eq!(t.data[1], 1);
+        assert_eq!(t.data[4], 10);
+    }
+
+    #[test]
+    fn set_then_get() {
+        let mut t: Tensor3<i8> = Tensor3::zeros(3, 3, 2);
+        t.set(2, 1, 1, -1);
+        assert_eq!(t.get(2, 1, 1), -1);
+        assert_eq!(t.get(2, 1, 0), 0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Dynamic batching policy.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Largest batch the worker executes at once.
+    pub max_batch: usize,
+    /// Longest the batcher waits after the first request of a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Drain one batch from `rx` under the policy: block for the first item,
+/// then collect until `max_batch` items or `max_wait` elapsed. Returns
+/// `None` when the channel is closed and empty (shutdown).
+pub fn next_batch<T>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + cfg.max_wait;
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn drains_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn returns_partial_batch_on_timeout() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![1]);
+    }
+
+    #[test]
+    fn returns_none_on_shutdown() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let cfg = BatcherConfig::default();
+        assert!(next_batch(&rx, &cfg).is_none());
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let (tx, rx) = channel();
+        for i in 0..20 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let cfg = BatcherConfig { max_batch: 7, max_wait: Duration::from_millis(1) };
+        let mut seen = Vec::new();
+        while let Some(b) = next_batch(&rx, &cfg) {
+            assert!(b.len() <= 7);
+            seen.extend(b);
+        }
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,61 @@
+//! Inference engines the coordinator can drive.
+
+use crate::conv::tensor::Tensor3;
+use crate::nn::network::Network;
+
+/// A batched inference engine. Implementations must be `Send` so the
+/// worker thread can own them.
+pub trait InferenceEngine: Send {
+    /// Classify a batch of images; returns one logit vector per image.
+    fn infer_batch(&self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>>;
+
+    /// Expected input dims.
+    fn input_dims(&self) -> (usize, usize, usize);
+
+    fn name(&self) -> String;
+}
+
+/// The native low-bit engine: the paper's kernels under a [`Network`].
+pub struct NativeEngine {
+    pub network: Network,
+    pub label: String,
+}
+
+impl NativeEngine {
+    pub fn new(network: Network, label: impl Into<String>) -> Self {
+        NativeEngine { network, label: label.into() }
+    }
+}
+
+impl InferenceEngine for NativeEngine {
+    fn infer_batch(&self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
+        images.iter().map(|img| self.network.logits(img)).collect()
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.network.input_dims
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::builder::{build_from_config, NetConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn native_engine_batches() {
+        let net = build_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 1);
+        let engine = NativeEngine::new(net, "tnn-tiny");
+        let mut rng = Rng::new(2);
+        let images: Vec<_> = (0..4).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+        let out = engine.infer_batch(&images);
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|l| l.len() == 3));
+        assert_eq!(engine.input_dims(), (8, 8, 1));
+    }
+}

@@ -1,0 +1,90 @@
+//! Serving metrics: request counts, latency quantiles, batch-size stats.
+
+use std::sync::Mutex;
+
+/// Shared metrics accumulator (worker writes, callers snapshot).
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// A point-in-time copy of the metrics.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub p50_latency_us: u64,
+    pub p95_latency_us: u64,
+    pub max_latency_us: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Record one executed batch and the end-to-end latency of each of
+    /// its requests (µs).
+    pub fn record_batch(&self, latencies_us: &[u64]) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.requests += latencies_us.len() as u64;
+        m.batch_size_sum += latencies_us.len() as u64;
+        m.latencies_us.extend_from_slice(latencies_us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lat = m.latencies_us.clone();
+        lat.sort_unstable();
+        let q = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * p) as usize]
+            }
+        };
+        MetricsSnapshot {
+            requests: m.requests,
+            batches: m.batches,
+            mean_batch_size: if m.batches > 0 { m.batch_size_sum as f64 / m.batches as f64 } else { 0.0 },
+            p50_latency_us: q(0.5),
+            p95_latency_us: q(0.95),
+            max_latency_us: lat.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(&[100, 200, 300]);
+        m.record_batch(&[400]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        assert_eq!(s.max_latency_us, 400);
+        assert!(s.p50_latency_us >= 100 && s.p50_latency_us <= 300);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p95_latency_us, 0);
+    }
+}

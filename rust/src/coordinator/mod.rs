@@ -1,0 +1,24 @@
+//! The serving coordinator: a batching inference server over the QNN
+//! engine (or an XLA-compiled model), in the style of production model
+//! routers.
+//!
+//! The paper motivates its kernels with "recognition on mobile devices";
+//! this module is the deployment harness around them: requests enter a
+//! bounded queue, a dynamic batcher groups them (up to `max_batch`,
+//! waiting at most `max_wait` after the first request), a worker thread
+//! executes the batch on an [`engine::InferenceEngine`], and latency /
+//! throughput metrics are recorded.
+//!
+//! Everything is std-only (threads + channels): the build environment has
+//! no async runtime, and a CPU inference server at this scale is
+//! well-served by a worker thread per engine.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::BatcherConfig;
+pub use engine::{InferenceEngine, NativeEngine};
+pub use metrics::MetricsSnapshot;
+pub use server::{InferenceServer, Request, Response};

@@ -1,0 +1,211 @@
+//! The inference server: bounded submission queue → dynamic batcher →
+//! worker thread → per-request response channels.
+
+use crate::conv::tensor::Tensor3;
+use crate::coordinator::batcher::{next_batch, BatcherConfig};
+use crate::coordinator::engine::InferenceEngine;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A classification request.
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor3<f32>,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+/// A classification response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    pub latency_us: u64,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// A running inference server (one worker thread).
+pub struct InferenceServer {
+    tx: Option<SyncSender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl InferenceServer {
+    /// Start the server over `engine`. `queue_depth` bounds the
+    /// submission queue (backpressure: submit blocks when full).
+    pub fn start(engine: Box<dyn InferenceEngine>, cfg: BatcherConfig, queue_depth: usize) -> Self {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_depth);
+        let metrics = Arc::new(Metrics::new());
+        let worker_metrics = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("tbgemm-worker".into())
+            .spawn(move || worker_loop(rx, engine, cfg, worker_metrics))
+            .expect("spawning worker");
+        InferenceServer { tx: Some(tx), worker: Some(worker), metrics, next_id: 0.into() }
+    }
+
+    /// Submit an image; returns the receiver for its response. Blocks if
+    /// the queue is full (backpressure).
+    pub fn submit(&self, image: Tensor3<f32>) -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let req = Request { id, image, submitted: Instant::now(), reply };
+        self.tx.as_ref().expect("server running").send(req).expect("worker alive");
+        rx
+    }
+
+    /// Submit and wait for the response.
+    pub fn infer(&self, image: Tensor3<f32>) -> Response {
+        self.submit(image).recv().expect("worker replies")
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.tx.take(); // close the channel; worker drains and exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Request>, engine: Box<dyn InferenceEngine>, cfg: BatcherConfig, metrics: Arc<Metrics>) {
+    while let Some(batch) = next_batch(&rx, &cfg) {
+        let images: Vec<Tensor3<f32>> = batch.iter().map(|r| r.image.clone()).collect();
+        let outputs = engine.infer_batch(&images);
+        debug_assert_eq!(outputs.len(), batch.len());
+        let mut latencies = Vec::with_capacity(batch.len());
+        let bsize = batch.len();
+        for (req, logits) in batch.into_iter().zip(outputs) {
+            let latency_us = req.submitted.elapsed().as_micros() as u64;
+            latencies.push(latency_us);
+            let predicted = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            // Receiver may have been dropped (caller gave up): ignore.
+            let _ = req.reply.send(Response { id: req.id, logits, predicted, latency_us, batch_size: bsize });
+        }
+        metrics.record_batch(&latencies);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::nn::builder::{build_from_config, NetConfig};
+    use crate::util::proptest::{check, Config};
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn tiny_server(max_batch: usize) -> InferenceServer {
+        let net = build_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 11);
+        let engine = Box::new(NativeEngine::new(net, "test"));
+        InferenceServer::start(
+            engine,
+            BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+            64,
+        )
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = tiny_server(4);
+        let mut rng = Rng::new(1);
+        let resp = server.infer(Tensor3::random(8, 8, 1, &mut rng));
+        assert_eq!(resp.logits.len(), 3);
+        assert!(resp.predicted < 3);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 1);
+    }
+
+    /// Property: every submitted request receives exactly one response
+    /// with its own id, regardless of batch boundaries.
+    #[test]
+    fn every_request_answered_exactly_once() {
+        check(Config { cases: 6, base_seed: 0xF0 }, "requests answered", |rng| {
+            let n = 1 + rng.below(24);
+            let max_batch = 1 + rng.below(8);
+            let server = tiny_server(max_batch);
+            let mut pending = Vec::new();
+            for _ in 0..n {
+                let img = Tensor3::random(8, 8, 1, rng);
+                pending.push(server.submit(img));
+            }
+            let mut ids: Vec<u64> = pending.iter().map(|rx| rx.recv().expect("response").id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "each id exactly once");
+            let m = server.shutdown();
+            assert_eq!(m.requests, n as u64);
+        });
+    }
+
+    /// Property: observed batch sizes never exceed max_batch, and the
+    /// metrics account for every request.
+    #[test]
+    fn batch_sizes_bounded() {
+        check(Config { cases: 4, base_seed: 0xF1 }, "batch bound", |rng| {
+            let max_batch = 1 + rng.below(6);
+            let server = tiny_server(max_batch);
+            let n = 20;
+            let mut pending = Vec::new();
+            for _ in 0..n {
+                pending.push(server.submit(Tensor3::random(8, 8, 1, rng)));
+            }
+            for rx in pending {
+                let resp = rx.recv().unwrap();
+                assert!(resp.batch_size <= max_batch, "batch {} > {}", resp.batch_size, max_batch);
+            }
+            let m = server.shutdown();
+            assert_eq!(m.requests, n as u64);
+            assert!(m.mean_batch_size <= max_batch as f64 + 1e-9);
+        });
+    }
+
+    #[test]
+    fn deterministic_logits_for_same_image() {
+        let server = tiny_server(4);
+        let mut rng = Rng::new(5);
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        let a = server.infer(img.clone());
+        let b = server.infer(img);
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn metrics_latency_populated() {
+        let server = tiny_server(2);
+        let mut rng = Rng::new(6);
+        for _ in 0..5 {
+            server.infer(Tensor3::random(8, 8, 1, &mut rng));
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, 5);
+        assert!(m.max_latency_us > 0);
+        assert!(m.p50_latency_us <= m.p95_latency_us);
+    }
+}

@@ -1,0 +1,178 @@
+//! A Cortex-A73 throughput model over the emulated microkernels' traced
+//! instruction streams — the analytical half of the paper's evaluation.
+//!
+//! The paper's Table II compares microkernels by instruction counts; its
+//! Table III measures wall-clock on a Cortex-A73. This module bridges the
+//! two on a non-ARM host: it executes one steady-state iteration of each
+//! emulated microkernel, takes the per-class instruction counts from the
+//! [`crate::simd::Trace`], and applies a simple dual-issue throughput
+//! model of the A73's NEON unit to predict cycles — from which a
+//! *predicted* Table III ratio matrix follows.
+//!
+//! Model (see `EXPERIMENTS.md` for validation against the paper):
+//!
+//! * The A73 executes NEON through two 64-bit pipes. 128-bit logical /
+//!   CNT / widening-add ops split into two μops that dual-issue → ~1
+//!   cycle each.
+//! * FP multiply-accumulate (FMLA) only executes on the FP/multiplier
+//!   datapath → ~2 cycles per 128-bit instruction; integer
+//!   multiply-accumulate (UMLAL) is cheaper on the A73 → ~1.25 cycles
+//!   (this split is what reproduces the paper's U8-beats-F32 ratio).
+//! * Register-arrangement ops (DUP/EXT/INS/UXTL/MOVI) dual-issue freely →
+//!   ~0.5 cycles.
+//! * Cross-lane reductions (ADDV) are slow → ~3 cycles.
+//! * Loads go through the separate load/store pipe and overlap with
+//!   compute: per iteration, `cycles = max(compute, loads)`.
+
+pub mod table2;
+
+use crate::simd::trace::Trace;
+
+/// Per-instruction-class reciprocal throughputs (cycles per instruction).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub logic: f64,
+    pub cnt: f64,
+    pub widening: f64,
+    /// FP multiply-accumulate (FMLA).
+    pub mul: f64,
+    /// Integer multiply-accumulate (UMLAL and friends).
+    pub mul_int: f64,
+    pub addv: f64,
+    pub cvt: f64,
+    pub arrange: f64,
+    pub load: f64,
+    /// Epilogue cost per output element (zero-point compensation etc.).
+    pub epilogue_u8: f64,
+    /// Per-A-element packing cost in cycles (bit-packing reads+writes).
+    pub pack_per_elem: f64,
+}
+
+impl CostModel {
+    /// The calibrated Cortex-A73 model described in the module docs.
+    pub fn cortex_a73() -> Self {
+        CostModel {
+            logic: 1.0,
+            cnt: 1.0,
+            widening: 1.0,
+            mul: 2.0,
+            mul_int: 1.25,
+            addv: 3.0,
+            cvt: 2.0,
+            arrange: 0.5,
+            load: 1.0,
+            epilogue_u8: 4.0,
+            pack_per_elem: 0.25,
+        }
+    }
+
+    fn class_cost(&self, mnemonic: &str) -> f64 {
+        match mnemonic {
+            "EOR" | "AND" | "ORR" | "ORN" | "BIC" | "MVN" | "USHR" => self.logic,
+            "CNT" => self.cnt,
+            "SADDW" | "SADDW2" | "SSUBL" | "SSUBL2" | "ADD.8H" | "ADD.4S" | "UADALP" | "FADD" => self.widening,
+            "FMLA" => self.mul,
+            "UMLAL" | "UMLAL2" | "UMLAL.8B" | "UMLAL2.16B" => self.mul_int,
+            "ADDV" => self.addv,
+            "UCVTF" => self.cvt,
+            "DUP.16B" | "EXT" | "INS" | "UXTL" | "UXTL2" | "MOVI" => self.arrange,
+            "LD1.16B" | "LD1.8B" => 0.0, // loads modeled on the load pipe
+            "ST1.16B" => 0.0,
+            other => panic!("no cost for mnemonic {other}"),
+        }
+    }
+
+    /// Predicted cycles for one steady-state microkernel iteration whose
+    /// instruction stream is summarized by `trace`.
+    pub fn cycles_per_iteration(&self, trace: &Trace) -> f64 {
+        let compute: f64 = trace.by_mnemonic.iter().map(|(m, &n)| self.class_cost(m) * n as f64).sum();
+        let loads = (trace.ld as f64) * self.load;
+        compute.max(loads)
+    }
+
+    /// Predicted cycles per multiply-accumulate: cycles / (m·n·k).
+    pub fn cycles_per_mac(&self, trace: &Trace, shape: (usize, usize, usize)) -> f64 {
+        let (m, n, k) = shape;
+        self.cycles_per_iteration(trace) / (m * n * k) as f64
+    }
+
+    /// Predicted cycles for a full (height, width, depth) multiplication
+    /// with the paper's Algorithm 2 structure: microkernel tiles plus A
+    /// re-packing per row panel and the per-output epilogue.
+    pub fn predict_gemm(
+        &self,
+        trace: &Trace,
+        shape: (usize, usize, usize),
+        problem: (usize, usize, usize),
+        epilogue: f64,
+    ) -> f64 {
+        let (mk, nk, kk) = shape;
+        let (h, w, d) = problem;
+        let tiles_m = h.div_ceil(mk);
+        let tiles_n = w.div_ceil(nk);
+        let iters = d.div_ceil(kk);
+        let kernel = self.cycles_per_iteration(trace) * (tiles_m * tiles_n * iters) as f64;
+        let packing = self.pack_per_elem * (tiles_m * mk) as f64 * d as f64;
+        let epi = epilogue * (h * w) as f64;
+        kernel + packing + epi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::trace::InsnClass;
+
+    fn trace_of(items: &[(&'static str, InsnClass, u64)]) -> Trace {
+        let mut t = Trace::new();
+        for &(m, c, n) in items {
+            for _ in 0..n {
+                t.hit(c, m);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn bnn_iteration_cost() {
+        let m = CostModel::cortex_a73();
+        let t = trace_of(&[
+            ("EOR", InsnClass::Com, 8),
+            ("CNT", InsnClass::Com, 8),
+            ("SADDW", InsnClass::Com, 8),
+            ("SADDW2", InsnClass::Com, 8),
+            ("DUP.16B", InsnClass::Mov, 8),
+            ("LD1.16B", InsnClass::Ld, 1),
+            ("LD1.8B", InsnClass::Ld, 1),
+        ]);
+        // 32 logic/cnt/widening + 8*0.5 arrange = 36, loads 2 → max = 36
+        assert!((m.cycles_per_iteration(&t) - 36.0).abs() < 1e-9);
+        // per MAC: 36/1024
+        assert!((m.cycles_per_mac(&t, (16, 8, 8)) - 36.0 / 1024.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmla_is_mul_class() {
+        let m = CostModel::cortex_a73();
+        let t = trace_of(&[("FMLA", InsnClass::Com, 24), ("LD1.16B", InsnClass::Ld, 5)]);
+        assert!((m.cycles_per_iteration(&t) - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loads_can_dominate() {
+        let m = CostModel::cortex_a73();
+        let t = trace_of(&[("EOR", InsnClass::Com, 1), ("LD1.16B", InsnClass::Ld, 14)]);
+        assert!((m.cycles_per_iteration(&t) - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predict_gemm_scales_with_problem() {
+        let m = CostModel::cortex_a73();
+        let t = trace_of(&[("EOR", InsnClass::Com, 32), ("LD1.16B", InsnClass::Ld, 2)]);
+        // 160 and 320 are exact multiples of the 16-row microkernel, so
+        // doubling the height exactly doubles every cost term.
+        let small = m.predict_gemm(&t, (16, 8, 8), (160, 24, 128), 1.0);
+        let big = m.predict_gemm(&t, (16, 8, 8), (320, 24, 128), 1.0);
+        assert!(big > 1.9 * small && big < 2.1 * small);
+    }
+}

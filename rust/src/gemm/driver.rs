@@ -1,0 +1,511 @@
+//! The paper's Algorithm 2: the blocked GEMM loop with a pre-reordered
+//! right-hand matrix ("PackedB").
+//!
+//! In NN inference the right matrix is the weight matrix: it is small,
+//! constant, and packed **once, offline**. Per multiplication the driver
+//! walks the depth in `k_blk` blocks and the rows in `m_mk` panels,
+//! packing each small `Ablock` on the fly (the paper's memory-frugal
+//! variant: the `A_buf` holds only `m_mk` rows), then calls the
+//! microkernel and writes the valid sub-tile of `C` through the
+//! per-algorithm epilogue (eq. (6) for the binary kinds, eq. (3)
+//! zero-point compensation for U8/U4).
+//!
+//! Two execution paths share this driver's packing and epilogues:
+//! the **emulated** path (instruction-exact NEON sequences from
+//! [`crate::gemm::micro`], used for correctness and Table II) and the
+//! **native** path ([`crate::gemm::native`], used for Table III wall-clock
+//! benchmarks). Both are tested against the scalar oracles.
+
+use crate::gemm::micro;
+use crate::gemm::pack;
+use crate::gemm::Kind;
+use crate::simd::reg::Neon;
+use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
+
+/// Depth-block size for the 16-bit-accumulated low-bit kinds: the paper's
+/// k_max = 32767 bounds correctness; we use a cache-friendly block well
+/// below it and widen into i32 between blocks, removing the depth limit
+/// entirely while keeping in-block arithmetic identical to the paper's.
+pub const K_BLK_LOWBIT: usize = 4096;
+/// Depth-block for U4 (16-bit accumulators, k_max = 291 ⇒ largest even
+/// block is 290).
+pub const K_BLK_U4: usize = 290;
+/// Depth-block for U8 (32-bit accumulators, k_max = 66051).
+pub const K_BLK_U8: usize = 66050;
+
+/// Left-hand input accepted by a packed-B multiplier.
+pub enum Lhs<'a> {
+    I8(&'a MatI8),
+    U8(&'a MatU8),
+    F32(&'a MatF32),
+}
+
+/// Output of a multiplication. Low-bit kinds produce i32 (widened from
+/// the in-kernel 16-bit accumulators); F32 and daBNN produce f32.
+#[derive(Clone, Debug)]
+pub enum GemmOut {
+    I32(MatI32),
+    F32(MatF32),
+}
+
+impl GemmOut {
+    pub fn rows(&self) -> usize {
+        match self {
+            GemmOut::I32(m) => m.rows,
+            GemmOut::F32(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            GemmOut::I32(m) => m.cols,
+            GemmOut::F32(m) => m.cols,
+        }
+    }
+
+    /// Element as f64 (for cross-path comparisons).
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        match self {
+            GemmOut::I32(m) => m.get(r, c) as f64,
+            GemmOut::F32(m) => m.get(r, c) as f64,
+        }
+    }
+
+    pub fn unwrap_i32(self) -> MatI32 {
+        match self {
+            GemmOut::I32(m) => m,
+            _ => panic!("expected i32 output"),
+        }
+    }
+
+    pub fn unwrap_f32(self) -> MatF32 {
+        match self {
+            GemmOut::F32(m) => m,
+            _ => panic!("expected f32 output"),
+        }
+    }
+}
+
+/// Algorithm selector for [`GemmDriver`]. `Algo` owns the packed right
+/// matrix and any constants the epilogue needs.
+pub enum Algo {
+    /// Binary×binary, paper §III-B.
+    Bnn { panels: Vec<Vec<u8>> },
+    /// Ternary×ternary, §III-C.
+    Tnn { panels: Vec<Vec<u8>> },
+    /// Ternary×binary, §III-D.
+    Tbn { panels: Vec<Vec<u8>> },
+    /// f32 baseline.
+    F32 { panels: Vec<Vec<f32>> },
+    /// gemmlowp-style u8 with zero points; `col_sums` are precomputed at
+    /// pack time for the eq. (3) epilogue.
+    U8 { panels: Vec<Vec<u8>>, za: i32, zb: i32, col_sums: Vec<i32> },
+    /// 4-bit path with zero points.
+    U4 { panels: Vec<Vec<u8>>, za: i32, zb: i32, col_sums: Vec<i32> },
+    /// daBNN-style binary (8×6×128 microkernel, f32 output).
+    DaBnn { panels: Vec<Vec<u8>> },
+}
+
+/// A GEMM engine with a pre-packed right-hand (weight) matrix, following
+/// the paper's Algorithm 2.
+pub struct GemmDriver {
+    pub kind: Kind,
+    /// Depth (rows of B).
+    pub k: usize,
+    /// Width (cols of B).
+    pub n: usize,
+    algo: Algo,
+}
+
+impl GemmDriver {
+    /// Pack a binary matrix for the paper's BNN multiplication.
+    pub fn new_bnn(b: &MatI8) -> Self {
+        assert!(b.is_binary(), "BNN weights must be ±1");
+        let panels = (0..b.cols.div_ceil(8)).map(|cb| pack::pack_b_bnn(b, cb * 8, b.rows)).collect();
+        GemmDriver { kind: Kind::Bnn, k: b.rows, n: b.cols, algo: Algo::Bnn { panels } }
+    }
+
+    /// Pack a ternary matrix for the paper's TNN multiplication.
+    pub fn new_tnn(b: &MatI8) -> Self {
+        assert!(b.is_ternary(), "TNN weights must be in {{-1,0,1}}");
+        let panels = (0..b.cols.div_ceil(8)).map(|cb| pack::pack_b_tnn(b, cb * 8, b.rows)).collect();
+        GemmDriver { kind: Kind::Tnn, k: b.rows, n: b.cols, algo: Algo::Tnn { panels } }
+    }
+
+    /// Pack a binary matrix for the paper's TBN multiplication (ternary
+    /// activations × binary weights).
+    pub fn new_tbn(b: &MatI8) -> Self {
+        assert!(b.is_binary(), "TBN weights must be ±1");
+        let panels = (0..b.cols.div_ceil(8)).map(|cb| pack::pack_b_bnn(b, cb * 8, b.rows)).collect();
+        GemmDriver { kind: Kind::Tbn, k: b.rows, n: b.cols, algo: Algo::Tbn { panels } }
+    }
+
+    /// Pack an f32 matrix for the baseline multiplication.
+    pub fn new_f32(b: &MatF32) -> Self {
+        let panels = (0..b.cols.div_ceil(8)).map(|cb| pack::pack_b_f32(b, cb * 8, b.rows)).collect();
+        GemmDriver { kind: Kind::F32, k: b.rows, n: b.cols, algo: Algo::F32 { panels } }
+    }
+
+    /// Pack a u8 matrix with zero points `(za, zb)` for the gemmlowp-style
+    /// multiplication. Column sums for eq. (3) are computed here, offline.
+    pub fn new_u8(b: &MatU8, za: i32, zb: i32) -> Self {
+        let panels = (0..b.cols.div_ceil(8)).map(|cb| pack::pack_b_u8(b, cb * 8, b.rows)).collect();
+        let col_sums = (0..b.cols).map(|j| (0..b.rows).map(|t| b.get(t, j) as i32).sum()).collect();
+        GemmDriver { kind: Kind::U8, k: b.rows, n: b.cols, algo: Algo::U8 { panels, za, zb, col_sums } }
+    }
+
+    /// Pack a 4-bit matrix (values 0..=15) with zero points.
+    pub fn new_u4(b: &MatU8, za: i32, zb: i32) -> Self {
+        assert!(b.data.iter().all(|&v| v < 16), "U4 weights must be 4-bit");
+        let panels = (0..b.cols.div_ceil(8)).map(|cb| pack::pack_b_u4(b, cb * 8, b.rows)).collect();
+        let col_sums = (0..b.cols).map(|j| (0..b.rows).map(|t| b.get(t, j) as i32).sum()).collect();
+        GemmDriver { kind: Kind::U4, k: b.rows, n: b.cols, algo: Algo::U4 { panels, za, zb, col_sums } }
+    }
+
+    /// Pack a binary matrix for the daBNN-style multiplication.
+    pub fn new_dabnn(b: &MatI8) -> Self {
+        assert!(b.is_binary(), "daBNN weights must be ±1");
+        let panels = (0..b.cols.div_ceil(6)).map(|cb| pack::pack_b_dabnn(b, cb * 6, b.rows)).collect();
+        GemmDriver { kind: Kind::DaBnn, k: b.rows, n: b.cols, algo: Algo::DaBnn { panels } }
+    }
+
+    /// Multiply using the **emulated** NEON microkernels. `a` must match
+    /// the driver's input type and have `a.cols == self.k`.
+    pub fn multiply_emulated(&self, a: Lhs<'_>) -> GemmOut {
+        let mut cpu = Neon::new();
+        self.multiply_with_cpu(a, &mut cpu)
+    }
+
+    /// As [`Self::multiply_emulated`] but with an externally supplied
+    /// (e.g. recording) CPU — used by the Table II harness.
+    pub fn multiply_with_cpu(&self, a: Lhs<'_>, cpu: &mut Neon) -> GemmOut {
+        match (&self.algo, a) {
+            (Algo::Bnn { panels }, Lhs::I8(a)) => GemmOut::I32(self.run_bnn(a, panels, cpu)),
+            (Algo::Tnn { panels }, Lhs::I8(a)) => GemmOut::I32(self.run_tnn(a, panels, cpu, false)),
+            (Algo::Tbn { panels }, Lhs::I8(a)) => GemmOut::I32(self.run_tnn(a, panels, cpu, true)),
+            (Algo::F32 { panels }, Lhs::F32(a)) => GemmOut::F32(self.run_f32(a, panels, cpu)),
+            (Algo::U8 { panels, za, zb, col_sums }, Lhs::U8(a)) => {
+                GemmOut::I32(self.run_u8(a, panels, *za, *zb, col_sums, cpu))
+            }
+            (Algo::U4 { panels, za, zb, col_sums }, Lhs::U8(a)) => {
+                GemmOut::I32(self.run_u4(a, panels, *za, *zb, col_sums, cpu))
+            }
+            (Algo::DaBnn { panels }, Lhs::I8(a)) => GemmOut::F32(self.run_dabnn(a, panels, cpu)),
+            _ => panic!("left-hand matrix type does not match algorithm {:?}", self.kind),
+        }
+    }
+
+    // ---- per-kind emulated drivers -----------------------------------
+
+    fn run_bnn(&self, a: &MatI8, panels: &[Vec<u8>], cpu: &mut Neon) -> MatI32 {
+        assert_eq!(a.cols, self.k);
+        assert!(a.is_binary());
+        let (m, n, k) = (a.rows, self.n, self.k);
+        let mut c = MatI32::zeros(m, n);
+        let chunks_total = k.div_ceil(8);
+        for r0 in (0..m).step_by(16) {
+            let pa = pack::pack_a_bnn(a, r0, k);
+            let m_eff = (m - r0).min(16);
+            for (cb, panel) in panels.iter().enumerate() {
+                let n_eff = (n - cb * 8).min(8);
+                let tile = micro::bnn_microkernel(cpu, &pa, panel, chunks_total);
+                for r in 0..m_eff {
+                    for j in 0..n_eff {
+                        // eq. (6): C = k − 2·Σ(a⊕b). Depth padding packs
+                        // 0-bits on both sides and contributes nothing.
+                        c.set(r0 + r, cb * 8 + j, k as i32 - 2 * tile[r * 8 + j] as i32);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Shared TNN/TBN driver (identical structure; TBN loads binary B).
+    fn run_tnn(&self, a: &MatI8, panels: &[Vec<u8>], cpu: &mut Neon, tbn: bool) -> MatI32 {
+        assert_eq!(a.cols, self.k);
+        assert!(a.is_ternary());
+        let (m, n, k) = (a.rows, self.n, self.k);
+        let mut c = MatI32::zeros(m, n);
+        // Depth blocking: in-block accumulation is 16-bit (the paper's
+        // scheme, valid to k_max=32767); blocks widen into i32.
+        let kb = K_BLK_LOWBIT;
+        for d0 in (0..k).step_by(kb) {
+            let k_eff = (k - d0).min(kb);
+            let a_sub = MatI8::from_fn(m, k_eff, |r, t| a.get(r, d0 + t));
+            let chunks = k_eff.div_ceil(8);
+            let panel_off = d0 / 8; // panels are chunk-major over full k
+            for r0 in (0..m).step_by(16) {
+                let pa = pack::pack_a_tnn(&a_sub, r0, k_eff);
+                let m_eff = (m - r0).min(16);
+                for (cb, panel) in panels.iter().enumerate() {
+                    let n_eff = (n - cb * 8).min(8);
+                    let stride = if tbn { 8 } else { 16 };
+                    let pb = &panel[panel_off * stride..];
+                    let tile = if tbn {
+                        micro::tbn_microkernel(cpu, &pa, pb, chunks)
+                    } else {
+                        micro::tnn_microkernel(cpu, &pa, pb, chunks)
+                    };
+                    for r in 0..m_eff {
+                        for j in 0..n_eff {
+                            let v = c.get(r0 + r, cb * 8 + j) + tile[r * 8 + j] as i32;
+                            c.set(r0 + r, cb * 8 + j, v);
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn run_f32(&self, a: &MatF32, panels: &[Vec<f32>], cpu: &mut Neon) -> MatF32 {
+        assert_eq!(a.cols, self.k);
+        let (m, n, k) = (a.rows, self.n, self.k);
+        let mut c = MatF32::zeros(m, n);
+        for r0 in (0..m).step_by(12) {
+            let pa = pack::pack_a_f32(a, r0, k);
+            let m_eff = (m - r0).min(12);
+            for (cb, panel) in panels.iter().enumerate() {
+                let n_eff = (n - cb * 8).min(8);
+                let tile = micro::f32_microkernel(cpu, &pa, panel, k);
+                for r in 0..m_eff {
+                    for j in 0..n_eff {
+                        c.set(r0 + r, cb * 8 + j, tile[r * 8 + j]);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn run_u8(&self, a: &MatU8, panels: &[Vec<u8>], za: i32, zb: i32, col_sums: &[i32], cpu: &mut Neon) -> MatI32 {
+        assert_eq!(a.cols, self.k);
+        let (m, n, k) = (a.rows, self.n, self.k);
+        let mut c = MatI32::zeros(m, n);
+        let row_sums: Vec<i32> = (0..m).map(|i| (0..k).map(|t| a.get(i, t) as i32).sum()).collect();
+        let chunks = k.div_ceil(2);
+        for r0 in (0..m).step_by(12) {
+            let pa = pack::pack_a_u8(a, r0, k);
+            let m_eff = (m - r0).min(12);
+            for (cb, panel) in panels.iter().enumerate() {
+                let n_eff = (n - cb * 8).min(8);
+                let tile = micro::u8_microkernel(cpu, &pa, panel, chunks);
+                for r in 0..m_eff {
+                    for j in 0..n_eff {
+                        // eq. (3) zero-point compensation.
+                        let raw = tile[r * 8 + j] as i32;
+                        let v = raw - zb * row_sums[r0 + r] - za * col_sums[cb * 8 + j] + k as i32 * za * zb;
+                        c.set(r0 + r, cb * 8 + j, v);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn run_u4(&self, a: &MatU8, panels: &[Vec<u8>], za: i32, zb: i32, col_sums: &[i32], cpu: &mut Neon) -> MatI32 {
+        assert_eq!(a.cols, self.k);
+        assert!(a.data.iter().all(|&v| v < 16), "U4 activations must be 4-bit");
+        let (m, n, k) = (a.rows, self.n, self.k);
+        let mut c = MatI32::zeros(m, n);
+        let row_sums: Vec<i32> = (0..m).map(|i| (0..k).map(|t| a.get(i, t) as i32).sum()).collect();
+        // eq. (4)/(5): 16-bit accumulators limit in-block depth to 290;
+        // the driver widens into i32 between blocks (the scheme of [20]).
+        let kb = K_BLK_U4;
+        for d0 in (0..k).step_by(kb) {
+            let k_eff = (k - d0).min(kb);
+            let a_sub = MatU8 {
+                rows: m,
+                cols: k_eff,
+                data: (0..m).flat_map(|r| (0..k_eff).map(move |t| (r, t))).map(|(r, t)| a.get(r, d0 + t)).collect(),
+            };
+            let chunks = k_eff.div_ceil(2);
+            let panel_off = d0 / 2;
+            for r0 in (0..m).step_by(24) {
+                let pa = pack::pack_a_u4(&a_sub, r0, k_eff);
+                let m_eff = (m - r0).min(24);
+                for (cb, panel) in panels.iter().enumerate() {
+                    let n_eff = (n - cb * 8).min(8);
+                    let tile = micro::u4_microkernel(cpu, &pa, &panel[panel_off * 8..], chunks);
+                    for r in 0..m_eff {
+                        for j in 0..n_eff {
+                            let v = c.get(r0 + r, cb * 8 + j) + tile[r * 8 + j] as i32;
+                            c.set(r0 + r, cb * 8 + j, v);
+                        }
+                    }
+                }
+            }
+        }
+        // eq. (3) epilogue over the full depth.
+        let mut out = MatI32::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let v = c.get(i, j) - zb * row_sums[i] - za * col_sums[j] + k as i32 * za * zb;
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    fn run_dabnn(&self, a: &MatI8, panels: &[Vec<u8>], cpu: &mut Neon) -> MatF32 {
+        assert_eq!(a.cols, self.k);
+        assert!(a.is_binary());
+        let (m, n, k) = (a.rows, self.n, self.k);
+        let mut c = MatF32::zeros(m, n);
+        let chunks = k.div_ceil(128);
+        for r0 in (0..m).step_by(8) {
+            let pa = pack::pack_a_dabnn(a, r0, k);
+            let m_eff = (m - r0).min(8);
+            for (cb, panel) in panels.iter().enumerate() {
+                let n_eff = (n - cb * 6).min(6);
+                let tile = micro::dabnn_microkernel(cpu, &pa, panel, chunks);
+                for r in 0..m_eff {
+                    for j in 0..n_eff {
+                        c.set(r0 + r, cb * 6 + j, (k as i32 - 2 * tile[r * 6 + j] as i32) as f32);
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::reference;
+    use crate::util::proptest::{check, gemm_shape, Config};
+    use crate::util::Rng;
+
+    fn assert_i32_eq(got: &MatI32, want: &MatI32, ctx: &str) {
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{ctx}");
+        for i in 0..got.rows {
+            for j in 0..got.cols {
+                assert_eq!(got.get(i, j), want.get(i, j), "{ctx} at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn bnn_driver_arbitrary_shapes() {
+        check(Config { cases: 24, base_seed: 0xB0 }, "bnn driver vs oracle", |rng| {
+            let (m, n, k) = gemm_shape(rng, 48, 40, 96);
+            let a = MatI8::random_binary(m, k, rng);
+            let b = MatI8::random_binary(k, n, rng);
+            let drv = GemmDriver::new_bnn(&b);
+            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            assert_i32_eq(&c, &reference::gemm_i8(&a, &b), &format!("m={m} n={n} k={k}"));
+        });
+    }
+
+    #[test]
+    fn tnn_driver_arbitrary_shapes() {
+        check(Config { cases: 24, base_seed: 0xB1 }, "tnn driver vs oracle", |rng| {
+            let (m, n, k) = gemm_shape(rng, 48, 40, 96);
+            let a = MatI8::random_ternary(m, k, rng);
+            let b = MatI8::random_ternary(k, n, rng);
+            let drv = GemmDriver::new_tnn(&b);
+            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            assert_i32_eq(&c, &reference::gemm_i8(&a, &b), &format!("m={m} n={n} k={k}"));
+        });
+    }
+
+    #[test]
+    fn tbn_driver_arbitrary_shapes() {
+        check(Config { cases: 24, base_seed: 0xB2 }, "tbn driver vs oracle", |rng| {
+            let (m, n, k) = gemm_shape(rng, 48, 40, 96);
+            let a = MatI8::random_ternary(m, k, rng);
+            let b = MatI8::random_binary(k, n, rng);
+            let drv = GemmDriver::new_tbn(&b);
+            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            assert_i32_eq(&c, &reference::gemm_i8(&a, &b), &format!("m={m} n={n} k={k}"));
+        });
+    }
+
+    #[test]
+    fn u8_driver_with_zero_points() {
+        check(Config { cases: 16, base_seed: 0xB3 }, "u8 driver vs eq(3) oracle", |rng| {
+            let (m, n, k) = gemm_shape(rng, 30, 20, 40);
+            let a = MatU8::random(m, k, rng);
+            let b = MatU8::random(k, n, rng);
+            let za = rng.below(256) as i32;
+            let zb = rng.below(256) as i32;
+            let drv = GemmDriver::new_u8(&b, za, zb);
+            let c = drv.multiply_emulated(Lhs::U8(&a)).unwrap_i32();
+            assert_i32_eq(&c, &reference::gemm_u8_centered(&a, &b, za, zb), &format!("m={m} n={n} k={k}"));
+        });
+    }
+
+    #[test]
+    fn u4_driver_with_zero_points_and_deep_k() {
+        check(Config { cases: 10, base_seed: 0xB4 }, "u4 driver vs eq(3) oracle", |rng| {
+            let m = 1 + rng.below(30);
+            let n = 1 + rng.below(20);
+            // Deliberately cross the 290 depth-block boundary.
+            let k = 250 + rng.below(200);
+            let a = MatU8::random_below(m, k, 15, rng);
+            let b = MatU8::random_below(k, n, 15, rng);
+            let za = rng.below(16) as i32;
+            let zb = rng.below(16) as i32;
+            let drv = GemmDriver::new_u4(&b, za, zb);
+            let c = drv.multiply_emulated(Lhs::U8(&a)).unwrap_i32();
+            assert_i32_eq(&c, &reference::gemm_u8_centered(&a, &b, za, zb), &format!("m={m} n={n} k={k}"));
+        });
+    }
+
+    #[test]
+    fn f32_driver_matches_oracle() {
+        let mut rng = Rng::new(0xB5);
+        for _ in 0..8 {
+            let (m, n, k) = gemm_shape(&mut rng, 40, 30, 64);
+            let a = MatF32::random(m, k, &mut rng);
+            let b = MatF32::random(k, n, &mut rng);
+            let drv = GemmDriver::new_f32(&b);
+            let c = drv.multiply_emulated(Lhs::F32(&a)).unwrap_f32();
+            let want = reference::gemm_f32(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let (g, w) = (c.get(i, j), want.get(i, j));
+                    assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "({i},{j}): {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dabnn_driver_matches_oracle() {
+        check(Config { cases: 16, base_seed: 0xB6 }, "dabnn driver vs oracle", |rng| {
+            let (m, n, k) = gemm_shape(rng, 32, 24, 300);
+            let a = MatI8::random_binary(m, k, rng);
+            let b = MatI8::random_binary(k, n, rng);
+            let drv = GemmDriver::new_dabnn(&b);
+            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_f32();
+            let want = reference::gemm_i8(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j}) m={m} n={n} k={k}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tnn_deep_k_crosses_block_boundary() {
+        // k > K_BLK_LOWBIT exercises the i32 widening between blocks.
+        let mut rng = Rng::new(0xB7);
+        let k = K_BLK_LOWBIT + 100;
+        let a = MatI8::random_ternary(4, k, &mut rng);
+        let b = MatI8::random_ternary(k, 4, &mut rng);
+        let drv = GemmDriver::new_tnn(&b);
+        let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+        assert_i32_eq(&c, &reference::gemm_i8(&a, &b), "deep k");
+    }
+
+    #[test]
+    #[should_panic(expected = "BNN weights must be ±1")]
+    fn bnn_rejects_ternary_weights() {
+        let b = MatI8::zeros(8, 8);
+        let _ = GemmDriver::new_bnn(&b);
+    }
+}

@@ -1,0 +1,207 @@
+//! §III-A of the paper: value encodings and Boolean product formulas.
+//!
+//! * Binary values use a single bit: `1 → 0`, `-1 → 1`, so that the product
+//!   `z = x·y` satisfies `z^b = x^b ⊕ y^b` and a dot product is
+//!   `c = k − 2·Σ (x^b ⊕ y^b)` (the paper's eq. (6)).
+//! * Ternary values use the 2-bit `(x⁺, x⁻)` encoding:
+//!   `1 → (1,0)`, `0 → (0,0)`, `-1 → (0,1)`; `(1,1)` is invalid. The
+//!   product planes are
+//!   `z⁺ = (x⁺∧y⁺)∨(x⁻∧y⁻)`, `z⁻ = (x⁺∧y⁻)∨(x⁻∧y⁺)`
+//!   and a dot product is `c = Σ (z⁺ − z⁻)` (eq. (7)).
+//! * Ternary×binary uses
+//!   `z⁺ = (x⁺∨y^b)∧(x⁻∨¬y^b)`, `z⁻ = (x⁺∨¬y^b)∧(x⁻∨y^b)`
+//!   — note these are the paper's ORN-based forms, which assume the
+//!   encoding is valid (never `(1,1)`).
+//!
+//! These scalar definitions are the ground truth for Table I; the packed
+//! microkernels and native paths are all tested against them.
+
+/// Binary encoding: `1 → 0`, `-1 → 1`.
+#[inline]
+pub fn encode_binary(x: i8) -> u8 {
+    debug_assert!(x == 1 || x == -1, "binary value must be ±1, got {x}");
+    if x == 1 {
+        0
+    } else {
+        1
+    }
+}
+
+/// Inverse of [`encode_binary`].
+#[inline]
+pub fn decode_binary(b: u8) -> i8 {
+    if b == 0 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Ternary 2-bit encoding: `1 → (1,0)`, `0 → (0,0)`, `-1 → (0,1)`.
+#[inline]
+pub fn encode_ternary(x: i8) -> (u8, u8) {
+    debug_assert!((-1..=1).contains(&x), "ternary value must be in {{-1,0,1}}, got {x}");
+    match x {
+        1 => (1, 0),
+        0 => (0, 0),
+        _ => (0, 1),
+    }
+}
+
+/// Inverse of [`encode_ternary`]. `(1,1)` is invalid and rejected.
+#[inline]
+pub fn decode_ternary(p: u8, m: u8) -> i8 {
+    debug_assert!(!(p == 1 && m == 1), "(1,1) is an invalid ternary code");
+    p as i8 - m as i8
+}
+
+/// Binary product in encoded form: `z^b = x^b ⊕ y^b`.
+#[inline]
+pub fn binary_mul(xb: u8, yb: u8) -> u8 {
+    xb ^ yb
+}
+
+/// Ternary product in encoded form (paper Table I, columns `z⁺ z⁻`):
+/// `z⁺ = (x⁺∧y⁺)∨(x⁻∧y⁻)`, `z⁻ = (x⁺∧y⁻)∨(x⁻∧y⁺)`.
+#[inline]
+pub fn ternary_mul(xp: u8, xm: u8, yp: u8, ym: u8) -> (u8, u8) {
+    ((xp & yp) | (xm & ym), (xp & ym) | (xm & yp))
+}
+
+/// Ternary×binary product in encoded form (paper Table I, columns
+/// `u⁺ u⁻`): `u⁺ = (x⁺∨y^b)∧(x⁻∨¬y^b)`, `u⁻ = (x⁺∨¬y^b)∧(x⁻∨y^b)`.
+///
+/// Wait — direct transcription of the paper's formula gives, for
+/// `x = 1 (1,0), y = 1 (y^b = 0)`: `u⁺ = (1∨0)∧(0∨1) = 1` ✓. The formula
+/// is stated over single bits; here it is applied bitwise.
+#[inline]
+pub fn tbn_mul(xp: u8, xm: u8, yb: u8) -> (u8, u8) {
+    let nyb = yb ^ 1;
+    ((xp | yb) & (xm | nyb), (xp | nyb) & (xm | yb))
+}
+
+/// Alternative TBN product used by the packed kernels: a binary `y` has
+/// plane form `y⁺ = ¬y^b`, `y⁻ = y^b`, so the ternary formula applies:
+/// `u⁺ = (x⁺∧¬y^b)∨(x⁻∧y^b)`, `u⁻ = (x⁺∧y^b)∨(x⁻∧¬y^b)`.
+/// Equivalent to [`tbn_mul`] on all valid encodings (proved by the
+/// exhaustive test below).
+#[inline]
+pub fn tbn_mul_planes(xp: u8, xm: u8, yb: u8) -> (u8, u8) {
+    let nyb = yb ^ 1;
+    ((xp & nyb) | (xm & yb), (xp & yb) | (xm & nyb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I, left half: ternary multiplication z = x·y over all nine
+    /// (x, y) pairs.
+    #[test]
+    fn table1_ternary_truth_table() {
+        for x in [-1i8, 0, 1] {
+            for y in [-1i8, 0, 1] {
+                let (xp, xm) = encode_ternary(x);
+                let (yp, ym) = encode_ternary(y);
+                let (zp, zm) = ternary_mul(xp, xm, yp, ym);
+                assert!(!(zp == 1 && zm == 1), "invalid code produced");
+                assert_eq!(decode_ternary(zp, zm), x * y, "x={x} y={y}");
+            }
+        }
+    }
+
+    /// Table I, right half: ternary-binary multiplication u = x·y over all
+    /// six valid (x, y) pairs — via the paper's ORN form.
+    #[test]
+    fn table1_tbn_truth_table() {
+        for x in [-1i8, 0, 1] {
+            for y in [-1i8, 1] {
+                let (xp, xm) = encode_ternary(x);
+                let yb = encode_binary(y);
+                let (up, um) = tbn_mul(xp, xm, yb);
+                assert!(!(up == 1 && um == 1), "invalid code produced");
+                assert_eq!(decode_ternary(up, um), x * y, "x={x} y={y}");
+            }
+        }
+    }
+
+    /// The plane form the packed kernels use is equivalent to the paper's
+    /// ORN form on all valid encodings.
+    #[test]
+    fn tbn_forms_equivalent() {
+        for x in [-1i8, 0, 1] {
+            for y in [-1i8, 1] {
+                let (xp, xm) = encode_ternary(x);
+                let yb = encode_binary(y);
+                assert_eq!(tbn_mul(xp, xm, yb), tbn_mul_planes(xp, xm, yb), "x={x} y={y}");
+            }
+        }
+    }
+
+    /// eq. (6): binary dot product via XOR/popcount equals the direct dot
+    /// product, for all 4 scalar combinations and for random vectors.
+    #[test]
+    fn binary_mul_via_xor() {
+        for x in [-1i8, 1] {
+            for y in [-1i8, 1] {
+                let zb = binary_mul(encode_binary(x), encode_binary(y));
+                assert_eq!(decode_binary(zb), x * y);
+                // the 1 - 2*(x^b ⊕ y^b) identity:
+                assert_eq!((x * y) as i32, 1 - 2 * zb as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_dot_product_identity() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let k = 1 + rng.below(200);
+            let xs: Vec<i8> = (0..k).map(|_| rng.binary()).collect();
+            let ys: Vec<i8> = (0..k).map(|_| rng.binary()).collect();
+            let direct: i32 = xs.iter().zip(&ys).map(|(&a, &b)| a as i32 * b as i32).sum();
+            let xor_sum: i32 = xs
+                .iter()
+                .zip(&ys)
+                .map(|(&a, &b)| (encode_binary(a) ^ encode_binary(b)) as i32)
+                .sum();
+            assert_eq!(direct, k as i32 - 2 * xor_sum);
+        }
+    }
+
+    /// eq. (7): ternary dot product via plane counts.
+    #[test]
+    fn ternary_dot_product_identity() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(78);
+        for _ in 0..50 {
+            let k = 1 + rng.below(200);
+            let xs: Vec<i8> = (0..k).map(|_| rng.ternary()).collect();
+            let ys: Vec<i8> = (0..k).map(|_| rng.ternary()).collect();
+            let direct: i32 = xs.iter().zip(&ys).map(|(&a, &b)| a as i32 * b as i32).sum();
+            let plane_sum: i32 = xs
+                .iter()
+                .zip(&ys)
+                .map(|(&a, &b)| {
+                    let (xp, xm) = encode_ternary(a);
+                    let (yp, ym) = encode_ternary(b);
+                    let (zp, zm) = ternary_mul(xp, xm, yp, ym);
+                    zp as i32 - zm as i32
+                })
+                .sum();
+            assert_eq!(direct, plane_sum);
+        }
+    }
+
+    #[test]
+    fn roundtrip_encodings() {
+        for x in [-1i8, 1] {
+            assert_eq!(decode_binary(encode_binary(x)), x);
+        }
+        for x in [-1i8, 0, 1] {
+            let (p, m) = encode_ternary(x);
+            assert_eq!(decode_ternary(p, m), x);
+        }
+    }
+}

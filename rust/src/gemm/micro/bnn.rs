@@ -1,0 +1,132 @@
+//! The paper's binary GeMM microkernel (Fig. 1): shape 16×8, depth step 8.
+//!
+//! Per depth iteration:
+//!
+//! 1. `LD1.16B` — one column of 8-bit values from `Ablock` (16 rows ×
+//!    8 depth bits),
+//! 2. `LD1.8B` — one row of 8-bit values from `Bblock` (8 columns),
+//! 3. for each of the 8 columns: `DUP` the column byte, `EOR` with the A
+//!    register, `CNT` the ones in the "product", and accumulate with
+//!    `SADDW`/`SADDW2` into the sixteen 16-bit-lane accumulators
+//!    `c00..c07, c10..c17`.
+//!
+//! Steady-state cost: COM = 8×(EOR+CNT+SADDW+SADDW2) = 32, LD = 2,
+//! MOV = 8 DUPs — exactly the paper's Table II row for BNN.
+//!
+//! The kernel returns the raw XOR-popcount sums `s`; the driver applies
+//! the paper's eq. (6) epilogue `C = k − 2s`.
+
+use crate::simd::reg::{Neon, Reg128};
+
+/// Run the BNN microkernel over `chunks` depth iterations (each covering
+/// 8 depth bits). `ablock` is `chunks*16` bytes, `bblock` `chunks*8`.
+/// Returns `s[r][j]` = Σ popcount(a_r ⊕ b_j) as a 16×8 row-major tile.
+pub fn bnn_microkernel(cpu: &mut Neon, ablock: &[u8], bblock: &[u8], chunks: usize) -> [i16; 16 * 8] {
+    debug_assert!(ablock.len() >= chunks * 16);
+    debug_assert!(bblock.len() >= chunks * 8);
+    // c[0][j]: rows 0..8 of column j; c[1][j]: rows 8..16.
+    let mut c = [[Reg128::ZERO; 8]; 2];
+    for d in 0..chunks {
+        let a = cpu.ld1q(&ablock[d * 16..]);
+        let b = cpu.ld1d(&bblock[d * 8..]);
+        for j in 0..8 {
+            let bj = cpu.dup_b(b, j);
+            let x = cpu.eor(a, bj);
+            let p = cpu.cnt(x);
+            c[0][j] = cpu.saddw(c[0][j], p);
+            c[1][j] = cpu.saddw2(c[1][j], p);
+        }
+    }
+    let mut out = [0i16; 16 * 8];
+    for j in 0..8 {
+        let lo = c[0][j].to_i16x8();
+        let hi = c[1][j].to_i16x8();
+        for r in 0..8 {
+            out[r * 8 + j] = lo[r];
+            out[(8 + r) * 8 + j] = hi[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack::{pack_a_bnn, pack_b_bnn};
+    use crate::gemm::reference::gemm_i8;
+    use crate::util::mat::MatI8;
+    use crate::util::Rng;
+
+    /// Drive the microkernel on a full 16×k × k×8 problem and check
+    /// against the scalar oracle via the eq. (6) epilogue.
+    fn check_case(k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = MatI8::random_binary(16, k, &mut rng);
+        let b = MatI8::random_binary(k, 8, &mut rng);
+        let pa = pack_a_bnn(&a, 0, k);
+        let pb = pack_b_bnn(&b, 0, k);
+        let chunks = k.div_ceil(8);
+        let mut cpu = Neon::new();
+        let s = bnn_microkernel(&mut cpu, &pa, &pb, chunks);
+        let oracle = gemm_i8(&a, &b);
+        for r in 0..16 {
+            for j in 0..8 {
+                let c = k as i32 - 2 * s[r * 8 + j] as i32;
+                assert_eq!(c, oracle.get(r, j), "r={r} j={j} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_k8() {
+        check_case(8, 1);
+    }
+
+    #[test]
+    fn matches_oracle_k128() {
+        check_case(128, 2);
+    }
+
+    #[test]
+    fn matches_oracle_k_not_multiple_of_8() {
+        for k in [1, 3, 7, 9, 15, 33, 100] {
+            check_case(k, 100 + k as u64);
+        }
+    }
+
+    /// Steady-state instruction counts = paper Table II BNN row:
+    /// COM=32, LD=2, MOV=8, INS=0.041.
+    #[test]
+    fn table2_counts() {
+        let mut rng = Rng::new(3);
+        let a = MatI8::random_binary(16, 16, &mut rng);
+        let b = MatI8::random_binary(16, 8, &mut rng);
+        let pa = pack_a_bnn(&a, 0, 16);
+        let pb = pack_b_bnn(&b, 0, 16);
+        let mut cpu1 = Neon::new();
+        bnn_microkernel(&mut cpu1, &pa, &pb, 1);
+        let mut cpu2 = Neon::new();
+        bnn_microkernel(&mut cpu2, &pa, &pb, 2);
+        let d = cpu2.trace.delta(&cpu1.trace);
+        assert_eq!(d.com, 32);
+        assert_eq!(d.ld, 2);
+        assert_eq!(d.mov, 8);
+        assert!((d.ins_metric(16, 8, 8) - 0.041_015_625).abs() < 1e-9);
+    }
+
+    /// 16-bit accumulators never overflow up to the paper's k_max.
+    #[test]
+    fn accumulator_bound_at_kmax_sample() {
+        // Worst case for s is all bits differing: s = k. At k = 32767 the
+        // i16 accumulator holds exactly 32767. Use a smaller k here but
+        // verify the adversarial all-disagree pattern is exact.
+        let k = 4096;
+        let a = MatI8::from_fn(16, k, |_, _| 1);
+        let b = MatI8::from_fn(k, 8, |_, _| -1);
+        let pa = pack_a_bnn(&a, 0, k);
+        let pb = pack_b_bnn(&b, 0, k);
+        let mut cpu = Neon::new();
+        let s = bnn_microkernel(&mut cpu, &pa, &pb, k / 8);
+        assert!(s.iter().all(|&v| v == k as i16));
+    }
+}

@@ -1,0 +1,111 @@
+//! F32 baseline microkernel: 12×8, depth step 1 — "our implementation of
+//! floating-point 32-bit baseline which uses the same register layout as
+//! gemmlowp" (§IV).
+//!
+//! The 12×8 f32 output block is 96 values = 24 `Q` registers of 4 lanes.
+//! Per depth step: 3 loads of A (12 f32), 2 loads of B (8 f32) and 24
+//! by-element `FMLA`s — COM=24, LD=5, MOV=0, exactly the paper's Table II
+//! row for F32 (INS = 29/96 = 0.302).
+
+use crate::simd::reg::{Neon, Reg128};
+
+fn f32s(bytes: &[f32]) -> [u8; 16] {
+    let mut b = [0u8; 16];
+    for i in 0..4 {
+        b[4 * i..4 * i + 4].copy_from_slice(&bytes[i].to_le_bytes());
+    }
+    b
+}
+
+/// Run the F32 microkernel over `k` depth steps. `ablock` is `k*12` f32
+/// (packed by [`crate::gemm::pack::pack_a_f32`]), `bblock` `k*8` f32.
+/// Returns the 12×8 row-major output tile.
+pub fn f32_microkernel(cpu: &mut Neon, ablock: &[f32], bblock: &[f32], k: usize) -> [f32; 12 * 8] {
+    debug_assert!(ablock.len() >= k * 12);
+    debug_assert!(bblock.len() >= k * 8);
+    // c[g][j]: rows 4g..4g+4 of column j.
+    let mut c = [[Reg128::ZERO; 8]; 3];
+    for d in 0..k {
+        let a = &ablock[d * 12..d * 12 + 12];
+        let b = &bblock[d * 8..d * 8 + 8];
+        let a0 = cpu.ld1q(&f32s(&a[0..4]));
+        let a1 = cpu.ld1q(&f32s(&a[4..8]));
+        let a2 = cpu.ld1q(&f32s(&a[8..12]));
+        let b0 = cpu.ld1q(&f32s(&b[0..4]));
+        let b1 = cpu.ld1q(&f32s(&b[4..8]));
+        for (g, ag) in [a0, a1, a2].into_iter().enumerate() {
+            for j in 0..8 {
+                let (breg, lane) = if j < 4 { (b0, j) } else { (b1, j - 4) };
+                c[g][j] = cpu.fmla_lane(c[g][j], ag, breg, lane);
+            }
+        }
+    }
+    let mut out = [0f32; 12 * 8];
+    for j in 0..8 {
+        for g in 0..3 {
+            let v = c[g][j].to_f32x4();
+            for l in 0..4 {
+                out[(4 * g + l) * 8 + j] = v[l];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack::{pack_a_f32, pack_b_f32};
+    use crate::gemm::reference::gemm_f32;
+    use crate::util::mat::MatF32;
+    use crate::util::Rng;
+
+    fn check_case(k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = MatF32::random(12, k, &mut rng);
+        let b = MatF32::random(k, 8, &mut rng);
+        let pa = pack_a_f32(&a, 0, k);
+        let pb = pack_b_f32(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = f32_microkernel(&mut cpu, &pa, &pb, k);
+        let oracle = gemm_f32(&a, &b);
+        for r in 0..12 {
+            for j in 0..8 {
+                let got = t[r * 8 + j];
+                let want = oracle.get(r, j);
+                assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "r={r} j={j} {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_small() {
+        check_case(1, 30);
+        check_case(7, 31);
+    }
+
+    #[test]
+    fn matches_oracle_k128() {
+        check_case(128, 32);
+    }
+
+    /// Table II F32 row: COM=24 FMLA, LD=5, MOV=0, INS=0.302.
+    #[test]
+    fn table2_counts() {
+        let mut rng = Rng::new(33);
+        let a = MatF32::random(12, 2, &mut rng);
+        let b = MatF32::random(2, 8, &mut rng);
+        let pa = pack_a_f32(&a, 0, 2);
+        let pb = pack_b_f32(&b, 0, 2);
+        let mut c1 = Neon::new();
+        f32_microkernel(&mut c1, &pa, &pb, 1);
+        let mut c2 = Neon::new();
+        f32_microkernel(&mut c2, &pa, &pb, 2);
+        let d = c2.trace.delta(&c1.trace);
+        assert_eq!(d.com, 24);
+        assert_eq!(d.ld, 5);
+        assert_eq!(d.mov, 0);
+        assert!((d.ins_metric(12, 8, 1) - 29.0 / 96.0).abs() < 1e-9);
+        assert_eq!(d.by_mnemonic["FMLA"], 24);
+    }
+}

@@ -1,0 +1,148 @@
+//! The paper's ternary-binary GeMM microkernel (Fig. 3): 16×8, depth
+//! step 8. `Ablock` is packed as in TNN; `Bblock` as in BNN (one bit per
+//! value, 8 bytes per chunk, loaded with a 64-bit `LD1.8B`).
+//!
+//! A binary `y` in plane form is `y⁺ = ¬y♭`, `y⁻ = y♭`, so per column we
+//! build a single selector `b1 = [¬y♭×8 | y♭×8]` with `DUP` + `EOR`
+//! against the constant `MASK = [0xFF×8 | 0x00×8]` (hoisted out of the
+//! depth loop). Then for each row-group register `a = [A⁺ | A⁻]`:
+//!
+//! * `u⁺ = AND(a, b1)` → `(x⁺∧¬y♭)` low / `(x⁻∧y♭)` high — the z⁺ parts,
+//! * `u⁻ = BIC(a, b1)` → `(x⁺∧y♭)` low / `(x⁻∧¬y♭)` high — the z⁻ parts,
+//!
+//! and the same CNT/SSUBL/ADD tail as TNN. The BIC reuse of `b1` is why
+//! TBN is cheaper than TNN ("simpler data flow in Bblock"): per column it
+//! needs 1 DUP + 1 EOR instead of 2 DUP + 2 EXT.
+//!
+//! Steady-state: COM = 8×(1 + 16) = 136, LD = 3, MOV = 8, total 147 —
+//! slightly below the paper's 155 (the paper's ORN sequence spends one
+//! extra arrangement op per column). The orderings the paper reports
+//! (INS: BNN < TBN < TNN) are preserved: 0.041 < 0.143 < 0.159.
+
+use crate::simd::reg::{Neon, Reg128};
+
+/// Constant selector: low 8 bytes 0xFF, high 8 bytes 0x00.
+const MASK_LOW: [u8; 16] = [0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0, 0, 0, 0, 0, 0, 0, 0];
+
+/// Run the TBN microkernel over `chunks` depth iterations. `ablock` is
+/// packed by [`crate::gemm::pack::pack_a_tnn`] (`chunks*32` bytes),
+/// `bblock` by [`crate::gemm::pack::pack_b_bnn`] (`chunks*8` bytes).
+/// Returns the 16×8 tile of signed products.
+pub fn tbn_microkernel(cpu: &mut Neon, ablock: &[u8], bblock: &[u8], chunks: usize) -> [i16; 16 * 8] {
+    debug_assert!(ablock.len() >= chunks * 32);
+    debug_assert!(bblock.len() >= chunks * 8);
+    // Hoisted constant (one load outside the steady-state loop).
+    let mask = cpu.ld1q(&MASK_LOW);
+    let mut c = [[Reg128::ZERO; 8]; 2];
+    for d in 0..chunks {
+        let a0 = cpu.ld1q(&ablock[d * 32..]);
+        let a1 = cpu.ld1q(&ablock[d * 32 + 16..]);
+        let b = cpu.ld1d(&bblock[d * 8..]);
+        for j in 0..8 {
+            let db = cpu.dup_b(b, j); // [y♭ × 16]
+            let b1 = cpu.eor(db, mask); // [¬y♭×8 | y♭×8]
+            for (g, a) in [a0, a1].into_iter().enumerate() {
+                let up = cpu.and(a, b1);
+                let um = cpu.bic(a, b1);
+                let cp = cpu.cnt(up);
+                let cm = cpu.cnt(um);
+                let dl = cpu.ssubl(cp, cm);
+                let dh = cpu.ssubl2(cp, cm);
+                c[g][j] = cpu.add16(c[g][j], dl);
+                c[g][j] = cpu.add16(c[g][j], dh);
+            }
+        }
+    }
+    let mut out = [0i16; 16 * 8];
+    for j in 0..8 {
+        let lo = c[0][j].to_i16x8();
+        let hi = c[1][j].to_i16x8();
+        for r in 0..8 {
+            out[r * 8 + j] = lo[r];
+            out[(8 + r) * 8 + j] = hi[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack::{pack_a_tnn, pack_b_bnn};
+    use crate::gemm::reference::gemm_i8;
+    use crate::util::mat::MatI8;
+    use crate::util::Rng;
+
+    fn check_case(k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = MatI8::random_ternary(16, k, &mut rng);
+        let b = MatI8::random_binary(k, 8, &mut rng);
+        let pa = pack_a_tnn(&a, 0, k);
+        let pb = pack_b_bnn(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = tbn_microkernel(&mut cpu, &pa, &pb, k.div_ceil(8));
+        let oracle = gemm_i8(&a, &b);
+        for r in 0..16 {
+            for j in 0..8 {
+                assert_eq!(t[r * 8 + j] as i32, oracle.get(r, j), "r={r} j={j} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_k8() {
+        check_case(8, 20);
+    }
+
+    #[test]
+    fn matches_oracle_k512() {
+        check_case(512, 21);
+    }
+
+    #[test]
+    fn matches_oracle_odd_k() {
+        for k in [2, 6, 11, 31, 77] {
+            check_case(k, 300 + k as u64);
+        }
+    }
+
+    /// Depth padding safety: binary B pads with 0-bits (decoded +1) but
+    /// ternary A pads with the value 0 — products over padded depth are
+    /// 0·(±1) = 0, so no epilogue correction is needed for TBN.
+    #[test]
+    fn depth_padding_contributes_nothing() {
+        let k = 13;
+        let a = MatI8::zeros(16, k);
+        let mut rng = Rng::new(22);
+        let b = MatI8::random_binary(k, 8, &mut rng);
+        let pa = pack_a_tnn(&a, 0, k);
+        let pb = pack_b_bnn(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = tbn_microkernel(&mut cpu, &pa, &pb, k.div_ceil(8));
+        assert!(t.iter().all(|&v| v == 0));
+    }
+
+    /// Steady-state counts: COM=136, LD=3, MOV=8, total 147 (paper: 155;
+    /// see module docs). TBN must be strictly cheaper than TNN and
+    /// strictly more expensive than BNN in total instructions.
+    #[test]
+    fn table2_counts() {
+        let mut rng = Rng::new(23);
+        let a = MatI8::random_ternary(16, 16, &mut rng);
+        let b = MatI8::random_binary(16, 8, &mut rng);
+        let pa = pack_a_tnn(&a, 0, 16);
+        let pb = pack_b_bnn(&b, 0, 16);
+        let mut c1 = Neon::new();
+        tbn_microkernel(&mut c1, &pa, &pb, 1);
+        let mut c2 = Neon::new();
+        tbn_microkernel(&mut c2, &pa, &pb, 2);
+        let d = c2.trace.delta(&c1.trace);
+        assert_eq!(d.com, 136);
+        assert_eq!(d.ld, 3);
+        assert_eq!(d.mov, 8);
+        assert_eq!(d.total(), 147);
+        // Orderings from Table II hold: BNN (42) < TBN (146) < TNN (163).
+        assert!(d.total() < 163);
+        assert!(d.total() > 42);
+    }
+}

@@ -1,0 +1,142 @@
+//! The paper's ternary GeMM microkernel (Fig. 2): shape 16×8, depth step 8.
+//!
+//! `Ablock` holds the two bit-planes of 16 rows interleaved by groups of
+//! eight (`[A⁺r0..8 | A⁻r0..8]` in `a0`, `[A⁺r8..16 | A⁻r8..16]` in `a1`);
+//! `Bblock` holds `[B⁺c, B⁻c]` byte pairs for the 8 columns.
+//!
+//! Per column `j` the kernel builds the broadcast registers
+//! `b1 = [b⁺×8 | b⁻×8]` and `b2 = [b⁻×8 | b⁺×8]` and, for each row group
+//! `a`:
+//!
+//! * `u⁺ = AND(a, b1)` → per byte, the `(x⁺∧y⁺)` counts in the low half
+//!   and `(x⁻∧y⁻)` in the high half,
+//! * `u⁻ = AND(a, b2)` → the cross terms,
+//! * `CNT` both, `SSUBL`/`SSUBL2` the count difference for both halves,
+//!   and two `ADD.8H` into the 16-bit accumulators.
+//!
+//! Per-bit the accumulated value is `(x⁺∧y⁺) + (x⁻∧y⁻) − (x⁺∧y⁻) −
+//! (x⁻∧y⁺)`, which by Table I equals the ternary product — eq. (7).
+//!
+//! Steady-state cost: COM = 8×16 = 128, LD = 3, MOV = 8×4 = 32, total 163
+//! — identical to the paper's total (96+3+64 = 163); the paper's assembly
+//! splits the same work differently between COM and MOV. INS = 0.159
+//! matches Table II exactly.
+
+use crate::simd::reg::{Neon, Reg128};
+
+/// Run the TNN microkernel over `chunks` depth iterations (8 bits each).
+/// `ablock` is `chunks*32` bytes, `bblock` `chunks*16`. Returns the
+/// 16×8 row-major tile of signed products Σ(z⁺ − z⁻).
+pub fn tnn_microkernel(cpu: &mut Neon, ablock: &[u8], bblock: &[u8], chunks: usize) -> [i16; 16 * 8] {
+    debug_assert!(ablock.len() >= chunks * 32);
+    debug_assert!(bblock.len() >= chunks * 16);
+    let mut c = [[Reg128::ZERO; 8]; 2];
+    for d in 0..chunks {
+        let a0 = cpu.ld1q(&ablock[d * 32..]);
+        let a1 = cpu.ld1q(&ablock[d * 32 + 16..]);
+        let b = cpu.ld1q(&bblock[d * 16..]);
+        for j in 0..8 {
+            let dp = cpu.dup_b(b, 2 * j);
+            let dm = cpu.dup_b(b, 2 * j + 1);
+            let b1 = cpu.ext(dp, dm, 8); // [b⁺×8 | b⁻×8]
+            let b2 = cpu.ext(dm, dp, 8); // [b⁻×8 | b⁺×8]
+            for (g, a) in [a0, a1].into_iter().enumerate() {
+                let up = cpu.and(a, b1);
+                let um = cpu.and(a, b2);
+                let cp = cpu.cnt(up);
+                let cm = cpu.cnt(um);
+                let dl = cpu.ssubl(cp, cm);
+                let dh = cpu.ssubl2(cp, cm);
+                c[g][j] = cpu.add16(c[g][j], dl);
+                c[g][j] = cpu.add16(c[g][j], dh);
+            }
+        }
+    }
+    let mut out = [0i16; 16 * 8];
+    for j in 0..8 {
+        let lo = c[0][j].to_i16x8();
+        let hi = c[1][j].to_i16x8();
+        for r in 0..8 {
+            out[r * 8 + j] = lo[r];
+            out[(8 + r) * 8 + j] = hi[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack::{pack_a_tnn, pack_b_tnn};
+    use crate::gemm::reference::gemm_i8;
+    use crate::util::mat::MatI8;
+    use crate::util::Rng;
+
+    fn check_case(k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = MatI8::random_ternary(16, k, &mut rng);
+        let b = MatI8::random_ternary(k, 8, &mut rng);
+        let pa = pack_a_tnn(&a, 0, k);
+        let pb = pack_b_tnn(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = tnn_microkernel(&mut cpu, &pa, &pb, k.div_ceil(8));
+        let oracle = gemm_i8(&a, &b);
+        for r in 0..16 {
+            for j in 0..8 {
+                assert_eq!(t[r * 8 + j] as i32, oracle.get(r, j), "r={r} j={j} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_k8() {
+        check_case(8, 10);
+    }
+
+    #[test]
+    fn matches_oracle_k256() {
+        check_case(256, 11);
+    }
+
+    #[test]
+    fn matches_oracle_odd_k() {
+        for k in [1, 5, 9, 23, 65, 127] {
+            check_case(k, 200 + k as u64);
+        }
+    }
+
+    /// Zero-padding in depth contributes nothing (ternary 0 encoding).
+    #[test]
+    fn zero_values_contribute_nothing() {
+        let a = MatI8::zeros(16, 64);
+        let mut rng = Rng::new(12);
+        let b = MatI8::random_ternary(64, 8, &mut rng);
+        let pa = pack_a_tnn(&a, 0, 64);
+        let pb = pack_b_tnn(&b, 0, 64);
+        let mut cpu = Neon::new();
+        let t = tnn_microkernel(&mut cpu, &pa, &pb, 8);
+        assert!(t.iter().all(|&v| v == 0));
+    }
+
+    /// Steady-state instruction counts: total = 163 = the paper's
+    /// 96 COM + 3 LD + 64 MOV; our split is COM=128, LD=3, MOV=32.
+    /// INS = 163/1024 = 0.159 (Table II).
+    #[test]
+    fn table2_counts() {
+        let mut rng = Rng::new(13);
+        let a = MatI8::random_ternary(16, 16, &mut rng);
+        let b = MatI8::random_ternary(16, 8, &mut rng);
+        let pa = pack_a_tnn(&a, 0, 16);
+        let pb = pack_b_tnn(&b, 0, 16);
+        let mut c1 = Neon::new();
+        tnn_microkernel(&mut c1, &pa, &pb, 1);
+        let mut c2 = Neon::new();
+        tnn_microkernel(&mut c2, &pa, &pb, 2);
+        let d = c2.trace.delta(&c1.trace);
+        assert_eq!(d.total(), 163, "total must equal the paper's 96+3+64");
+        assert_eq!(d.ld, 3);
+        assert_eq!(d.com, 128);
+        assert_eq!(d.mov, 32);
+        assert!((d.ins_metric(16, 8, 8) - 163.0 / 1024.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! U4 baseline microkernel: 24×8, depth step 2 — the 4-bit quantized
+//! multiplication of Trusov et al. (ICPR 2020, ref. [20]), with the
+//! microkernel upscaled from 24×4 (ARMv7) to 24×8 (AArch64) as the paper
+//! describes in §IV.
+//!
+//! Values are unsigned 4-bit (0..=15), stored two per byte; products are
+//! accumulated in **16-bit** lanes, which is what limits the depth to
+//! k_max = ⌊(2¹⁶−1)/15²⌋ = 291 (Table II) — the driver splits deeper
+//! multiplications into ≤290-deep blocks and widens between blocks.
+//!
+//! Per 2-deep iteration: 3 loads (24 packed A bytes, 8 packed B bytes),
+//! 6 nibble-unpack ops (`AND`/`USHR` against a hoisted 0x0F mask),
+//! 16 `DUP`s (one per depth×column — the paper's MOV=16) and 48 vector
+//! `UMLAL`/`UMLAL2` into the 24 u16×8 accumulators (the paper's COM=48).
+
+use crate::simd::reg::{Neon, Reg128};
+
+const NIBBLE_MASK: [u8; 16] = [0x0F; 16];
+
+/// Run the U4 microkernel over `chunks` 2-deep iterations. `ablock` is
+/// `chunks*24` bytes (packed by [`crate::gemm::pack::pack_a_u4`]),
+/// `bblock` `chunks*8`. Returns the 24×8 row-major raw-product tile in
+/// u16 (the caller must respect k ≤ 291 per call).
+pub fn u4_microkernel(cpu: &mut Neon, ablock: &[u8], bblock: &[u8], chunks: usize) -> [u16; 24 * 8] {
+    debug_assert!(ablock.len() >= chunks * 24);
+    debug_assert!(bblock.len() >= chunks * 8);
+    debug_assert!(chunks * 2 <= 291, "U4 16-bit accumulators overflow past k=291");
+    let mask = cpu.ld1q(&NIBBLE_MASK); // hoisted constant
+    // c[g][j]: rows 8g..8g+8 of column j, u16 lanes.
+    let mut c = [[Reg128::ZERO; 8]; 3];
+    for d in 0..chunks {
+        let a0 = cpu.ld1q(&ablock[d * 24..]); // rows 0..16, both depths packed
+        let a1 = cpu.ld1d(&ablock[d * 24 + 16..]); // rows 16..24
+        let b = cpu.ld1d(&bblock[d * 8..]); // cols 0..8, both depths packed
+        // Nibble unpack: t=0 plane in low nibbles, t=1 in high.
+        let a0_t0 = cpu.and(a0, mask);
+        let a0_t1 = cpu.ushr8(a0, 4);
+        let a1_t0 = cpu.and(a1, mask);
+        let a1_t1 = cpu.ushr8(a1, 4);
+        let b_t0 = cpu.and(b, mask);
+        let b_t1 = cpu.ushr8(b, 4);
+        for (a_lo, a_hi, bt) in [(a0_t0, a1_t0, b_t0), (a0_t1, a1_t1, b_t1)] {
+            for j in 0..8 {
+                let bj = cpu.dup_b(bt, j);
+                c[0][j] = cpu.umlal_v8(c[0][j], a_lo, bj); // rows 0..8
+                c[1][j] = cpu.umlal2_v8(c[1][j], a_lo, bj); // rows 8..16
+                c[2][j] = cpu.umlal_v8(c[2][j], a_hi, bj); // rows 16..24
+            }
+        }
+    }
+    let mut out = [0u16; 24 * 8];
+    for j in 0..8 {
+        for g in 0..3 {
+            let v = c[g][j].to_u16x8();
+            for l in 0..8 {
+                out[(8 * g + l) * 8 + j] = v[l];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack::{pack_a_u4, pack_b_u4};
+    use crate::gemm::reference::gemm_u8_raw;
+    use crate::util::mat::MatU8;
+    use crate::util::Rng;
+
+    fn check_case(k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = MatU8::random_below(24, k, 15, &mut rng);
+        let b = MatU8::random_below(k, 8, 15, &mut rng);
+        let pa = pack_a_u4(&a, 0, k);
+        let pb = pack_b_u4(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = u4_microkernel(&mut cpu, &pa, &pb, k.div_ceil(2));
+        let oracle = gemm_u8_raw(&a, &b);
+        for r in 0..24 {
+            for j in 0..8 {
+                assert_eq!(t[r * 8 + j] as i32, oracle.get(r, j), "r={r} j={j} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_even_k() {
+        check_case(2, 50);
+        check_case(128, 51);
+    }
+
+    #[test]
+    fn matches_oracle_odd_k() {
+        for k in [1, 5, 17, 63] {
+            check_case(k, 500 + k as u64);
+        }
+    }
+
+    /// Table II U4 row: COM=48 UMLAL + 6 unpack, LD=3, MOV=16 DUPs.
+    #[test]
+    fn table2_counts() {
+        let mut rng = Rng::new(52);
+        let a = MatU8::random_below(24, 4, 15, &mut rng);
+        let b = MatU8::random_below(4, 8, 15, &mut rng);
+        let pa = pack_a_u4(&a, 0, 4);
+        let pb = pack_b_u4(&b, 0, 4);
+        let mut c1 = Neon::new();
+        u4_microkernel(&mut c1, &pa, &pb, 1);
+        let mut c2 = Neon::new();
+        u4_microkernel(&mut c2, &pa, &pb, 2);
+        let d = c2.trace.delta(&c1.trace);
+        let umlal = d.by_mnemonic.get("UMLAL.8B").copied().unwrap_or(0)
+            + d.by_mnemonic.get("UMLAL2.16B").copied().unwrap_or(0);
+        assert_eq!(umlal, 48, "48 multiply-accumulates per iteration (paper: 48)");
+        assert_eq!(d.mov, 16, "16 DUPs per iteration (paper MOV=16)");
+        assert_eq!(d.ld, 3);
+        // INS must sit strictly between TNN (0.159) and U8 (0.302),
+        // preserving the paper's ordering.
+        let ins = d.ins_metric(24, 8, 2);
+        assert!(ins > 0.159 && ins < 0.302, "INS {ins} out of order");
+    }
+
+    /// The worst-case bound at k = 290 (the largest even depth under
+    /// k_max): all values 15, accumulators must not wrap.
+    #[test]
+    fn no_overflow_at_kmax() {
+        let k = 290;
+        let a = MatU8 { rows: 24, cols: k, data: vec![15; 24 * k] };
+        let b = MatU8 { rows: k, cols: 8, data: vec![15; k * 8] };
+        let pa = pack_a_u4(&a, 0, k);
+        let pb = pack_b_u4(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = u4_microkernel(&mut cpu, &pa, &pb, k / 2);
+        assert!(t.iter().all(|&v| v as usize == 225 * k));
+        assert!(225 * k <= u16::MAX as usize);
+    }
+}

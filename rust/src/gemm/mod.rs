@@ -1,0 +1,114 @@
+//! The paper's contribution: bit-packed GEMM for binary (BNN), ternary
+//! (TNN) and ternary-binary (TBN) matrices, plus the four baselines it is
+//! evaluated against (F32, U8/gemmlowp-style, U4, daBNN-style binary).
+//!
+//! Layout of the module:
+//!
+//! * [`encode`] — the paper's §III-A: 1-bit binary and 2-bit ternary value
+//!   encodings and the Boolean product formulas of Table I.
+//! * [`pack`] — §III-B/C/D: the `Ablock` / `Bblock` storage orders each
+//!   microkernel consumes (and the baselines' panel packing).
+//! * [`micro`] — the microkernels as emulated-NEON instruction sequences
+//!   (Figs. 1-3), traced for Table II.
+//! * [`native`] — portable fast paths (u64 bit-ops) implementing the same
+//!   algorithms for wall-clock benchmarks (Table III).
+//! * [`driver`] — the paper's Algorithm 2: the blocked GEMM loop with a
+//!   pre-packed `B` ("PackedB": weights are packed once, offline).
+//! * [`reference`] — naive scalar oracles every path is tested against.
+
+pub mod driver;
+pub mod encode;
+pub mod micro;
+pub mod native;
+pub mod pack;
+pub mod reference;
+
+pub use driver::{Algo, GemmDriver};
+
+/// The three low-bit multiplications the paper proposes plus the four
+/// baselines it compares against (Table II / Table III row order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kind {
+    F32,
+    U8,
+    U4,
+    Tnn,
+    Tbn,
+    Bnn,
+    DaBnn,
+}
+
+impl Kind {
+    /// All kinds in the paper's table order.
+    pub const ALL: [Kind; 7] = [Kind::F32, Kind::U8, Kind::U4, Kind::Tnn, Kind::Tbn, Kind::Bnn, Kind::DaBnn];
+
+    /// Paper's label for the algorithm.
+    pub fn label(self) -> &'static str {
+        match self {
+            Kind::F32 => "F32",
+            Kind::U8 => "U8",
+            Kind::U4 => "U4",
+            Kind::Tnn => "TNN",
+            Kind::Tbn => "TBN",
+            Kind::Bnn => "BNN",
+            Kind::DaBnn => "daBNN",
+        }
+    }
+
+    /// Microkernel shape `(m_mk, n_mk, k_step)` — Table II's `m×n×k`.
+    pub fn micro_shape(self) -> (usize, usize, usize) {
+        match self {
+            Kind::F32 => (12, 8, 1),
+            Kind::U8 => (12, 8, 2),
+            Kind::U4 => (24, 8, 2),
+            Kind::Tnn => (16, 8, 8),
+            Kind::Tbn => (16, 8, 8),
+            Kind::Bnn => (16, 8, 8),
+            Kind::DaBnn => (8, 6, 128),
+        }
+    }
+
+    /// Maximum depth that guarantees no accumulator overflow — Table II's
+    /// `k_max` (eq. (4) for the quantized kinds; register width for the
+    /// low-bit kinds; f32 significand for daBNN).
+    pub fn k_max(self) -> Option<u64> {
+        match self {
+            Kind::F32 => None,
+            // (2^32 - 1) / 255^2
+            Kind::U8 => Some((u32::MAX as u64) / (255 * 255)),
+            // (2^16 - 1) / 15^2
+            Kind::U4 => Some((u16::MAX as u64) / (15 * 15)),
+            // |z| <= 1 accumulated in signed 16-bit
+            Kind::Tnn | Kind::Tbn | Kind::Bnn => Some((1u64 << 15) - 1),
+            // f32 significand: integers up to 2^23 are exact
+            Kind::DaBnn => Some((1u64 << 23) - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_max_matches_paper_table2() {
+        assert_eq!(Kind::U8.k_max(), Some(66051));
+        assert_eq!(Kind::U4.k_max(), Some(291));
+        assert_eq!(Kind::Tnn.k_max(), Some(32767));
+        assert_eq!(Kind::Tbn.k_max(), Some(32767));
+        assert_eq!(Kind::Bnn.k_max(), Some(32767));
+        assert_eq!(Kind::DaBnn.k_max(), Some(8_388_607));
+        assert_eq!(Kind::F32.k_max(), None);
+    }
+
+    #[test]
+    fn micro_shapes_match_paper_table2() {
+        assert_eq!(Kind::F32.micro_shape(), (12, 8, 1));
+        assert_eq!(Kind::U8.micro_shape(), (12, 8, 2));
+        assert_eq!(Kind::U4.micro_shape(), (24, 8, 2));
+        assert_eq!(Kind::Tnn.micro_shape(), (16, 8, 8));
+        assert_eq!(Kind::Tbn.micro_shape(), (16, 8, 8));
+        assert_eq!(Kind::Bnn.micro_shape(), (16, 8, 8));
+        assert_eq!(Kind::DaBnn.micro_shape(), (8, 6, 128));
+    }
+}

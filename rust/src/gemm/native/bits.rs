@@ -1,0 +1,167 @@
+//! Bit-packed storage for the native fast paths.
+
+use crate::gemm::encode::{encode_binary, encode_ternary};
+use crate::gemm::native::pack_fast;
+use crate::util::mat::MatI8;
+
+/// Rows of single-bit values packed into u64 words (LSB-first).
+/// For the right matrix, pack the transpose so columns become rows.
+#[derive(Clone, Debug)]
+pub struct BitRows {
+    pub rows: usize,
+    pub k: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u64>,
+}
+
+impl BitRows {
+    /// Pack binary values (`±1`) of `m` row-major into bit rows
+    /// (vectorized: this runs on the request path for activations).
+    pub fn from_binary(m: &MatI8) -> Self {
+        debug_assert!(m.is_binary());
+        let words = m.cols.div_ceil(64);
+        let mut data = vec![0u64; m.rows * words];
+        for r in 0..m.rows {
+            pack_fast::pack_binary_row(m.row(r), &mut data[r * words..(r + 1) * words]);
+        }
+        BitRows { rows: m.rows, k: m.cols, words_per_row: words, data }
+    }
+
+    /// Pack the transpose of `m` (columns become rows).
+    pub fn from_binary_transposed(m: &MatI8) -> Self {
+        Self::pack_t(m, |v| encode_binary(v) as u64)
+    }
+
+    fn pack_t(m: &MatI8, f: impl Fn(i8) -> u64) -> Self {
+        let words = m.rows.div_ceil(64);
+        let mut data = vec![0u64; m.cols * words];
+        for c in 0..m.cols {
+            for t in 0..m.rows {
+                data[c * words + t / 64] |= f(m.get(t, c)) << (t % 64);
+            }
+        }
+        BitRows { rows: m.cols, k: m.rows, words_per_row: words, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+}
+
+/// Rows of 2-bit ternary values as two bit planes (`+` and `−`).
+#[derive(Clone, Debug)]
+pub struct PlaneRows {
+    pub rows: usize,
+    pub k: usize,
+    pub words_per_row: usize,
+    pub plus: Vec<u64>,
+    pub minus: Vec<u64>,
+}
+
+impl PlaneRows {
+    /// Pack ternary values of `m` row-major into plane rows
+    /// (vectorized: this runs on the request path for activations).
+    pub fn from_ternary(m: &MatI8) -> Self {
+        debug_assert!(m.is_ternary());
+        let words = m.cols.div_ceil(64);
+        let mut plus = vec![0u64; m.rows * words];
+        let mut minus = vec![0u64; m.rows * words];
+        for r in 0..m.rows {
+            pack_fast::pack_ternary_row(
+                m.row(r),
+                &mut plus[r * words..(r + 1) * words],
+                &mut minus[r * words..(r + 1) * words],
+            );
+        }
+        PlaneRows { rows: m.rows, k: m.cols, words_per_row: words, plus, minus }
+    }
+
+    /// Pack the transpose of `m` (columns become rows).
+    pub fn from_ternary_transposed(m: &MatI8) -> Self {
+        let words = m.rows.div_ceil(64);
+        let mut plus = vec![0u64; m.cols * words];
+        let mut minus = vec![0u64; m.cols * words];
+        for c in 0..m.cols {
+            for t in 0..m.rows {
+                let (p, mi) = encode_ternary(m.get(t, c));
+                plus[c * words + t / 64] |= (p as u64) << (t % 64);
+                minus[c * words + t / 64] |= (mi as u64) << (t % 64);
+            }
+        }
+        PlaneRows { rows: m.cols, k: m.rows, words_per_row: words, plus, minus }
+    }
+
+    #[inline]
+    pub fn plus_row(&self, r: usize) -> &[u64] {
+        &self.plus[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn minus_row(&self, r: usize) -> &[u64] {
+        &self.minus[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bitrows_roundtrip_binary() {
+        let mut rng = Rng::new(70);
+        let m = MatI8::random_binary(5, 130, &mut rng);
+        let b = BitRows::from_binary(&m);
+        assert_eq!(b.words_per_row, 3);
+        for r in 0..5 {
+            for t in 0..130 {
+                let bit = (b.row(r)[t / 64] >> (t % 64)) & 1;
+                let want = if m.get(r, t) == 1 { 0 } else { 1 };
+                assert_eq!(bit, want, "r={r} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitrows_transposed_swaps_axes() {
+        let mut rng = Rng::new(71);
+        let m = MatI8::random_binary(7, 9, &mut rng);
+        let bt = BitRows::from_binary_transposed(&m);
+        assert_eq!(bt.rows, 9);
+        assert_eq!(bt.k, 7);
+        for c in 0..9 {
+            for t in 0..7 {
+                let bit = (bt.row(c)[0] >> t) & 1;
+                let want = if m.get(t, c) == 1 { 0 } else { 1 };
+                assert_eq!(bit, want);
+            }
+        }
+    }
+
+    #[test]
+    fn planerows_valid_encoding() {
+        let mut rng = Rng::new(72);
+        let m = MatI8::random_ternary(6, 100, &mut rng);
+        let p = PlaneRows::from_ternary(&m);
+        for r in 0..6 {
+            // (1,1) never occurs
+            for (pw, mw) in p.plus_row(r).iter().zip(p.minus_row(r)) {
+                assert_eq!(pw & mw, 0);
+            }
+            for t in 0..100 {
+                let pb = (p.plus_row(r)[t / 64] >> (t % 64)) & 1;
+                let mb = (p.minus_row(r)[t / 64] >> (t % 64)) & 1;
+                assert_eq!(pb as i8 - mb as i8, m.get(r, t));
+            }
+        }
+    }
+
+    #[test]
+    fn padding_bits_are_zero() {
+        let m = MatI8::from_fn(1, 65, |_, _| -1);
+        let b = BitRows::from_binary(&m);
+        // Bits 65..128 of the second word must be zero.
+        assert_eq!(b.row(0)[1] >> 1, 0);
+    }
+}

@@ -1,0 +1,430 @@
+//! Native GEMM kernels (wall-clock path). Each function mirrors one of
+//! the seven algorithms; all are tested against the scalar oracles and
+//! against the emulated drivers.
+//!
+//! Hot-loop conventions: the right matrix is pre-packed (transposed,
+//! bit-packed where applicable) — the "PackedB packed once, offline" rule
+//! of Algorithm 2 — and inner loops are written over 64-bit words with
+//! 2×-unrolled column blocking so LLVM can keep accumulators in registers.
+
+use crate::gemm::native::bits::{BitRows, PlaneRows};
+use crate::gemm::native::simd_popcnt::{tbn_popcnt, tnn_popcnt, xor_popcnt, xor_popcnt2};
+use crate::util::mat::{MatF32, MatI32, MatU8};
+
+// -------------------------------------------------------------------
+// BNN: C = k − 2·popcount(a ⊕ b)
+// -------------------------------------------------------------------
+
+/// Binary GEMM. `a` holds bit rows of A, `bt` bit rows of Bᵀ.
+pub fn bnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let k = a.k as i32;
+    let n = bt.rows;
+    // Rows of A stream once; each (i, j) pair is a vectorized
+    // XOR+popcount pass (vpshufb nibble-LUT on AVX2, scalar POPCNT
+    // elsewhere). B rows stay hot in L1 across the i-loop.
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let mut j = 0;
+        while j + 2 <= n {
+            let (s0, s1) = xor_popcnt2(ar, bt.row(j), bt.row(j + 1));
+            c.set(i, j, k - 2 * s0 as i32);
+            c.set(i, j + 1, k - 2 * s1 as i32);
+            j += 2;
+        }
+        if j < n {
+            let s = xor_popcnt(ar, bt.row(j));
+            c.set(i, j, k - 2 * s as i32);
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// TNN: plane products, eq. (7)
+// -------------------------------------------------------------------
+
+/// Ternary GEMM. `a` holds plane rows of A, `bt` plane rows of Bᵀ.
+pub fn tnn_gemm(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let n = bt.rows;
+    // Per (i, j): one vectorized pass computing both plane products
+    // z⁺ = (a⁺∧b⁺)∨(a⁻∧b⁻) and z⁻ = (a⁺∧b⁻)∨(a⁻∧b⁺) — eq. (7).
+    for i in 0..a.rows {
+        let (ap, am) = (a.plus_row(i), a.minus_row(i));
+        for j in 0..n {
+            let (p, m) = tnn_popcnt(ap, am, bt.plus_row(j), bt.minus_row(j));
+            c.set(i, j, p as i32 - m as i32);
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// TBN: ternary A × binary B via the plane form of §III-A
+// -------------------------------------------------------------------
+
+/// Ternary-binary GEMM. `a` holds plane rows of A, `bt` bit rows of Bᵀ.
+pub fn tbn_gemm(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let n = bt.rows;
+    // y⁺ = ¬y♭, y⁻ = y♭. Note ¬y♭ sets the depth-padding bits of the
+    // last word, but a⁺/a⁻ padding bits are 0, so the AND masks them out.
+    for i in 0..a.rows {
+        let (ap, am) = (a.plus_row(i), a.minus_row(i));
+        for j in 0..n {
+            let (p, m) = tbn_popcnt(ap, am, bt.row(j));
+            c.set(i, j, p as i32 - m as i32);
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// daBNN-style binary: 8×6 tiling, f32 accumulation every 128-bit chunk
+// -------------------------------------------------------------------
+
+/// Binary GEMM with daBNN's structure: per (row, col) the popcount of each
+/// 128-bit chunk is reduced and accumulated in f32 (daBNN keeps its
+/// running sums in f32 registers), which costs an int→float convert per
+/// chunk — the structural reason it trails the paper's BNN kernel.
+pub fn dabnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatF32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let w = a.words_per_row;
+    let k = a.k as f32;
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        for j in 0..bt.rows {
+            let br = bt.row(j);
+            let mut acc = 0f32;
+            let mut t = 0;
+            while t + 2 <= w {
+                let s = (ar[t] ^ br[t]).count_ones() + (ar[t + 1] ^ br[t + 1]).count_ones();
+                acc += s as f32; // per-128-bit convert, as in daBNN
+                t += 2;
+            }
+            while t < w {
+                acc += (ar[t] ^ br[t]).count_ones() as f32;
+                t += 1;
+            }
+            c.set(i, j, k - 2.0 * acc);
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// F32 baseline
+// -------------------------------------------------------------------
+
+/// f32 GEMM, register-blocked 4×8 with B pre-transposed to row-panels of
+/// 8 columns (`bp[d*8 + c]` = B[d][col0+c]), k-major streams.
+pub fn f32_gemm(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32) {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!((c.rows, c.cols), (m, n));
+    for (cb, panel) in b_panels.iter().enumerate() {
+        let j0 = cb * 8;
+        let n_eff = (n - j0).min(8);
+        let mut i = 0;
+        while i + 4 <= m {
+            let mut acc = [[0f32; 8]; 4];
+            let rows = [a.row_slice(i), a.row_slice(i + 1), a.row_slice(i + 2), a.row_slice(i + 3)];
+            for d in 0..k {
+                let bv = &panel[d * 8..d * 8 + 8];
+                for (r, row) in rows.iter().enumerate() {
+                    let av = row[d];
+                    for j in 0..8 {
+                        acc[r][j] += av * bv[j];
+                    }
+                }
+            }
+            for r in 0..4 {
+                for j in 0..n_eff {
+                    c.set(i + r, j0 + j, acc[r][j]);
+                }
+            }
+            i += 4;
+        }
+        while i < m {
+            let mut acc = [0f32; 8];
+            let row = a.row_slice(i);
+            for d in 0..k {
+                let bv = &panel[d * 8..d * 8 + 8];
+                for j in 0..8 {
+                    acc[j] += row[d] * bv[j];
+                }
+            }
+            for j in 0..n_eff {
+                c.set(i, j0 + j, acc[j]);
+            }
+            i += 1;
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// U8: gemmlowp-style with eq. (3) epilogue
+// -------------------------------------------------------------------
+
+/// u8 GEMM with zero-point compensation. `b_panels` pack 8 columns per
+/// panel, k-major (`panel[d*8 + c]`); `col_sums` precomputed offline.
+#[allow(clippy::too_many_arguments)]
+pub fn u8_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!((c.rows, c.cols), (m, n));
+    for (cb, panel) in b_panels.iter().enumerate() {
+        let j0 = cb * 8;
+        let n_eff = (n - j0).min(8);
+        for i in 0..m {
+            let row = &a.data[i * k..(i + 1) * k];
+            let mut acc = [0u32; 8];
+            let mut row_sum = 0u32;
+            for (d, &av) in row.iter().enumerate() {
+                let bv = &panel[d * 8..d * 8 + 8];
+                let a32 = av as u32;
+                row_sum += a32;
+                for j in 0..8 {
+                    acc[j] += a32 * bv[j] as u32;
+                }
+            }
+            for j in 0..n_eff {
+                let v = acc[j] as i32 - zb * row_sum as i32 - za * col_sums[j0 + j] + k as i32 * za * zb;
+                c.set(i, j0 + j, v);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// U4: 16-bit-blocked accumulation (the [20] scheme)
+// -------------------------------------------------------------------
+
+/// 4-bit GEMM: values 0..=15, accumulated in u16 within ≤290-deep blocks
+/// (the eq. (4) bound), widened to i32 between blocks, eq. (3) epilogue.
+/// The u16 accumulators are the structural speed advantage over U8: twice
+/// the SIMD lanes per vector op after auto-vectorization.
+#[allow(clippy::too_many_arguments)]
+pub fn u4_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!((c.rows, c.cols), (m, n));
+    const KB: usize = 290;
+    for (cb, panel) in b_panels.iter().enumerate() {
+        let j0 = cb * 8;
+        let n_eff = (n - j0).min(8);
+        for i in 0..m {
+            let row = &a.data[i * k..(i + 1) * k];
+            let mut wide = [0i32; 8];
+            let mut row_sum = 0i32;
+            let mut d0 = 0;
+            while d0 < k {
+                let k_eff = (k - d0).min(KB);
+                let mut acc = [0u16; 8];
+                let mut rs16 = 0u16;
+                for d in d0..d0 + k_eff {
+                    let av = row[d] as u16;
+                    rs16 += av;
+                    let bv = &panel[d * 8..d * 8 + 8];
+                    for j in 0..8 {
+                        acc[j] += av * bv[j] as u16;
+                    }
+                }
+                for j in 0..8 {
+                    wide[j] += acc[j] as i32;
+                }
+                row_sum += rs16 as i32;
+                d0 += k_eff;
+            }
+            for j in 0..n_eff {
+                let v = wide[j] - zb * row_sum - za * col_sums[j0 + j] + k as i32 * za * zb;
+                c.set(i, j0 + j, v);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Panel packing helpers for the native f32/u8/u4 paths
+// -------------------------------------------------------------------
+
+/// Pack B (k×n f32) into 8-column k-major panels for [`f32_gemm`].
+pub fn pack_b_panels_f32(b: &MatF32) -> Vec<Vec<f32>> {
+    (0..b.cols.div_ceil(8))
+        .map(|cb| {
+            let mut p = vec![0f32; b.rows * 8];
+            for d in 0..b.rows {
+                for j in 0..8 {
+                    let col = cb * 8 + j;
+                    if col < b.cols {
+                        p[d * 8 + j] = b.get(d, col);
+                    }
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+/// Pack B (k×n u8) into 8-column k-major panels for [`u8_gemm`]/[`u4_gemm`].
+pub fn pack_b_panels_u8(b: &MatU8) -> Vec<Vec<u8>> {
+    (0..b.cols.div_ceil(8))
+        .map(|cb| {
+            let mut p = vec![0u8; b.rows * 8];
+            for d in 0..b.rows {
+                for j in 0..8 {
+                    let col = cb * 8 + j;
+                    if col < b.cols {
+                        p[d * 8 + j] = b.get(d, col);
+                    }
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+impl MatF32 {
+    /// Contiguous row slice (hot-path helper for the native kernels).
+    #[inline]
+    pub fn row_slice(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::reference;
+    use crate::util::mat::MatI8;
+    use crate::util::proptest::{check, gemm_shape, Config};
+
+    #[test]
+    fn bnn_native_vs_oracle() {
+        check(Config { cases: 32, base_seed: 0xC0 }, "bnn native", |rng| {
+            let (m, n, k) = gemm_shape(rng, 40, 40, 200);
+            let a = MatI8::random_binary(m, k, rng);
+            let b = MatI8::random_binary(k, n, rng);
+            let ab = BitRows::from_binary(&a);
+            let bb = BitRows::from_binary_transposed(&b);
+            let mut c = MatI32::zeros(m, n);
+            bnn_gemm(&ab, &bb, &mut c);
+            assert_eq!(c.data, reference::gemm_i8(&a, &b).data, "m={m} n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn tnn_native_vs_oracle() {
+        check(Config { cases: 32, base_seed: 0xC1 }, "tnn native", |rng| {
+            let (m, n, k) = gemm_shape(rng, 40, 40, 200);
+            let a = MatI8::random_ternary(m, k, rng);
+            let b = MatI8::random_ternary(k, n, rng);
+            let ap = PlaneRows::from_ternary(&a);
+            let bp = PlaneRows::from_ternary_transposed(&b);
+            let mut c = MatI32::zeros(m, n);
+            tnn_gemm(&ap, &bp, &mut c);
+            assert_eq!(c.data, reference::gemm_i8(&a, &b).data, "m={m} n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn tbn_native_vs_oracle() {
+        check(Config { cases: 32, base_seed: 0xC2 }, "tbn native", |rng| {
+            let (m, n, k) = gemm_shape(rng, 40, 40, 200);
+            let a = MatI8::random_ternary(m, k, rng);
+            let b = MatI8::random_binary(k, n, rng);
+            let ap = PlaneRows::from_ternary(&a);
+            let bb = BitRows::from_binary_transposed(&b);
+            let mut c = MatI32::zeros(m, n);
+            tbn_gemm(&ap, &bb, &mut c);
+            assert_eq!(c.data, reference::gemm_i8(&a, &b).data, "m={m} n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn dabnn_native_vs_oracle() {
+        check(Config { cases: 16, base_seed: 0xC3 }, "dabnn native", |rng| {
+            let (m, n, k) = gemm_shape(rng, 24, 18, 300);
+            let a = MatI8::random_binary(m, k, rng);
+            let b = MatI8::random_binary(k, n, rng);
+            let ab = BitRows::from_binary(&a);
+            let bb = BitRows::from_binary_transposed(&b);
+            let mut c = MatF32::zeros(m, n);
+            dabnn_gemm(&ab, &bb, &mut c);
+            let want = reference::gemm_i8(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32_native_vs_oracle() {
+        check(Config { cases: 16, base_seed: 0xC4 }, "f32 native", |rng| {
+            let (m, n, k) = gemm_shape(rng, 30, 30, 60);
+            let a = MatF32::random(m, k, rng);
+            let b = MatF32::random(k, n, rng);
+            let panels = pack_b_panels_f32(&b);
+            let mut c = MatF32::zeros(m, n);
+            f32_gemm(&a, &panels, n, &mut c);
+            let want = reference::gemm_f32(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let (g, w) = (c.get(i, j), want.get(i, j));
+                    assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "({i},{j}): {g} vs {w}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn u8_native_vs_oracle() {
+        check(Config { cases: 16, base_seed: 0xC5 }, "u8 native", |rng| {
+            let (m, n, k) = gemm_shape(rng, 30, 30, 60);
+            let a = MatU8::random(m, k, rng);
+            let b = MatU8::random(k, n, rng);
+            let za = rng.below(256) as i32;
+            let zb = rng.below(256) as i32;
+            let panels = pack_b_panels_u8(&b);
+            let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
+            let mut c = MatI32::zeros(m, n);
+            u8_gemm(&a, &panels, n, za, zb, &col_sums, &mut c);
+            assert_eq!(c.data, reference::gemm_u8_centered(&a, &b, za, zb).data);
+        });
+    }
+
+    #[test]
+    fn u4_native_vs_oracle_deep_k() {
+        check(Config { cases: 12, base_seed: 0xC6 }, "u4 native", |rng| {
+            let m = 1 + rng.below(24);
+            let n = 1 + rng.below(24);
+            let k = 200 + rng.below(300); // crosses the 290 block boundary
+            let a = MatU8::random_below(m, k, 15, rng);
+            let b = MatU8::random_below(k, n, 15, rng);
+            let za = rng.below(16) as i32;
+            let zb = rng.below(16) as i32;
+            let panels = pack_b_panels_u8(&b);
+            let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
+            let mut c = MatI32::zeros(m, n);
+            u4_gemm(&a, &panels, n, za, zb, &col_sums, &mut c);
+            assert_eq!(c.data, reference::gemm_u8_centered(&a, &b, za, zb).data);
+        });
+    }
+
+    /// Native and emulated paths agree exactly on the low-bit kinds.
+    #[test]
+    fn native_matches_emulated() {
+        use crate::gemm::driver::{GemmDriver, Lhs};
+        check(Config { cases: 8, base_seed: 0xC7 }, "native vs emulated", |rng| {
+            let (m, n, k) = gemm_shape(rng, 33, 25, 100);
+            let a = MatI8::random_ternary(m, k, rng);
+            let b = MatI8::random_ternary(k, n, rng);
+            let emu = GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            let ap = PlaneRows::from_ternary(&a);
+            let bp = PlaneRows::from_ternary_transposed(&b);
+            let mut c = MatI32::zeros(m, n);
+            tnn_gemm(&ap, &bp, &mut c);
+            assert_eq!(c.data, emu.data);
+        });
+    }
+}

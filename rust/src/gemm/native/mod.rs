@@ -1,0 +1,23 @@
+//! Native (portable-Rust) fast paths for every algorithm — the wall-clock
+//! measurement substrate for the paper's Table III.
+//!
+//! The emulated microkernels in [`crate::gemm::micro`] reproduce the
+//! paper's *instruction streams*; these paths reproduce the paper's
+//! *arithmetic structure* — XOR + popcount for binary, the AND/OR plane
+//! products for ternary, 16-bit-blocked accumulation for U4 — using
+//! 64-bit words and `u64::count_ones`, which the host compiles to native
+//! `popcnt`/vector instructions. Relative wall-clock between the seven
+//! algorithms then reflects the same bits-per-operation and
+//! memory-traffic ratios that drive the paper's measured Table III.
+//!
+//! Layout types ([`BitRows`], [`PlaneRows`]) hold bit-packed rows of the
+//! left matrix and bit-packed *columns* of the right matrix (i.e. `B` is
+//! stored transposed), so all inner loops stream contiguous words.
+
+pub mod bits;
+pub mod pack_fast;
+pub mod simd_popcnt;
+pub mod kernels;
+
+pub use bits::{BitRows, PlaneRows};
+pub use kernels::*;

@@ -1,0 +1,433 @@
+//! §III-B/C/D of the paper: `Ablock` / `Bblock` storage orders.
+//!
+//! Each microkernel consumes panels of `A` and `B` reordered so that its
+//! inner loop is a stream of contiguous SIMD loads:
+//!
+//! * **BNN A** (16 rows): rows are bit-packed (8 depth bits per byte, the
+//!   paper's single-bit encoding `1→0, −1→1`) and stored chunk-major: for
+//!   each 8-deep chunk, 16 bytes — one per row. One chunk = one `LD1.16B`.
+//! * **BNN B** (8 cols): columns bit-packed, chunk-major, 8 bytes per
+//!   chunk. One chunk = one `LD1.8B`.
+//! * **TNN A** (16 rows): the `(+,−)` planes are bit-packed separately and
+//!   stored per chunk as `[A⁺ r0..8 | A⁻ r0..8 | A⁺ r8..16 | A⁻ r8..16]`
+//!   (32 bytes = two `LD1.16B`) — the paper's §III-C order.
+//! * **TNN B** (8 cols): per chunk, interleaved `[B⁺c0, B⁻c0, …, B⁺c7,
+//!   B⁻c7]` (16 bytes = one `LD1.16B`).
+//! * **TBN**: A as TNN-A, B as BNN-B.
+//! * Baseline panel packs (F32 / U8 / U4) follow the classic GotoBLAS
+//!   row-panel / column-panel orders described in §II-A.
+//!
+//! Padding convention: rows/columns beyond the matrix edge and depth bits
+//! beyond `k` are packed as **zero bits**. For the ternary planes a zero
+//! bit-pair is the value `0`, which contributes nothing — no correction
+//! needed. For the binary encodings a zero bit decodes to `+1`, so the
+//! driver subtracts the depth padding (`k_pad − k`) from every output of a
+//! binary product (eq. (6) correction), and edge rows/cols are simply not
+//! copied out of the microkernel scratch tile.
+
+use crate::gemm::encode::{encode_binary, encode_ternary};
+use crate::util::mat::{MatF32, MatI8, MatU8};
+
+/// Round `k` up to a multiple of `step`.
+#[inline]
+pub fn round_up(k: usize, step: usize) -> usize {
+    k.div_ceil(step) * step
+}
+
+/// Bit-pack one logical row/column of binary values into bytes
+/// (LSB-first within each byte). `get(t)` returns the t-th element;
+/// out-of-range elements must be handled by the caller's closure.
+fn pack_bits_into(bytes: &mut [u8], k: usize, get: impl Fn(usize) -> u8) {
+    for (chunk, byte) in bytes.iter_mut().enumerate() {
+        let mut b = 0u8;
+        for bit in 0..8 {
+            let t = chunk * 8 + bit;
+            if t < k {
+                b |= get(t) << bit;
+            }
+        }
+        *byte = b;
+    }
+}
+
+// ---------------------------------------------------------------------
+// BNN packing (§III-B)
+// ---------------------------------------------------------------------
+
+/// Pack 16 rows of a binary matrix starting at `row0` into the BNN
+/// `Ablock` order. Output: `k_chunks * 16` bytes, chunk-major.
+/// Rows past `a.rows` pack as zero (decoded `+1`); the driver never copies
+/// those outputs.
+pub fn pack_a_bnn(a: &MatI8, row0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 8) / 8;
+    let mut out = vec![0u8; chunks * 16];
+    let mut tmp = vec![0u8; chunks];
+    for r in 0..16 {
+        let row = row0 + r;
+        if row < a.rows {
+            pack_bits_into(&mut tmp, k, |t| encode_binary(a.get(row, t)));
+        } else {
+            tmp.iter_mut().for_each(|b| *b = 0);
+        }
+        for (d, &b) in tmp.iter().enumerate() {
+            out[d * 16 + r] = b;
+        }
+    }
+    out
+}
+
+/// Pack 8 columns of a binary matrix starting at `col0` into the BNN
+/// `Bblock` order. Output: `k_chunks * 8` bytes, chunk-major.
+pub fn pack_b_bnn(b: &MatI8, col0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 8) / 8;
+    let mut out = vec![0u8; chunks * 8];
+    let mut tmp = vec![0u8; chunks];
+    for c in 0..8 {
+        let col = col0 + c;
+        if col < b.cols {
+            pack_bits_into(&mut tmp, k.min(b.rows), |t| encode_binary(b.get(t, col)));
+        } else {
+            tmp.iter_mut().for_each(|x| *x = 0);
+        }
+        for (d, &x) in tmp.iter().enumerate() {
+            out[d * 8 + c] = x;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// TNN packing (§III-C)
+// ---------------------------------------------------------------------
+
+/// Pack 16 rows of a ternary matrix into the TNN `Ablock` order:
+/// per chunk `[A⁺ r0..8 | A⁻ r0..8 | A⁺ r8..16 | A⁻ r8..16]` (32 bytes).
+pub fn pack_a_tnn(a: &MatI8, row0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 8) / 8;
+    let mut out = vec![0u8; chunks * 32];
+    let mut plus = vec![0u8; chunks];
+    let mut minus = vec![0u8; chunks];
+    for r in 0..16 {
+        let row = row0 + r;
+        if row < a.rows {
+            pack_bits_into(&mut plus, k, |t| encode_ternary(a.get(row, t)).0);
+            pack_bits_into(&mut minus, k, |t| encode_ternary(a.get(row, t)).1);
+        } else {
+            plus.iter_mut().for_each(|b| *b = 0);
+            minus.iter_mut().for_each(|b| *b = 0);
+        }
+        let (group, within) = (r / 8, r % 8);
+        for d in 0..chunks {
+            out[d * 32 + group * 16 + within] = plus[d];
+            out[d * 32 + group * 16 + 8 + within] = minus[d];
+        }
+    }
+    out
+}
+
+/// Pack 8 columns of a ternary matrix into the TNN `Bblock` order:
+/// per chunk `[B⁺c0, B⁻c0, B⁺c1, B⁻c1, …]` (16 bytes).
+pub fn pack_b_tnn(b: &MatI8, col0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 8) / 8;
+    let mut out = vec![0u8; chunks * 16];
+    let mut plus = vec![0u8; chunks];
+    let mut minus = vec![0u8; chunks];
+    for c in 0..8 {
+        let col = col0 + c;
+        if col < b.cols {
+            pack_bits_into(&mut plus, k.min(b.rows), |t| encode_ternary(b.get(t, col)).0);
+            pack_bits_into(&mut minus, k.min(b.rows), |t| encode_ternary(b.get(t, col)).1);
+        } else {
+            plus.iter_mut().for_each(|x| *x = 0);
+            minus.iter_mut().for_each(|x| *x = 0);
+        }
+        for d in 0..chunks {
+            out[d * 16 + 2 * c] = plus[d];
+            out[d * 16 + 2 * c + 1] = minus[d];
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Baseline panel packing (§II-A, GotoBLAS order)
+// ---------------------------------------------------------------------
+
+/// Pack 12 rows of an f32 matrix, chunk-major with one column (depth step)
+/// per chunk: `[A[r][d] for r in 0..12]`, padded to 12 with zeros.
+pub fn pack_a_f32(a: &MatF32, row0: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * 12];
+    for d in 0..k {
+        for r in 0..12 {
+            let row = row0 + r;
+            if row < a.rows {
+                out[d * 12 + r] = a.get(row, d);
+            }
+        }
+    }
+    out
+}
+
+/// Pack 8 columns of an f32 matrix: per depth step `[B[d][c] for c in 0..8]`.
+pub fn pack_b_f32(b: &MatF32, col0: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * 8];
+    for d in 0..k.min(b.rows) {
+        for c in 0..8 {
+            let col = col0 + c;
+            if col < b.cols {
+                out[d * 8 + c] = b.get(d, col);
+            }
+        }
+    }
+    out
+}
+
+/// Pack 12 rows of a u8 matrix for the U8 microkernel. Per 2-deep chunk:
+/// `[A[r][2d] r=0..12, pad4 | A[r][2d+1] r=0..12, pad4]` (32 bytes = two
+/// `LD1.16B`). Depth padding packs zeros; with the gemmlowp convention the
+/// driver compensates zero-points over the true `k` only.
+pub fn pack_a_u8(a: &MatU8, row0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 2) / 2;
+    let mut out = vec![0u8; chunks * 32];
+    for d in 0..chunks {
+        for t in 0..2 {
+            let depth = 2 * d + t;
+            for r in 0..12 {
+                let row = row0 + r;
+                if depth < k && row < a.rows {
+                    out[d * 32 + t * 16 + r] = a.get(row, depth);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack 8 columns of a u8 matrix for the U8 microkernel. Per 2-deep chunk:
+/// `[B[2d][c] c=0..8 | B[2d+1][c] c=0..8]` (16 bytes = one `LD1.16B`).
+pub fn pack_b_u8(b: &MatU8, col0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 2) / 2;
+    let mut out = vec![0u8; chunks * 16];
+    for d in 0..chunks {
+        for t in 0..2 {
+            let depth = 2 * d + t;
+            for c in 0..8 {
+                let col = col0 + c;
+                if depth < k.min(b.rows) && col < b.cols {
+                    out[d * 16 + t * 8 + c] = b.get(depth, col);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack 24 rows of a 4-bit matrix (values 0..=15 stored one per u8) for
+/// the U4 microkernel. Per 2-deep chunk: 24 bytes, byte `r` holding
+/// `A[r][2d] | A[r][2d+1] << 4`.
+pub fn pack_a_u4(a: &MatU8, row0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 2) / 2;
+    let mut out = vec![0u8; chunks * 24];
+    for d in 0..chunks {
+        for r in 0..24 {
+            let row = row0 + r;
+            let lo = if 2 * d < k && row < a.rows { a.get(row, 2 * d) } else { 0 };
+            let hi = if 2 * d + 1 < k && row < a.rows { a.get(row, 2 * d + 1) } else { 0 };
+            debug_assert!(lo < 16 && hi < 16, "U4 values must be 4-bit");
+            out[d * 24 + r] = lo | (hi << 4);
+        }
+    }
+    out
+}
+
+/// Pack 8 columns of a 4-bit matrix for the U4 microkernel. Per 2-deep
+/// chunk: 8 bytes, byte `c` holding `B[2d][c] | B[2d+1][c] << 4`.
+pub fn pack_b_u4(b: &MatU8, col0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 2) / 2;
+    let mut out = vec![0u8; chunks * 8];
+    for d in 0..chunks {
+        for c in 0..8 {
+            let col = col0 + c;
+            let kb = k.min(b.rows);
+            let lo = if 2 * d < kb && col < b.cols { b.get(2 * d, col) } else { 0 };
+            let hi = if 2 * d + 1 < kb && col < b.cols { b.get(2 * d + 1, col) } else { 0 };
+            debug_assert!(lo < 16 && hi < 16, "U4 values must be 4-bit");
+            out[d * 8 + c] = lo | (hi << 4);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// daBNN packing (8×6×128 microkernel)
+// ---------------------------------------------------------------------
+
+/// Pack 8 rows of a binary matrix for the daBNN microkernel: per 128-deep
+/// chunk, 8 × 16 bytes (one full `LD1.16B` per row).
+pub fn pack_a_dabnn(a: &MatI8, row0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 128) / 128;
+    let mut out = vec![0u8; chunks * 8 * 16];
+    let bytes = round_up(k, 8) / 8;
+    let mut tmp = vec![0u8; bytes];
+    for r in 0..8 {
+        let row = row0 + r;
+        if row < a.rows {
+            pack_bits_into(&mut tmp, k, |t| encode_binary(a.get(row, t)));
+        } else {
+            tmp.iter_mut().for_each(|b| *b = 0);
+        }
+        for d in 0..chunks {
+            for byte in 0..16 {
+                let src = d * 16 + byte;
+                out[d * 128 + r * 16 + byte] = if src < bytes { tmp[src] } else { 0 };
+            }
+        }
+    }
+    out
+}
+
+/// Pack 6 columns of a binary matrix for the daBNN microkernel: per
+/// 128-deep chunk, 6 × 16 bytes.
+pub fn pack_b_dabnn(b: &MatI8, col0: usize, k: usize) -> Vec<u8> {
+    let chunks = round_up(k, 128) / 128;
+    let mut out = vec![0u8; chunks * 6 * 16];
+    let bytes = round_up(k, 8) / 8;
+    let mut tmp = vec![0u8; bytes];
+    for c in 0..6 {
+        let col = col0 + c;
+        if col < b.cols {
+            pack_bits_into(&mut tmp, k.min(b.rows), |t| encode_binary(b.get(t, col)));
+        } else {
+            tmp.iter_mut().for_each(|x| *x = 0);
+        }
+        for d in 0..chunks {
+            for byte in 0..16 {
+                let src = d * 16 + byte;
+                out[d * 96 + c * 16 + byte] = if src < bytes { tmp[src] } else { 0 };
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bnn_a_chunk_major_layout() {
+        // A 16×8 matrix of all -1 encodes to bytes of 0xFF.
+        let a = MatI8::from_fn(16, 8, |_, _| -1);
+        let p = pack_a_bnn(&a, 0, 8);
+        assert_eq!(p.len(), 16);
+        assert!(p.iter().all(|&b| b == 0xFF));
+        // all +1 encodes to 0x00
+        let a = MatI8::from_fn(16, 8, |_, _| 1);
+        assert!(pack_a_bnn(&a, 0, 8).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn bnn_a_bit_addressing() {
+        // Row 3, depth bit 10 set to -1, everything else +1:
+        // chunk 1 (bits 8..16), byte index 3, bit 2.
+        let mut a = MatI8::from_fn(16, 16, |_, _| 1);
+        a.set(3, 10, -1);
+        let p = pack_a_bnn(&a, 0, 16);
+        assert_eq!(p.len(), 32);
+        assert_eq!(p[16 + 3], 1 << 2);
+        assert!(p.iter().enumerate().all(|(i, &b)| i == 19 || b == 0));
+    }
+
+    #[test]
+    fn bnn_b_bit_addressing() {
+        // Col 5, depth bit 9: chunk 1, byte 5, bit 1.
+        let mut b = MatI8::from_fn(16, 8, |_, _| 1);
+        b.set(9, 5, -1);
+        let p = pack_b_bnn(&b, 0, 16);
+        assert_eq!(p.len(), 16);
+        assert_eq!(p[8 + 5], 1 << 1);
+    }
+
+    #[test]
+    fn tnn_a_group_layout() {
+        // +1 in row 2 → A⁺ plane, group 0, byte offset 2.
+        // -1 in row 11 → A⁻ plane, group 1, byte offset 16+8+(11-8)=27.
+        let mut a = MatI8::zeros(16, 8);
+        a.set(2, 0, 1);
+        a.set(11, 0, -1);
+        let p = pack_a_tnn(&a, 0, 8);
+        assert_eq!(p.len(), 32);
+        assert_eq!(p[2], 1); // A⁺ r0..8
+        assert_eq!(p[16 + 8 + 3], 1); // A⁻ r8..16
+        let set: usize = p.iter().map(|b| b.count_ones() as usize).sum();
+        assert_eq!(set, 2);
+    }
+
+    #[test]
+    fn tnn_b_interleaved_layout() {
+        let mut b = MatI8::zeros(8, 8);
+        b.set(0, 3, 1); // B⁺ col 3 bit 0 → byte 2*3
+        b.set(1, 4, -1); // B⁻ col 4 bit 1 → byte 2*4+1
+        let p = pack_b_tnn(&b, 0, 8);
+        assert_eq!(p.len(), 16);
+        assert_eq!(p[6], 1);
+        assert_eq!(p[9], 1 << 1);
+    }
+
+    #[test]
+    fn f32_pack_shapes_and_padding() {
+        let mut rng = Rng::new(1);
+        let a = MatF32::random(10, 5, &mut rng); // fewer than 12 rows
+        let p = pack_a_f32(&a, 0, 5);
+        assert_eq!(p.len(), 60);
+        assert_eq!(p[0], a.get(0, 0));
+        assert_eq!(p[12 + 1], a.get(1, 1));
+        assert_eq!(p[10], 0.0); // padded row
+        assert_eq!(p[11], 0.0);
+    }
+
+    #[test]
+    fn u8_pack_layout() {
+        let mut b = MatU8::zeros(4, 8);
+        b.data[1 * 8 + 2] = 99; // B[1][2] → chunk 0, t=1, c=2
+        let p = pack_b_u8(&b, 0, 4);
+        assert_eq!(p.len(), 32);
+        assert_eq!(p[8 + 2], 99);
+    }
+
+    #[test]
+    fn u4_nibble_packing() {
+        let mut a = MatU8::zeros(24, 2);
+        a.data[0 * 2 + 0] = 0x5;
+        a.data[0 * 2 + 1] = 0xA;
+        let p = pack_a_u4(&a, 0, 2);
+        assert_eq!(p.len(), 24);
+        assert_eq!(p[0], 0x5 | (0xA << 4));
+    }
+
+    #[test]
+    fn dabnn_pack_row_major_128() {
+        let a = MatI8::from_fn(8, 128, |_, _| -1);
+        let p = pack_a_dabnn(&a, 0, 128);
+        assert_eq!(p.len(), 128);
+        assert!(p.iter().all(|&b| b == 0xFF));
+    }
+
+    #[test]
+    fn depth_padding_is_zero_bits() {
+        // k=5 pads bits 5..8 with 0 in both A and B packs.
+        let a = MatI8::from_fn(16, 5, |_, _| -1);
+        let p = pack_a_bnn(&a, 0, 5);
+        for &byte in &p[..16] {
+            assert_eq!(byte, 0b0001_1111);
+        }
+    }
+
+    #[test]
+    fn row0_offset_selects_rows() {
+        let a = MatI8::from_fn(32, 8, |r, _| if r >= 16 { -1 } else { 1 });
+        let p = pack_a_bnn(&a, 16, 8);
+        assert!(p.iter().all(|&b| b == 0xFF));
+    }
+}

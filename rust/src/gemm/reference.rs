@@ -1,0 +1,138 @@
+//! Naive scalar GEMM oracles. Every packed microkernel and every native
+//! fast path in this crate is tested against these.
+
+use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
+
+/// `C = A·B` over i8 matrices (binary/ternary values), i32 output.
+pub fn gemm_i8(a: &MatI8, b: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, b.rows, "inner dimensions must match");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatI32::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for t in 0..k {
+                acc += a.get(i, t) as i32 * b.get(t, j) as i32;
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// `C = A·B` over f32 matrices.
+pub fn gemm_f32(a: &MatF32, b: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatF32::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += a.get(i, t) * b.get(t, j);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// Raw unsigned product `C = Â·B̂` over u8 matrices (before zero-point
+/// compensation), i32 output.
+pub fn gemm_u8_raw(a: &MatU8, b: &MatU8) -> MatI32 {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatI32::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for t in 0..k {
+                acc += a.get(i, t) as i32 * b.get(t, j) as i32;
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// Zero-point-compensated integer product, the paper's eq. (3):
+/// `C̃ᵢⱼ = Σ ÂᵢₜB̂ₜⱼ − z_B Σ Âᵢₜ − z_A Σ B̂ₜⱼ + k·z_A·z_B`.
+pub fn gemm_u8_zp(a: &MatU8, b: &MatU8, za: i32, zb: i32) -> MatI32 {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let raw = gemm_u8_raw(a, b);
+    let mut c = MatI32::zeros(m, n);
+    let row_sums: Vec<i32> = (0..m).map(|i| (0..k).map(|t| a.get(i, t) as i32).sum()).collect();
+    let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
+    for i in 0..m {
+        for j in 0..n {
+            c.set(i, j, raw.get(i, j) - zb * row_sums[i] - za * col_sums[j] + k as i32 * za * zb);
+        }
+    }
+    c
+}
+
+/// Direct computation of `Σ (Âᵢₜ − z_A)(B̂ₜⱼ − z_B)` — used to validate
+/// that eq. (3) is an identity.
+pub fn gemm_u8_centered(a: &MatU8, b: &MatU8, za: i32, zb: i32) -> MatI32 {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatI32::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for t in 0..k {
+                acc += (a.get(i, t) as i32 - za) * (b.get(t, j) as i32 - zb);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gemm_i8_hand_example() {
+        // [[1,-1],[0,1]] · [[1,1],[-1,0]] = [[2,1],[-1,0]]
+        let a = MatI8 { rows: 2, cols: 2, data: vec![1, -1, 0, 1] };
+        let b = MatI8 { rows: 2, cols: 2, data: vec![1, 1, -1, 0] };
+        let c = gemm_i8(&a, &b);
+        assert_eq!(c.data, vec![2, 1, -1, 0]);
+    }
+
+    #[test]
+    fn eq3_is_an_identity() {
+        let mut rng = Rng::new(123);
+        for _ in 0..20 {
+            let m = 1 + rng.below(8);
+            let k = 1 + rng.below(16);
+            let n = 1 + rng.below(8);
+            let a = MatU8::random(m, k, &mut rng);
+            let b = MatU8::random(k, n, &mut rng);
+            let za = rng.below(256) as i32;
+            let zb = rng.below(256) as i32;
+            assert_eq!(gemm_u8_zp(&a, &b, za, zb).data, gemm_u8_centered(&a, &b, za, zb).data);
+        }
+    }
+
+    #[test]
+    fn gemm_f32_identity_matrix() {
+        let mut rng = Rng::new(4);
+        let a = MatF32::random(5, 5, &mut rng);
+        let eye = MatF32::from_fn(5, 5, |r, c| if r == c { 1.0 } else { 0.0 });
+        let c = gemm_f32(&a, &eye);
+        for i in 0..25 {
+            assert!((c.data[i] - a.data[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ternary_times_zero_is_zero() {
+        let mut rng = Rng::new(5);
+        let a = MatI8::random_ternary(4, 9, &mut rng);
+        let b = MatI8::zeros(9, 3);
+        assert!(gemm_i8(&a, &b).data.iter().all(|&v| v == 0));
+    }
+}

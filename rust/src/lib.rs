@@ -1,0 +1,49 @@
+//! # tbgemm — fast matrix multiplication for binary and ternary CNNs
+//!
+//! A full reproduction of Trusov, Limonova, Nikolaev, Arlazarov,
+//! *"Fast matrix multiplication for binary and ternary CNNs on ARM CPU"*
+//! (2022), as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper contributes bit-packed GEMM algorithms for three low-bit
+//! matrix products on ARMv8 NEON:
+//!
+//! * **BNN** — binary × binary (values in `{-1, 1}`, 1 bit/value,
+//!   XOR + popcount),
+//! * **TNN** — ternary × ternary (values in `{-1, 0, 1}`, 2-bit `(+,-)`
+//!   plane encoding, AND/OR + popcount),
+//! * **TBN** — ternary × binary (mixed encoding),
+//!
+//! all accumulated in signed 16-bit lanes, wrapped in a blocked GEMM
+//! driver (the paper's Algorithm 2), and compared against F32, 8-bit
+//! (gemmlowp-style), 4-bit and daBNN binary baselines.
+//!
+//! This crate implements **everything from scratch**, twice:
+//!
+//! * [`simd`] + [`gemm::micro`] — a register-level emulation of the NEON
+//!   instruction sequences the paper describes, with per-class instruction
+//!   tracing. This regenerates the paper's Table II by *counting executed
+//!   instructions*, not by transcribing the paper.
+//! * [`gemm::native`] — portable fast paths (u64 bit-ops + `count_ones`)
+//!   implementing the same algorithms for wall-clock benchmarking on the
+//!   host CPU; these regenerate the *shape* of the paper's Table III.
+//!
+//! On top of the GEMM core sit [`quant`] (linear quantization, eq. (1)-(3),
+//! overflow limits eq. (4)-(5)), [`conv`] (im2col + GEMM convolution),
+//! [`nn`] (a QNN inference engine), [`costmodel`] (a Cortex-A73 throughput
+//! model that predicts the ratio table), [`runtime`] (PJRT loader for the
+//! JAX/Pallas AOT artifacts) and [`coordinator`] (a batching inference
+//! server).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod conv;
+pub mod coordinator;
+pub mod costmodel;
+pub mod gemm;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod simd;
+pub mod util;

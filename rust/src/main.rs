@@ -1,0 +1,305 @@
+//! `repro` — the command-line entry point of the reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (see
+//! DESIGN.md's per-experiment index):
+//!
+//! * `table1`   — print the ternary / ternary-binary truth tables.
+//! * `table2`   — regenerate Table II from the emulated microkernels.
+//! * `table3`   — measure the Table III ratio matrix on the native paths
+//!                (`--predicted` for the Cortex-A73 cost-model variant,
+//!                `--smoke` for a 4-point grid, `--reps N`, `--inner N`).
+//! * `headline` — the abstract's speedup claims, ours vs the paper's.
+//! * `limits`   — eq. (4)/(5) overflow and channel limits.
+//! * `explain <algo>` — the microkernel's instruction stream (the textual
+//!                rendering of the paper's Figs. 1–3).
+//! * `infer`    — run the QNN engine on synthetic images (TNN/TBN/BNN).
+//! * `serve`    — start the batching coordinator and run a load test.
+//! * `xla <artifact>` — load an AOT artifact and execute it.
+
+use tbgemm::bench::{grid, predicted, ratio};
+use tbgemm::conv::conv2d::ConvKind;
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::costmodel::table2;
+use tbgemm::gemm::encode;
+use tbgemm::gemm::Kind;
+use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::quant::overflow;
+use tbgemm::runtime::XlaRuntime;
+use tbgemm::simd::reg::Neon;
+use tbgemm::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt = |name: &str| -> Option<String> {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+    };
+    match cmd {
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(),
+        "table3" => {
+            let reps: usize = opt("--reps").and_then(|s| s.parse().ok()).unwrap_or(3);
+            let inner: usize = opt("--inner").and_then(|s| s.parse().ok()).unwrap_or(5);
+            cmd_table3(flag("--predicted"), flag("--smoke"), reps, inner);
+        }
+        "headline" => {
+            let reps: usize = opt("--reps").and_then(|s| s.parse().ok()).unwrap_or(3);
+            cmd_headline(reps);
+        }
+        "limits" => cmd_limits(),
+        "explain" => cmd_explain(args.get(1).map(String::as_str).unwrap_or("tnn")),
+        "infer" => cmd_infer(
+            opt("--kind").unwrap_or_else(|| "tnn".into()),
+            opt("--images").and_then(|s| s.parse().ok()).unwrap_or(32),
+        ),
+        "serve" => cmd_serve(
+            opt("--requests").and_then(|s| s.parse().ok()).unwrap_or(256),
+            opt("--batch").and_then(|s| s.parse().ok()).unwrap_or(8),
+        ),
+        "xla" => cmd_xla(args.get(1).map(String::as_str).unwrap_or("artifacts/model.hlo.txt")),
+        _ => {
+            println!("repro — 'Fast matrix multiplication for binary and ternary CNNs' reproduction");
+            println!("usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|xla> [flags]");
+            println!("  table3 flags: --predicted --smoke --reps N --inner N");
+            println!("  infer flags:  --kind tnn|tbn|bnn --images N");
+            println!("  serve flags:  --requests N --batch N");
+        }
+    }
+}
+
+fn cmd_table1() {
+    println!("Table I — ternary multiplication z = x·y (2-bit encoding)");
+    println!(" x  y |  z | x+ x- y+ y- z+ z-");
+    for x in [1i8, 0, -1] {
+        for y in [1i8, 0, -1] {
+            let (xp, xm) = encode::encode_ternary(x);
+            let (yp, ym) = encode::encode_ternary(y);
+            let (zp, zm) = encode::ternary_mul(xp, xm, yp, ym);
+            println!("{x:>2} {y:>2} | {:>2} |  {xp}  {xm}  {yp}  {ym}  {zp}  {zm}", x * y);
+        }
+    }
+    println!("\nTable I — ternary-binary multiplication u = x·y");
+    println!(" x  y |  u | x+ x- yb u+ u-");
+    for x in [1i8, 0, -1] {
+        for y in [1i8, -1] {
+            let (xp, xm) = encode::encode_ternary(x);
+            let yb = encode::encode_binary(y);
+            let (up, um) = encode::tbn_mul(xp, xm, yb);
+            println!("{x:>2} {y:>2} | {:>2} |  {xp}  {xm}  {yb}  {up}  {um}", x * y);
+        }
+    }
+}
+
+fn cmd_table2() {
+    let rows = table2::generate();
+    print!("{}", table2::render(&rows));
+}
+
+fn cmd_table3(use_predicted: bool, smoke: bool, reps: usize, inner: usize) {
+    let g = if smoke { grid::smoke_grid() } else { grid::paper_grid() };
+    let times = if use_predicted {
+        println!("predicting with the Cortex-A73 cost model over {} grid points...", g.len());
+        predicted::predict_grid(&g)
+    } else {
+        println!("measuring native paths over {} grid points (reps={reps}, inner={inner})...", g.len());
+        Kind::ALL
+            .iter()
+            .map(|&k| {
+                eprintln!("  timing {}...", k.label());
+                grid::time_algorithm(k, &g, reps, inner, 0x7AB1E3)
+            })
+            .collect()
+    };
+    let m = ratio::ratio_matrix(&times);
+    let title = if use_predicted {
+        "Table III (predicted, Cortex-A73 cost model)"
+    } else {
+        "Table III (measured, native paths on this host)"
+    };
+    print!("{}", ratio::render_ratio_table(&m, title));
+    println!("\nHeadline comparisons:");
+    for (desc, ours, paper) in ratio::headline(&m) {
+        println!("  {desc:<40} ours {ours:>5.2}  paper {paper:>5.2}");
+    }
+}
+
+fn cmd_headline(reps: usize) {
+    let g = grid::paper_grid();
+    println!("measuring native paths over the paper grid (reps={reps})...");
+    let times: Vec<_> = Kind::ALL.iter().map(|&k| grid::time_algorithm(k, &g, reps, 5, 0x7AB1E4)).collect();
+    let m = ratio::ratio_matrix(&times);
+    for (desc, ours, paper) in ratio::headline(&m) {
+        println!("{desc:<40} ours {ours:>5.2}  paper {paper:>5.2}");
+    }
+}
+
+fn cmd_limits() {
+    println!("eq. (4) overflow limits (k_max) and eq. (5) channel limits (3×3 kernel):");
+    println!("{:<6} {:>9} {:>12}", "Algo", "k_max", "C_in_max@3x3");
+    for k in Kind::ALL {
+        match k.k_max() {
+            Some(km) => println!("{:<6} {:>9} {:>12}", k.label(), km, overflow::c_in_max(km, 3, 3)),
+            None => println!("{:<6} {:>9} {:>12}", k.label(), "—", "—"),
+        }
+    }
+}
+
+fn cmd_explain(algo: &str) {
+    use tbgemm::gemm::micro;
+    use tbgemm::gemm::pack;
+    use tbgemm::util::mat::MatI8;
+    let mut rng = Rng::new(1);
+    let mut cpu = Neon::recording();
+    match algo {
+        "bnn" => {
+            let a = MatI8::random_binary(16, 8, &mut rng);
+            let b = MatI8::random_binary(8, 8, &mut rng);
+            micro::bnn_microkernel(&mut cpu, &pack::pack_a_bnn(&a, 0, 8), &pack::pack_b_bnn(&b, 0, 8), 1);
+            println!("BNN microkernel (Fig. 1), one 16×8×8 iteration:");
+        }
+        "tnn" => {
+            let a = MatI8::random_ternary(16, 8, &mut rng);
+            let b = MatI8::random_ternary(8, 8, &mut rng);
+            micro::tnn_microkernel(&mut cpu, &pack::pack_a_tnn(&a, 0, 8), &pack::pack_b_tnn(&b, 0, 8), 1);
+            println!("TNN microkernel (Fig. 2), one 16×8×8 iteration:");
+        }
+        "tbn" => {
+            let a = MatI8::random_ternary(16, 8, &mut rng);
+            let b = MatI8::random_binary(8, 8, &mut rng);
+            micro::tbn_microkernel(&mut cpu, &pack::pack_a_tnn(&a, 0, 8), &pack::pack_b_bnn(&b, 0, 8), 1);
+            println!("TBN microkernel (Fig. 3), one 16×8×8 iteration:");
+        }
+        other => {
+            println!("unknown algo '{other}' (expected bnn|tnn|tbn)");
+            return;
+        }
+    }
+    for (i, mnem) in cpu.trace.log.iter().enumerate() {
+        print!("{mnem:<11}");
+        if (i + 1) % 8 == 0 {
+            println!();
+        }
+    }
+    println!();
+    println!(
+        "totals: COM={} LD={} MOV={} (INS = {:.3})",
+        cpu.trace.com,
+        cpu.trace.ld,
+        cpu.trace.mov,
+        cpu.trace.ins_metric(16, 8, 8)
+    );
+}
+
+fn parse_kind(s: &str) -> ConvKind {
+    match s {
+        "bnn" => ConvKind::Bnn,
+        "tbn" => ConvKind::Tbn,
+        _ => ConvKind::Tnn,
+    }
+}
+
+fn cmd_infer(kind: String, images: usize) {
+    let kind = parse_kind(&kind);
+    let cfg = NetConfig::mobile_cnn(kind, 28, 28, 1, 10);
+    println!("building {kind:?} mobile CNN ({} params)...", cfg.param_count());
+    let net = build_from_config(&cfg, 0xCAFE);
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let mut hist = [0usize; 10];
+    for _ in 0..images {
+        let img = Tensor3::random(28, 28, 1, &mut rng);
+        hist[net.predict(&img)] += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("classified {images} images in {:.1} ms ({:.1} img/s)", dt * 1e3, images as f64 / dt);
+    println!("class histogram: {hist:?}");
+}
+
+fn cmd_serve(requests: usize, batch: usize) {
+    let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
+    let net = build_from_config(&cfg, 0xCAFE);
+    let server = InferenceServer::start(
+        Box::new(NativeEngine::new(net, "tnn-mobile")),
+        BatcherConfig { max_batch: batch, ..Default::default() },
+        128,
+    );
+    println!("serving {requests} requests (max_batch={batch})...");
+    let mut rng = Rng::new(9);
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..requests).map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng))).collect();
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    println!("throughput: {:.1} req/s", requests as f64 / dt);
+    println!(
+        "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs max={}µs",
+        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.max_latency_us
+    );
+}
+
+fn cmd_xla(path: &str) {
+    let rt = match XlaRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("platform: {}", rt.platform());
+    match rt.load_hlo_text(path) {
+        Ok(model) => {
+            println!("loaded artifact '{}'", model.name);
+            if model.name.starts_with("tnn_gemm") {
+                // Standalone ternary GEMM artifact: all-(+1) × all-(+1)
+                // must give C ≡ k = 256 everywhere.
+                let ap = vec![1f32; 72 * 256];
+                let am = vec![0f32; 72 * 256];
+                let bp = vec![1f32; 256 * 24];
+                let bm = vec![0f32; 256 * 24];
+                match model.run_f32(&[
+                    (ap, vec![72, 256]),
+                    (am, vec![72, 256]),
+                    (bp, vec![256, 24]),
+                    (bm, vec![256, 24]),
+                ]) {
+                    Ok(outs) => println!("C[0..4] = {:?} (expect 256)", &outs[0][..4]),
+                    Err(e) => eprintln!("execute failed: {e:#}"),
+                }
+            }
+            if model.name.starts_with("probe") {
+                // Debug probes: f32[8,12,12,1] ones -> small f32 vector.
+                let data = vec![1.0f32; 8 * 12 * 12];
+                match model.run_f32(&[(data, vec![8, 12, 12, 1])]) {
+                    Ok(outs) => println!("probe out = {:?}", outs[0]),
+                    Err(e) => eprintln!("execute failed: {e:#}"),
+                }
+            }
+            if model.name.starts_with("model") {
+                // The serving model: f32[8,12,12,1] -> f32[8,10].
+                // `--ones` feeds a constant input whose expected logits
+                // are printed by python/tests (debug aid).
+                let ones = std::env::args().any(|a| a == "--ones");
+                let mut rng = Rng::new(11);
+                let data: Vec<f32> = if ones {
+                    vec![1.0; 8 * 12 * 12]
+                } else {
+                    (0..8 * 12 * 12).map(|_| rng.normalish()).collect()
+                };
+                match model.run_f32(&[(data, vec![8, 12, 12, 1])]) {
+                    Ok(outs) => {
+                        println!("logits[0][0..10] = {:?}", &outs[0][..10.min(outs[0].len())]);
+                    }
+                    Err(e) => eprintln!("execute failed: {e:#}"),
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("load failed: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    }
+}

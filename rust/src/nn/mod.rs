@@ -1,0 +1,29 @@
+//! A QNN inference engine over the low-bit GEMM core — the "inference of
+//! convolutional and fully connected layers of TNNs, TBNs, and BNNs" the
+//! paper's abstract promises.
+//!
+//! Design follows production low-bit runtimes (daBNN, Larq CE):
+//!
+//! * Low-bit conv/dense layers compute integer outputs with the paper's
+//!   GEMM kernels, then apply a **folded** per-channel affine
+//!   (`y = a·acc + b`) that absorbs batch-norm, the XNOR/TWN scaling
+//!   factors α, and the bias, in f32.
+//! * The next layer's quantizer (sign / ternary threshold) turns the f32
+//!   activations back into `{-1,1}` or `{-1,0,1}` — so the hot path only
+//!   ever runs low-bit GEMMs plus cheap elementwise epilogues.
+//! * The classifier head stays in f32 (standard practice: first and last
+//!   layers are the quality-critical ones).
+//!
+//! [`network::Network`] is a sequential graph of [`layers::Layer`];
+//! [`builder`] provides config-driven construction plus reference models
+//! used by the examples and the serving coordinator.
+
+pub mod builder;
+pub mod layers;
+pub mod network;
+pub mod twin;
+
+pub use builder::{build_from_config, LayerSpec, NetConfig};
+pub use layers::{Activation, Feature, Layer};
+pub use network::Network;
+pub use twin::{agreement, build_f32_twin, F32Twin};

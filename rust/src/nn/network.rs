@@ -1,0 +1,122 @@
+//! Sequential network executor with per-layer timing.
+
+use crate::conv::tensor::Tensor3;
+use crate::nn::layers::{Feature, Layer};
+use std::time::Instant;
+
+/// Per-layer timing record from an instrumented forward pass.
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub name: &'static str,
+    pub seconds: f64,
+    pub out_dims: (usize, usize, usize),
+}
+
+/// A sequential QNN.
+pub struct Network {
+    pub layers: Vec<Layer>,
+    /// Input image dims (h, w, c) the network expects.
+    pub input_dims: (usize, usize, usize),
+}
+
+impl Network {
+    pub fn new(input_dims: (usize, usize, usize), layers: Vec<Layer>) -> Self {
+        Network { layers, input_dims }
+    }
+
+    /// Forward an f32 image through the network; returns the final
+    /// feature (logits for classifier nets).
+    pub fn forward(&self, image: &Tensor3<f32>) -> Feature {
+        assert_eq!((image.h, image.w, image.c), self.input_dims, "input dims mismatch");
+        let mut x = Feature::F(image.clone());
+        for layer in &self.layers {
+            x = layer.forward(x);
+        }
+        x
+    }
+
+    /// Forward returning classifier logits.
+    pub fn logits(&self, image: &Tensor3<f32>) -> Vec<f32> {
+        match self.forward(image) {
+            Feature::F(t) => t.data,
+            Feature::Q(t) => t.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Argmax class prediction.
+    pub fn predict(&self, image: &Tensor3<f32>) -> usize {
+        let logits = self.logits(image);
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Instrumented forward pass: per-layer wall-clock.
+    pub fn forward_timed(&self, image: &Tensor3<f32>) -> (Feature, Vec<LayerTiming>) {
+        let mut x = Feature::F(image.clone());
+        let mut timings = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let t0 = Instant::now();
+            x = layer.forward(x);
+            timings.push(LayerTiming { name: layer.name(), seconds: t0.elapsed().as_secs_f64(), out_dims: x.dims() });
+        }
+        (x, timings)
+    }
+
+    /// Rough parameter count (low-bit weights count as their storage bits
+    /// / 8 would undersell them; we count logical weights).
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::builder::{build_from_config, NetConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_produces_logit_vector() {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        let net = build_from_config(&cfg, 7);
+        let mut rng = Rng::new(1);
+        let img = Tensor3::random(12, 12, 1, &mut rng);
+        let logits = net.logits(&img);
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn predict_is_argmax() {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        let net = build_from_config(&cfg, 8);
+        let mut rng = Rng::new(2);
+        let img = Tensor3::random(12, 12, 1, &mut rng);
+        let logits = net.logits(&img);
+        let pred = net.predict(&img);
+        assert!(logits[pred] >= logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) - 1e-6);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        let net = build_from_config(&cfg, 9);
+        let mut rng = Rng::new(3);
+        let img = Tensor3::random(12, 12, 1, &mut rng);
+        assert_eq!(net.logits(&img), net.logits(&img));
+    }
+
+    #[test]
+    fn timed_forward_reports_all_layers() {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        let net = build_from_config(&cfg, 10);
+        let mut rng = Rng::new(4);
+        let img = Tensor3::random(12, 12, 1, &mut rng);
+        let (_, t) = net.forward_timed(&img);
+        assert_eq!(t.len(), net.num_layers());
+    }
+}

@@ -1,0 +1,244 @@
+//! The f32 "twin" of a quantized network, and QNN-vs-f32 agreement
+//! metrics — the quality side of the paper's "trade-off between
+//! recognition quality ... and efficiency gain from low-bit quantization"
+//! (§IV discussion).
+//!
+//! The twin is built from the **same seed stream** as the quantized
+//! network, so its weights are the pre-quantization Gaussians whose
+//! binarized/ternarized versions the QNN carries. Comparing the two
+//! forward passes over a probe set measures how much of the full-
+//! precision network's behaviour the low-bit version preserves — the
+//! proxy this synthetic setting offers for the paper's accuracy
+//! discussion.
+
+use crate::conv::conv2d::{ConvKind, ConvParams};
+use crate::conv::tensor::Tensor3;
+use crate::nn::builder::{LayerSpec, NetConfig};
+use crate::util::mat::MatF32;
+use crate::util::Rng;
+
+/// A full-precision sequential CNN mirroring a [`NetConfig`].
+pub struct F32Twin {
+    pub input: (usize, usize, usize),
+    layers: Vec<TwinLayer>,
+}
+
+enum TwinLayer {
+    /// Conv with f32 weights `(depth × c_out)` + per-channel scale/bias
+    /// and tanh-ish activation standing in for the quantizer stage.
+    Conv { params: ConvParams, c_in: usize, w: MatF32, scale: Vec<f32>, bias: Vec<f32> },
+    MaxPool2,
+    Dense { w: MatF32, scale: Vec<f32>, bias: Vec<f32> },
+    Head { w: MatF32, bias: Vec<f32> },
+}
+
+/// Build the f32 twin with the same seed as `build_from_config(cfg, seed)`
+/// — it consumes the RNG in the same order, so `w` here is the raw weight
+/// whose quantized form the QNN uses.
+pub fn build_f32_twin(cfg: &NetConfig, seed: u64) -> F32Twin {
+    let mut rng = Rng::new(seed);
+    let (mut h, mut w, mut c) = cfg.input;
+    let mut layers = Vec::new();
+    for spec in &cfg.layers {
+        match *spec {
+            LayerSpec::InputQuant { .. } => {}
+            LayerSpec::Conv { c_out, hk, wk, stride, pad, .. } => {
+                let p = ConvParams { hk, wk, stride, pad };
+                let depth = p.depth(c);
+                let raw: Vec<f32> = (0..depth * c_out).map(|_| rng.normalish() * 0.2).collect();
+                let wm = MatF32 { rows: depth, cols: c_out, data: raw };
+                let fan_in = depth as f32;
+                let scale: Vec<f32> = (0..c_out).map(|_| 2.0 * rng.f32_range(0.8, 1.2) / fan_in.sqrt()).collect();
+                let bias: Vec<f32> = (0..c_out).map(|_| rng.f32_range(-0.05, 0.05)).collect();
+                layers.push(TwinLayer::Conv { params: p, c_in: c, w: wm, scale, bias });
+                let (oh, ow) = p.out_dims(h, w);
+                h = oh;
+                w = ow;
+                c = c_out;
+            }
+            LayerSpec::MaxPool2 => {
+                layers.push(TwinLayer::MaxPool2);
+                h /= 2;
+                w /= 2;
+            }
+            LayerSpec::Dense { out, .. } => {
+                let flat = h * w * c;
+                let raw: Vec<f32> = (0..flat * out).map(|_| rng.normalish() * 0.2).collect();
+                let wm = MatF32 { rows: flat, cols: out, data: raw };
+                let fan_in = flat as f32;
+                let scale: Vec<f32> = (0..out).map(|_| 2.0 / fan_in.sqrt()).collect();
+                let bias: Vec<f32> = (0..out).map(|_| rng.f32_range(-0.05, 0.05)).collect();
+                layers.push(TwinLayer::Dense { w: wm, scale, bias });
+                h = 1;
+                w = 1;
+                c = out;
+            }
+            LayerSpec::DenseF32 { out } => {
+                let flat = h * w * c;
+                let wm = MatF32::from_fn(flat, out, |_, _| rng.normalish() * 0.1 / (flat as f32).sqrt());
+                let bias: Vec<f32> = (0..out).map(|_| rng.f32_range(-0.02, 0.02)).collect();
+                layers.push(TwinLayer::Head { w: wm, bias });
+                h = 1;
+                w = 1;
+                c = out;
+            }
+        }
+    }
+    F32Twin { input: cfg.input, layers }
+}
+
+fn conv_f32(input: &Tensor3<f32>, p: &ConvParams, w: &MatF32) -> Tensor3<f32> {
+    let c_out = w.cols;
+    let (oh, ow) = p.out_dims(input.h, input.w);
+    let mut out = Tensor3::zeros(oh, ow, c_out);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for f in 0..c_out {
+                let mut acc = 0f32;
+                let mut d = 0;
+                for ky in 0..p.hk {
+                    let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                    for kx in 0..p.wk {
+                        let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                        for ch in 0..input.c {
+                            if iy >= 0 && (iy as usize) < input.h && ix >= 0 && (ix as usize) < input.w {
+                                acc += input.get(iy as usize, ix as usize, ch) * w.get(d, f);
+                            }
+                            d += 1;
+                        }
+                    }
+                }
+                out.set(oy, ox, f, acc);
+            }
+        }
+    }
+    out
+}
+
+fn maxpool2_f32(t: &Tensor3<f32>) -> Tensor3<f32> {
+    let (oh, ow) = (t.h / 2, t.w / 2);
+    let mut out = Tensor3::zeros(oh, ow, t.c);
+    for y in 0..oh {
+        for x in 0..ow {
+            for ch in 0..t.c {
+                let m = t
+                    .get(2 * y, 2 * x, ch)
+                    .max(t.get(2 * y, 2 * x + 1, ch))
+                    .max(t.get(2 * y + 1, 2 * x, ch))
+                    .max(t.get(2 * y + 1, 2 * x + 1, ch));
+                out.set(y, x, ch, m);
+            }
+        }
+    }
+    out
+}
+
+impl F32Twin {
+    pub fn logits(&self, image: &Tensor3<f32>) -> Vec<f32> {
+        let mut x = image.clone();
+        for layer in &self.layers {
+            x = match layer {
+                TwinLayer::Conv { params, c_in, w, scale, bias } => {
+                    assert_eq!(x.c, *c_in);
+                    let mut y = conv_f32(&x, params, w);
+                    for (i, v) in y.data.iter_mut().enumerate() {
+                        let ch = i % y.c;
+                        // tanh keeps the twin's activations in the same
+                        // bounded regime the quantizer imposes on the QNN.
+                        *v = (scale[ch] * *v + bias[ch]).tanh();
+                    }
+                    y
+                }
+                TwinLayer::MaxPool2 => maxpool2_f32(&x),
+                TwinLayer::Dense { w, scale, bias } => {
+                    let flat = x.h * x.w * x.c;
+                    assert_eq!(flat, w.rows);
+                    let mut data = vec![0f32; w.cols];
+                    for (j, o) in data.iter_mut().enumerate() {
+                        let mut acc = 0f32;
+                        for (t, &v) in x.data.iter().enumerate() {
+                            acc += v * w.get(t, j);
+                        }
+                        *o = (scale[j] * acc + bias[j]).tanh();
+                    }
+                    Tensor3 { h: 1, w: 1, c: w.cols, data }
+                }
+                TwinLayer::Head { w, bias } => {
+                    let mut data = vec![0f32; w.cols];
+                    for (j, o) in data.iter_mut().enumerate() {
+                        let mut acc = bias[j];
+                        for (t, &v) in x.data.iter().enumerate() {
+                            acc += v * w.get(t, j);
+                        }
+                        *o = acc;
+                    }
+                    Tensor3 { h: 1, w: 1, c: w.cols, data }
+                }
+            };
+        }
+        x.data
+    }
+
+    pub fn predict(&self, image: &Tensor3<f32>) -> usize {
+        let l = self.logits(image);
+        l.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+    }
+}
+
+/// Top-1 agreement between two classifiers over a probe set.
+pub fn agreement(
+    qnn_predict: impl Fn(&Tensor3<f32>) -> usize,
+    f32_predict: impl Fn(&Tensor3<f32>) -> usize,
+    probes: &[Tensor3<f32>],
+) -> f64 {
+    assert!(!probes.is_empty());
+    let same = probes.iter().filter(|img| qnn_predict(img) == f32_predict(img)).count();
+    same as f64 / probes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::builder::build_from_config;
+
+    #[test]
+    fn twin_builds_and_runs() {
+        let cfg = NetConfig::tiny_tnn(8, 8, 1, 4);
+        let twin = build_f32_twin(&cfg, 42);
+        let mut rng = Rng::new(1);
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        let l = twin.logits(&img);
+        assert_eq!(l.len(), 4);
+        assert!(l.iter().all(|v| v.is_finite()));
+    }
+
+    /// Agreement metric mechanics: identical classifiers agree fully,
+    /// the value is a valid probability, and self-agreement of the QNN
+    /// is deterministic. (With *untrained* random weights the QNN-vs-twin
+    /// agreement itself is near chance — random deep nets decorrelate
+    /// after a few layers — so the example reports it rather than a test
+    /// asserting a threshold; a trained model is where the paper's
+    /// quality discussion applies.)
+    #[test]
+    fn agreement_metric_mechanics() {
+        let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 16, 16, 1, 10);
+        let qnn = build_from_config(&cfg, 0xCAFE);
+        let twin = build_f32_twin(&cfg, 0xCAFE);
+        let mut rng = Rng::new(2);
+        let probes: Vec<Tensor3<f32>> = (0..20).map(|_| Tensor3::random(16, 16, 1, &mut rng)).collect();
+        let self_agree = agreement(|i| qnn.predict(i), |i| qnn.predict(i), &probes);
+        assert_eq!(self_agree, 1.0);
+        let cross = agreement(|i| qnn.predict(i), |i| twin.predict(i), &probes);
+        assert!((0.0..=1.0).contains(&cross));
+    }
+
+    #[test]
+    fn twin_is_deterministic_per_seed() {
+        let cfg = NetConfig::tiny_tnn(8, 8, 1, 4);
+        let a = build_f32_twin(&cfg, 7);
+        let b = build_f32_twin(&cfg, 7);
+        let mut rng = Rng::new(3);
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        assert_eq!(a.logits(&img), b.logits(&img));
+    }
+}

@@ -1,0 +1,136 @@
+//! Linear quantization, the paper's eq. (1):
+//!
+//! `x̂ = max(min(⌊x/s − z⌋, Q), 0)` with scale `s`, zero-point `z`,
+//! `Q = 2ⁿ − 1`.
+//!
+//! Note the paper's formula subtracts the zero-point *inside* the floor;
+//! the dequantization consistent with eq. (2) is `x ≈ s·(x̂ − z_eff)`
+//! where `z_eff = −z` shifts the representable range. We follow the
+//! gemmlowp convention (`x ≈ s·(x̂ − z)`, `0̂ = z`), which is what eq. (2)
+//! actually uses, and provide calibration from min/max statistics.
+
+use crate::util::mat::MatU8;
+
+/// Parameters of an n-bit linear quantizer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearQuant {
+    pub scale: f32,
+    pub zero_point: i32,
+    pub bits: u8,
+}
+
+impl LinearQuant {
+    /// Maximum quantized value `Q = 2ⁿ − 1`.
+    pub fn q_max(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    /// Calibrate a quantizer so that `[lo, hi]` maps onto `[0, Q]` with a
+    /// representable zero (the gemmlowp scheme). `lo ≤ 0 ≤ hi` is
+    /// enforced by widening the range if necessary.
+    pub fn calibrate(lo: f32, hi: f32, bits: u8) -> Self {
+        assert!(bits >= 2 && bits <= 8, "supported bit-widths: 2..=8");
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        let q = ((1u32 << bits) - 1) as f32;
+        let scale = if hi > lo { (hi - lo) / q } else { 1.0 };
+        // zero-point: the quantized value representing real 0.
+        let zp = (-lo / scale).round() as i32;
+        LinearQuant { scale, zero_point: zp.clamp(0, q as i32), bits }
+    }
+
+    /// Quantize one value: `clamp(round(x/s) + z, 0, Q)`.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u8 {
+        let v = (x / self.scale).round() as i32 + self.zero_point;
+        v.clamp(0, self.q_max()) as u8
+    }
+
+    /// Dequantize one value: `s·(x̂ − z)`.
+    #[inline]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        self.scale * (q as i32 - self.zero_point) as f32
+    }
+
+    /// Quantize a slice into a fresh buffer.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<u8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+}
+
+/// A quantized tensor: u8 storage plus its quantizer.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub data: MatU8,
+    pub q: LinearQuant,
+}
+
+impl QuantizedTensor {
+    /// Quantize a row-major f32 buffer with per-tensor min/max calibration.
+    pub fn from_f32(rows: usize, cols: usize, xs: &[f32], bits: u8) -> Self {
+        assert_eq!(xs.len(), rows * cols);
+        let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let q = LinearQuant::calibrate(lo, hi, bits);
+        let data = MatU8 { rows, cols, data: q.quantize_slice(xs) };
+        QuantizedTensor { data, q }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        for bits in [4u8, 8] {
+            let q = LinearQuant::calibrate(-3.0, 5.0, bits);
+            assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+        }
+    }
+
+    #[test]
+    fn quantize_clamps_to_range() {
+        let q = LinearQuant::calibrate(-1.0, 1.0, 8);
+        assert_eq!(q.quantize(100.0), 255);
+        assert_eq!(q.quantize(-100.0), 0);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(90);
+        for bits in [4u8, 8] {
+            let q = LinearQuant::calibrate(-2.0, 2.0, bits);
+            for _ in 0..500 {
+                let x = rng.f32_range(-2.0, 2.0);
+                let err = (q.dequantize(q.quantize(x)) - x).abs();
+                assert!(err <= q.scale * 0.5 + 1e-6, "bits={bits} x={x} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn q_max_by_bits() {
+        assert_eq!(LinearQuant::calibrate(-1.0, 1.0, 8).q_max(), 255);
+        assert_eq!(LinearQuant::calibrate(-1.0, 1.0, 4).q_max(), 15);
+    }
+
+    #[test]
+    fn tensor_calibration_covers_data() {
+        let mut rng = Rng::new(91);
+        let xs: Vec<f32> = (0..64).map(|_| rng.normalish()).collect();
+        let t = QuantizedTensor::from_f32(8, 8, &xs, 8);
+        // every value dequantizes within half a scale step
+        for (i, &x) in xs.iter().enumerate() {
+            let err = (t.q.dequantize(t.data.data[i]) - x).abs();
+            assert!(err <= t.q.scale * 0.5 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn degenerate_range_does_not_panic() {
+        let q = LinearQuant::calibrate(0.0, 0.0, 8);
+        assert_eq!(q.quantize(0.0), q.zero_point as u8);
+    }
+}

@@ -1,0 +1,126 @@
+//! Binarization and ternarization of full-precision tensors — the
+//! quantizers feeding the paper's BNN / TNN / TBN multiplications.
+//!
+//! * Binarization (XNOR-Net style, ref. [21]): `sign(x)` with a
+//!   per-tensor scaling factor `α = mean(|x|)` so that `x ≈ α·sign(x)`.
+//! * Ternarization (TWN-style, ref. [25]): threshold `Δ`:
+//!   `+1 if x > Δ, −1 if x < −Δ, 0 otherwise`, with
+//!   `α = mean(|x| : |x| > Δ)` and the common heuristic
+//!   `Δ = 0.75·mean(|x|)`.
+
+use crate::util::mat::MatI8;
+
+/// How the ternarization threshold Δ is chosen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TernaryThreshold {
+    /// Fixed absolute threshold.
+    Fixed(f32),
+    /// `Δ = ratio · mean(|x|)` (0.75 is the TWN heuristic).
+    MeanRatio(f32),
+}
+
+/// Binarize: returns the sign matrix (`{-1, +1}`, zeros map to `+1`) and
+/// the scaling factor `α = mean(|x|)`.
+pub fn binarize(rows: usize, cols: usize, xs: &[f32]) -> (MatI8, f32) {
+    assert_eq!(xs.len(), rows * cols);
+    let data: Vec<i8> = xs.iter().map(|&x| if x < 0.0 { -1 } else { 1 }).collect();
+    let alpha = if xs.is_empty() { 0.0 } else { xs.iter().map(|x| x.abs()).sum::<f32>() / xs.len() as f32 };
+    (MatI8 { rows, cols, data }, alpha)
+}
+
+/// Ternarize: returns the `{-1, 0, +1}` matrix and the scaling factor
+/// `α = mean(|x| over non-zeroed entries)` (0 when everything is zeroed).
+pub fn ternarize(rows: usize, cols: usize, xs: &[f32], thr: TernaryThreshold) -> (MatI8, f32) {
+    assert_eq!(xs.len(), rows * cols);
+    let delta = match thr {
+        TernaryThreshold::Fixed(d) => d,
+        TernaryThreshold::MeanRatio(r) => {
+            let mean_abs = if xs.is_empty() { 0.0 } else { xs.iter().map(|x| x.abs()).sum::<f32>() / xs.len() as f32 };
+            r * mean_abs
+        }
+    };
+    let mut kept_sum = 0f32;
+    let mut kept = 0usize;
+    let data: Vec<i8> = xs
+        .iter()
+        .map(|&x| {
+            if x > delta {
+                kept_sum += x;
+                kept += 1;
+                1
+            } else if x < -delta {
+                kept_sum += -x;
+                kept += 1;
+                -1
+            } else {
+                0
+            }
+        })
+        .collect();
+    let alpha = if kept > 0 { kept_sum / kept as f32 } else { 0.0 };
+    (MatI8 { rows, cols, data }, alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn binarize_signs_and_alpha() {
+        let xs = [1.0f32, -2.0, 3.0, -4.0];
+        let (m, alpha) = binarize(2, 2, &xs);
+        assert_eq!(m.data, vec![1, -1, 1, -1]);
+        assert!((alpha - 2.5).abs() < 1e-6);
+        assert!(m.is_binary());
+    }
+
+    #[test]
+    fn binarize_zero_maps_to_plus_one() {
+        let (m, _) = binarize(1, 1, &[0.0]);
+        assert_eq!(m.data, vec![1]);
+    }
+
+    #[test]
+    fn ternarize_fixed_threshold() {
+        let xs = [0.1f32, -0.1, 0.6, -0.9, 0.0];
+        let (m, alpha) = ternarize(1, 5, &xs, TernaryThreshold::Fixed(0.5));
+        assert_eq!(m.data, vec![0, 0, 1, -1, 0]);
+        assert!((alpha - 0.75).abs() < 1e-6);
+        assert!(m.is_ternary());
+    }
+
+    #[test]
+    fn ternarize_mean_ratio_zeroes_small_values() {
+        let mut rng = Rng::new(95);
+        let xs: Vec<f32> = (0..1000).map(|_| rng.normalish()).collect();
+        let (m, _) = ternarize(10, 100, &xs, TernaryThreshold::MeanRatio(0.75));
+        let zeros = m.data.iter().filter(|&&v| v == 0).count();
+        // With Δ = 0.75·mean|x| a substantial fraction must be zeroed,
+        // but not everything.
+        assert!(zeros > 100 && zeros < 900, "zeros={zeros}");
+    }
+
+    #[test]
+    fn ternarize_all_below_threshold() {
+        let xs = [0.01f32; 4];
+        let (m, alpha) = ternarize(2, 2, &xs, TernaryThreshold::Fixed(1.0));
+        assert!(m.data.iter().all(|&v| v == 0));
+        assert_eq!(alpha, 0.0);
+    }
+
+    /// Reconstruction α·t(x) is closer to x than α·sign(x) when many
+    /// values are near zero — the reason TNNs beat BNNs on quality.
+    #[test]
+    fn ternary_reconstruction_beats_binary_on_sparse_data() {
+        let mut rng = Rng::new(96);
+        let xs: Vec<f32> = (0..2000)
+            .map(|i| if i % 4 == 0 { rng.normalish() } else { rng.f32_range(-0.05, 0.05) })
+            .collect();
+        let (bm, ba) = binarize(1, xs.len(), &xs);
+        let (tm, ta) = ternarize(1, xs.len(), &xs, TernaryThreshold::MeanRatio(0.75));
+        let be: f32 = xs.iter().zip(&bm.data).map(|(&x, &s)| (x - ba * s as f32).powi(2)).sum();
+        let te: f32 = xs.iter().zip(&tm.data).map(|(&x, &s)| (x - ta * s as f32).powi(2)).sum();
+        assert!(te < be, "ternary mse {te} must beat binary mse {be}");
+    }
+}

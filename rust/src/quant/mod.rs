@@ -1,0 +1,11 @@
+//! Quantization (§II-B of the paper): linear quantization eq. (1), the
+//! zero-point decomposition eq. (3), the overflow bounds eq. (4)–(5),
+//! and the binarization / ternarization used by BNN/TNN/TBN layers.
+
+pub mod linear;
+pub mod lowbit;
+pub mod overflow;
+
+pub use linear::{LinearQuant, QuantizedTensor};
+pub use lowbit::{binarize, ternarize, TernaryThreshold};
+pub use overflow::{c_in_max, k_max};

@@ -1,0 +1,64 @@
+//! Accumulator-overflow limits — the paper's eq. (4) and eq. (5).
+//!
+//! With p-bit operands accumulated in q-bit registers the maximum safe
+//! depth is `k_max = ⌊(2^q − 1)/(2^p − 1)²⌋` (eq. 4); in GeMM-based
+//! convolution with an `H_k × W_k` kernel the corresponding input-channel
+//! bound is `C_in_max = ⌊k_max/(H_k·W_k)⌋` (eq. 5).
+
+/// eq. (4): maximum depth for p-bit unsigned operands in q-bit
+/// accumulators.
+pub fn k_max(p_bits: u32, q_bits: u32) -> u64 {
+    assert!(p_bits >= 1 && q_bits >= p_bits && q_bits <= 64);
+    let max_operand = (1u128 << p_bits) - 1;
+    let max_acc = (1u128 << q_bits) - 1;
+    (max_acc / (max_operand * max_operand)) as u64
+}
+
+/// eq. (5): maximum input channels for a `hk × wk` convolution kernel.
+pub fn c_in_max(k_max: u64, hk: usize, wk: usize) -> u64 {
+    k_max / (hk as u64 * wk as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Kind;
+
+    /// The paper's Table II k_max column comes out of eq. (4).
+    #[test]
+    fn table2_kmax_from_eq4() {
+        assert_eq!(k_max(8, 32), 66051); // U8
+        assert_eq!(k_max(4, 16), 291); // U4
+    }
+
+    #[test]
+    fn kind_kmax_consistent_with_eq4() {
+        assert_eq!(Kind::U8.k_max().unwrap(), k_max(8, 32));
+        assert_eq!(Kind::U4.k_max().unwrap(), k_max(4, 16));
+    }
+
+    /// eq. (5) examples: the paper argues U4 only suits small CNNs —
+    /// with a 3×3 kernel it allows just 32 input channels, while TNN
+    /// allows 3640.
+    #[test]
+    fn channel_limits_3x3() {
+        assert_eq!(c_in_max(291, 3, 3), 32);
+        assert_eq!(c_in_max(32767, 3, 3), 3640);
+        assert_eq!(c_in_max(66051, 3, 3), 7339);
+        assert_eq!(c_in_max(8_388_607, 3, 3), 932067);
+    }
+
+    #[test]
+    fn kmax_monotone_in_accumulator_width() {
+        assert!(k_max(8, 32) > k_max(8, 16));
+        assert!(k_max(4, 32) > k_max(4, 16));
+    }
+
+    #[test]
+    fn binary_interpretation() {
+        // For ±1 products accumulated in signed 16-bit the bound is the
+        // register range itself (the paper's argument, not eq. 4 — the
+        // products have |z| ≤ 1).
+        assert_eq!(Kind::Bnn.k_max().unwrap(), 32767);
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts (HLO **text**, produced
+//! by `python/compile/aot.py`) and execute them from Rust.
+//!
+//! This is the L3↔L2 bridge of the three-layer architecture: Python/JAX
+//! (with the Pallas kernels) runs once at build time and lowers the model
+//! to `artifacts/*.hlo.txt`; this module compiles those artifacts on the
+//! PJRT CPU client and executes them on the request path — Python is
+//! never loaded at runtime.
+//!
+//! HLO text (not a serialized `HloModuleProto`) is the interchange format
+//! because jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU runtime holding the client connection.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModel { exe, name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default() })
+    }
+}
+
+/// A compiled executable plus metadata.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs. The artifact must have been lowered with
+    /// `return_tuple=True` (aot.py does); single- and multi-output tuples
+    /// are both handled.
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).context("executing")?;
+        let out = result[0][0].to_literal_sync().context("fetching result")?;
+        // Outputs are a tuple (return_tuple=True at lowering time).
+        let elems = out.to_tuple().context("untupling result")?;
+        elems.into_iter().map(|lit| lit.to_vec::<f32>().context("reading f32 output")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Runtime tests need the PJRT shared library; they build a
+    /// computation with XlaBuilder so they run without artifacts.
+    #[test]
+    fn cpu_client_builds_and_runs() {
+        let rt = XlaRuntime::cpu().expect("client");
+        assert!(!rt.platform().is_empty());
+        let builder = xla::XlaBuilder::new("t");
+        let c = builder.constant_r1(&[1f32, 2.0]).unwrap();
+        let comp = (c + builder.constant_r0(1f32).unwrap()).unwrap().build().unwrap();
+        let exe = rt.client.compile(&comp).unwrap();
+        let out = exe.execute::<xla::Literal>(&[]).unwrap()[0][0].to_literal_sync().unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2f32, 3.0]);
+    }
+
+    /// Full AOT round-trip — runs only when `make artifacts` has produced
+    /// the model artifact.
+    #[test]
+    fn loads_aot_artifact_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tnn_gemm.hlo.txt");
+        if !std::path::Path::new(path).exists() {
+            eprintln!("skipping: {path} not built (run `make artifacts`)");
+            return;
+        }
+        let rt = XlaRuntime::cpu().expect("client");
+        let model = rt.load_hlo_text(path).expect("load");
+        // file_stem of "tnn_gemm.hlo.txt" keeps the inner ".hlo".
+        assert_eq!(model.name, "tnn_gemm.hlo");
+    }
+}

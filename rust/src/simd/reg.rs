@@ -1,0 +1,641 @@
+//! A 128-bit NEON vector register and the instruction subset the paper's
+//! microkernels use, emulated with exact lane semantics.
+//!
+//! Pure lane operations live as methods on [`Reg128`]; the traced wrappers
+//! (which also count instruction classes) live in [`Neon`]. Microkernels
+//! call only the traced wrappers so that one kernel iteration yields the
+//! paper's Table II counts.
+
+use crate::simd::trace::{InsnClass, Trace};
+
+/// One 128-bit NEON `Q` register, stored as 16 little-endian bytes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Reg128(pub [u8; 16]);
+
+impl std::fmt::Debug for Reg128 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Reg128[")?;
+        for (i, b) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{b:02x}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Reg128 {
+    pub const ZERO: Reg128 = Reg128([0; 16]);
+
+    // ---- typed views -------------------------------------------------
+
+    pub fn from_bytes(b: [u8; 16]) -> Self {
+        Reg128(b)
+    }
+
+    pub fn from_i16x8(v: [i16; 8]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[2 * i..2 * i + 2].copy_from_slice(&x.to_le_bytes());
+        }
+        Reg128(b)
+    }
+
+    pub fn to_i16x8(self) -> [i16; 8] {
+        let mut v = [0i16; 8];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = i16::from_le_bytes([self.0[2 * i], self.0[2 * i + 1]]);
+        }
+        v
+    }
+
+    pub fn from_u16x8(v: [u16; 8]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[2 * i..2 * i + 2].copy_from_slice(&x.to_le_bytes());
+        }
+        Reg128(b)
+    }
+
+    pub fn to_u16x8(self) -> [u16; 8] {
+        let mut v = [0u16; 8];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = u16::from_le_bytes([self.0[2 * i], self.0[2 * i + 1]]);
+        }
+        v
+    }
+
+    pub fn from_u32x4(v: [u32; 4]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        Reg128(b)
+    }
+
+    pub fn to_u32x4(self) -> [u32; 4] {
+        let mut v = [0u32; 4];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = u32::from_le_bytes([self.0[4 * i], self.0[4 * i + 1], self.0[4 * i + 2], self.0[4 * i + 3]]);
+        }
+        v
+    }
+
+    pub fn from_f32x4(v: [f32; 4]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        Reg128(b)
+    }
+
+    pub fn to_f32x4(self) -> [f32; 4] {
+        let mut v = [0f32; 4];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = f32::from_le_bytes([self.0[4 * i], self.0[4 * i + 1], self.0[4 * i + 2], self.0[4 * i + 3]]);
+        }
+        v
+    }
+
+    // ---- raw lane semantics (untraced) -------------------------------
+
+    #[inline]
+    fn map2(self, o: Reg128, f: impl Fn(u8, u8) -> u8) -> Reg128 {
+        let mut r = [0u8; 16];
+        for i in 0..16 {
+            r[i] = f(self.0[i], o.0[i]);
+        }
+        Reg128(r)
+    }
+
+    pub fn eor_raw(self, o: Reg128) -> Reg128 {
+        self.map2(o, |a, b| a ^ b)
+    }
+
+    pub fn and_raw(self, o: Reg128) -> Reg128 {
+        self.map2(o, |a, b| a & b)
+    }
+
+    pub fn orr_raw(self, o: Reg128) -> Reg128 {
+        self.map2(o, |a, b| a | b)
+    }
+
+    /// ORN: `a | !b`.
+    pub fn orn_raw(self, o: Reg128) -> Reg128 {
+        self.map2(o, |a, b| a | !b)
+    }
+
+    /// BIC: `a & !b`.
+    pub fn bic_raw(self, o: Reg128) -> Reg128 {
+        self.map2(o, |a, b| a & !b)
+    }
+
+    pub fn mvn_raw(self) -> Reg128 {
+        let mut r = [0u8; 16];
+        for i in 0..16 {
+            r[i] = !self.0[i];
+        }
+        Reg128(r)
+    }
+
+    /// CNT: per-byte popcount.
+    pub fn cnt_raw(self) -> Reg128 {
+        let mut r = [0u8; 16];
+        for i in 0..16 {
+            r[i] = self.0[i].count_ones() as u8;
+        }
+        Reg128(r)
+    }
+}
+
+/// The traced NEON "CPU": every method emulates one instruction and
+/// records it in the [`Trace`].
+pub struct Neon {
+    pub trace: Trace,
+}
+
+impl Neon {
+    pub fn new() -> Self {
+        Neon { trace: Trace::new() }
+    }
+
+    pub fn recording() -> Self {
+        Neon { trace: Trace::recording() }
+    }
+
+    // ---- loads / stores ----------------------------------------------
+
+    /// LD1 of a full 128-bit register.
+    #[inline]
+    pub fn ld1q(&mut self, src: &[u8]) -> Reg128 {
+        self.trace.hit(InsnClass::Ld, "LD1.16B");
+        let mut b = [0u8; 16];
+        b.copy_from_slice(&src[..16]);
+        Reg128(b)
+    }
+
+    /// LD1 of a 64-bit half register (low half; high half zeroed).
+    #[inline]
+    pub fn ld1d(&mut self, src: &[u8]) -> Reg128 {
+        self.trace.hit(InsnClass::Ld, "LD1.8B");
+        let mut b = [0u8; 16];
+        b[..8].copy_from_slice(&src[..8]);
+        Reg128(b)
+    }
+
+    /// ST1 of a full register.
+    #[inline]
+    pub fn st1q(&mut self, r: Reg128, dst: &mut [u8]) {
+        self.trace.hit(InsnClass::St, "ST1.16B");
+        dst[..16].copy_from_slice(&r.0);
+    }
+
+    // ---- logic (COM) ---------------------------------------------------
+
+    #[inline]
+    pub fn eor(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "EOR");
+        a.eor_raw(b)
+    }
+
+    #[inline]
+    pub fn and(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "AND");
+        a.and_raw(b)
+    }
+
+    #[inline]
+    pub fn orr(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "ORR");
+        a.orr_raw(b)
+    }
+
+    #[inline]
+    pub fn orn(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "ORN");
+        a.orn_raw(b)
+    }
+
+    #[inline]
+    pub fn bic(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "BIC");
+        a.bic_raw(b)
+    }
+
+    #[inline]
+    pub fn mvn(&mut self, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "MVN");
+        a.mvn_raw()
+    }
+
+    /// CNT: per-byte popcount.
+    #[inline]
+    pub fn cnt(&mut self, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "CNT");
+        a.cnt_raw()
+    }
+
+    // ---- widening adds / subs (COM) -----------------------------------
+
+    /// SADDW: `acc.8h + sxtl(lo(a).8b)` — widen the LOW eight bytes
+    /// (signed) and add into eight i16 lanes.
+    #[inline]
+    pub fn saddw(&mut self, acc: Reg128, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "SADDW");
+        let mut v = acc.to_i16x8();
+        for i in 0..8 {
+            v[i] = v[i].wrapping_add(a.0[i] as i8 as i16);
+        }
+        Reg128::from_i16x8(v)
+    }
+
+    /// SADDW2: same, for the HIGH eight bytes.
+    #[inline]
+    pub fn saddw2(&mut self, acc: Reg128, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "SADDW2");
+        let mut v = acc.to_i16x8();
+        for i in 0..8 {
+            v[i] = v[i].wrapping_add(a.0[8 + i] as i8 as i16);
+        }
+        Reg128::from_i16x8(v)
+    }
+
+    /// SSUBL: `sxtl(lo(a)) - sxtl(lo(b))` into eight i16 lanes.
+    #[inline]
+    pub fn ssubl(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "SSUBL");
+        let mut v = [0i16; 8];
+        for i in 0..8 {
+            v[i] = (a.0[i] as i8 as i16) - (b.0[i] as i8 as i16);
+        }
+        Reg128::from_i16x8(v)
+    }
+
+    /// SSUBL2: high-half variant of SSUBL.
+    #[inline]
+    pub fn ssubl2(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "SSUBL2");
+        let mut v = [0i16; 8];
+        for i in 0..8 {
+            v[i] = (a.0[8 + i] as i8 as i16) - (b.0[8 + i] as i8 as i16);
+        }
+        Reg128::from_i16x8(v)
+    }
+
+    /// ADD on eight i16 lanes.
+    #[inline]
+    pub fn add16(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "ADD.8H");
+        let x = a.to_i16x8();
+        let y = b.to_i16x8();
+        let mut v = [0i16; 8];
+        for i in 0..8 {
+            v[i] = x[i].wrapping_add(y[i]);
+        }
+        Reg128::from_i16x8(v)
+    }
+
+    /// UADALP: unsigned pairwise add of sixteen u8 into eight u16 lanes,
+    /// accumulating (daBNN-style binary accumulation).
+    #[inline]
+    pub fn uadalp(&mut self, acc: Reg128, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "UADALP");
+        let mut v = acc.to_u16x8();
+        for i in 0..8 {
+            v[i] = v[i].wrapping_add(a.0[2 * i] as u16 + a.0[2 * i + 1] as u16);
+        }
+        Reg128::from_u16x8(v)
+    }
+
+    /// ADDV: horizontal reduction of sixteen u8 lanes to a scalar.
+    #[inline]
+    pub fn addv(&mut self, a: Reg128) -> u32 {
+        self.trace.hit(InsnClass::Com, "ADDV");
+        a.0.iter().map(|&b| b as u32).sum()
+    }
+
+    // ---- multiply-accumulate (COM) ------------------------------------
+
+    /// FMLA by-element: `acc.4s + a.4s * b.s[lane]`.
+    #[inline]
+    pub fn fmla_lane(&mut self, acc: Reg128, a: Reg128, b: Reg128, lane: usize) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "FMLA");
+        let s = b.to_f32x4()[lane];
+        let x = a.to_f32x4();
+        let mut v = acc.to_f32x4();
+        for i in 0..4 {
+            v[i] += x[i] * s;
+        }
+        Reg128::from_f32x4(v)
+    }
+
+    /// UMLAL by-element (16-bit): `acc.4s + uxtl(lo(a).4h) * b.h[lane]`.
+    #[inline]
+    pub fn umlal_lane(&mut self, acc: Reg128, a: Reg128, b: Reg128, lane: usize) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "UMLAL");
+        let s = b.to_u16x8()[lane] as u32;
+        let x = a.to_u16x8();
+        let mut v = acc.to_u32x4();
+        for i in 0..4 {
+            v[i] = v[i].wrapping_add(x[i] as u32 * s);
+        }
+        Reg128::from_u32x4(v)
+    }
+
+    /// UMLAL2 by-element: high four u16 lanes of `a`.
+    #[inline]
+    pub fn umlal2_lane(&mut self, acc: Reg128, a: Reg128, b: Reg128, lane: usize) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "UMLAL2");
+        let s = b.to_u16x8()[lane] as u32;
+        let x = a.to_u16x8();
+        let mut v = acc.to_u32x4();
+        for i in 0..4 {
+            v[i] = v[i].wrapping_add(x[4 + i] as u32 * s);
+        }
+        Reg128::from_u32x4(v)
+    }
+
+    /// UMLAL (vector, 8-bit): `acc.8h + uxtl(lo(a).8b) * uxtl(lo(b).8b)`
+    /// — the 4-bit path's multiply-accumulate into u16 lanes.
+    #[inline]
+    pub fn umlal_v8(&mut self, acc: Reg128, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "UMLAL.8B");
+        let mut v = acc.to_u16x8();
+        for i in 0..8 {
+            v[i] = v[i].wrapping_add(a.0[i] as u16 * b.0[i] as u16);
+        }
+        Reg128::from_u16x8(v)
+    }
+
+    /// UMLAL2 (vector, 8-bit): high-half variant of [`Neon::umlal_v8`].
+    #[inline]
+    pub fn umlal2_v8(&mut self, acc: Reg128, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "UMLAL2.16B");
+        let mut v = acc.to_u16x8();
+        for i in 0..8 {
+            v[i] = v[i].wrapping_add(a.0[8 + i] as u16 * b.0[8 + i] as u16);
+        }
+        Reg128::from_u16x8(v)
+    }
+
+    /// ADD on four u32 lanes.
+    #[inline]
+    pub fn add32(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "ADD.4S");
+        let x = a.to_u32x4();
+        let y = b.to_u32x4();
+        let mut v = [0u32; 4];
+        for i in 0..4 {
+            v[i] = x[i].wrapping_add(y[i]);
+        }
+        Reg128::from_u32x4(v)
+    }
+
+    /// USHR: per-byte logical shift right (nibble unpack in the 4-bit path).
+    #[inline]
+    pub fn ushr8(&mut self, a: Reg128, shift: u32) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "USHR");
+        let mut r = [0u8; 16];
+        for i in 0..16 {
+            r[i] = a.0[i] >> shift;
+        }
+        Reg128(r)
+    }
+
+    // ---- register arrangement (MOV class) ------------------------------
+
+    /// DUP: broadcast byte `lane` of `a` to all 16 byte lanes.
+    #[inline]
+    pub fn dup_b(&mut self, a: Reg128, lane: usize) -> Reg128 {
+        self.trace.hit(InsnClass::Mov, "DUP.16B");
+        Reg128([a.0[lane]; 16])
+    }
+
+    /// EXT: concatenate `a` and `b` and extract 16 bytes starting at `n`:
+    /// result = `[a[n..16], b[0..n]]`.
+    #[inline]
+    pub fn ext(&mut self, a: Reg128, b: Reg128, n: usize) -> Reg128 {
+        self.trace.hit(InsnClass::Mov, "EXT");
+        let mut r = [0u8; 16];
+        for i in 0..16 {
+            r[i] = if i + n < 16 { a.0[i + n] } else { b.0[i + n - 16] };
+        }
+        Reg128(r)
+    }
+
+    /// UXTL: zero-extend the LOW eight bytes to eight u16 lanes.
+    #[inline]
+    pub fn uxtl(&mut self, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Mov, "UXTL");
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = a.0[i] as u16;
+        }
+        Reg128::from_u16x8(v)
+    }
+
+    /// UXTL2: zero-extend the HIGH eight bytes to eight u16 lanes.
+    #[inline]
+    pub fn uxtl2(&mut self, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Mov, "UXTL2");
+        let mut v = [0u16; 8];
+        for i in 0..8 {
+            v[i] = a.0[8 + i] as u16;
+        }
+        Reg128::from_u16x8(v)
+    }
+
+    /// INS: insert a scalar u32 into lane `lane` of `a` (daBNN ADDV path).
+    #[inline]
+    pub fn ins_u32(&mut self, a: Reg128, lane: usize, v: u32) -> Reg128 {
+        self.trace.hit(InsnClass::Mov, "INS");
+        let mut w = a.to_u32x4();
+        w[lane] = v;
+        Reg128::from_u32x4(w)
+    }
+
+    /// MOVI #0 — zero a register (used for accumulator init, not in the
+    /// steady-state iteration).
+    #[inline]
+    pub fn movi0(&mut self) -> Reg128 {
+        self.trace.hit(InsnClass::Mov, "MOVI");
+        Reg128::ZERO
+    }
+
+    /// UCVTF: u32 lanes -> f32 lanes (daBNN converts popcount sums to f32).
+    #[inline]
+    pub fn ucvtf(&mut self, a: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "UCVTF");
+        let x = a.to_u32x4();
+        Reg128::from_f32x4([x[0] as f32, x[1] as f32, x[2] as f32, x[3] as f32])
+    }
+
+    /// FADD on four f32 lanes (daBNN accumulation).
+    #[inline]
+    pub fn fadd(&mut self, a: Reg128, b: Reg128) -> Reg128 {
+        self.trace.hit(InsnClass::Com, "FADD");
+        let x = a.to_f32x4();
+        let y = b.to_f32x4();
+        Reg128::from_f32x4([x[0] + y[0], x[1] + y[1], x[2] + y[2], x[3] + y[3]])
+    }
+}
+
+impl Default for Neon {
+    fn default() -> Self {
+        Neon::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n() -> Neon {
+        Neon::new()
+    }
+
+    #[test]
+    fn eor_and_cnt_lanes() {
+        let mut cpu = n();
+        let a = Reg128::from_bytes([0b1010_1010; 16]);
+        let b = Reg128::from_bytes([0b0101_0101; 16]);
+        let x = cpu.eor(a, b);
+        assert_eq!(x.0, [0xFF; 16]);
+        let c = cpu.cnt(x);
+        assert_eq!(c.0, [8; 16]);
+        assert_eq!(cpu.trace.com, 2);
+    }
+
+    #[test]
+    fn saddw_low_and_high_halves() {
+        let mut cpu = n();
+        let mut bytes = [0u8; 16];
+        for (i, v) in bytes.iter_mut().enumerate() {
+            *v = i as u8;
+        }
+        let a = Reg128::from_bytes(bytes);
+        let acc = Reg128::from_i16x8([100; 8]);
+        let lo = cpu.saddw(acc, a).to_i16x8();
+        let hi = cpu.saddw2(acc, a).to_i16x8();
+        for i in 0..8 {
+            assert_eq!(lo[i], 100 + i as i16);
+            assert_eq!(hi[i], 100 + 8 + i as i16);
+        }
+    }
+
+    #[test]
+    fn saddw_is_signed() {
+        let mut cpu = n();
+        let a = Reg128::from_bytes([0xFF; 16]); // -1 as i8
+        let acc = Reg128::from_i16x8([0; 8]);
+        assert_eq!(cpu.saddw(acc, a).to_i16x8(), [-1; 8]);
+    }
+
+    #[test]
+    fn ssubl_widens_difference() {
+        let mut cpu = n();
+        let mut a = [0u8; 16];
+        let mut b = [0u8; 16];
+        a[0] = 8;
+        b[0] = 3;
+        a[8] = 1;
+        b[8] = 7;
+        let d = cpu.ssubl(Reg128::from_bytes(a), Reg128::from_bytes(b)).to_i16x8();
+        assert_eq!(d[0], 5);
+        let d2 = cpu.ssubl2(Reg128::from_bytes(a), Reg128::from_bytes(b)).to_i16x8();
+        assert_eq!(d2[0], -6);
+    }
+
+    #[test]
+    fn ext_concats() {
+        let mut cpu = n();
+        let a = Reg128::from_bytes([1; 16]);
+        let b = Reg128::from_bytes([2; 16]);
+        let r = cpu.ext(a, b, 8);
+        assert_eq!(&r.0[..8], &[1; 8]);
+        assert_eq!(&r.0[8..], &[2; 8]);
+    }
+
+    #[test]
+    fn dup_broadcasts_lane() {
+        let mut cpu = n();
+        let mut bytes = [0u8; 16];
+        bytes[3] = 42;
+        let r = cpu.dup_b(Reg128::from_bytes(bytes), 3);
+        assert_eq!(r.0, [42; 16]);
+        assert_eq!(cpu.trace.mov, 1);
+    }
+
+    #[test]
+    fn fmla_lane_semantics() {
+        let mut cpu = n();
+        let acc = Reg128::from_f32x4([1.0, 2.0, 3.0, 4.0]);
+        let a = Reg128::from_f32x4([1.0, 1.0, 1.0, 1.0]);
+        let b = Reg128::from_f32x4([10.0, 20.0, 30.0, 40.0]);
+        let r = cpu.fmla_lane(acc, a, b, 2).to_f32x4();
+        assert_eq!(r, [31.0, 32.0, 33.0, 34.0]);
+    }
+
+    #[test]
+    fn umlal_lane_widens() {
+        let mut cpu = n();
+        let acc = Reg128::from_u32x4([1, 1, 1, 1]);
+        let a = Reg128::from_u16x8([300, 2, 3, 4, 5, 6, 7, 8]);
+        let b = Reg128::from_u16x8([0, 1000, 0, 0, 0, 0, 0, 0]);
+        let r = cpu.umlal_lane(acc, a, b, 1).to_u32x4();
+        assert_eq!(r, [300_001, 2001, 3001, 4001]);
+        let r2 = cpu.umlal2_lane(acc, a, b, 1).to_u32x4();
+        assert_eq!(r2, [5001, 6001, 7001, 8001]);
+    }
+
+    #[test]
+    fn umlal_v8_bytes() {
+        let mut cpu = n();
+        let acc = Reg128::from_u16x8([0; 8]);
+        let mut a = [0u8; 16];
+        let mut b = [0u8; 16];
+        a[0] = 15;
+        b[0] = 15;
+        let r = cpu.umlal_v8(acc, Reg128::from_bytes(a), Reg128::from_bytes(b)).to_u16x8();
+        assert_eq!(r[0], 225);
+    }
+
+    #[test]
+    fn uadalp_pairwise() {
+        let mut cpu = n();
+        let acc = Reg128::from_u16x8([10; 8]);
+        let a = Reg128::from_bytes([1; 16]);
+        let r = cpu.uadalp(acc, a).to_u16x8();
+        assert_eq!(r, [12; 8]);
+    }
+
+    #[test]
+    fn orn_bic_mvn() {
+        let mut cpu = n();
+        let a = Reg128::from_bytes([0b1100; 16]);
+        let b = Reg128::from_bytes([0b1010; 16]);
+        assert_eq!(cpu.orn(a, b).0, [0b1100 | !0b1010u8; 16]);
+        assert_eq!(cpu.bic(a, b).0, [0b0100; 16]);
+        assert_eq!(cpu.mvn(a).0, [!0b1100u8; 16]);
+    }
+
+    #[test]
+    fn addv_reduces() {
+        let mut cpu = n();
+        let a = Reg128::from_bytes([3; 16]);
+        assert_eq!(cpu.addv(a), 48);
+    }
+
+    #[test]
+    fn loads_count_in_ld_class() {
+        let mut cpu = n();
+        let buf = [7u8; 32];
+        let q = cpu.ld1q(&buf);
+        let d = cpu.ld1d(&buf);
+        assert_eq!(q.0, [7; 16]);
+        assert_eq!(&d.0[..8], &[7; 8]);
+        assert_eq!(&d.0[8..], &[0; 8]);
+        assert_eq!(cpu.trace.ld, 2);
+    }
+}

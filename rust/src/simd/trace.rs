@@ -1,0 +1,131 @@
+//! Instruction-stream tracing for the emulated NEON microkernels.
+
+use std::collections::BTreeMap;
+
+/// The paper's instruction classes (Table II columns), plus stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum InsnClass {
+    /// Computational SIMD instruction (FMLA, UMLAL, EOR, AND, ORR, ORN,
+    /// MVN, CNT, SADDW, SSUBL, ADD, USHR, ...).
+    Com,
+    /// SIMD register load (LD1 and friends).
+    Ld,
+    /// Register-arrangement instruction (MOV, DUP, INS, EXT, UXTL, ...).
+    Mov,
+    /// SIMD register store (ST1). The paper does not report stores per
+    /// iteration (results stay in registers); tracked for completeness.
+    St,
+}
+
+/// Aggregated instruction counts, by class and by mnemonic.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub com: u64,
+    pub ld: u64,
+    pub mov: u64,
+    pub st: u64,
+    /// Per-mnemonic counts (e.g. "EOR" -> 8), for the `repro explain`
+    /// textual rendering of the paper's Figs. 1-3.
+    pub by_mnemonic: BTreeMap<&'static str, u64>,
+    /// When true, every instruction is also appended to `log` — used by
+    /// `repro explain` to print the full stream of one iteration.
+    pub record_stream: bool,
+    pub log: Vec<&'static str>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    /// A trace that records the full instruction stream.
+    pub fn recording() -> Self {
+        Trace { record_stream: true, ..Trace::default() }
+    }
+
+    #[inline]
+    pub fn hit(&mut self, class: InsnClass, mnemonic: &'static str) {
+        match class {
+            InsnClass::Com => self.com += 1,
+            InsnClass::Ld => self.ld += 1,
+            InsnClass::Mov => self.mov += 1,
+            InsnClass::St => self.st += 1,
+        }
+        *self.by_mnemonic.entry(mnemonic).or_insert(0) += 1;
+        if self.record_stream {
+            self.log.push(mnemonic);
+        }
+    }
+
+    /// Total SIMD instructions (the numerator of the paper's INS metric).
+    pub fn total(&self) -> u64 {
+        self.com + self.ld + self.mov
+    }
+
+    /// The paper's INS metric: instructions per microkernel output element
+    /// per depth step, `(COM + LD + MOV) / (m*n*k)`.
+    pub fn ins_metric(&self, m: usize, n: usize, k: usize) -> f64 {
+        self.total() as f64 / (m * n * k) as f64
+    }
+
+    /// Difference of two traces (e.g. two iterations minus one iteration,
+    /// to isolate steady-state per-iteration cost).
+    pub fn delta(&self, earlier: &Trace) -> Trace {
+        let mut by = BTreeMap::new();
+        for (k, v) in &self.by_mnemonic {
+            let e = earlier.by_mnemonic.get(k).copied().unwrap_or(0);
+            if *v > e {
+                by.insert(*k, v - e);
+            }
+        }
+        Trace {
+            com: self.com - earlier.com,
+            ld: self.ld - earlier.ld,
+            mov: self.mov - earlier.mov,
+            st: self.st - earlier.st,
+            by_mnemonic: by,
+            record_stream: false,
+            log: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_counts_by_class() {
+        let mut t = Trace::new();
+        t.hit(InsnClass::Com, "EOR");
+        t.hit(InsnClass::Com, "CNT");
+        t.hit(InsnClass::Ld, "LD1");
+        t.hit(InsnClass::Mov, "DUP");
+        assert_eq!((t.com, t.ld, t.mov, t.st), (2, 1, 1, 0));
+        assert_eq!(t.total(), 4);
+        assert_eq!(t.by_mnemonic["EOR"], 1);
+    }
+
+    #[test]
+    fn ins_metric_matches_formula() {
+        let mut t = Trace::new();
+        for _ in 0..42 {
+            t.hit(InsnClass::Com, "X");
+        }
+        // BNN microkernel: 42 instructions / (16*8*8) = 0.041
+        let ins = t.ins_metric(16, 8, 8);
+        assert!((ins - 0.041_015_625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_subtracts() {
+        let mut a = Trace::new();
+        a.hit(InsnClass::Com, "EOR");
+        let mut b = a.clone();
+        b.hit(InsnClass::Com, "EOR");
+        b.hit(InsnClass::Ld, "LD1");
+        let d = b.delta(&a);
+        assert_eq!((d.com, d.ld), (1, 1));
+        assert_eq!(d.by_mnemonic["EOR"], 1);
+    }
+}

@@ -1,0 +1,251 @@
+//! Dense row-major matrices used as the un-packed interchange format.
+//!
+//! Matrix multiplication in this crate follows the paper's naming:
+//! `A` is the left (activation) matrix of shape `m × k` ("height" ×
+//! "depth"), `B` is the right (weight) matrix of shape `k × n` ("depth" ×
+//! "width") and `C = A·B` is `m × n`.
+
+use crate::util::Rng;
+
+/// Dense row-major `i8` matrix holding binary (`{-1,1}`) or ternary
+/// (`{-1,0,1}`) values before packing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i8) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatI8 { rows, cols, data }
+    }
+
+    /// Random binary matrix (values in `{-1, 1}`).
+    pub fn random_binary(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = MatI8::zeros(rows, cols);
+        rng.fill_binary(&mut m.data);
+        m
+    }
+
+    /// Random ternary matrix (values in `{-1, 0, 1}`).
+    pub fn random_ternary(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = MatI8::zeros(rows, cols);
+        rng.fill_ternary(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i8) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        MatI8::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// True if every element is in `{-1, 1}`.
+    pub fn is_binary(&self) -> bool {
+        self.data.iter().all(|&v| v == 1 || v == -1)
+    }
+
+    /// True if every element is in `{-1, 0, 1}`.
+    pub fn is_ternary(&self) -> bool {
+        self.data.iter().all(|&v| (-1..=1).contains(&v))
+    }
+}
+
+/// Dense row-major `i32` matrix (accumulator / output side).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] = v;
+    }
+}
+
+/// Dense row-major `i16` matrix — the output type of the paper's BNN /
+/// TNN / TBN multiplications (results are accumulated in signed 16-bit).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatI16 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i16>,
+}
+
+impl MatI16 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI16 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i16 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i16) {
+        self.data[r * self.cols + c] = v;
+    }
+}
+
+/// Dense row-major `f32` matrix (full-precision baseline + NN tensors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatF32 { rows, cols, data }
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        MatF32::from_fn(rows, cols, |_, _| rng.normalish())
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+}
+
+/// Dense row-major `u8` matrix (8-bit quantized path).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatU8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl MatU8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatU8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = MatU8::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.next_u32() as u8;
+        }
+        m
+    }
+
+    /// Random matrix with values restricted to `[0, max]` (e.g. 4-bit: 15).
+    pub fn random_below(rows: usize, cols: usize, max: u8, rng: &mut Rng) -> Self {
+        let mut m = MatU8::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.below(max as usize + 1) as u8;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_row_major() {
+        let m = MatI8::from_fn(2, 3, |r, c| (r * 3 + c) as i8);
+        assert_eq!(m.data, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(m.get(1, 2), 5);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(5);
+        let m = MatI8::random_ternary(7, 13, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn random_binary_is_binary() {
+        let mut rng = Rng::new(11);
+        assert!(MatI8::random_binary(16, 64, &mut rng).is_binary());
+    }
+
+    #[test]
+    fn random_ternary_is_ternary() {
+        let mut rng = Rng::new(11);
+        let m = MatI8::random_ternary(16, 64, &mut rng);
+        assert!(m.is_ternary());
+        // and actually uses all three values with overwhelming probability
+        assert!(m.data.iter().any(|&v| v == 0));
+        assert!(m.data.iter().any(|&v| v == 1));
+        assert!(m.data.iter().any(|&v| v == -1));
+    }
+
+    #[test]
+    fn row_slice_matches_get() {
+        let m = MatI8::from_fn(4, 5, |r, c| (r + c) as i8);
+        for r in 0..4 {
+            for c in 0..5 {
+                assert_eq!(m.row(r)[c], m.get(r, c));
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic PRNG, dense matrices,
+//! timing helpers and a light property-testing harness.
+//!
+//! The build environment is fully offline, so this crate cannot depend on
+//! `rand`, `criterion` or `proptest`; these modules provide the small
+//! subset of their functionality the rest of the crate needs.
+
+pub mod mat;
+pub mod prng;
+pub mod proptest;
+pub mod timer;
+
+pub use mat::MatI8;
+pub use prng::Rng;

@@ -1,0 +1,171 @@
+//! Deterministic pseudo-random number generation (SplitMix64 + xoshiro256**).
+//!
+//! All experiments in this repo are seeded so that every table and figure
+//! is reproducible bit-for-bit. The generator is Blackman & Vigna's
+//! xoshiro256** seeded through SplitMix64, which is the standard way to
+//! expand a 64-bit seed into the 256-bit state.
+
+/// A small, fast, deterministic PRNG (xoshiro256**).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32-bit value.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (Lemire's multiply-shift reduction; unbiased
+    /// enough for test workloads).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in the inclusive integer range `[lo, hi]`.
+    #[inline]
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as usize) as i32
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    /// Standard-normal-ish f32 (sum of 4 uniforms, Irwin–Hall, good enough
+    /// for synthetic weights/activations).
+    #[inline]
+    pub fn normalish(&mut self) -> f32 {
+        ((self.f32() + self.f32() + self.f32() + self.f32()) - 2.0) * 1.732
+    }
+
+    /// A random value in `{-1, 1}`.
+    #[inline]
+    pub fn binary(&mut self) -> i8 {
+        if self.next_u64() & 1 == 0 { 1 } else { -1 }
+    }
+
+    /// A random value in `{-1, 0, 1}` (uniform over the three).
+    #[inline]
+    pub fn ternary(&mut self) -> i8 {
+        (self.below(3) as i8) - 1
+    }
+
+    /// Fill a slice with values in `{-1, 1}`.
+    pub fn fill_binary(&mut self, buf: &mut [i8]) {
+        for v in buf.iter_mut() {
+            *v = self.binary();
+        }
+    }
+
+    /// Fill a slice with values in `{-1, 0, 1}`.
+    pub fn fill_ternary(&mut self, buf: &mut [i8]) {
+        for v in buf.iter_mut() {
+            *v = self.ternary();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for n in [1usize, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_hits_all_values() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[(r.ternary() + 1) as usize] = true;
+        }
+        assert_eq!(seen, [true, true, true]);
+    }
+
+    #[test]
+    fn binary_hits_both_values() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 2];
+        for _ in 0..100 {
+            let v = r.binary();
+            assert!(v == 1 || v == -1);
+            seen[((v + 1) / 2) as usize] = true;
+        }
+        assert_eq!(seen, [true, true]);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

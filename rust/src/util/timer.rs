@@ -1,0 +1,103 @@
+//! Timing helpers implementing the paper's measurement protocol.
+//!
+//! §IV-B: "for each value of parameters, we took the median of 5
+//! measurements (to exclude random errors) and repeated the whole
+//! experiment 50 times, taking the average of the measurements".
+
+use std::time::Instant;
+
+/// Wall-clock one invocation of `f`, in seconds.
+#[inline]
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Median of `n` timings of `f` (the paper's inner loop, n = 5).
+pub fn median_of<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
+    assert!(n > 0);
+    let mut ts: Vec<f64> = (0..n).map(|_| time_once(&mut f).0).collect();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if n % 2 == 1 {
+        ts[n / 2]
+    } else {
+        0.5 * (ts[n / 2 - 1] + ts[n / 2])
+    }
+}
+
+/// The paper's full protocol: mean over `reps` of (median of `inner`).
+pub fn paper_protocol<R>(reps: usize, inner: usize, mut f: impl FnMut() -> R) -> f64 {
+    assert!(reps > 0);
+    let total: f64 = (0..reps).map(|_| median_of(inner, &mut f)).sum();
+    total / reps as f64
+}
+
+/// Simple statistics over a sample of timings.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+/// Compute [`Stats`] for a non-empty slice.
+pub fn stats(xs: &[f64]) -> Stats {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Stats {
+        mean,
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        stddev: var.sqrt(),
+    }
+}
+
+/// A tiny fixed-work benchmark runner used by the `cargo bench` harnesses
+/// (criterion is unavailable offline). Runs `f` until at least
+/// `min_time_s` seconds or `max_iters` iterations, whichever first, and
+/// reports per-iteration time.
+pub fn bench_loop(min_time_s: f64, max_iters: usize, mut f: impl FnMut()) -> Stats {
+    // Warm-up.
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while iters < max_iters && (start.elapsed().as_secs_f64() < min_time_s || samples.len() < 3) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        iters += 1;
+    }
+    stats(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_order_insensitive() {
+        // Just checks median_of runs and returns a positive finite value.
+        let t = median_of(5, || std::hint::black_box((0..1000).sum::<u64>()));
+        assert!(t.is_finite() && t >= 0.0);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn bench_loop_respects_max_iters() {
+        let mut count = 0;
+        let _ = bench_loop(10.0, 5, || count += 1);
+        assert!(count <= 6); // warm-up + 5
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration tests across module boundaries: GEMM drivers under
+//! convolution, networks under the coordinator, cost model over real
+//! traces, and paper-grid consistency between the emulated and native
+//! paths.
+
+use tbgemm::bench::{grid, predicted, ratio};
+use tbgemm::conv::conv2d::{direct_conv_i8, ConvKind, ConvParams, LowBitConv};
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::gemm::driver::{GemmDriver, Lhs};
+use tbgemm::gemm::native::kernels::tnn_gemm;
+use tbgemm::gemm::native::PlaneRows;
+use tbgemm::gemm::reference::gemm_i8;
+use tbgemm::gemm::Kind;
+use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::quant::{c_in_max, k_max};
+use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::util::Rng;
+use std::time::Duration;
+
+/// Paper-grid shape: emulated driver ≡ native kernel ≡ oracle at a full
+/// 64-point-grid member (72×24×128).
+#[test]
+fn paper_grid_point_consistency() {
+    let (h, w, d) = (72, 24, 128);
+    let mut rng = Rng::new(0x1111);
+    let a = MatI8::random_ternary(h, d, &mut rng);
+    let b = MatI8::random_ternary(d, w, &mut rng);
+    let emu = GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+    let mut native = MatI32::zeros(h, w);
+    tnn_gemm(&PlaneRows::from_ternary(&a), &PlaneRows::from_ternary_transposed(&b), &mut native);
+    let oracle = gemm_i8(&a, &b);
+    assert_eq!(emu.data, oracle.data);
+    assert_eq!(native.data, oracle.data);
+}
+
+/// A conv layer built on the packed GEMM equals the direct convolution
+/// at CNN-realistic shapes (the paper's eq. (5) applicability argument).
+#[test]
+fn conv_matches_direct_at_cnn_scale() {
+    let mut rng = Rng::new(0x2222);
+    let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+    let c_in = 16;
+    let c_out = 24;
+    // eq. (5): 3×3 TNN supports up to 3640 input channels; 16 is safe.
+    assert!(c_in as u64 <= c_in_max(k_max(2, 16).max(32767), 3, 3));
+    let w = MatI8::random_ternary(p.depth(c_in), c_out, &mut rng);
+    let conv = LowBitConv::new(ConvKind::Tnn, p, c_in, &w);
+    let input = Tensor3::random_ternary(14, 14, c_in, &mut rng);
+    let got = conv.forward(&input);
+    let want = direct_conv_i8(&input, &w, &p, 0);
+    assert_eq!(got.data, want.data);
+}
+
+/// The three network kinds produce different outputs but all live
+/// (non-constant) predictions.
+#[test]
+fn all_three_network_kinds_are_live() {
+    let mut rng = Rng::new(0x3333);
+    let images: Vec<Tensor3<f32>> = (0..12).map(|_| Tensor3::random(16, 16, 1, &mut rng)).collect();
+    for kind in [ConvKind::Tnn, ConvKind::Tbn, ConvKind::Bnn] {
+        let net = build_from_config(&NetConfig::mobile_cnn(kind, 16, 16, 1, 10), 0xCAFE);
+        let preds: std::collections::BTreeSet<usize> = images.iter().map(|i| net.predict(i)).collect();
+        assert!(preds.len() > 1, "{kind:?} network predicts a constant class");
+    }
+}
+
+/// Coordinator end-to-end: responses match direct engine outputs
+/// (the batcher must not permute or corrupt request/response pairing).
+#[test]
+fn coordinator_matches_direct_inference() {
+    let cfg = NetConfig::tiny_tnn(8, 8, 1, 4);
+    let direct = build_from_config(&cfg, 77);
+    let served = build_from_config(&cfg, 77);
+    let server = InferenceServer::start(
+        Box::new(NativeEngine::new(served, "it")),
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        32,
+    );
+    let mut rng = Rng::new(0x4444);
+    let images: Vec<Tensor3<f32>> = (0..16).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+    let pending: Vec<_> = images.iter().map(|img| server.submit(img.clone())).collect();
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits, direct.logits(img), "batched result differs from direct");
+    }
+    server.shutdown();
+}
+
+/// The cost model over real traces predicts the paper's qualitative
+/// ordering on the full grid.
+#[test]
+fn predicted_table3_ordering() {
+    let m = ratio::ratio_matrix(&predicted::predict_grid(&grid::paper_grid()));
+    let faster = |a: Kind, b: Kind| m.get(a, b) > 1.0; // b faster than a
+    assert!(faster(Kind::F32, Kind::U8));
+    assert!(faster(Kind::U8, Kind::U4));
+    assert!(faster(Kind::U4, Kind::Tnn));
+    assert!(faster(Kind::Tnn, Kind::Bnn));
+    assert!(faster(Kind::Tbn, Kind::Bnn));
+}
+
+/// Measured smoke benchmark: low-bit kinds must beat F32 on this host
+/// (the minimal Table III shape-claim, kept fast for CI).
+#[test]
+fn measured_lowbit_beats_f32_smoke() {
+    let g = vec![(72, 24, 256)];
+    let f32t = grid::time_algorithm(Kind::F32, &g, 2, 3, 1).times[0].1;
+    let tnnt = grid::time_algorithm(Kind::Tnn, &g, 2, 3, 1).times[0].1;
+    let bnnt = grid::time_algorithm(Kind::Bnn, &g, 2, 3, 1).times[0].1;
+    assert!(tnnt < f32t, "TNN ({tnnt:.2e}s) must beat F32 ({f32t:.2e}s)");
+    assert!(bnnt < tnnt, "BNN ({bnnt:.2e}s) must beat TNN ({tnnt:.2e}s)");
+}
+
+/// Deep-depth TNN through the driver (depth-block widening) at a
+/// CNN-like extreme: 3×3 conv over 1024 channels → depth 9216.
+#[test]
+fn deep_depth_widening_correct() {
+    let mut rng = Rng::new(0x5555);
+    let d = 9216;
+    let a = MatI8::random_ternary(2, d, &mut rng);
+    let b = MatI8::random_ternary(d, 3, &mut rng);
+    let got = GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+    assert_eq!(got.data, gemm_i8(&a, &b).data);
+}
