@@ -45,7 +45,12 @@ fn main() {
         std::hint::black_box(acc);
     });
     println!("1. popcount inner loop (120×48 dots, k=512):");
-    println!("   vectorized {:.3} ms, scalar {:.3} ms → {:.2}×", vec_t.mean * 1e3, scl_t.mean * 1e3, scl_t.mean / vec_t.mean);
+    println!(
+        "   vectorized {:.3} ms, scalar {:.3} ms → {:.2}×",
+        vec_t.mean * 1e3,
+        scl_t.mean * 1e3,
+        scl_t.mean / vec_t.mean
+    );
 
     // 2. 2-column vs 1-column BNN kernel.
     let two_t = bench_loop(0.2, 400, || {
@@ -58,7 +63,12 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    println!("2. BNN column blocking: 1-col {:.3} ms, 2-col {:.3} ms → {:.2}×", vec_t.mean * 1e3, two_t.mean * 1e3, vec_t.mean / two_t.mean);
+    println!(
+        "2. BNN column blocking: 1-col {:.3} ms, 2-col {:.3} ms → {:.2}×",
+        vec_t.mean * 1e3,
+        two_t.mean * 1e3,
+        vec_t.mean / two_t.mean
+    );
 
     // 3. vectorized vs scalar packing.
     let tern = MatI8::random_ternary(360, 512, &mut rng);
@@ -73,7 +83,12 @@ fn main() {
         }
         std::hint::black_box(&scratch);
     });
-    println!("3. ternary packing 360×512: vectorized {:.3} ms, scalar {:.3} ms → {:.2}×", fast_t.mean * 1e3, slow_t.mean * 1e3, slow_t.mean / fast_t.mean);
+    println!(
+        "3. ternary packing 360×512: vectorized {:.3} ms, scalar {:.3} ms → {:.2}×",
+        fast_t.mean * 1e3,
+        slow_t.mean * 1e3,
+        slow_t.mean / fast_t.mean
+    );
 
     // 4. stripe vs full-im2col convolution (time + memory).
     let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };

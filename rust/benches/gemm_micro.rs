@@ -1,17 +1,55 @@
-//! Microbenchmark of the native GEMM kernels at a single paper-grid point
-//! (120×48×256), reporting absolute time, GMAC/s, and the speedup ladder.
+//! Microbenchmark of the native GEMM kernels: the seven-algorithm ladder
+//! at a paper-grid point (120×48×256), the tiling/threading speedup
+//! ladder at the acceptance shape (256×256×2048), and the TNN
+//! packing-vs-kernel split.
+//!
+//! Emits `BENCH_gemm.json` — one record per (kind, variant, shape) with
+//! ns/iter and effective GOPS (2·m·n·k ops) — so later PRs can track the
+//! perf trajectory mechanically.
 //!
 //! Run: `cargo bench --bench gemm_micro`
 
 use tbgemm::bench::grid::time_algorithm;
+use tbgemm::gemm::native::kernels as nk;
+use tbgemm::gemm::native::{bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, BitRows, PlaneRows, Threading};
 use tbgemm::gemm::Kind;
-use tbgemm::util::timer::bench_loop;
 use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::util::timer::bench_loop;
 use tbgemm::util::Rng;
-use tbgemm::gemm::native::kernels::tnn_gemm;
-use tbgemm::gemm::native::PlaneRows;
+
+/// One benchmark record destined for BENCH_gemm.json.
+struct Record {
+    kind: &'static str,
+    variant: &'static str,
+    m: usize,
+    n: usize,
+    k: usize,
+    ns_per_iter: f64,
+}
+
+impl Record {
+    fn gops(&self) -> f64 {
+        2.0 * (self.m * self.n * self.k) as f64 / self.ns_per_iter
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"kind\":\"{}\",\"variant\":\"{}\",\"m\":{},\"n\":{},\"k\":{},\"ns_per_iter\":{:.1},\"gops\":{:.3}}}",
+            self.kind,
+            self.variant,
+            self.m,
+            self.n,
+            self.k,
+            self.ns_per_iter,
+            self.gops()
+        )
+    }
+}
 
 fn main() {
+    let mut records: Vec<Record> = Vec::new();
+
+    // --- the seven-algorithm ladder at a paper-grid point ---------------
     let point = (120usize, 48usize, 256usize);
     let macs = (point.0 * point.1 * point.2) as f64;
     println!("native kernels at H×W×D = {point:?} ({:.1} MMAC):", macs / 1e6);
@@ -30,10 +68,64 @@ fn main() {
             macs / t / 1e9,
             speedup
         );
+        records.push(Record {
+            kind: kind.label(),
+            variant: "tiled",
+            m: point.0,
+            n: point.1,
+            k: point.2,
+            ns_per_iter: t * 1e9,
+        });
     }
 
-    // Packing-vs-kernel split for TNN (how much of the timed region is
-    // the A-repacking Algorithm 2 performs per call).
+    // --- tiling + threading ladder at the acceptance shape --------------
+    let (m, n, k) = (256usize, 256usize, 2048usize);
+    println!("\ntiling/threading ladder at {m}×{n}×{k} (kernel only, A pre-packed):");
+    let mut rng = Rng::new(0x517E);
+    let ab = MatI8::random_binary(m, k, &mut rng);
+    let bb = MatI8::random_binary(k, n, &mut rng);
+    let at = MatI8::random_ternary(m, k, &mut rng);
+    let bt3 = MatI8::random_ternary(k, n, &mut rng);
+    let a_bits = BitRows::from_binary(&ab);
+    let b_bits = BitRows::from_binary_transposed(&bb);
+    let a_planes = PlaneRows::from_ternary(&at);
+    let b_planes = PlaneRows::from_ternary_transposed(&bt3);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+
+    let mut c = MatI32::zeros(m, n);
+    let mut report = |kind: &'static str, variant: &'static str, t: f64, rowdot_t: f64, threads: usize| {
+        println!(
+            "  {kind:<4} {variant:<9} ({threads:>2} thr) {:>9.3} ms   {:>7.2} GMAC/s   {:>5.2}× vs rowdot",
+            t * 1e3,
+            (m * n * k) as f64 / t / 1e9,
+            rowdot_t / t
+        );
+        records.push(Record { kind, variant, m, n, k, ns_per_iter: t * 1e9 });
+    };
+
+    let t_rd = bench_loop(0.4, 50, || nk::bnn_gemm_rowdot(&a_bits, &b_bits, &mut c)).mean;
+    report("BNN", "rowdot", t_rd, t_rd, 1);
+    let t = bench_loop(0.4, 50, || nk::bnn_gemm(&a_bits, &b_bits, &mut c)).mean;
+    report("BNN", "tiled", t, t_rd, 1);
+    let t = bench_loop(0.4, 50, || bnn_gemm_mt(&a_bits, &b_bits, &mut c, Threading::Auto)).mean;
+    report("BNN", "tiled_mt", t, t_rd, cores);
+
+    let t_rd = bench_loop(0.4, 50, || nk::tnn_gemm_rowdot(&a_planes, &b_planes, &mut c)).mean;
+    report("TNN", "rowdot", t_rd, t_rd, 1);
+    let t = bench_loop(0.4, 50, || nk::tnn_gemm(&a_planes, &b_planes, &mut c)).mean;
+    report("TNN", "tiled", t, t_rd, 1);
+    let t = bench_loop(0.4, 50, || tnn_gemm_mt(&a_planes, &b_planes, &mut c, Threading::Auto)).mean;
+    report("TNN", "tiled_mt", t, t_rd, cores);
+
+    let t_rd = bench_loop(0.4, 50, || nk::tbn_gemm_rowdot(&a_planes, &b_bits, &mut c)).mean;
+    report("TBN", "rowdot", t_rd, t_rd, 1);
+    let t = bench_loop(0.4, 50, || nk::tbn_gemm(&a_planes, &b_bits, &mut c)).mean;
+    report("TBN", "tiled", t, t_rd, 1);
+    let t = bench_loop(0.4, 50, || tbn_gemm_mt(&a_planes, &b_bits, &mut c, Threading::Auto)).mean;
+    report("TBN", "tiled_mt", t, t_rd, cores);
+
+    // --- packing-vs-kernel split for TNN --------------------------------
+    let point = (120usize, 48usize, 256usize);
     let mut rng = Rng::new(7);
     let a = MatI8::random_ternary(point.0, point.2, &mut rng);
     let b = MatI8::random_ternary(point.2, point.1, &mut rng);
@@ -44,7 +136,7 @@ fn main() {
     let ap = PlaneRows::from_ternary(&a);
     let mut c = MatI32::zeros(point.0, point.1);
     let kernel_stats = bench_loop(0.2, 200, || {
-        tnn_gemm(&ap, &bt, &mut c);
+        nk::tnn_gemm(&ap, &bt, &mut c);
     });
     println!(
         "\nTNN split: pack-A {:.3} ms, kernel {:.3} ms ({:.0}% packing)",
@@ -52,5 +144,13 @@ fn main() {
         kernel_stats.mean * 1e3,
         100.0 * pack_stats.mean / (pack_stats.mean + kernel_stats.mean)
     );
+
+    // --- machine-readable output ----------------------------------------
+    let body: Vec<String> = records.iter().map(|r| format!("  {}", r.json())).collect();
+    let json = format!("[\n{}\n]\n", body.join(",\n"));
+    match std::fs::write("BENCH_gemm.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_gemm.json ({} records)", records.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_gemm.json: {e}"),
+    }
     println!("gemm_micro OK");
 }

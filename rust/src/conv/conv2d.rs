@@ -1,10 +1,10 @@
 //! Convolution parameters, the direct (oracle) convolution, and the
 //! GeMM-based convolution built on im2col + the low-bit drivers.
 
-use crate::conv::im2col::im2col;
+use crate::conv::im2col::im2col_into;
 use crate::conv::tensor::Tensor3;
+use crate::gemm::native::block::{bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, Threading};
 use crate::gemm::native::{BitRows, PlaneRows};
-use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
 use crate::util::mat::{MatI32, MatI8};
 
 /// Square-window convolution hyper-parameters.
@@ -76,13 +76,43 @@ pub enum ConvKind {
     Tbn,
 }
 
+/// Reusable scratch arena for [`LowBitConv::forward_into`] (and the
+/// stripe path): the im2col matrix, the packed activation bits/planes.
+/// All buffers are grown on demand and reused across calls, so a
+/// steady-state sequence of forward passes at fixed (or shrinking) shapes
+/// performs no heap allocation.
+pub struct ConvScratch {
+    /// The unrolled im2col activation matrix.
+    a: MatI8,
+    /// Packed binary activations (BNN).
+    bits: BitRows,
+    /// Packed ternary activation planes (TNN/TBN).
+    planes: PlaneRows,
+}
+
+impl ConvScratch {
+    pub fn new() -> Self {
+        ConvScratch { a: MatI8::zeros(0, 0), bits: BitRows::empty(), planes: PlaneRows::empty() }
+    }
+}
+
+impl Default for ConvScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// A convolution layer with pre-packed weights, executed as
 /// im2col + native low-bit GEMM (the deployment path of the paper).
+/// The GEMM runs tiled + cache-blocked, and multithreaded per the
+/// layer's [`Threading`] config.
 pub struct LowBitConv {
     pub kind: ConvKind,
     pub params: ConvParams,
     pub c_in: usize,
     pub c_out: usize,
+    /// Worker threads for the GEMM (default: single-threaded).
+    pub threading: Threading,
     /// Weights packed offline: bit rows (binary) or plane rows (ternary)
     /// of the transposed weight matrix.
     packed_bits: Option<BitRows>,
@@ -104,36 +134,67 @@ impl LowBitConv {
                 (None, Some(PlaneRows::from_ternary_transposed(weights)))
             }
         };
-        LowBitConv { kind, params, c_in, c_out, packed_bits, packed_planes }
+        LowBitConv { kind, params, c_in, c_out, threading: Threading::Single, packed_bits, packed_planes }
+    }
+
+    /// Builder-style threading override.
+    pub fn with_threading(mut self, threading: Threading) -> Self {
+        self.threading = threading;
+        self
+    }
+
+    pub fn set_threading(&mut self, threading: Threading) {
+        self.threading = threading;
     }
 
     /// Run the convolution. Binary activations pad with `+1`, ternary
-    /// with `0`.
+    /// with `0`. Allocates fresh scratch; hot callers should hold a
+    /// [`ConvScratch`] + output tensor and use [`LowBitConv::forward_into`].
     pub fn forward(&self, input: &Tensor3<i8>) -> Tensor3<i32> {
+        let mut scratch = ConvScratch::new();
+        let mut out = Tensor3::zeros(0, 0, 0);
+        self.forward_into(input, &mut scratch, &mut out);
+        out
+    }
+
+    /// Run the convolution into caller-owned scratch and output storage.
+    /// `out` is resized to `oh × ow × c_out`; in steady state (same or
+    /// smaller shape as a previous call) no heap allocation occurs.
+    pub fn forward_into(&self, input: &Tensor3<i8>, scratch: &mut ConvScratch, out: &mut Tensor3<i32>) {
         assert_eq!(input.c, self.c_in);
         let (oh, ow) = self.params.out_dims(input.h, input.w);
         let pad_value = match self.kind {
             ConvKind::Bnn => 1i8,
             ConvKind::Tnn | ConvKind::Tbn => 0i8,
         };
-        let (cols, rows, depth) = im2col(input, &self.params, pad_value);
-        let a = MatI8 { rows, cols: depth, data: cols };
-        let mut c = MatI32::zeros(rows, self.c_out);
+        let (rows, depth) = im2col_into(input, &self.params, pad_value, &mut scratch.a.data);
+        scratch.a.rows = rows;
+        scratch.a.cols = depth;
+        debug_assert_eq!(rows, oh * ow);
+        out.h = oh;
+        out.w = ow;
+        out.c = self.c_out;
+        out.data.clear();
+        out.data.resize(rows * self.c_out, 0);
+        // The GEMM output layout (row = oy·ow + ox, col = channel) is
+        // exactly the HWC tensor layout, so the kernels write straight
+        // into the output tensor's storage.
+        let mut c = MatI32 { rows, cols: self.c_out, data: std::mem::take(&mut out.data) };
         match self.kind {
             ConvKind::Bnn => {
-                let ab = BitRows::from_binary(&a);
-                bnn_gemm(&ab, self.packed_bits.as_ref().unwrap(), &mut c);
+                scratch.bits.repack_binary(&scratch.a);
+                bnn_gemm_mt(&scratch.bits, self.packed_bits.as_ref().unwrap(), &mut c, self.threading);
             }
             ConvKind::Tnn => {
-                let ap = PlaneRows::from_ternary(&a);
-                tnn_gemm(&ap, self.packed_planes.as_ref().unwrap(), &mut c);
+                scratch.planes.repack_ternary(&scratch.a);
+                tnn_gemm_mt(&scratch.planes, self.packed_planes.as_ref().unwrap(), &mut c, self.threading);
             }
             ConvKind::Tbn => {
-                let ap = PlaneRows::from_ternary(&a);
-                tbn_gemm(&ap, self.packed_bits.as_ref().unwrap(), &mut c);
+                scratch.planes.repack_ternary(&scratch.a);
+                tbn_gemm_mt(&scratch.planes, self.packed_bits.as_ref().unwrap(), &mut c, self.threading);
             }
         }
-        Tensor3 { h: oh, w: ow, c: self.c_out, data: c.data }
+        out.data = c.data;
     }
 }
 
@@ -166,7 +227,10 @@ mod tests {
         let conv = LowBitConv::new(kind, p, c_in, &weights);
         let got = conv.forward(&input);
         let want = direct_conv_i8(&input, &weights, &p, pad_value);
-        assert_eq!(got.data, want.data, "kind={kind:?} h={h} w={w} cin={c_in} cout={c_out} k={hk}x{wk} s={stride} p={pad}");
+        assert_eq!(
+            got.data, want.data,
+            "kind={kind:?} h={h} w={w} cin={c_in} cout={c_out} k={hk}x{wk} s={stride} p={pad}"
+        );
     }
 
     #[test]
@@ -182,6 +246,60 @@ mod tests {
     #[test]
     fn tbn_conv_matches_direct() {
         check(Config { cases: 20, base_seed: 0xD2 }, "tbn conv", |rng| random_conv_case(rng, ConvKind::Tbn));
+    }
+
+    /// `forward_into` matches `forward`, and at steady state neither the
+    /// scratch arena nor the output tensor reallocates.
+    #[test]
+    fn forward_into_is_zero_alloc_at_steady_state() {
+        let mut rng = Rng::new(0xD4);
+        for kind in [ConvKind::Bnn, ConvKind::Tnn, ConvKind::Tbn] {
+            let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+            let (c_in, c_out) = (4, 6);
+            let weights = match kind {
+                ConvKind::Tnn => MatI8::random_ternary(p.depth(c_in), c_out, &mut rng),
+                _ => MatI8::random_binary(p.depth(c_in), c_out, &mut rng),
+            };
+            let conv = LowBitConv::new(kind, p, c_in, &weights);
+            let input = match kind {
+                ConvKind::Bnn => Tensor3::random_binary(9, 9, c_in, &mut rng),
+                _ => Tensor3::random_ternary(9, 9, c_in, &mut rng),
+            };
+            let mut scratch = ConvScratch::new();
+            let mut out = Tensor3::zeros(0, 0, 0);
+            conv.forward_into(&input, &mut scratch, &mut out);
+            assert_eq!(out.data, conv.forward(&input).data, "{kind:?}");
+            let (a_ptr, out_ptr) = (scratch.a.data.as_ptr(), out.data.as_ptr());
+            conv.forward_into(&input, &mut scratch, &mut out);
+            assert_eq!(scratch.a.data.as_ptr(), a_ptr, "{kind:?}: scratch reallocated");
+            assert_eq!(out.data.as_ptr(), out_ptr, "{kind:?}: output reallocated");
+            assert_eq!(out.data, conv.forward(&input).data, "{kind:?} second pass");
+        }
+    }
+
+    /// Threaded convolution is bit-identical to single-threaded.
+    #[test]
+    fn threaded_conv_matches_single() {
+        use crate::gemm::native::Threading;
+        let mut rng = Rng::new(0xD5);
+        for kind in [ConvKind::Bnn, ConvKind::Tnn, ConvKind::Tbn] {
+            let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+            let (c_in, c_out) = (5, 7);
+            let weights = match kind {
+                ConvKind::Tnn => MatI8::random_ternary(p.depth(c_in), c_out, &mut rng),
+                _ => MatI8::random_binary(p.depth(c_in), c_out, &mut rng),
+            };
+            let input = match kind {
+                ConvKind::Bnn => Tensor3::random_binary(13, 11, c_in, &mut rng),
+                _ => Tensor3::random_ternary(13, 11, c_in, &mut rng),
+            };
+            let single = LowBitConv::new(kind, p, c_in, &weights);
+            let want = single.forward(&input);
+            for threads in [2usize, 3, 8] {
+                let conv = LowBitConv::new(kind, p, c_in, &weights).with_threading(Threading::Fixed(threads));
+                assert_eq!(conv.forward(&input).data, want.data, "{kind:?} t={threads}");
+            }
+        }
     }
 
     #[test]

@@ -9,9 +9,24 @@ use crate::conv::tensor::Tensor3;
 /// Unroll `input` (HWC) for the convolution `p`, padding out-of-bounds
 /// taps with `pad_value`. Output: `(out_h·out_w) × (hk·wk·c)` row-major.
 pub fn im2col<T: Copy + Default>(input: &Tensor3<T>, p: &ConvParams, pad_value: T) -> (Vec<T>, usize, usize) {
+    let mut out = Vec::new();
+    let (rows, depth) = im2col_into(input, p, pad_value, &mut out);
+    (out, rows, depth)
+}
+
+/// [`im2col`] into a caller-owned buffer: `out` is cleared and refilled,
+/// reusing its allocation (steady state: no heap allocation once capacity
+/// has grown to the largest unrolled size seen). Returns `(rows, depth)`.
+pub fn im2col_into<T: Copy + Default>(
+    input: &Tensor3<T>,
+    p: &ConvParams,
+    pad_value: T,
+    out: &mut Vec<T>,
+) -> (usize, usize) {
     let (oh, ow) = p.out_dims(input.h, input.w);
     let depth = p.hk * p.wk * input.c;
-    let mut out = vec![T::default(); oh * ow * depth];
+    out.clear();
+    out.resize(oh * ow * depth, T::default());
     for oy in 0..oh {
         for ox in 0..ow {
             let row = oy * ow + ox;
@@ -35,7 +50,7 @@ pub fn im2col<T: Copy + Default>(input: &Tensor3<T>, p: &ConvParams, pad_value: 
             }
         }
     }
-    (out, oh * ow, depth)
+    (oh * ow, depth)
 }
 
 #[cfg(test)]
@@ -80,6 +95,20 @@ mod tests {
         let (m, rows, _) = im2col(&t, &p, 0);
         assert_eq!(rows, 4);
         assert_eq!(m, vec![0, 2, 8, 10]);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_buffer() {
+        let t = Tensor3::from_fn(4, 5, 2, |y, x, c| (y * 100 + x * 10 + c) as i32);
+        let p = ConvParams { hk: 3, wk: 2, stride: 1, pad: 1 };
+        let (want, rows, depth) = im2col(&t, &p, -7);
+        let mut buf = Vec::new();
+        assert_eq!(im2col_into(&t, &p, -7, &mut buf), (rows, depth));
+        assert_eq!(buf, want);
+        let ptr = buf.as_ptr();
+        im2col_into(&t, &p, -7, &mut buf);
+        assert_eq!(buf.as_ptr(), ptr, "im2col_into reallocated at steady state");
+        assert_eq!(buf, want);
     }
 
     #[test]

@@ -14,9 +14,36 @@
 
 use crate::conv::conv2d::{ConvKind, ConvParams};
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
+use crate::gemm::native::block::{bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, Threading};
 use crate::gemm::native::{BitRows, PlaneRows};
 use crate::util::mat::{MatI32, MatI8};
+
+/// Reusable scratch arena for [`StripeConv::forward_into`]: one stripe's
+/// patch matrix, its packed form, and the stripe GEMM output. Grown on
+/// demand; steady-state forward passes perform no heap allocation.
+pub struct StripeScratch {
+    stripe: MatI8,
+    bits: BitRows,
+    planes: PlaneRows,
+    c: MatI32,
+}
+
+impl StripeScratch {
+    pub fn new() -> Self {
+        StripeScratch {
+            stripe: MatI8::zeros(0, 0),
+            bits: BitRows::empty(),
+            planes: PlaneRows::empty(),
+            c: MatI32::zeros(0, 0),
+        }
+    }
+}
+
+impl Default for StripeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// A convolution layer computed stripe-by-stripe. Weights are packed
 /// offline exactly as in [`crate::conv::conv2d::LowBitConv`].
@@ -25,6 +52,9 @@ pub struct StripeConv {
     pub params: ConvParams,
     pub c_in: usize,
     pub c_out: usize,
+    /// Worker threads for each stripe GEMM (default: single-threaded;
+    /// stripes are short, so this pays off only for wide outputs).
+    pub threading: Threading,
     packed_bits: Option<BitRows>,
     packed_planes: Option<PlaneRows>,
 }
@@ -43,26 +73,53 @@ impl StripeConv {
                 (None, Some(PlaneRows::from_ternary_transposed(weights)))
             }
         };
-        StripeConv { kind, params, c_in, c_out, packed_bits, packed_planes }
+        StripeConv { kind, params, c_in, c_out, threading: Threading::Single, packed_bits, packed_planes }
     }
 
-    /// Peak scratch elements this convolution allocates (one stripe).
+    /// Builder-style threading override.
+    pub fn with_threading(mut self, threading: Threading) -> Self {
+        self.threading = threading;
+        self
+    }
+
+    /// Peak scratch elements this convolution needs (one stripe).
     pub fn stripe_scratch_elems(&self, in_w: usize) -> usize {
         let (_, ow) = self.params.out_dims(in_w, in_w);
         ow * self.params.depth(self.c_in)
     }
 
-    /// Run the convolution with one-row stripes.
+    /// Run the convolution with one-row stripes. Allocates fresh scratch;
+    /// hot callers should hold a [`StripeScratch`] + output tensor and
+    /// use [`StripeConv::forward_into`].
     pub fn forward(&self, input: &Tensor3<i8>) -> Tensor3<i32> {
+        let mut scratch = StripeScratch::new();
+        let mut out = Tensor3::zeros(0, 0, 0);
+        self.forward_into(input, &mut scratch, &mut out);
+        out
+    }
+
+    /// Run the convolution with one-row stripes into caller-owned scratch
+    /// and output storage (steady state: no heap allocation).
+    pub fn forward_into(&self, input: &Tensor3<i8>, scratch: &mut StripeScratch, out: &mut Tensor3<i32>) {
         assert_eq!(input.c, self.c_in);
         let p = &self.params;
         let (oh, ow) = p.out_dims(input.h, input.w);
         let depth = p.depth(self.c_in);
         let pad_value = if self.kind == ConvKind::Bnn { 1i8 } else { 0i8 };
-        let mut out = Tensor3::zeros(oh, ow, self.c_out);
+        out.h = oh;
+        out.w = ow;
+        out.c = self.c_out;
+        out.data.clear();
+        out.data.resize(oh * ow * self.c_out, 0);
         // Reused stripe buffers.
-        let mut stripe = MatI8::zeros(ow, depth);
-        let mut c = MatI32::zeros(ow, self.c_out);
+        scratch.stripe.rows = ow;
+        scratch.stripe.cols = depth;
+        scratch.stripe.data.clear();
+        scratch.stripe.data.resize(ow * depth, 0);
+        scratch.c.rows = ow;
+        scratch.c.cols = self.c_out;
+        scratch.c.data.clear();
+        scratch.c.data.resize(ow * self.c_out, 0);
         for oy in 0..oh {
             // Fill the stripe: patch rows for output row oy.
             for ox in 0..ow {
@@ -81,7 +138,7 @@ impl StripeConv {
                             } else {
                                 pad_value
                             };
-                            stripe.set(ox, idx, v);
+                            scratch.stripe.set(ox, idx, v);
                             idx += 1;
                         }
                     }
@@ -89,22 +146,23 @@ impl StripeConv {
             }
             match self.kind {
                 ConvKind::Bnn => {
-                    bnn_gemm(&BitRows::from_binary(&stripe), self.packed_bits.as_ref().unwrap(), &mut c)
+                    scratch.bits.repack_binary(&scratch.stripe);
+                    bnn_gemm_mt(&scratch.bits, self.packed_bits.as_ref().unwrap(), &mut scratch.c, self.threading)
                 }
                 ConvKind::Tnn => {
-                    tnn_gemm(&PlaneRows::from_ternary(&stripe), self.packed_planes.as_ref().unwrap(), &mut c)
+                    scratch.planes.repack_ternary(&scratch.stripe);
+                    tnn_gemm_mt(&scratch.planes, self.packed_planes.as_ref().unwrap(), &mut scratch.c, self.threading)
                 }
                 ConvKind::Tbn => {
-                    tbn_gemm(&PlaneRows::from_ternary(&stripe), self.packed_bits.as_ref().unwrap(), &mut c)
+                    scratch.planes.repack_ternary(&scratch.stripe);
+                    tbn_gemm_mt(&scratch.planes, self.packed_bits.as_ref().unwrap(), &mut scratch.c, self.threading)
                 }
             }
-            for ox in 0..ow {
-                for f in 0..self.c_out {
-                    out.set(oy, ox, f, c.get(ox, f));
-                }
-            }
+            // Stripe output is (ox, f)-major — exactly the HWC slice of
+            // output row oy.
+            let row_base = oy * ow * self.c_out;
+            out.data[row_base..row_base + ow * self.c_out].copy_from_slice(&scratch.c.data);
         }
-        out
     }
 }
 
@@ -153,6 +211,31 @@ mod tests {
     #[test]
     fn stripe_matches_full_and_direct_tbn() {
         check(Config { cases: 16, base_seed: 0xAB2 }, "stripe tbn", |rng| random_case(rng, ConvKind::Tbn));
+    }
+
+    /// `forward_into` matches `forward`, reuses its arena, and threading
+    /// does not change results.
+    #[test]
+    fn stripe_scratch_steady_state_and_threading() {
+        let mut rng = Rng::new(0xAB4);
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        let w = MatI8::random_ternary(p.depth(3), 5, &mut rng);
+        let conv = StripeConv::new(ConvKind::Tnn, p, 3, &w);
+        let input = Tensor3::random_ternary(10, 12, 3, &mut rng);
+        let want = conv.forward(&input);
+        let mut scratch = StripeScratch::new();
+        let mut out = Tensor3::zeros(0, 0, 0);
+        conv.forward_into(&input, &mut scratch, &mut out);
+        assert_eq!(out.data, want.data);
+        let (s_ptr, o_ptr) = (scratch.stripe.data.as_ptr(), out.data.as_ptr());
+        conv.forward_into(&input, &mut scratch, &mut out);
+        assert_eq!(scratch.stripe.data.as_ptr(), s_ptr, "stripe scratch reallocated");
+        assert_eq!(out.data.as_ptr(), o_ptr, "stripe output reallocated");
+        assert_eq!(out.data, want.data);
+
+        use crate::gemm::native::Threading;
+        let threaded = StripeConv::new(ConvKind::Tnn, p, 3, &w).with_threading(Threading::Fixed(4));
+        assert_eq!(threaded.forward(&input).data, want.data);
     }
 
     /// The memory claim: stripe scratch is OH× smaller than full im2col.

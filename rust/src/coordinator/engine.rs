@@ -25,6 +25,14 @@ impl NativeEngine {
     pub fn new(network: Network, label: impl Into<String>) -> Self {
         NativeEngine { network, label: label.into() }
     }
+
+    /// Run every conv GEMM under this threading config. Intra-op
+    /// parallelism composes with the coordinator's batching: the worker
+    /// thread fans each convolution out over row bands.
+    pub fn with_threading(mut self, threading: crate::gemm::native::Threading) -> Self {
+        self.network.set_threading(threading);
+        self
+    }
 }
 
 impl InferenceEngine for NativeEngine {
@@ -57,5 +65,17 @@ mod tests {
         assert_eq!(out.len(), 4);
         assert!(out.iter().all(|l| l.len() == 3));
         assert_eq!(engine.input_dims(), (8, 8, 1));
+    }
+
+    /// A threaded engine produces the same logits as a single-threaded one.
+    #[test]
+    fn threaded_engine_matches_single() {
+        use crate::gemm::native::Threading;
+        let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+        let single = NativeEngine::new(build_from_config(&cfg, 1), "single");
+        let threaded = NativeEngine::new(build_from_config(&cfg, 1), "mt").with_threading(Threading::Fixed(4));
+        let mut rng = Rng::new(3);
+        let images: Vec<_> = (0..3).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+        assert_eq!(single.infer_batch(&images), threaded.infer_batch(&images));
     }
 }

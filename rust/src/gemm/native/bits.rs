@@ -27,6 +27,28 @@ impl BitRows {
         BitRows { rows: m.rows, k: m.cols, words_per_row: words, data }
     }
 
+    /// An empty packing, for use as reusable scratch via
+    /// [`BitRows::repack_binary`].
+    pub fn empty() -> Self {
+        BitRows { rows: 0, k: 0, words_per_row: 0, data: Vec::new() }
+    }
+
+    /// Re-pack `m` into this storage, reusing the existing allocation
+    /// (steady state: no heap allocation once capacity has grown to the
+    /// largest shape seen). Equivalent to `*self = BitRows::from_binary(m)`.
+    pub fn repack_binary(&mut self, m: &MatI8) {
+        debug_assert!(m.is_binary());
+        let words = m.cols.div_ceil(64);
+        self.rows = m.rows;
+        self.k = m.cols;
+        self.words_per_row = words;
+        self.data.clear();
+        self.data.resize(m.rows * words, 0);
+        for r in 0..m.rows {
+            pack_fast::pack_binary_row(m.row(r), &mut self.data[r * words..(r + 1) * words]);
+        }
+    }
+
     /// Pack the transpose of `m` (columns become rows).
     pub fn from_binary_transposed(m: &MatI8) -> Self {
         Self::pack_t(m, |v| encode_binary(v) as u64)
@@ -75,6 +97,33 @@ impl PlaneRows {
             );
         }
         PlaneRows { rows: m.rows, k: m.cols, words_per_row: words, plus, minus }
+    }
+
+    /// An empty packing, for use as reusable scratch via
+    /// [`PlaneRows::repack_ternary`].
+    pub fn empty() -> Self {
+        PlaneRows { rows: 0, k: 0, words_per_row: 0, plus: Vec::new(), minus: Vec::new() }
+    }
+
+    /// Re-pack `m` into this storage, reusing the existing allocations.
+    /// Equivalent to `*self = PlaneRows::from_ternary(m)`.
+    pub fn repack_ternary(&mut self, m: &MatI8) {
+        debug_assert!(m.is_ternary());
+        let words = m.cols.div_ceil(64);
+        self.rows = m.rows;
+        self.k = m.cols;
+        self.words_per_row = words;
+        self.plus.clear();
+        self.plus.resize(m.rows * words, 0);
+        self.minus.clear();
+        self.minus.resize(m.rows * words, 0);
+        for r in 0..m.rows {
+            pack_fast::pack_ternary_row(
+                m.row(r),
+                &mut self.plus[r * words..(r + 1) * words],
+                &mut self.minus[r * words..(r + 1) * words],
+            );
+        }
     }
 
     /// Pack the transpose of `m` (columns become rows).
@@ -155,6 +204,35 @@ mod tests {
                 assert_eq!(pb as i8 - mb as i8, m.get(r, t));
             }
         }
+    }
+
+    /// Repacking into reused storage ≡ packing fresh, across shrinking and
+    /// growing shapes, and reuses the allocation once capacity suffices.
+    #[test]
+    fn repack_matches_fresh_pack() {
+        let mut rng = Rng::new(73);
+        let mut bits = BitRows::empty();
+        let mut planes = PlaneRows::empty();
+        for &(rows, cols) in &[(5usize, 130usize), (2, 64), (9, 300), (1, 1), (9, 300)] {
+            let mb = MatI8::random_binary(rows, cols, &mut rng);
+            bits.repack_binary(&mb);
+            let fresh = BitRows::from_binary(&mb);
+            assert_eq!((bits.rows, bits.k, bits.words_per_row), (fresh.rows, fresh.k, fresh.words_per_row));
+            assert_eq!(bits.data, fresh.data, "{rows}x{cols}");
+
+            let mt = MatI8::random_ternary(rows, cols, &mut rng);
+            planes.repack_ternary(&mt);
+            let fresh = PlaneRows::from_ternary(&mt);
+            assert_eq!((planes.rows, planes.k, planes.words_per_row), (fresh.rows, fresh.k, fresh.words_per_row));
+            assert_eq!(planes.plus, fresh.plus);
+            assert_eq!(planes.minus, fresh.minus);
+        }
+        // Steady state: same shape twice must not reallocate.
+        let m = MatI8::random_binary(9, 300, &mut rng);
+        bits.repack_binary(&m);
+        let ptr = bits.data.as_ptr();
+        bits.repack_binary(&m);
+        assert_eq!(bits.data.as_ptr(), ptr, "repack reallocated at steady state");
     }
 
     #[test]

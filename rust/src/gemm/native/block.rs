@@ -1,0 +1,275 @@
+//! Cache blocking and multithreading for the native kernels: the outer
+//! two levels of the blocked execution hierarchy (see the module docs of
+//! [`crate::gemm::native`]).
+//!
+//! * [`blocks`] — an rten-style panel iterator: walk a dimension in
+//!   fixed-size blocks, yielding `(start, len)` with a short final block.
+//! * [`n_panel`] — the B-panel width (in B rows) sized so one panel of
+//!   packed B words fits in L1, so the panel stays hot across the whole
+//!   A-row loop of a band.
+//! * [`Threading`] — how many worker threads a multiplication may use.
+//!   Plumbed through [`crate::conv::conv2d::LowBitConv`],
+//!   [`crate::conv::stripe::StripeConv`] and the coordinator's
+//!   [`crate::coordinator::engine::NativeEngine`].
+//! * [`parallel_row_bands`] — scoped-thread row-panel parallelism
+//!   (std-only, no thread pool): C is split into disjoint contiguous row
+//!   bands, one worker per band. Rows of C are independent in every
+//!   algorithm here, so this needs no synchronization beyond the scope
+//!   join, and results are bit-identical to the single-threaded kernels.
+
+use crate::gemm::native::bits::{BitRows, PlaneRows};
+use crate::gemm::native::kernels;
+use crate::util::mat::{MatF32, MatI32, MatU8};
+
+/// Walk `0..total` in blocks of `step`: yields `(start, len)` pairs with
+/// `len == step` except possibly the last.
+pub fn blocks(total: usize, step: usize) -> impl Iterator<Item = (usize, usize)> {
+    assert!(step > 0, "block step must be positive");
+    (0..total).step_by(step).map(move |s| (s, step.min(total - s)))
+}
+
+/// Number of u64 words assumed to fit in L1 (32 KiB).
+const L1_WORDS: usize = 4096;
+
+/// B-panel width in B rows for the cache-blocked column loop. `streams`
+/// is the number of u64 planes per packed B row (1 for bit rows, 2 for
+/// ternary plane rows). Kept even so the 2-column register tiles divide
+/// the panel; clamped so tiny panels don't degenerate to per-column
+/// overhead and huge `k` never yields a zero-width panel.
+pub fn n_panel(words_per_row: usize, streams: usize) -> usize {
+    let per_row = (words_per_row * streams).max(1);
+    let p = (L1_WORDS / per_row).clamp(8, 256);
+    p & !1
+}
+
+/// Minimum C rows worth one worker thread: below this the spawn/join
+/// overhead outweighs the kernel work.
+const MIN_ROWS_PER_THREAD: usize = 8;
+
+/// Threading configuration for a native multiplication.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Threading {
+    /// One thread (the default; bit-identical to the plain kernels).
+    #[default]
+    Single,
+    /// Exactly `n` worker threads (clamped to ≥ 1 and to the row count).
+    Fixed(usize),
+    /// One thread per available core (`std::thread::available_parallelism`).
+    Auto,
+}
+
+impl Threading {
+    /// Resolve to a worker count for a problem with `rows` output rows.
+    pub fn worker_count(self, rows: usize) -> usize {
+        let want = match self {
+            Threading::Single => 1,
+            Threading::Fixed(n) => n.max(1),
+            Threading::Auto => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        };
+        want.min(rows.div_ceil(MIN_ROWS_PER_THREAD).max(1))
+    }
+}
+
+/// Split `data` (a `rows × cols` row-major output) into `threads`
+/// contiguous row bands and run `f(row0, band_rows, band)` on each, in
+/// parallel on scoped threads. With `threads <= 1` runs inline.
+pub fn parallel_row_bands<T, F>(data: &mut [T], cols: usize, rows: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * cols);
+    if threads <= 1 || rows == 0 || cols == 0 {
+        f(0, rows, data);
+        return;
+    }
+    let band_rows = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (b, band) in data.chunks_mut(band_rows * cols).enumerate() {
+            let row0 = b * band_rows;
+            let rows_here = band.len() / cols;
+            scope.spawn(move || f(row0, rows_here, band));
+        }
+    });
+}
+
+// ---- threaded drivers --------------------------------------------------
+
+/// Binary GEMM, tiled + cache-blocked + threaded over row bands.
+pub fn bnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        kernels::bnn_band(a, bt, row0, rows, band);
+    });
+}
+
+/// Ternary GEMM, tiled + cache-blocked + threaded over row bands.
+pub fn tnn_gemm_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        kernels::tnn_band(a, bt, row0, rows, band);
+    });
+}
+
+/// Ternary-binary GEMM, tiled + cache-blocked + threaded over row bands.
+pub fn tbn_gemm_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        kernels::tbn_band(a, bt, row0, rows, band);
+    });
+}
+
+/// daBNN-style binary GEMM, threaded over row bands. Per-output f32
+/// accumulation order is unchanged, so results are bit-identical to
+/// [`kernels::dabnn_gemm`] at any thread count.
+pub fn dabnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Threading) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        kernels::dabnn_band(a, bt, row0, rows, band);
+    });
+}
+
+/// f32 GEMM, threaded over row bands. Per-output accumulation order is
+/// unchanged, so results are bit-identical to [`kernels::f32_gemm`].
+pub fn f32_gemm_mt(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32, threading: Threading) {
+    assert_eq!((c.rows, c.cols), (a.rows, n));
+    let threads = threading.worker_count(a.rows);
+    parallel_row_bands(&mut c.data, n, a.rows, threads, |row0, rows, band| {
+        kernels::f32_band(a, b_panels, n, row0, rows, band);
+    });
+}
+
+/// u8 GEMM with zero-point compensation, threaded over row bands.
+#[allow(clippy::too_many_arguments)]
+pub fn u8_gemm_mt(
+    a: &MatU8,
+    b_panels: &[Vec<u8>],
+    n: usize,
+    za: i32,
+    zb: i32,
+    col_sums: &[i32],
+    c: &mut MatI32,
+    threading: Threading,
+) {
+    assert_eq!((c.rows, c.cols), (a.rows, n));
+    let threads = threading.worker_count(a.rows);
+    parallel_row_bands(&mut c.data, n, a.rows, threads, |row0, rows, band| {
+        kernels::u8_band(a, b_panels, n, za, zb, col_sums, row0, rows, band);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
+    use crate::util::mat::MatI8;
+    use crate::util::Rng;
+
+    #[test]
+    fn blocks_cover_exactly_once() {
+        for total in [0usize, 1, 7, 8, 9, 63, 64, 65, 200] {
+            for step in [1usize, 2, 8, 64] {
+                let mut seen = vec![false; total];
+                for (s, l) in blocks(total, step) {
+                    assert!(l >= 1 && l <= step);
+                    for x in s..s + l {
+                        assert!(!seen[x], "double cover at {x}");
+                        seen[x] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&b| b), "total={total} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn n_panel_even_and_bounded() {
+        for wpr in [0usize, 1, 2, 8, 32, 100, 10_000] {
+            for streams in [1usize, 2] {
+                let p = n_panel(wpr, streams);
+                assert!(p >= 8 && p <= 256, "wpr={wpr} streams={streams} p={p}");
+                assert_eq!(p % 2, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps() {
+        assert_eq!(Threading::Single.worker_count(1000), 1);
+        assert_eq!(Threading::Fixed(0).worker_count(1000), 1);
+        assert_eq!(Threading::Fixed(4).worker_count(1000), 4);
+        // Not more workers than 8-row tiles of work.
+        assert_eq!(Threading::Fixed(64).worker_count(16), 2);
+        assert_eq!(Threading::Fixed(3).worker_count(0), 1);
+        assert!(Threading::Auto.worker_count(1_000_000) >= 1);
+    }
+
+    #[test]
+    fn parallel_row_bands_partitions_rows() {
+        for rows in [0usize, 1, 5, 8, 17, 64] {
+            for threads in 1..=8usize {
+                let cols = 3;
+                let mut data = vec![0u32; rows * cols];
+                parallel_row_bands(&mut data, cols, rows, threads, |row0, band_rows, band| {
+                    assert_eq!(band.len(), band_rows * cols);
+                    for r in 0..band_rows {
+                        for c in 0..cols {
+                            band[r * cols + c] += (row0 + r) as u32 + 1;
+                        }
+                    }
+                });
+                for r in 0..rows {
+                    for c in 0..cols {
+                        assert_eq!(data[r * cols + c], r as u32 + 1, "rows={rows} threads={threads} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Threaded low-bit GEMM is bit-identical to the single-threaded
+    /// tiled kernels at 1–8 threads on shapes that don't divide evenly.
+    #[test]
+    fn mt_matches_single_thread() {
+        let mut rng = Rng::new(0xB10C);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (13, 7, 100), (33, 19, 129), (64, 24, 256)] {
+            let ab1 = MatI8::random_binary(m, k, &mut rng);
+            let bb1 = MatI8::random_binary(k, n, &mut rng);
+            let at = MatI8::random_ternary(m, k, &mut rng);
+            let bt3 = MatI8::random_ternary(k, n, &mut rng);
+            let a_bits = BitRows::from_binary(&ab1);
+            let b_bits = BitRows::from_binary_transposed(&bb1);
+            let a_planes = PlaneRows::from_ternary(&at);
+            let b_planes = PlaneRows::from_ternary_transposed(&bt3);
+
+            let mut want_bnn = MatI32::zeros(m, n);
+            bnn_gemm(&a_bits, &b_bits, &mut want_bnn);
+            let mut want_tnn = MatI32::zeros(m, n);
+            tnn_gemm(&a_planes, &b_planes, &mut want_tnn);
+            let mut want_tbn = MatI32::zeros(m, n);
+            tbn_gemm(&a_planes, &b_bits, &mut want_tbn);
+
+            for threads in 1..=8usize {
+                let th = Threading::Fixed(threads);
+                let mut c = MatI32::zeros(m, n);
+                bnn_gemm_mt(&a_bits, &b_bits, &mut c, th);
+                assert_eq!(c.data, want_bnn.data, "bnn m={m} n={n} k={k} t={threads}");
+                let mut c = MatI32::zeros(m, n);
+                tnn_gemm_mt(&a_planes, &b_planes, &mut c, th);
+                assert_eq!(c.data, want_tnn.data, "tnn m={m} n={n} k={k} t={threads}");
+                let mut c = MatI32::zeros(m, n);
+                tbn_gemm_mt(&a_planes, &b_bits, &mut c, th);
+                assert_eq!(c.data, want_tbn.data, "tbn m={m} n={n} k={k} t={threads}");
+            }
+        }
+    }
+}

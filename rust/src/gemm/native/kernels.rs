@@ -2,13 +2,32 @@
 //! the seven algorithms; all are tested against the scalar oracles and
 //! against the emulated drivers.
 //!
-//! Hot-loop conventions: the right matrix is pre-packed (transposed,
+//! Hot-loop conventions (see [`crate::gemm::native`] module docs for the
+//! full hierarchy): the right matrix is pre-packed (transposed,
 //! bit-packed where applicable) — the "PackedB packed once, offline" rule
-//! of Algorithm 2 — and inner loops are written over 64-bit words with
-//! 2×-unrolled column blocking so LLVM can keep accumulators in registers.
+//! of Algorithm 2 — and the inner loops compute R×C *register tiles* of
+//! output (4×2 for BNN/daBNN, 2×2 for TNN/TBN, 4×8 for F32/U8) with all
+//! accumulators live in registers, so each packed A-row word is loaded
+//! once per C columns and each B word once per R rows instead of once per
+//! output element. Around the tiles, the column loop is cache-blocked
+//! into L1-sized B panels ([`blocks`]/[`n_panel`] in
+//! [`crate::gemm::native::block`]) so a panel of B stays hot across the
+//! whole row loop.
+//!
+//! Every kernel also has a band form (`*_band`, crate-private) computing
+//! rows `row0..row0+rows` into a caller-provided output slice; the
+//! multithreaded drivers in [`crate::gemm::native::block`] split C into
+//! disjoint row bands and run the band kernels in parallel.
+//!
+//! The seed's single-row "row-dot" kernels are preserved as
+//! `*_gemm_rowdot` — they remain the differential baseline and the
+//! reference point for the tiling speedup tracked by `benches/gemm_micro`.
 
 use crate::gemm::native::bits::{BitRows, PlaneRows};
-use crate::gemm::native::simd_popcnt::{tbn_popcnt, tnn_popcnt, xor_popcnt, xor_popcnt2};
+use crate::gemm::native::block::{blocks, n_panel};
+use crate::gemm::native::simd_popcnt::{
+    tbn_popcnt, tbn_popcnt_2x2, tnn_popcnt, tnn_popcnt_2x2, xor_popcnt, xor_popcnt2, xor_popcnt_4x2,
+};
 use crate::util::mat::{MatF32, MatI32, MatU8};
 
 // -------------------------------------------------------------------
@@ -16,14 +35,64 @@ use crate::util::mat::{MatF32, MatI32, MatU8};
 // -------------------------------------------------------------------
 
 /// Binary GEMM. `a` holds bit rows of A, `bt` bit rows of Bᵀ.
+/// Register-tiled (4 A-rows × 2 B-columns) with L1-blocked B panels.
 pub fn bnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    bnn_band(a, bt, 0, a.rows, &mut c.data);
+}
+
+/// Rows `row0..row0+rows` of the BNN product into `band` (`rows × n`).
+pub(crate) fn bnn_band(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [i32]) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    let k = a.k as i32;
+    for (j0, jn) in blocks(n, n_panel(bt.words_per_row, 1)) {
+        let jend = j0 + jn;
+        let mut i = 0;
+        while i + 4 <= rows {
+            let ar = [a.row(row0 + i), a.row(row0 + i + 1), a.row(row0 + i + 2), a.row(row0 + i + 3)];
+            let mut j = j0;
+            while j + 2 <= jend {
+                let s = xor_popcnt_4x2(ar, bt.row(j), bt.row(j + 1));
+                for (r, sr) in s.iter().enumerate() {
+                    band[(i + r) * n + j] = k - 2 * sr[0] as i32;
+                    band[(i + r) * n + j + 1] = k - 2 * sr[1] as i32;
+                }
+                j += 2;
+            }
+            if j < jend {
+                for (r, arr) in ar.iter().enumerate() {
+                    band[(i + r) * n + j] = k - 2 * xor_popcnt(arr, bt.row(j)) as i32;
+                }
+            }
+            i += 4;
+        }
+        // Remainder rows (< 4): the 2-column row-dot path.
+        while i < rows {
+            let arr = a.row(row0 + i);
+            let mut j = j0;
+            while j + 2 <= jend {
+                let (s0, s1) = xor_popcnt2(arr, bt.row(j), bt.row(j + 1));
+                band[i * n + j] = k - 2 * s0 as i32;
+                band[i * n + j + 1] = k - 2 * s1 as i32;
+                j += 2;
+            }
+            if j < jend {
+                band[i * n + j] = k - 2 * xor_popcnt(arr, bt.row(j)) as i32;
+            }
+            i += 1;
+        }
+    }
+}
+
+/// The seed's BNN kernel: independent row-dots, 2× column unrolling.
+/// Kept as the differential / benchmark baseline for the tiled kernel.
+pub fn bnn_gemm_rowdot(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let k = a.k as i32;
     let n = bt.rows;
-    // Rows of A stream once; each (i, j) pair is a vectorized
-    // XOR+popcount pass (vpshufb nibble-LUT on AVX2, scalar POPCNT
-    // elsewhere). B rows stay hot in L1 across the i-loop.
     for i in 0..a.rows {
         let ar = a.row(i);
         let mut j = 0;
@@ -45,12 +114,57 @@ pub fn bnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
 // -------------------------------------------------------------------
 
 /// Ternary GEMM. `a` holds plane rows of A, `bt` plane rows of Bᵀ.
+/// Register-tiled (2×2; each output needs two accumulators, z⁺ and z⁻)
+/// with L1-blocked B panels.
 pub fn tnn_gemm(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    tnn_band(a, bt, 0, a.rows, &mut c.data);
+}
+
+/// Rows `row0..row0+rows` of the TNN product into `band` (`rows × n`).
+pub(crate) fn tnn_band(a: &PlaneRows, bt: &PlaneRows, row0: usize, rows: usize, band: &mut [i32]) {
     let n = bt.rows;
-    // Per (i, j): one vectorized pass computing both plane products
-    // z⁺ = (a⁺∧b⁺)∨(a⁻∧b⁻) and z⁻ = (a⁺∧b⁻)∨(a⁻∧b⁺) — eq. (7).
+    debug_assert_eq!(band.len(), rows * n);
+    for (j0, jn) in blocks(n, n_panel(bt.words_per_row, 2)) {
+        let jend = j0 + jn;
+        let mut i = 0;
+        while i + 2 <= rows {
+            let ap = [a.plus_row(row0 + i), a.plus_row(row0 + i + 1)];
+            let am = [a.minus_row(row0 + i), a.minus_row(row0 + i + 1)];
+            let mut j = j0;
+            while j + 2 <= jend {
+                let s =
+                    tnn_popcnt_2x2(ap, am, bt.plus_row(j), bt.minus_row(j), bt.plus_row(j + 1), bt.minus_row(j + 1));
+                for (r, sr) in s.iter().enumerate() {
+                    band[(i + r) * n + j] = sr[0].0 as i32 - sr[0].1 as i32;
+                    band[(i + r) * n + j + 1] = sr[1].0 as i32 - sr[1].1 as i32;
+                }
+                j += 2;
+            }
+            if j < jend {
+                for r in 0..2 {
+                    let (p, m) = tnn_popcnt(ap[r], am[r], bt.plus_row(j), bt.minus_row(j));
+                    band[(i + r) * n + j] = p as i32 - m as i32;
+                }
+            }
+            i += 2;
+        }
+        if i < rows {
+            let (ap, am) = (a.plus_row(row0 + i), a.minus_row(row0 + i));
+            for j in j0..jend {
+                let (p, m) = tnn_popcnt(ap, am, bt.plus_row(j), bt.minus_row(j));
+                band[i * n + j] = p as i32 - m as i32;
+            }
+        }
+    }
+}
+
+/// The seed's TNN kernel: one vectorized plane-product pass per (i, j).
+pub fn tnn_gemm_rowdot(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let n = bt.rows;
     for i in 0..a.rows {
         let (ap, am) = (a.plus_row(i), a.minus_row(i));
         for j in 0..n {
@@ -65,12 +179,58 @@ pub fn tnn_gemm(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
 // -------------------------------------------------------------------
 
 /// Ternary-binary GEMM. `a` holds plane rows of A, `bt` bit rows of Bᵀ.
+/// Register-tiled (2×2) with L1-blocked B panels.
+///
+/// y⁺ = ¬y♭, y⁻ = y♭. Note ¬y♭ sets the depth-padding bits of the last
+/// word, but a⁺/a⁻ padding bits are 0, so the AND masks them out.
 pub fn tbn_gemm(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    tbn_band(a, bt, 0, a.rows, &mut c.data);
+}
+
+/// Rows `row0..row0+rows` of the TBN product into `band` (`rows × n`).
+pub(crate) fn tbn_band(a: &PlaneRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [i32]) {
     let n = bt.rows;
-    // y⁺ = ¬y♭, y⁻ = y♭. Note ¬y♭ sets the depth-padding bits of the
-    // last word, but a⁺/a⁻ padding bits are 0, so the AND masks them out.
+    debug_assert_eq!(band.len(), rows * n);
+    for (j0, jn) in blocks(n, n_panel(bt.words_per_row, 1)) {
+        let jend = j0 + jn;
+        let mut i = 0;
+        while i + 2 <= rows {
+            let ap = [a.plus_row(row0 + i), a.plus_row(row0 + i + 1)];
+            let am = [a.minus_row(row0 + i), a.minus_row(row0 + i + 1)];
+            let mut j = j0;
+            while j + 2 <= jend {
+                let s = tbn_popcnt_2x2(ap, am, bt.row(j), bt.row(j + 1));
+                for (r, sr) in s.iter().enumerate() {
+                    band[(i + r) * n + j] = sr[0].0 as i32 - sr[0].1 as i32;
+                    band[(i + r) * n + j + 1] = sr[1].0 as i32 - sr[1].1 as i32;
+                }
+                j += 2;
+            }
+            if j < jend {
+                for r in 0..2 {
+                    let (p, m) = tbn_popcnt(ap[r], am[r], bt.row(j));
+                    band[(i + r) * n + j] = p as i32 - m as i32;
+                }
+            }
+            i += 2;
+        }
+        if i < rows {
+            let (ap, am) = (a.plus_row(row0 + i), a.minus_row(row0 + i));
+            for j in j0..jend {
+                let (p, m) = tbn_popcnt(ap, am, bt.row(j));
+                band[i * n + j] = p as i32 - m as i32;
+            }
+        }
+    }
+}
+
+/// The seed's TBN kernel: one vectorized pass per (i, j).
+pub fn tbn_gemm_rowdot(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let n = bt.rows;
     for i in 0..a.rows {
         let (ap, am) = (a.plus_row(i), a.minus_row(i));
         for j in 0..n {
@@ -81,34 +241,75 @@ pub fn tbn_gemm(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
 }
 
 // -------------------------------------------------------------------
-// daBNN-style binary: 8×6 tiling, f32 accumulation every 128-bit chunk
+// daBNN-style binary: f32 accumulation every 128-bit chunk
 // -------------------------------------------------------------------
 
 /// Binary GEMM with daBNN's structure: per (row, col) the popcount of each
 /// 128-bit chunk is reduced and accumulated in f32 (daBNN keeps its
 /// running sums in f32 registers), which costs an int→float convert per
 /// chunk — the structural reason it trails the paper's BNN kernel.
+///
+/// Tiled over 4 A-rows (B words loaded once per 4 rows) while keeping the
+/// per-output chunk order — and therefore the f32 rounding — bit-identical
+/// to the row-dot form.
 pub fn dabnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatF32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    dabnn_band(a, bt, 0, a.rows, &mut c.data);
+}
+
+/// Rows `row0..row0+rows` of the daBNN product into `band` (`rows × n`).
+pub(crate) fn dabnn_band(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [f32]) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
     let w = a.words_per_row;
-    let k = a.k as f32;
-    for i in 0..a.rows {
-        let ar = a.row(i);
-        for j in 0..bt.rows {
-            let br = bt.row(j);
-            let mut acc = 0f32;
-            let mut t = 0;
-            while t + 2 <= w {
-                let s = (ar[t] ^ br[t]).count_ones() + (ar[t + 1] ^ br[t + 1]).count_ones();
-                acc += s as f32; // per-128-bit convert, as in daBNN
-                t += 2;
+    let kf = a.k as f32;
+    for (j0, jn) in blocks(n, n_panel(bt.words_per_row, 1)) {
+        let jend = j0 + jn;
+        let mut i = 0;
+        while i + 4 <= rows {
+            let ar = [a.row(row0 + i), a.row(row0 + i + 1), a.row(row0 + i + 2), a.row(row0 + i + 3)];
+            for j in j0..jend {
+                let br = bt.row(j);
+                let mut acc = [0f32; 4];
+                let mut t = 0;
+                while t + 2 <= w {
+                    for (r, arr) in ar.iter().enumerate() {
+                        let s = (arr[t] ^ br[t]).count_ones() + (arr[t + 1] ^ br[t + 1]).count_ones();
+                        acc[r] += s as f32; // per-128-bit convert, as in daBNN
+                    }
+                    t += 2;
+                }
+                while t < w {
+                    for (r, arr) in ar.iter().enumerate() {
+                        acc[r] += (arr[t] ^ br[t]).count_ones() as f32;
+                    }
+                    t += 1;
+                }
+                for (r, &av) in acc.iter().enumerate() {
+                    band[(i + r) * n + j] = kf - 2.0 * av;
+                }
             }
-            while t < w {
-                acc += (ar[t] ^ br[t]).count_ones() as f32;
-                t += 1;
+            i += 4;
+        }
+        while i < rows {
+            let arr = a.row(row0 + i);
+            for j in j0..jend {
+                let br = bt.row(j);
+                let mut acc = 0f32;
+                let mut t = 0;
+                while t + 2 <= w {
+                    let s = (arr[t] ^ br[t]).count_ones() + (arr[t + 1] ^ br[t + 1]).count_ones();
+                    acc += s as f32;
+                    t += 2;
+                }
+                while t < w {
+                    acc += (arr[t] ^ br[t]).count_ones() as f32;
+                    t += 1;
+                }
+                band[i * n + j] = kf - 2.0 * acc;
             }
-            c.set(i, j, k - 2.0 * acc);
+            i += 1;
         }
     }
 }
@@ -120,42 +321,54 @@ pub fn dabnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatF32) {
 /// f32 GEMM, register-blocked 4×8 with B pre-transposed to row-panels of
 /// 8 columns (`bp[d*8 + c]` = B[d][col0+c]), k-major streams.
 pub fn f32_gemm(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32) {
-    let (m, k) = (a.rows, a.cols);
+    let m = a.rows;
     assert_eq!((c.rows, c.cols), (m, n));
+    f32_band(a, b_panels, n, 0, m, &mut c.data);
+}
+
+/// Rows `row0..row0+rows` of the f32 product into `band` (`rows × n`).
+pub(crate) fn f32_band(a: &MatF32, b_panels: &[Vec<f32>], n: usize, row0: usize, rows: usize, band: &mut [f32]) {
+    let k = a.cols;
+    debug_assert_eq!(band.len(), rows * n);
     for (cb, panel) in b_panels.iter().enumerate() {
         let j0 = cb * 8;
         let n_eff = (n - j0).min(8);
         let mut i = 0;
-        while i + 4 <= m {
+        while i + 4 <= rows {
             let mut acc = [[0f32; 8]; 4];
-            let rows = [a.row_slice(i), a.row_slice(i + 1), a.row_slice(i + 2), a.row_slice(i + 3)];
+            let rows4 = [
+                a.row_slice(row0 + i),
+                a.row_slice(row0 + i + 1),
+                a.row_slice(row0 + i + 2),
+                a.row_slice(row0 + i + 3),
+            ];
             for d in 0..k {
                 let bv = &panel[d * 8..d * 8 + 8];
-                for (r, row) in rows.iter().enumerate() {
+                for (r, row) in rows4.iter().enumerate() {
                     let av = row[d];
                     for j in 0..8 {
                         acc[r][j] += av * bv[j];
                     }
                 }
             }
-            for r in 0..4 {
-                for j in 0..n_eff {
-                    c.set(i + r, j0 + j, acc[r][j]);
+            for (r, accr) in acc.iter().enumerate() {
+                for (j, &v) in accr.iter().take(n_eff).enumerate() {
+                    band[(i + r) * n + j0 + j] = v;
                 }
             }
             i += 4;
         }
-        while i < m {
+        while i < rows {
             let mut acc = [0f32; 8];
-            let row = a.row_slice(i);
+            let row = a.row_slice(row0 + i);
             for d in 0..k {
                 let bv = &panel[d * 8..d * 8 + 8];
                 for j in 0..8 {
                     acc[j] += row[d] * bv[j];
                 }
             }
-            for j in 0..n_eff {
-                c.set(i, j0 + j, acc[j]);
+            for (j, &v) in acc.iter().take(n_eff).enumerate() {
+                band[i * n + j0 + j] = v;
             }
             i += 1;
         }
@@ -168,15 +381,62 @@ pub fn f32_gemm(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32) {
 
 /// u8 GEMM with zero-point compensation. `b_panels` pack 8 columns per
 /// panel, k-major (`panel[d*8 + c]`); `col_sums` precomputed offline.
+/// Register-tiled 4×8 (each loaded B vector feeds four row accumulators).
 #[allow(clippy::too_many_arguments)]
 pub fn u8_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
-    let (m, k) = (a.rows, a.cols);
+    let (m, _) = (a.rows, a.cols);
     assert_eq!((c.rows, c.cols), (m, n));
+    u8_band(a, b_panels, n, za, zb, col_sums, 0, m, &mut c.data);
+}
+
+/// Rows `row0..row0+rows` of the u8 product into `band` (`rows × n`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn u8_band(
+    a: &MatU8,
+    b_panels: &[Vec<u8>],
+    n: usize,
+    za: i32,
+    zb: i32,
+    col_sums: &[i32],
+    row0: usize,
+    rows: usize,
+    band: &mut [i32],
+) {
+    let k = a.cols;
+    debug_assert_eq!(band.len(), rows * n);
     for (cb, panel) in b_panels.iter().enumerate() {
         let j0 = cb * 8;
         let n_eff = (n - j0).min(8);
-        for i in 0..m {
-            let row = &a.data[i * k..(i + 1) * k];
+        let mut i = 0;
+        while i + 4 <= rows {
+            let rows4 = [
+                &a.data[(row0 + i) * k..(row0 + i + 1) * k],
+                &a.data[(row0 + i + 1) * k..(row0 + i + 2) * k],
+                &a.data[(row0 + i + 2) * k..(row0 + i + 3) * k],
+                &a.data[(row0 + i + 3) * k..(row0 + i + 4) * k],
+            ];
+            let mut acc = [[0u32; 8]; 4];
+            let mut row_sum = [0u32; 4];
+            for d in 0..k {
+                let bv = &panel[d * 8..d * 8 + 8];
+                for (r, row) in rows4.iter().enumerate() {
+                    let a32 = row[d] as u32;
+                    row_sum[r] += a32;
+                    for j in 0..8 {
+                        acc[r][j] += a32 * bv[j] as u32;
+                    }
+                }
+            }
+            for r in 0..4 {
+                for j in 0..n_eff {
+                    let v = acc[r][j] as i32 - zb * row_sum[r] as i32 - za * col_sums[j0 + j] + k as i32 * za * zb;
+                    band[(i + r) * n + j0 + j] = v;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let row = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
             let mut acc = [0u32; 8];
             let mut row_sum = 0u32;
             for (d, &av) in row.iter().enumerate() {
@@ -189,8 +449,9 @@ pub fn u8_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_
             }
             for j in 0..n_eff {
                 let v = acc[j] as i32 - zb * row_sum as i32 - za * col_sums[j0 + j] + k as i32 * za * zb;
-                c.set(i, j0 + j, v);
+                band[i * n + j0 + j] = v;
             }
+            i += 1;
         }
     }
 }
@@ -337,6 +598,50 @@ mod tests {
             tbn_gemm(&ap, &bb, &mut c);
             assert_eq!(c.data, reference::gemm_i8(&a, &b).data, "m={m} n={n} k={k}");
         });
+    }
+
+    /// Tiled kernels ≡ the seed row-dot kernels on adversarial shapes:
+    /// m/n not multiples of the tile, k not a multiple of 64, and
+    /// single-row / single-column matrices.
+    #[test]
+    fn tiled_matches_rowdot_adversarial() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 7, 64),
+            (7, 1, 65),
+            (2, 2, 63),
+            (3, 3, 127),
+            (4, 2, 128),
+            (5, 9, 130),
+            (6, 3, 66),
+            (9, 5, 191),
+            (17, 33, 257),
+        ];
+        let mut rng = crate::util::Rng::new(0xC8);
+        for &(m, n, k) in &shapes {
+            let a = MatI8::random_binary(m, k, &mut rng);
+            let b = MatI8::random_binary(k, n, &mut rng);
+            let ab = BitRows::from_binary(&a);
+            let bb = BitRows::from_binary_transposed(&b);
+            let (mut c_tiled, mut c_rd) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
+            bnn_gemm(&ab, &bb, &mut c_tiled);
+            bnn_gemm_rowdot(&ab, &bb, &mut c_rd);
+            assert_eq!(c_tiled.data, c_rd.data, "bnn m={m} n={n} k={k}");
+
+            let at = MatI8::random_ternary(m, k, &mut rng);
+            let bt3 = MatI8::random_ternary(k, n, &mut rng);
+            let ap = PlaneRows::from_ternary(&at);
+            let bp = PlaneRows::from_ternary_transposed(&bt3);
+            let (mut c_tiled, mut c_rd) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
+            tnn_gemm(&ap, &bp, &mut c_tiled);
+            tnn_gemm_rowdot(&ap, &bp, &mut c_rd);
+            assert_eq!(c_tiled.data, c_rd.data, "tnn m={m} n={n} k={k}");
+
+            let (mut c_tiled, mut c_rd) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
+            tbn_gemm(&ap, &bb, &mut c_tiled);
+            tbn_gemm_rowdot(&ap, &bb, &mut c_rd);
+            assert_eq!(c_tiled.data, c_rd.data, "tbn m={m} n={n} k={k}");
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Native (portable-Rust) fast paths for every algorithm — the wall-clock
-//! measurement substrate for the paper's Table III.
+//! measurement substrate for the paper's Table III, organized as a
+//! four-level blocked execution hierarchy.
 //!
 //! The emulated microkernels in [`crate::gemm::micro`] reproduce the
 //! paper's *instruction streams*; these paths reproduce the paper's
@@ -10,14 +11,51 @@
 //! algorithms then reflects the same bits-per-operation and
 //! memory-traffic ratios that drive the paper's measured Table III.
 //!
+//! # The execution hierarchy
+//!
+//! From the outside in, a native multiplication is structured as:
+//!
+//! 1. **Thread bands** ([`block::parallel_row_bands`]): C is split into
+//!    contiguous row bands, one scoped worker thread per band (row count
+//!    chosen by a [`block::Threading`] config). Rows of C are independent
+//!    in every algorithm, so bands share nothing and results are
+//!    bit-identical at any thread count.
+//! 2. **Cache-blocked column panels** ([`block::blocks`] /
+//!    [`block::n_panel`]): within a band, the column loop walks B in
+//!    panels sized so a panel's packed words fit in L1; the panel then
+//!    stays hot across the band's entire row loop instead of being
+//!    re-streamed from memory once per A-row.
+//! 3. **Register tiles** (`kernels::*_band`): within a panel, outputs are
+//!    computed as R×C tiles — 4×2 for BNN/daBNN, 2×2 for TNN/TBN (each
+//!    ternary output carries two accumulators, z⁺ and z⁻), 4×8 for
+//!    F32/U8 — with all accumulators live in registers. Each loaded A
+//!    word is used C times and each B word R times, the same
+//!    loads-per-operation reduction the paper's 16×8 NEON microkernel
+//!    achieves with value broadcasting (§III-B).
+//! 4. **Vectorized inner dots** ([`simd_popcnt`]): the per-tile word loop
+//!    is an AVX2 `vpshufb` nibble-LUT popcount (Mula's method) where
+//!    available, with scalar `count_ones` fallback and differential tests
+//!    between the two everywhere.
+//!
+//! The seed's one-output-at-a-time kernels survive as
+//! `kernels::*_gemm_rowdot`; `benches/gemm_micro` tracks the tiled and
+//! threaded speedup over them and emits `BENCH_gemm.json` for trend
+//! tracking across PRs.
+//!
 //! Layout types ([`BitRows`], [`PlaneRows`]) hold bit-packed rows of the
 //! left matrix and bit-packed *columns* of the right matrix (i.e. `B` is
-//! stored transposed), so all inner loops stream contiguous words.
+//! stored transposed), so all inner loops stream contiguous words. Both
+//! support allocation-free repacking (`repack_*`) into caller-owned
+//! storage — the conv layers' scratch arenas
+//! ([`crate::conv::conv2d::ConvScratch`]) rely on this to keep
+//! steady-state forward passes heap-allocation-free.
 
 pub mod bits;
+pub mod block;
+pub mod kernels;
 pub mod pack_fast;
 pub mod simd_popcnt;
-pub mod kernels;
 
 pub use bits::{BitRows, PlaneRows};
+pub use block::{bnn_gemm_mt, dabnn_gemm_mt, f32_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, u8_gemm_mt, Threading};
 pub use kernels::*;

@@ -69,6 +69,63 @@ pub fn tbn_popcnt(ap: &[u64], am: &[u64], t: &[u64]) -> (u32, u32) {
     scalar_tbn_popcnt(ap, am, t)
 }
 
+// ---- register-tile primitives -----------------------------------------
+//
+// The row-dot entry points above amortize one A-row across at most two B
+// columns. The tile entry points below are the inner loops of the blocked
+// kernels: R A-rows × C B-columns of output with all R·C (or 2·R·C for
+// the signed plane kinds) accumulators live in registers, so each loaded
+// word of A is used C times and each loaded word of B is used R times —
+// the register-reuse structure of the paper's 16×8 microkernel.
+
+/// 4×2 binary tile: `s[r][c] = Σ popcount(a[r] ⊕ b_c)`.
+#[inline]
+pub fn xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
+    debug_assert!(a.iter().all(|r| r.len() == b0.len()) && b0.len() == b1.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return unsafe { avx2::xor_popcnt_4x2(a, b0, b1) };
+        }
+    }
+    scalar_xor_popcnt_4x2(a, b0, b1)
+}
+
+/// 2×2 ternary tile: `s[r][c] = (z⁺, z⁻)` plane popcounts of row `r`
+/// against column `c` (eq. (7) per output).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn tnn_popcnt_2x2(
+    ap: [&[u64]; 2],
+    am: [&[u64]; 2],
+    bp0: &[u64],
+    bm0: &[u64],
+    bp1: &[u64],
+    bm1: &[u64],
+) -> [[(u32, u32); 2]; 2] {
+    debug_assert!(ap[0].len() == bp0.len() && bp0.len() == bp1.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return unsafe { avx2::tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1) };
+        }
+    }
+    scalar_tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1)
+}
+
+/// 2×2 ternary×binary tile (bit-columns `t0`, `t1`; 1 encodes −1).
+#[inline]
+pub fn tbn_popcnt_2x2(ap: [&[u64]; 2], am: [&[u64]; 2], t0: &[u64], t1: &[u64]) -> [[(u32, u32); 2]; 2] {
+    debug_assert!(ap[0].len() == t0.len() && t0.len() == t1.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return unsafe { avx2::tbn_popcnt_2x2(ap, am, t0, t1) };
+        }
+    }
+    scalar_tbn_popcnt_2x2(ap, am, t0, t1)
+}
+
 // ---- scalar reference paths (and non-x86 fallback) --------------------
 
 pub fn scalar_xor_popcnt(a: &[u64], b: &[u64]) -> u32 {
@@ -91,6 +148,57 @@ pub fn scalar_tbn_popcnt(ap: &[u64], am: &[u64], t: &[u64]) -> (u32, u32) {
         m += ((ap[i] & t[i]) | (am[i] & !t[i])).count_ones();
     }
     (p, m)
+}
+
+pub fn scalar_xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
+    let mut s = [[0u32; 2]; 4];
+    for t in 0..b0.len() {
+        let (w0, w1) = (b0[t], b1[t]);
+        for r in 0..4 {
+            let av = a[r][t];
+            s[r][0] += (av ^ w0).count_ones();
+            s[r][1] += (av ^ w1).count_ones();
+        }
+    }
+    s
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn scalar_tnn_popcnt_2x2(
+    ap: [&[u64]; 2],
+    am: [&[u64]; 2],
+    bp0: &[u64],
+    bm0: &[u64],
+    bp1: &[u64],
+    bm1: &[u64],
+) -> [[(u32, u32); 2]; 2] {
+    let mut s = [[(0u32, 0u32); 2]; 2];
+    for t in 0..bp0.len() {
+        let cols = [(bp0[t], bm0[t]), (bp1[t], bm1[t])];
+        for r in 0..2 {
+            let (xp, xm) = (ap[r][t], am[r][t]);
+            for (c, &(yp, ym)) in cols.iter().enumerate() {
+                s[r][c].0 += ((xp & yp) | (xm & ym)).count_ones();
+                s[r][c].1 += ((xp & ym) | (xm & yp)).count_ones();
+            }
+        }
+    }
+    s
+}
+
+pub fn scalar_tbn_popcnt_2x2(ap: [&[u64]; 2], am: [&[u64]; 2], t0: &[u64], t1: &[u64]) -> [[(u32, u32); 2]; 2] {
+    let mut s = [[(0u32, 0u32); 2]; 2];
+    for t in 0..t0.len() {
+        let cols = [t0[t], t1[t]];
+        for r in 0..2 {
+            let (xp, xm) = (ap[r][t], am[r][t]);
+            for (c, &tv) in cols.iter().enumerate() {
+                s[r][c].0 += ((xp & !tv) | (xm & tv)).count_ones();
+                s[r][c].1 += ((xp & tv) | (xm & !tv)).count_ones();
+            }
+        }
+    }
+    s
 }
 
 // ---- AVX2 implementations ---------------------------------------------
@@ -224,6 +332,128 @@ mod avx2 {
         }
         (p, m)
     }
+
+    /// One byte-popcount + per-lane horizontal add into a u64 accumulator.
+    #[inline]
+    unsafe fn acc_popcnt(acc: __m256i, x: __m256i, zero: __m256i) -> __m256i {
+        _mm256_add_epi64(acc, _mm256_sad_epu8(popcnt_bytes(x), zero))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
+        let n = b0.len();
+        let zero = _mm256_setzero_si256();
+        let mut acc = [[zero; 2]; 4];
+        let mut i = 0;
+        while i + 4 <= n {
+            let bv0 = loadu(b0.as_ptr().add(i));
+            let bv1 = loadu(b1.as_ptr().add(i));
+            for r in 0..4 {
+                let av = loadu(a[r].as_ptr().add(i));
+                acc[r][0] = acc_popcnt(acc[r][0], _mm256_xor_si256(av, bv0), zero);
+                acc[r][1] = acc_popcnt(acc[r][1], _mm256_xor_si256(av, bv1), zero);
+            }
+            i += 4;
+        }
+        let mut s = [[0u32; 2]; 4];
+        for r in 0..4 {
+            s[r][0] = hsum_epi64(acc[r][0]) as u32;
+            s[r][1] = hsum_epi64(acc[r][1]) as u32;
+            for t in i..n {
+                s[r][0] += (a[r][t] ^ b0[t]).count_ones();
+                s[r][1] += (a[r][t] ^ b1[t]).count_ones();
+            }
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn tnn_popcnt_2x2(
+        ap: [&[u64]; 2],
+        am: [&[u64]; 2],
+        bp0: &[u64],
+        bm0: &[u64],
+        bp1: &[u64],
+        bm1: &[u64],
+    ) -> [[(u32, u32); 2]; 2] {
+        let n = bp0.len();
+        let zero = _mm256_setzero_si256();
+        let mut accp = [[zero; 2]; 2];
+        let mut accm = [[zero; 2]; 2];
+        let mut i = 0;
+        while i + 4 <= n {
+            let yp = [loadu(bp0.as_ptr().add(i)), loadu(bp1.as_ptr().add(i))];
+            let ym = [loadu(bm0.as_ptr().add(i)), loadu(bm1.as_ptr().add(i))];
+            for r in 0..2 {
+                let xp = loadu(ap[r].as_ptr().add(i));
+                let xm = loadu(am[r].as_ptr().add(i));
+                for c in 0..2 {
+                    let zp = _mm256_or_si256(_mm256_and_si256(xp, yp[c]), _mm256_and_si256(xm, ym[c]));
+                    let zm = _mm256_or_si256(_mm256_and_si256(xp, ym[c]), _mm256_and_si256(xm, yp[c]));
+                    accp[r][c] = acc_popcnt(accp[r][c], zp, zero);
+                    accm[r][c] = acc_popcnt(accm[r][c], zm, zero);
+                }
+            }
+            i += 4;
+        }
+        let mut s = [[(0u32, 0u32); 2]; 2];
+        let cols = [(bp0, bm0), (bp1, bm1)];
+        for r in 0..2 {
+            for c in 0..2 {
+                let (mut p, mut m) = (hsum_epi64(accp[r][c]) as u32, hsum_epi64(accm[r][c]) as u32);
+                let (bp, bm) = cols[c];
+                for t in i..n {
+                    p += ((ap[r][t] & bp[t]) | (am[r][t] & bm[t])).count_ones();
+                    m += ((ap[r][t] & bm[t]) | (am[r][t] & bp[t])).count_ones();
+                }
+                s[r][c] = (p, m);
+            }
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tbn_popcnt_2x2(
+        ap: [&[u64]; 2],
+        am: [&[u64]; 2],
+        t0: &[u64],
+        t1: &[u64],
+    ) -> [[(u32, u32); 2]; 2] {
+        let n = t0.len();
+        let zero = _mm256_setzero_si256();
+        let mut accp = [[zero; 2]; 2];
+        let mut accm = [[zero; 2]; 2];
+        let mut i = 0;
+        while i + 4 <= n {
+            let tv = [loadu(t0.as_ptr().add(i)), loadu(t1.as_ptr().add(i))];
+            for r in 0..2 {
+                let xp = loadu(ap[r].as_ptr().add(i));
+                let xm = loadu(am[r].as_ptr().add(i));
+                for c in 0..2 {
+                    let zp = _mm256_or_si256(_mm256_andnot_si256(tv[c], xp), _mm256_and_si256(xm, tv[c]));
+                    let zm = _mm256_or_si256(_mm256_and_si256(xp, tv[c]), _mm256_andnot_si256(tv[c], xm));
+                    accp[r][c] = acc_popcnt(accp[r][c], zp, zero);
+                    accm[r][c] = acc_popcnt(accm[r][c], zm, zero);
+                }
+            }
+            i += 4;
+        }
+        let mut s = [[(0u32, 0u32); 2]; 2];
+        let cols = [t0, t1];
+        for r in 0..2 {
+            for c in 0..2 {
+                let (mut p, mut m) = (hsum_epi64(accp[r][c]) as u32, hsum_epi64(accm[r][c]) as u32);
+                let tw = cols[c];
+                for t in i..n {
+                    p += ((ap[r][t] & !tw[t]) | (am[r][t] & tw[t])).count_ones();
+                    m += ((ap[r][t] & tw[t]) | (am[r][t] & !tw[t])).count_ones();
+                }
+                s[r][c] = (p, m);
+            }
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -278,5 +508,66 @@ mod tests {
         assert_eq!(xor_popcnt(&[0, u64::MAX], &[0, 0]), 64);
         assert_eq!(scalar_tnn_popcnt(&[0b11], &[0], &[0b01], &[0]), (1, 0));
         assert_eq!(scalar_tbn_popcnt(&[0b11], &[0], &[0b01]), (1, 1));
+    }
+
+    /// Tile primitives ≡ the corresponding single-dot primitives, per
+    /// output element, on all lengths covering main loop + every tail.
+    #[test]
+    fn xor_popcnt_4x2_matches_dots() {
+        let mut rng = Rng::new(0xABF);
+        for n in 0usize..=67 {
+            let a: Vec<Vec<u64>> = (0..4).map(|_| random_words(&mut rng, n)).collect();
+            let b0 = random_words(&mut rng, n);
+            let b1 = random_words(&mut rng, n);
+            let s = xor_popcnt_4x2([&a[0], &a[1], &a[2], &a[3]], &b0, &b1);
+            let sc = scalar_xor_popcnt_4x2([&a[0], &a[1], &a[2], &a[3]], &b0, &b1);
+            assert_eq!(s, sc, "n={n}");
+            for r in 0..4 {
+                assert_eq!(s[r][0], scalar_xor_popcnt(&a[r], &b0), "n={n} r={r}");
+                assert_eq!(s[r][1], scalar_xor_popcnt(&a[r], &b1), "n={n} r={r}");
+            }
+        }
+    }
+
+    fn random_planes(rng: &mut Rng, n: usize) -> (Vec<u64>, Vec<u64>) {
+        let x = random_words(rng, n);
+        let y = random_words(rng, n);
+        let p: Vec<u64> = (0..n).map(|i| x[i] & !y[i]).collect();
+        let m: Vec<u64> = (0..n).map(|i| y[i] & !x[i]).collect();
+        (p, m)
+    }
+
+    #[test]
+    fn tnn_popcnt_2x2_matches_dots() {
+        let mut rng = Rng::new(0xAC0);
+        for n in 0usize..=67 {
+            let (ap0, am0) = random_planes(&mut rng, n);
+            let (ap1, am1) = random_planes(&mut rng, n);
+            let (bp0, bm0) = random_planes(&mut rng, n);
+            let (bp1, bm1) = random_planes(&mut rng, n);
+            let s = tnn_popcnt_2x2([&ap0, &ap1], [&am0, &am1], &bp0, &bm0, &bp1, &bm1);
+            assert_eq!(s, scalar_tnn_popcnt_2x2([&ap0, &ap1], [&am0, &am1], &bp0, &bm0, &bp1, &bm1), "n={n}");
+            assert_eq!(s[0][0], scalar_tnn_popcnt(&ap0, &am0, &bp0, &bm0), "n={n}");
+            assert_eq!(s[0][1], scalar_tnn_popcnt(&ap0, &am0, &bp1, &bm1), "n={n}");
+            assert_eq!(s[1][0], scalar_tnn_popcnt(&ap1, &am1, &bp0, &bm0), "n={n}");
+            assert_eq!(s[1][1], scalar_tnn_popcnt(&ap1, &am1, &bp1, &bm1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tbn_popcnt_2x2_matches_dots() {
+        let mut rng = Rng::new(0xAC1);
+        for n in 0usize..=67 {
+            let (ap0, am0) = random_planes(&mut rng, n);
+            let (ap1, am1) = random_planes(&mut rng, n);
+            let t0 = random_words(&mut rng, n);
+            let t1 = random_words(&mut rng, n);
+            let s = tbn_popcnt_2x2([&ap0, &ap1], [&am0, &am1], &t0, &t1);
+            assert_eq!(s, scalar_tbn_popcnt_2x2([&ap0, &ap1], [&am0, &am1], &t0, &t1), "n={n}");
+            assert_eq!(s[0][0], scalar_tbn_popcnt(&ap0, &am0, &t0), "n={n}");
+            assert_eq!(s[0][1], scalar_tbn_popcnt(&ap0, &am0, &t1), "n={n}");
+            assert_eq!(s[1][0], scalar_tbn_popcnt(&ap1, &am1, &t0), "n={n}");
+            assert_eq!(s[1][1], scalar_tbn_popcnt(&ap1, &am1, &t1), "n={n}");
+        }
     }
 }

@@ -44,6 +44,10 @@ pub mod costmodel;
 pub mod gemm;
 pub mod nn;
 pub mod quant;
+/// PJRT bridge for AOT-compiled XLA artifacts. Gated behind the
+/// off-by-default `xla` cargo feature so the default build has zero
+/// external native dependencies (see Cargo.toml).
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod simd;
 pub mod util;

@@ -25,6 +25,7 @@ use tbgemm::gemm::encode;
 use tbgemm::gemm::Kind;
 use tbgemm::nn::builder::{build_from_config, NetConfig};
 use tbgemm::quant::overflow;
+#[cfg(feature = "xla")]
 use tbgemm::runtime::XlaRuntime;
 use tbgemm::simd::reg::Neon;
 use tbgemm::util::Rng;
@@ -57,14 +58,25 @@ fn main() {
         "serve" => cmd_serve(
             opt("--requests").and_then(|s| s.parse().ok()).unwrap_or(256),
             opt("--batch").and_then(|s| s.parse().ok()).unwrap_or(8),
+            parse_threading(opt("--threads").as_deref()),
         ),
+        #[cfg(feature = "xla")]
         "xla" => cmd_xla(args.get(1).map(String::as_str).unwrap_or("artifacts/model.hlo.txt")),
+        #[cfg(not(feature = "xla"))]
+        "xla" => {
+            eprintln!(
+                "this binary was built without the `xla` feature; add the `xla` and `anyhow` \
+                 crates to rust/Cargo.toml [dependencies] (kept out of the offline default \
+                 build — see the Cargo.toml [features] note), then rebuild with `--features xla`"
+            );
+            std::process::exit(1);
+        }
         _ => {
             println!("repro — 'Fast matrix multiplication for binary and ternary CNNs' reproduction");
             println!("usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|xla> [flags]");
             println!("  table3 flags: --predicted --smoke --reps N --inner N");
             println!("  infer flags:  --kind tnn|tbn|bnn --images N");
-            println!("  serve flags:  --requests N --batch N");
+            println!("  serve flags:  --requests N --batch N --threads auto|N");
         }
     }
 }
@@ -200,6 +212,16 @@ fn parse_kind(s: &str) -> ConvKind {
     }
 }
 
+/// `--threads auto|N` → a GEMM threading config (default single).
+fn parse_threading(s: Option<&str>) -> tbgemm::gemm::native::Threading {
+    use tbgemm::gemm::native::Threading;
+    match s {
+        Some("auto") => Threading::Auto,
+        Some(n) => n.parse().map(Threading::Fixed).unwrap_or(Threading::Single),
+        None => Threading::Single,
+    }
+}
+
 fn cmd_infer(kind: String, images: usize) {
     let kind = parse_kind(&kind);
     let cfg = NetConfig::mobile_cnn(kind, 28, 28, 1, 10);
@@ -217,15 +239,15 @@ fn cmd_infer(kind: String, images: usize) {
     println!("class histogram: {hist:?}");
 }
 
-fn cmd_serve(requests: usize, batch: usize) {
+fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::native::Threading) {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
     let net = build_from_config(&cfg, 0xCAFE);
     let server = InferenceServer::start(
-        Box::new(NativeEngine::new(net, "tnn-mobile")),
+        Box::new(NativeEngine::new(net, "tnn-mobile").with_threading(threading)),
         BatcherConfig { max_batch: batch, ..Default::default() },
         128,
     );
-    println!("serving {requests} requests (max_batch={batch})...");
+    println!("serving {requests} requests (max_batch={batch}, gemm threading {threading:?})...");
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
     let pending: Vec<_> = (0..requests).map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng))).collect();
@@ -241,6 +263,7 @@ fn cmd_serve(requests: usize, batch: usize) {
     );
 }
 
+#[cfg(feature = "xla")]
 fn cmd_xla(path: &str) {
     let rt = match XlaRuntime::cpu() {
         Ok(rt) => rt,

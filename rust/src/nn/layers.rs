@@ -280,6 +280,15 @@ impl Layer {
             Layer::MaxPool2 => "maxpool2",
         }
     }
+
+    /// Propagate a threading config to the layers that run a blocked GEMM
+    /// (currently the convolutions; the dense layers are single-row
+    /// multiplications with nothing to parallelize over).
+    pub fn set_threading(&mut self, threading: crate::gemm::native::Threading) {
+        if let Layer::QConv(l) = self {
+            l.conv.set_threading(threading);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -71,6 +71,13 @@ impl Network {
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
+
+    /// Set the GEMM threading config on every layer that runs one.
+    pub fn set_threading(&mut self, threading: crate::gemm::native::Threading) {
+        for layer in &mut self.layers {
+            layer.set_threading(threading);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,145 @@
+//! Differential tests for the blocked execution layer: tiled and
+//! multithreaded native kernels vs the scalar oracles and vs the seed's
+//! row-dot kernels, on adversarial shapes — m/n not multiples of the
+//! register tile, k not a multiple of 64 (partial last word), single-row
+//! and single-column matrices — at 1 through 8 threads.
+
+use tbgemm::gemm::native::kernels as nk;
+use tbgemm::gemm::native::{
+    bnn_gemm_mt, dabnn_gemm_mt, f32_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, u8_gemm_mt, BitRows, PlaneRows, Threading,
+};
+use tbgemm::gemm::reference;
+use tbgemm::util::mat::{MatF32, MatI32, MatI8, MatU8};
+use tbgemm::util::Rng;
+
+/// Shapes chosen to break every blocking boundary: register tiles (4×2,
+/// 2×2, 4×8), the 64-bit word, the L1 column panel, and the row bands.
+const SHAPES: [(usize, usize, usize); 9] = [
+    (1, 1, 1),
+    (1, 17, 64),
+    (17, 1, 63),
+    (3, 2, 65),
+    (5, 5, 127),
+    (8, 9, 128),
+    (13, 31, 130),
+    (33, 7, 257),
+    (65, 24, 512),
+];
+
+const THREADS: std::ops::RangeInclusive<usize> = 1..=8;
+
+#[test]
+fn lowbit_mt_matches_oracle_all_shapes_and_threads() {
+    let mut rng = Rng::new(0xB0B);
+    for &(m, n, k) in &SHAPES {
+        let ab = MatI8::random_binary(m, k, &mut rng);
+        let bb = MatI8::random_binary(k, n, &mut rng);
+        let at = MatI8::random_ternary(m, k, &mut rng);
+        let bt = MatI8::random_ternary(k, n, &mut rng);
+        let a_bits = BitRows::from_binary(&ab);
+        let b_bits = BitRows::from_binary_transposed(&bb);
+        let a_planes = PlaneRows::from_ternary(&at);
+        let b_planes = PlaneRows::from_ternary_transposed(&bt);
+        let want_bnn = reference::gemm_i8(&ab, &bb);
+        let want_tnn = reference::gemm_i8(&at, &bt);
+        let want_tbn = reference::gemm_i8(&at, &bb);
+        for threads in THREADS {
+            let th = Threading::Fixed(threads);
+            let mut c = MatI32::zeros(m, n);
+            bnn_gemm_mt(&a_bits, &b_bits, &mut c, th);
+            assert_eq!(c.data, want_bnn.data, "bnn m={m} n={n} k={k} t={threads}");
+            let mut c = MatI32::zeros(m, n);
+            tnn_gemm_mt(&a_planes, &b_planes, &mut c, th);
+            assert_eq!(c.data, want_tnn.data, "tnn m={m} n={n} k={k} t={threads}");
+            let mut c = MatI32::zeros(m, n);
+            tbn_gemm_mt(&a_planes, &b_bits, &mut c, th);
+            assert_eq!(c.data, want_tbn.data, "tbn m={m} n={n} k={k} t={threads}");
+        }
+    }
+}
+
+/// The tiled single-thread kernels equal the seed row-dot kernels exactly
+/// (same popcount arithmetic, different loop order — integers, so any
+/// reordering must be invisible).
+#[test]
+fn tiled_matches_rowdot_kernels() {
+    let mut rng = Rng::new(0xB0C);
+    for &(m, n, k) in &SHAPES {
+        let ab = MatI8::random_binary(m, k, &mut rng);
+        let bb = MatI8::random_binary(k, n, &mut rng);
+        let at = MatI8::random_ternary(m, k, &mut rng);
+        let a_bits = BitRows::from_binary(&ab);
+        let b_bits = BitRows::from_binary_transposed(&bb);
+        let a_planes = PlaneRows::from_ternary(&at);
+
+        let (mut tiled, mut rowdot) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
+        nk::bnn_gemm(&a_bits, &b_bits, &mut tiled);
+        nk::bnn_gemm_rowdot(&a_bits, &b_bits, &mut rowdot);
+        assert_eq!(tiled.data, rowdot.data, "bnn m={m} n={n} k={k}");
+
+        let (mut tiled, mut rowdot) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
+        nk::tbn_gemm(&a_planes, &b_bits, &mut tiled);
+        nk::tbn_gemm_rowdot(&a_planes, &b_bits, &mut rowdot);
+        assert_eq!(tiled.data, rowdot.data, "tbn m={m} n={n} k={k}");
+    }
+}
+
+/// daBNN keeps per-output f32 accumulation order under tiling and
+/// threading, so it stays bit-identical to the i32 oracle at these depths.
+#[test]
+fn dabnn_mt_matches_oracle() {
+    let mut rng = Rng::new(0xB0D);
+    for &(m, n, k) in &[(1usize, 5usize, 64usize), (9, 6, 130), (21, 13, 384)] {
+        let a = MatI8::random_binary(m, k, &mut rng);
+        let b = MatI8::random_binary(k, n, &mut rng);
+        let ab = BitRows::from_binary(&a);
+        let bb = BitRows::from_binary_transposed(&b);
+        let want = reference::gemm_i8(&a, &b);
+        for threads in [1usize, 3, 8] {
+            let mut c = MatF32::zeros(m, n);
+            dabnn_gemm_mt(&ab, &bb, &mut c, Threading::Fixed(threads));
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j}) t={threads}");
+                }
+            }
+        }
+    }
+}
+
+/// f32 threading preserves per-output accumulation order: threaded output
+/// is bit-identical to the single-threaded kernel.
+#[test]
+fn f32_mt_matches_single_thread_exactly() {
+    let mut rng = Rng::new(0xB0E);
+    for &(m, n, k) in &[(1usize, 9usize, 40usize), (13, 17, 33), (37, 25, 64)] {
+        let a = MatF32::random(m, k, &mut rng);
+        let b = MatF32::random(k, n, &mut rng);
+        let panels = nk::pack_b_panels_f32(&b);
+        let mut want = MatF32::zeros(m, n);
+        nk::f32_gemm(&a, &panels, n, &mut want);
+        for threads in THREADS {
+            let mut c = MatF32::zeros(m, n);
+            f32_gemm_mt(&a, &panels, n, &mut c, Threading::Fixed(threads));
+            assert_eq!(c.data, want.data, "m={m} n={n} k={k} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn u8_mt_matches_oracle() {
+    let mut rng = Rng::new(0xB0F);
+    for &(m, n, k) in &[(1usize, 8usize, 50usize), (11, 9, 64), (30, 23, 100)] {
+        let a = MatU8::random(m, k, &mut rng);
+        let b = MatU8::random(k, n, &mut rng);
+        let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
+        let panels = nk::pack_b_panels_u8(&b);
+        let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
+        let want = reference::gemm_u8_centered(&a, &b, za, zb);
+        for threads in [1usize, 2, 5, 8] {
+            let mut c = MatI32::zeros(m, n);
+            u8_gemm_mt(&a, &panels, n, za, zb, &col_sums, &mut c, Threading::Fixed(threads));
+            assert_eq!(c.data, want.data, "m={m} n={n} k={k} t={threads}");
+        }
+    }
+}
