@@ -11,7 +11,9 @@
 
 use tbgemm::bench::grid::time_algorithm;
 use tbgemm::gemm::native::kernels as nk;
-use tbgemm::gemm::native::{bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, BitRows, PlaneRows, Threading};
+use tbgemm::gemm::native::{
+    bnn_gemm_kp_mt, bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_kp_mt, tnn_gemm_mt, BitRows, KPanel, PlaneRows, Threading,
+};
 use tbgemm::gemm::Kind;
 use tbgemm::util::mat::{MatI32, MatI8};
 use tbgemm::util::timer::bench_loop;
@@ -123,6 +125,76 @@ fn main() {
     report("TBN", "tiled", t, t_rd, 1);
     let t = bench_loop(0.4, 50, || tbn_gemm_mt(&a_planes, &b_bits, &mut c, Threading::Auto)).mean;
     report("TBN", "tiled_mt", t, t_rd, cores);
+
+    // --- deep-K ladder: rowdot vs tiled vs K-paneled vs tiled_mt --------
+    // The K-panel level caps in-panel accumulation at the 16-bit-safe
+    // bound (32767); at K = 32768 `Auto` splits into two panels, below it
+    // the paneled path must track the tiled path (acceptance: no slower
+    // at K = 2048 — by construction, since Auto dispatches shallow K to
+    // the unpaneled band; `kpanel_forced` tracks the real spill cost).
+    println!("\ndeep-K ladder (BNN/TNN, 128×128×K, kernel only):");
+    let (m, n) = (128usize, 128usize);
+    for &k in &[2048usize, 8192, 32768] {
+        let mut rng = Rng::new(0xDEE9 + k as u64);
+        let ab = MatI8::random_binary(m, k, &mut rng);
+        let bb = MatI8::random_binary(k, n, &mut rng);
+        let at = MatI8::random_ternary(m, k, &mut rng);
+        let bt3 = MatI8::random_ternary(k, n, &mut rng);
+        let a_bits = BitRows::from_binary(&ab);
+        let b_bits = BitRows::from_binary_transposed(&bb);
+        let a_planes = PlaneRows::from_ternary(&at);
+        let b_planes = PlaneRows::from_ternary_transposed(&bt3);
+        let mut c = MatI32::zeros(m, n);
+        let mut report = |kind: &'static str, variant: &'static str, t: f64, rowdot_t: f64, threads: usize| {
+            println!(
+                "  {kind:<4} K={k:<6} {variant:<9} ({threads:>2} thr) {:>9.3} ms  {:>7.2} GMAC/s  {:>5.2}× vs rowdot",
+                t * 1e3,
+                (m * n * k) as f64 / t / 1e9,
+                rowdot_t / t
+            );
+            records.push(Record { kind, variant, m, n, k, ns_per_iter: t * 1e9 });
+        };
+
+        let t_rd = bench_loop(0.25, 30, || nk::bnn_gemm_rowdot(&a_bits, &b_bits, &mut c)).mean;
+        report("BNN", "rowdot", t_rd, t_rd, 1);
+        let t = bench_loop(0.25, 30, || nk::bnn_gemm(&a_bits, &b_bits, &mut c)).mean;
+        report("BNN", "tiled", t, t_rd, 1);
+        // Production path: Auto dispatches shallow K to the unpaneled
+        // band, so rungs below the bound match "tiled" by construction —
+        // recorded anyway as the regression signal: if the dispatch ever
+        // breaks, "kpanel" diverges from "tiled" at shallow K.
+        let t = bench_loop(0.25, 30, || {
+            bnn_gemm_kp_mt(&a_bits, &b_bits, &mut c, Threading::Single, KPanel::Auto)
+        })
+        .mean;
+        report("BNN", "kpanel", t, t_rd, 1);
+        // Forced spill path (1024-bit panels): the true K-panel overhead
+        // at every rung, not just past the 16-bit bound.
+        let t = bench_loop(0.25, 30, || {
+            bnn_gemm_kp_mt(&a_bits, &b_bits, &mut c, Threading::Single, KPanel::Depth(1024))
+        })
+        .mean;
+        report("BNN", "kpanel_forced", t, t_rd, 1);
+        let t = bench_loop(0.25, 30, || bnn_gemm_mt(&a_bits, &b_bits, &mut c, Threading::Auto)).mean;
+        report("BNN", "tiled_mt", t, t_rd, cores);
+
+        let t_rd = bench_loop(0.25, 30, || nk::tnn_gemm_rowdot(&a_planes, &b_planes, &mut c)).mean;
+        report("TNN", "rowdot", t_rd, t_rd, 1);
+        let t = bench_loop(0.25, 30, || nk::tnn_gemm(&a_planes, &b_planes, &mut c)).mean;
+        report("TNN", "tiled", t, t_rd, 1);
+        let t = bench_loop(0.25, 30, || {
+            tnn_gemm_kp_mt(&a_planes, &b_planes, &mut c, Threading::Single, KPanel::Auto)
+        })
+        .mean;
+        report("TNN", "kpanel", t, t_rd, 1);
+        let t = bench_loop(0.25, 30, || {
+            tnn_gemm_kp_mt(&a_planes, &b_planes, &mut c, Threading::Single, KPanel::Depth(1024))
+        })
+        .mean;
+        report("TNN", "kpanel_forced", t, t_rd, 1);
+        let t = bench_loop(0.25, 30, || tnn_gemm_mt(&a_planes, &b_planes, &mut c, Threading::Auto)).mean;
+        report("TNN", "tiled_mt", t, t_rd, cores);
+    }
 
     // --- packing-vs-kernel split for TNN --------------------------------
     let point = (120usize, 48usize, 256usize);

@@ -3,7 +3,7 @@
 
 use crate::conv::im2col::im2col_into;
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::block::{bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, Threading};
+use crate::gemm::native::block::{bnn_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, KPanel, Threading};
 use crate::gemm::native::{BitRows, PlaneRows};
 use crate::util::mat::{MatI32, MatI8};
 
@@ -113,6 +113,9 @@ pub struct LowBitConv {
     pub c_out: usize,
     /// Worker threads for the GEMM (default: single-threaded).
     pub threading: Threading,
+    /// Depth blocking for the GEMM (default: automatic — panels sized to
+    /// the kind's 16-bit-safe bound, one panel for shallow products).
+    pub k_panel: KPanel,
     /// Weights packed offline: bit rows (binary) or plane rows (ternary)
     /// of the transposed weight matrix.
     packed_bits: Option<BitRows>,
@@ -134,7 +137,16 @@ impl LowBitConv {
                 (None, Some(PlaneRows::from_ternary_transposed(weights)))
             }
         };
-        LowBitConv { kind, params, c_in, c_out, threading: Threading::Single, packed_bits, packed_planes }
+        LowBitConv {
+            kind,
+            params,
+            c_in,
+            c_out,
+            threading: Threading::Single,
+            k_panel: KPanel::Auto,
+            packed_bits,
+            packed_planes,
+        }
     }
 
     /// Builder-style threading override.
@@ -145,6 +157,12 @@ impl LowBitConv {
 
     pub fn set_threading(&mut self, threading: Threading) {
         self.threading = threading;
+    }
+
+    /// Builder-style K-panel override (deep-K depth blocking).
+    pub fn with_k_panel(mut self, k_panel: KPanel) -> Self {
+        self.k_panel = k_panel;
+        self
     }
 
     /// Run the convolution. Binary activations pad with `+1`, ternary
@@ -183,15 +201,33 @@ impl LowBitConv {
         match self.kind {
             ConvKind::Bnn => {
                 scratch.bits.repack_binary(&scratch.a);
-                bnn_gemm_mt(&scratch.bits, self.packed_bits.as_ref().unwrap(), &mut c, self.threading);
+                bnn_gemm_kp_mt(
+                    &scratch.bits,
+                    self.packed_bits.as_ref().unwrap(),
+                    &mut c,
+                    self.threading,
+                    self.k_panel,
+                );
             }
             ConvKind::Tnn => {
                 scratch.planes.repack_ternary(&scratch.a);
-                tnn_gemm_mt(&scratch.planes, self.packed_planes.as_ref().unwrap(), &mut c, self.threading);
+                tnn_gemm_kp_mt(
+                    &scratch.planes,
+                    self.packed_planes.as_ref().unwrap(),
+                    &mut c,
+                    self.threading,
+                    self.k_panel,
+                );
             }
             ConvKind::Tbn => {
                 scratch.planes.repack_ternary(&scratch.a);
-                tbn_gemm_mt(&scratch.planes, self.packed_bits.as_ref().unwrap(), &mut c, self.threading);
+                tbn_gemm_kp_mt(
+                    &scratch.planes,
+                    self.packed_bits.as_ref().unwrap(),
+                    &mut c,
+                    self.threading,
+                    self.k_panel,
+                );
             }
         }
         out.data = c.data;
@@ -298,6 +334,34 @@ mod tests {
             for threads in [2usize, 3, 8] {
                 let conv = LowBitConv::new(kind, p, c_in, &weights).with_threading(Threading::Fixed(threads));
                 assert_eq!(conv.forward(&input).data, want.data, "{kind:?} t={threads}");
+            }
+        }
+    }
+
+    /// Deep-im2col conv (3×3×128 → K = 1152) with explicit K panels and
+    /// threading matches the direct oracle — the end-to-end form of the
+    /// K-panel contract on the conv path.
+    #[test]
+    fn deep_k_conv_with_explicit_panels_matches_direct() {
+        use crate::gemm::native::Threading;
+        let mut rng = Rng::new(0xD6);
+        let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+        let (c_in, c_out) = (128, 6);
+        for kind in [ConvKind::Bnn, ConvKind::Tnn, ConvKind::Tbn] {
+            let weights = match kind {
+                ConvKind::Tnn => MatI8::random_ternary(p.depth(c_in), c_out, &mut rng),
+                _ => MatI8::random_binary(p.depth(c_in), c_out, &mut rng),
+            };
+            let input = match kind {
+                ConvKind::Bnn => Tensor3::random_binary(5, 5, c_in, &mut rng),
+                _ => Tensor3::random_ternary(5, 5, c_in, &mut rng),
+            };
+            let pad_value = if kind == ConvKind::Bnn { 1 } else { 0 };
+            let want = direct_conv_i8(&input, &weights, &p, pad_value);
+            for kp in [KPanel::Auto, KPanel::Depth(256), KPanel::Depth(64)] {
+                let conv =
+                    LowBitConv::new(kind, p, c_in, &weights).with_k_panel(kp).with_threading(Threading::Fixed(3));
+                assert_eq!(conv.forward(&input).data, want.data, "{kind:?} kp={kp:?}");
             }
         }
     }

@@ -14,7 +14,7 @@
 
 use crate::conv::conv2d::{ConvKind, ConvParams};
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::block::{bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, Threading};
+use crate::gemm::native::block::{bnn_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, KPanel, Threading};
 use crate::gemm::native::{BitRows, PlaneRows};
 use crate::util::mat::{MatI32, MatI8};
 
@@ -55,6 +55,8 @@ pub struct StripeConv {
     /// Worker threads for each stripe GEMM (default: single-threaded;
     /// stripes are short, so this pays off only for wide outputs).
     pub threading: Threading,
+    /// Depth blocking for each stripe GEMM (default: automatic).
+    pub k_panel: KPanel,
     packed_bits: Option<BitRows>,
     packed_planes: Option<PlaneRows>,
 }
@@ -73,12 +75,27 @@ impl StripeConv {
                 (None, Some(PlaneRows::from_ternary_transposed(weights)))
             }
         };
-        StripeConv { kind, params, c_in, c_out, threading: Threading::Single, packed_bits, packed_planes }
+        StripeConv {
+            kind,
+            params,
+            c_in,
+            c_out,
+            threading: Threading::Single,
+            k_panel: KPanel::Auto,
+            packed_bits,
+            packed_planes,
+        }
     }
 
     /// Builder-style threading override.
     pub fn with_threading(mut self, threading: Threading) -> Self {
         self.threading = threading;
+        self
+    }
+
+    /// Builder-style K-panel override (deep-K depth blocking).
+    pub fn with_k_panel(mut self, k_panel: KPanel) -> Self {
+        self.k_panel = k_panel;
         self
     }
 
@@ -147,15 +164,33 @@ impl StripeConv {
             match self.kind {
                 ConvKind::Bnn => {
                     scratch.bits.repack_binary(&scratch.stripe);
-                    bnn_gemm_mt(&scratch.bits, self.packed_bits.as_ref().unwrap(), &mut scratch.c, self.threading)
+                    bnn_gemm_kp_mt(
+                        &scratch.bits,
+                        self.packed_bits.as_ref().unwrap(),
+                        &mut scratch.c,
+                        self.threading,
+                        self.k_panel,
+                    )
                 }
                 ConvKind::Tnn => {
                     scratch.planes.repack_ternary(&scratch.stripe);
-                    tnn_gemm_mt(&scratch.planes, self.packed_planes.as_ref().unwrap(), &mut scratch.c, self.threading)
+                    tnn_gemm_kp_mt(
+                        &scratch.planes,
+                        self.packed_planes.as_ref().unwrap(),
+                        &mut scratch.c,
+                        self.threading,
+                        self.k_panel,
+                    )
                 }
                 ConvKind::Tbn => {
                     scratch.planes.repack_ternary(&scratch.stripe);
-                    tbn_gemm_mt(&scratch.planes, self.packed_bits.as_ref().unwrap(), &mut scratch.c, self.threading)
+                    tbn_gemm_kp_mt(
+                        &scratch.planes,
+                        self.packed_bits.as_ref().unwrap(),
+                        &mut scratch.c,
+                        self.threading,
+                        self.k_panel,
+                    )
                 }
             }
             // Stripe output is (ox, f)-major — exactly the HWC slice of

@@ -1,7 +1,9 @@
 //! Inference engines the coordinator can drive.
 
 use crate::conv::tensor::Tensor3;
+use crate::nn::layers::NetScratch;
 use crate::nn::network::Network;
+use std::cell::RefCell;
 
 /// A batched inference engine. Implementations must be `Send` so the
 /// worker thread can own them.
@@ -16,14 +18,19 @@ pub trait InferenceEngine: Send {
 }
 
 /// The native low-bit engine: the paper's kernels under a [`Network`].
+/// Holds a per-engine [`NetScratch`] arena reused across requests and
+/// batches, so steady-state inference performs no heap allocation on the
+/// GEMM paths (the worker thread owns the engine, so the `RefCell` is
+/// never contended).
 pub struct NativeEngine {
     pub network: Network,
     pub label: String,
+    scratch: RefCell<NetScratch>,
 }
 
 impl NativeEngine {
     pub fn new(network: Network, label: impl Into<String>) -> Self {
-        NativeEngine { network, label: label.into() }
+        NativeEngine { network, label: label.into(), scratch: RefCell::new(NetScratch::new()) }
     }
 
     /// Run every conv GEMM under this threading config. Intra-op
@@ -37,7 +44,8 @@ impl NativeEngine {
 
 impl InferenceEngine for NativeEngine {
     fn infer_batch(&self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
-        images.iter().map(|img| self.network.logits(img)).collect()
+        let scratch = &mut *self.scratch.borrow_mut();
+        images.iter().map(|img| self.network.logits_with(img, scratch)).collect()
     }
 
     fn input_dims(&self) -> (usize, usize, usize) {

@@ -26,6 +26,9 @@ use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
 /// k_max = 32767 bounds correctness; we use a cache-friendly block well
 /// below it and widen into i32 between blocks, removing the depth limit
 /// entirely while keeping in-block arithmetic identical to the paper's.
+/// The native path enforces the same bound through
+/// [`crate::gemm::native::block::safe_k`] / `KPanel` (a test below pins
+/// the two views of the Table II bounds to each other).
 pub const K_BLK_LOWBIT: usize = 4096;
 /// Depth-block for U4 (16-bit accumulators, k_max = 291 ⇒ largest even
 /// block is 290).
@@ -500,6 +503,17 @@ mod tests {
         let drv = GemmDriver::new_tnn(&b);
         let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
         assert_i32_eq(&c, &reference::gemm_i8(&a, &b), "deep k");
+    }
+
+    /// The emulated driver's depth blocks and the native path's K-panel
+    /// bounds are two views of the same Table II `k_max` limits.
+    #[test]
+    fn depth_blocks_respect_native_safe_k() {
+        use crate::gemm::native::block::safe_k;
+        assert!(K_BLK_LOWBIT <= safe_k(Kind::Tnn));
+        assert!(K_BLK_U4 < safe_k(Kind::U8)); // U4 u16 bound is far stricter
+        assert_eq!(K_BLK_U4 + 1, Kind::U4.k_max().unwrap() as usize);
+        assert_eq!(K_BLK_U8 + 1, safe_k(Kind::U8));
     }
 
     #[test]

@@ -69,6 +69,15 @@ impl BitRows {
     pub fn row(&self, r: usize) -> &[u64] {
         &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
     }
+
+    /// K-sliced row view: words `w0..w0+wn` of row `r` — one K panel of
+    /// the depth. The K-paneled kernels stream these windows so per-panel
+    /// popcount sums stay within the 16-bit accumulation bound.
+    #[inline]
+    pub fn row_window(&self, r: usize, w0: usize, wn: usize) -> &[u64] {
+        debug_assert!(w0 + wn <= self.words_per_row);
+        &self.data[r * self.words_per_row + w0..r * self.words_per_row + w0 + wn]
+    }
 }
 
 /// Rows of 2-bit ternary values as two bit planes (`+` and `−`).
@@ -149,6 +158,20 @@ impl PlaneRows {
     #[inline]
     pub fn minus_row(&self, r: usize) -> &[u64] {
         &self.minus[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// K-sliced `+`-plane view: words `w0..w0+wn` of row `r` (one K panel).
+    #[inline]
+    pub fn plus_window(&self, r: usize, w0: usize, wn: usize) -> &[u64] {
+        debug_assert!(w0 + wn <= self.words_per_row);
+        &self.plus[r * self.words_per_row + w0..r * self.words_per_row + w0 + wn]
+    }
+
+    /// K-sliced `−`-plane view: words `w0..w0+wn` of row `r` (one K panel).
+    #[inline]
+    pub fn minus_window(&self, r: usize, w0: usize, wn: usize) -> &[u64] {
+        debug_assert!(w0 + wn <= self.words_per_row);
+        &self.minus[r * self.words_per_row + w0..r * self.words_per_row + w0 + wn]
     }
 }
 
@@ -233,6 +256,28 @@ mod tests {
         let ptr = bits.data.as_ptr();
         bits.repack_binary(&m);
         assert_eq!(bits.data.as_ptr(), ptr, "repack reallocated at steady state");
+    }
+
+    /// K-sliced windows are exactly the corresponding sub-slices of the
+    /// full rows, for every window position and length.
+    #[test]
+    fn row_windows_match_row_slices() {
+        let mut rng = Rng::new(74);
+        let mb = MatI8::random_binary(4, 300, &mut rng);
+        let bits = BitRows::from_binary(&mb);
+        let mt = MatI8::random_ternary(4, 300, &mut rng);
+        let planes = PlaneRows::from_ternary(&mt);
+        let w = bits.words_per_row;
+        assert_eq!(w, 5);
+        for r in 0..4 {
+            for w0 in 0..w {
+                for wn in 0..=(w - w0) {
+                    assert_eq!(bits.row_window(r, w0, wn), &bits.row(r)[w0..w0 + wn]);
+                    assert_eq!(planes.plus_window(r, w0, wn), &planes.plus_row(r)[w0..w0 + wn]);
+                    assert_eq!(planes.minus_window(r, w0, wn), &planes.minus_row(r)[w0..w0 + wn]);
+                }
+            }
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::gemm::native::bits::{BitRows, PlaneRows};
 use crate::gemm::native::kernels;
+use crate::gemm::Kind;
 use crate::util::mat::{MatF32, MatI32, MatU8};
 
 /// Walk `0..total` in blocks of `step`: yields `(start, len)` pairs with
@@ -40,6 +41,71 @@ pub fn n_panel(words_per_row: usize, streams: usize) -> usize {
     let per_row = (words_per_row * streams).max(1);
     let p = (L1_WORDS / per_row).clamp(8, 256);
     p & !1
+}
+
+/// Largest depth (elements of K) whose in-panel accumulation is safe for
+/// `kind` — the paper's Table II `k_max`: the 16-bit register bound for
+/// the low-bit kinds (eq. (4)), the u32 bound for U8, the f32 exact-
+/// integer bound for daBNN, unbounded for F32.
+pub fn safe_k(kind: Kind) -> usize {
+    kind.k_max().map(|v| v as usize).unwrap_or(usize::MAX)
+}
+
+/// K-panel configuration: the depth-blocking level of the execution
+/// hierarchy (between the L1 column panels and the register tiles).
+/// Depth is split into panels whose in-panel accumulator sums fit the
+/// kind's [`safe_k`] bound; panel partials spill into 32-bit (or i64 /
+/// f32) accumulators between panels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KPanel {
+    /// One panel when the whole depth fits [`safe_k`]; otherwise the
+    /// smallest number of evenly-sized panels that all fit the bound.
+    #[default]
+    Auto,
+    /// Explicit panel depth in K elements (bits for the bit-packed kinds;
+    /// rounded up to whole u64 words there). Clamped to `1..=safe_k`.
+    Depth(usize),
+}
+
+impl KPanel {
+    /// Even split of `total` units into the fewest panels of at most
+    /// `bound` units each.
+    fn even_split(total: usize, bound: usize) -> usize {
+        if total == 0 {
+            return 1;
+        }
+        let panels = total.div_ceil(bound.max(1));
+        total.div_ceil(panels)
+    }
+
+    /// Resolve to a panel length in u64 words for a bit-packed kind with
+    /// depth `k` bits packed into `total_words` words per row.
+    ///
+    /// A single panel spanning all words is safe whenever `k <= safe_k`,
+    /// even if `total_words·64 > safe_k` — only real depth bits
+    /// accumulate. Interior panels of a split cover their full `w·64`
+    /// bits, so splits are bounded in words.
+    pub fn words(self, k: usize, total_words: usize, kind: Kind) -> usize {
+        let bound = safe_k(kind);
+        let bound_words = (bound / 64).max(1);
+        match self {
+            KPanel::Auto if k <= bound => total_words.max(1),
+            KPanel::Auto => Self::even_split(total_words, bound_words),
+            // An explicit depth covering the whole (bound-safe) product
+            // is a single panel; otherwise clamp to the word-safe bound.
+            KPanel::Depth(d) if d >= k && k <= bound => total_words.max(1),
+            KPanel::Depth(d) => d.div_ceil(64).clamp(1, bound_words),
+        }
+    }
+
+    /// Resolve to a panel length in K elements for the byte/float kinds.
+    pub fn elems(self, k: usize, kind: Kind) -> usize {
+        let bound = safe_k(kind);
+        match self {
+            KPanel::Auto => Self::even_split(k, bound),
+            KPanel::Depth(d) => d.clamp(1, bound),
+        }
+    }
 }
 
 /// Minimum C rows worth one worker thread: below this the spawn/join
@@ -94,57 +160,156 @@ where
     });
 }
 
-// ---- threaded drivers --------------------------------------------------
+// ---- threaded, K-paneled drivers ---------------------------------------
+//
+// Each `*_gemm_kp_mt` driver composes all four hierarchy levels: row
+// bands (threads) → L1 column panels → K panels → register tiles. The
+// `*_gemm_mt` forms are the production entry points and delegate with
+// `KPanel::Auto`, which resolves to a single panel whenever the depth
+// fits the kind's `safe_k` bound — making them bit-identical to the
+// unpaneled tiled kernels there, and exact beyond it for the integer
+// kinds (i32/i64 spill; daBNN's f32 spill stays exact only while the
+// total popcount fits f32's integer range, K < 2²⁴).
 
-/// Binary GEMM, tiled + cache-blocked + threaded over row bands.
-pub fn bnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+/// Binary GEMM, K-paneled + tiled + cache-blocked + threaded.
+pub fn bnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
+    let kpw = k_panel.words(a.k, a.words_per_row, Kind::Bnn);
+    let single = kpw >= a.words_per_row;
     parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
-        kernels::bnn_band(a, bt, row0, rows, band);
+        if single {
+            // One panel spans the whole depth: the unpaneled band is the
+            // same computation without the zero-fill + spill passes.
+            kernels::bnn_band(a, bt, row0, rows, band);
+        } else {
+            kernels::bnn_band_kp(a, bt, row0, rows, band, kpw);
+        }
+    });
+}
+
+/// Binary GEMM, tiled + cache-blocked + threaded over row bands.
+pub fn bnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+    bnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
+}
+
+/// Ternary GEMM, K-paneled + tiled + cache-blocked + threaded.
+pub fn tnn_gemm_kp_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    let kpw = k_panel.words(a.k, a.words_per_row, Kind::Tnn);
+    let single = kpw >= a.words_per_row;
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        if single {
+            kernels::tnn_band(a, bt, row0, rows, band);
+        } else {
+            kernels::tnn_band_kp(a, bt, row0, rows, band, kpw);
+        }
     });
 }
 
 /// Ternary GEMM, tiled + cache-blocked + threaded over row bands.
 pub fn tnn_gemm_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading) {
+    tnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
+}
+
+/// Ternary-binary GEMM, K-paneled + tiled + cache-blocked + threaded.
+pub fn tbn_gemm_kp_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
+    let kpw = k_panel.words(a.k, a.words_per_row, Kind::Tbn);
+    let single = kpw >= a.words_per_row;
     parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
-        kernels::tnn_band(a, bt, row0, rows, band);
+        if single {
+            kernels::tbn_band(a, bt, row0, rows, band);
+        } else {
+            kernels::tbn_band_kp(a, bt, row0, rows, band, kpw);
+        }
     });
 }
 
 /// Ternary-binary GEMM, tiled + cache-blocked + threaded over row bands.
 pub fn tbn_gemm_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+    tbn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
+}
+
+/// daBNN-style binary GEMM, K-paneled + threaded. f32 popcount partials
+/// are exact integers while sums stay below 2²⁴ (total K < 2²⁴, far
+/// above any real im2col depth), so results are bit-identical to
+/// [`kernels::dabnn_gemm`] at any thread count and panel size there.
+pub fn dabnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
+    let kpw = k_panel.words(a.k, a.words_per_row, Kind::DaBnn);
+    let single = kpw >= a.words_per_row;
     parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
-        kernels::tbn_band(a, bt, row0, rows, band);
+        if single {
+            kernels::dabnn_band(a, bt, row0, rows, band);
+        } else {
+            kernels::dabnn_band_kp(a, bt, row0, rows, band, kpw);
+        }
     });
 }
 
-/// daBNN-style binary GEMM, threaded over row bands. Per-output f32
-/// accumulation order is unchanged, so results are bit-identical to
-/// [`kernels::dabnn_gemm`] at any thread count.
+/// daBNN-style binary GEMM, threaded over row bands.
 pub fn dabnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Threading) {
-    assert_eq!(a.k, bt.k, "depth mismatch");
-    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    dabnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
+}
+
+/// f32 GEMM, K-paneled + threaded. With `KPanel::Auto` the depth stays a
+/// single panel (no f32 safe-K bound), keeping results bit-identical to
+/// [`kernels::f32_gemm`]; explicit panels change rounding association.
+pub fn f32_gemm_kp_mt(
+    a: &MatF32,
+    b_panels: &[Vec<f32>],
+    n: usize,
+    c: &mut MatF32,
+    threading: Threading,
+    k_panel: KPanel,
+) {
+    assert_eq!((c.rows, c.cols), (a.rows, n));
     let threads = threading.worker_count(a.rows);
-    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
-        kernels::dabnn_band(a, bt, row0, rows, band);
+    let kp = k_panel.elems(a.cols, Kind::F32);
+    let single = kp >= a.cols;
+    parallel_row_bands(&mut c.data, n, a.rows, threads, |row0, rows, band| {
+        if single {
+            kernels::f32_band(a, b_panels, n, row0, rows, band);
+        } else {
+            kernels::f32_band_kp(a, b_panels, n, row0, rows, band, kp);
+        }
     });
 }
 
 /// f32 GEMM, threaded over row bands. Per-output accumulation order is
 /// unchanged, so results are bit-identical to [`kernels::f32_gemm`].
 pub fn f32_gemm_mt(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32, threading: Threading) {
+    f32_gemm_kp_mt(a, b_panels, n, c, threading, KPanel::Auto);
+}
+
+/// u8 GEMM with zero-point compensation, K-paneled + threaded: u32
+/// in-panel accumulation, i64 spill and epilogue (exact past the u32
+/// depth bound where the unpaneled kernel would wrap).
+#[allow(clippy::too_many_arguments)]
+pub fn u8_gemm_kp_mt(
+    a: &MatU8,
+    b_panels: &[Vec<u8>],
+    n: usize,
+    za: i32,
+    zb: i32,
+    col_sums: &[i32],
+    c: &mut MatI32,
+    threading: Threading,
+    k_panel: KPanel,
+) {
     assert_eq!((c.rows, c.cols), (a.rows, n));
     let threads = threading.worker_count(a.rows);
+    let kp = k_panel.elems(a.cols, Kind::U8);
     parallel_row_bands(&mut c.data, n, a.rows, threads, |row0, rows, band| {
-        kernels::f32_band(a, b_panels, n, row0, rows, band);
+        kernels::u8_band_kp(a, b_panels, n, za, zb, col_sums, row0, rows, band, kp);
     });
 }
 
@@ -160,11 +325,7 @@ pub fn u8_gemm_mt(
     c: &mut MatI32,
     threading: Threading,
 ) {
-    assert_eq!((c.rows, c.cols), (a.rows, n));
-    let threads = threading.worker_count(a.rows);
-    parallel_row_bands(&mut c.data, n, a.rows, threads, |row0, rows, band| {
-        kernels::u8_band(a, b_panels, n, za, zb, col_sums, row0, rows, band);
-    });
+    u8_gemm_kp_mt(a, b_panels, n, za, zb, col_sums, c, threading, KPanel::Auto);
 }
 
 #[cfg(test)]
@@ -232,6 +393,89 @@ mod tests {
                         assert_eq!(data[r * cols + c], r as u32 + 1, "rows={rows} threads={threads} r={r}");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn safe_k_matches_paper_table2() {
+        assert_eq!(safe_k(Kind::Bnn), 32767);
+        assert_eq!(safe_k(Kind::Tnn), 32767);
+        assert_eq!(safe_k(Kind::Tbn), 32767);
+        assert_eq!(safe_k(Kind::U8), 66051);
+        assert_eq!(safe_k(Kind::DaBnn), (1 << 23) - 1);
+        assert_eq!(safe_k(Kind::F32), usize::MAX);
+    }
+
+    #[test]
+    fn kpanel_auto_splits_evenly_below_bound() {
+        // Any depth up to safe_k = 32767 is a single panel spanning all
+        // words — including 32767 bits in 512 words (only real depth
+        // bits accumulate).
+        assert_eq!(KPanel::Auto.words(32704, 511, Kind::Bnn), 511);
+        assert_eq!(KPanel::Auto.words(32767, 512, Kind::Bnn), 512);
+        // One bit past the bound splits; interior panels cover their
+        // full w·64 bits, so splits use the 511-word bound.
+        assert_eq!(KPanel::Auto.words(32768, 512, Kind::Bnn), 256);
+        // 1023 words of real depth need 3 panels under the 511-word
+        // bound → 341 each.
+        assert_eq!(KPanel::Auto.words(1023 * 64, 1023, Kind::Tnn), 341);
+        assert_eq!(KPanel::Auto.words(0, 0, Kind::Bnn), 1);
+        // Byte kinds split on element counts.
+        assert_eq!(KPanel::Auto.elems(66051, Kind::U8), 66051);
+        assert_eq!(KPanel::Auto.elems(66052, Kind::U8), 33026);
+        assert_eq!(KPanel::Auto.elems(1 << 20, Kind::F32), 1 << 20);
+    }
+
+    #[test]
+    fn kpanel_depth_rounds_and_clamps() {
+        assert_eq!(KPanel::Depth(1).words(6400, 100, Kind::Bnn), 1);
+        assert_eq!(KPanel::Depth(64).words(6400, 100, Kind::Bnn), 1);
+        assert_eq!(KPanel::Depth(65).words(6400, 100, Kind::Bnn), 2);
+        // An explicit depth covering a bound-safe product: one panel.
+        assert_eq!(KPanel::Depth(1 << 30).words(1000, 16, Kind::Bnn), 16);
+        // Requests above the safe bound on a deep product clamp to it.
+        assert_eq!(KPanel::Depth(1 << 30).words(1 << 26, 1 << 20, Kind::Bnn), 511);
+        assert_eq!(KPanel::Depth(1 << 30).elems(1 << 20, Kind::U8), 66051);
+        assert_eq!(KPanel::Depth(0).elems(10, Kind::U8), 1);
+    }
+
+    /// K-paneled drivers are bit-identical to the unpaneled tiled kernels
+    /// at every panel size, including panels of one word and panels
+    /// spanning the whole depth, at 1 and 4 threads.
+    #[test]
+    fn kp_matches_tiled_all_panel_sizes() {
+        let mut rng = Rng::new(0xB10D);
+        let (m, n, k) = (9usize, 7usize, 450usize); // 8 words incl. partial last
+        let ab1 = MatI8::random_binary(m, k, &mut rng);
+        let bb1 = MatI8::random_binary(k, n, &mut rng);
+        let at = MatI8::random_ternary(m, k, &mut rng);
+        let bt3 = MatI8::random_ternary(k, n, &mut rng);
+        let a_bits = BitRows::from_binary(&ab1);
+        let b_bits = BitRows::from_binary_transposed(&bb1);
+        let a_planes = PlaneRows::from_ternary(&at);
+        let b_planes = PlaneRows::from_ternary_transposed(&bt3);
+
+        let mut want_bnn = MatI32::zeros(m, n);
+        bnn_gemm(&a_bits, &b_bits, &mut want_bnn);
+        let mut want_tnn = MatI32::zeros(m, n);
+        tnn_gemm(&a_planes, &b_planes, &mut want_tnn);
+        let mut want_tbn = MatI32::zeros(m, n);
+        tbn_gemm(&a_planes, &b_bits, &mut want_tbn);
+
+        for depth in [1usize, 63, 64, 65, 128, 200, 449, 450, 1000] {
+            for threads in [1usize, 4] {
+                let th = Threading::Fixed(threads);
+                let kp = KPanel::Depth(depth);
+                let mut c = MatI32::zeros(m, n);
+                bnn_gemm_kp_mt(&a_bits, &b_bits, &mut c, th, kp);
+                assert_eq!(c.data, want_bnn.data, "bnn depth={depth} t={threads}");
+                let mut c = MatI32::zeros(m, n);
+                tnn_gemm_kp_mt(&a_planes, &b_planes, &mut c, th, kp);
+                assert_eq!(c.data, want_tnn.data, "tnn depth={depth} t={threads}");
+                let mut c = MatI32::zeros(m, n);
+                tbn_gemm_kp_mt(&a_planes, &b_bits, &mut c, th, kp);
+                assert_eq!(c.data, want_tbn.data, "tbn depth={depth} t={threads}");
             }
         }
     }

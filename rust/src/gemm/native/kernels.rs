@@ -86,6 +86,68 @@ pub(crate) fn bnn_band(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band
     }
 }
 
+/// Rows `row0..row0+rows` of the BNN product into `band`, computed in
+/// K panels of `kp_words` u64 words each. Within a panel the register
+/// tiles accumulate raw popcounts (the sums that must fit the paper's
+/// 16-bit accumulators, eq. (4)); between panels the partials spill into
+/// the i32 `band`, and the eq. (6) epilogue `k − 2·s` runs once at the
+/// end over the full-depth sums. Bit-identical to [`bnn_band`] because
+/// popcount partial sums are exact integers under any regrouping.
+pub(crate) fn bnn_band_kp(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [i32], kp_words: usize) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    let w = a.words_per_row;
+    let kp = kp_words.max(1);
+    band.fill(0);
+    for (j0, jn) in blocks(n, n_panel(kp.min(w.max(1)), 1)) {
+        let jend = j0 + jn;
+        for (w0, wn) in blocks(w, kp) {
+            let mut i = 0;
+            while i + 4 <= rows {
+                let ar = [
+                    a.row_window(row0 + i, w0, wn),
+                    a.row_window(row0 + i + 1, w0, wn),
+                    a.row_window(row0 + i + 2, w0, wn),
+                    a.row_window(row0 + i + 3, w0, wn),
+                ];
+                let mut j = j0;
+                while j + 2 <= jend {
+                    let s = xor_popcnt_4x2(ar, bt.row_window(j, w0, wn), bt.row_window(j + 1, w0, wn));
+                    for (r, sr) in s.iter().enumerate() {
+                        band[(i + r) * n + j] += sr[0] as i32;
+                        band[(i + r) * n + j + 1] += sr[1] as i32;
+                    }
+                    j += 2;
+                }
+                if j < jend {
+                    for (r, arr) in ar.iter().enumerate() {
+                        band[(i + r) * n + j] += xor_popcnt(arr, bt.row_window(j, w0, wn)) as i32;
+                    }
+                }
+                i += 4;
+            }
+            while i < rows {
+                let arr = a.row_window(row0 + i, w0, wn);
+                let mut j = j0;
+                while j + 2 <= jend {
+                    let (s0, s1) = xor_popcnt2(arr, bt.row_window(j, w0, wn), bt.row_window(j + 1, w0, wn));
+                    band[i * n + j] += s0 as i32;
+                    band[i * n + j + 1] += s1 as i32;
+                    j += 2;
+                }
+                if j < jend {
+                    band[i * n + j] += xor_popcnt(arr, bt.row_window(j, w0, wn)) as i32;
+                }
+                i += 1;
+            }
+        }
+    }
+    let k = a.k as i32;
+    for v in band.iter_mut() {
+        *v = k - 2 * *v;
+    }
+}
+
 /// The seed's BNN kernel: independent row-dots, 2× column unrolling.
 /// Kept as the differential / benchmark baseline for the tiled kernel.
 pub fn bnn_gemm_rowdot(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
@@ -160,6 +222,59 @@ pub(crate) fn tnn_band(a: &PlaneRows, bt: &PlaneRows, row0: usize, rows: usize, 
     }
 }
 
+/// K-paneled TNN band: per-panel plane popcounts (z⁺, z⁻) — each bounded
+/// by the panel depth, the 16-bit-safe quantity — spill their signed
+/// difference into the i32 `band` between panels. Bit-identical to
+/// [`tnn_band`] (integer partial sums regroup freely).
+pub(crate) fn tnn_band_kp(a: &PlaneRows, bt: &PlaneRows, row0: usize, rows: usize, band: &mut [i32], kp_words: usize) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    let w = a.words_per_row;
+    let kp = kp_words.max(1);
+    band.fill(0);
+    for (j0, jn) in blocks(n, n_panel(kp.min(w.max(1)), 2)) {
+        let jend = j0 + jn;
+        for (w0, wn) in blocks(w, kp) {
+            let mut i = 0;
+            while i + 2 <= rows {
+                let ap = [a.plus_window(row0 + i, w0, wn), a.plus_window(row0 + i + 1, w0, wn)];
+                let am = [a.minus_window(row0 + i, w0, wn), a.minus_window(row0 + i + 1, w0, wn)];
+                let mut j = j0;
+                while j + 2 <= jend {
+                    let s = tnn_popcnt_2x2(
+                        ap,
+                        am,
+                        bt.plus_window(j, w0, wn),
+                        bt.minus_window(j, w0, wn),
+                        bt.plus_window(j + 1, w0, wn),
+                        bt.minus_window(j + 1, w0, wn),
+                    );
+                    for (r, sr) in s.iter().enumerate() {
+                        band[(i + r) * n + j] += sr[0].0 as i32 - sr[0].1 as i32;
+                        band[(i + r) * n + j + 1] += sr[1].0 as i32 - sr[1].1 as i32;
+                    }
+                    j += 2;
+                }
+                if j < jend {
+                    for r in 0..2 {
+                        let (p, m) =
+                            tnn_popcnt(ap[r], am[r], bt.plus_window(j, w0, wn), bt.minus_window(j, w0, wn));
+                        band[(i + r) * n + j] += p as i32 - m as i32;
+                    }
+                }
+                i += 2;
+            }
+            if i < rows {
+                let (ap, am) = (a.plus_window(row0 + i, w0, wn), a.minus_window(row0 + i, w0, wn));
+                for j in j0..jend {
+                    let (p, m) = tnn_popcnt(ap, am, bt.plus_window(j, w0, wn), bt.minus_window(j, w0, wn));
+                    band[i * n + j] += p as i32 - m as i32;
+                }
+            }
+        }
+    }
+}
+
 /// The seed's TNN kernel: one vectorized plane-product pass per (i, j).
 pub fn tnn_gemm_rowdot(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
@@ -221,6 +336,50 @@ pub(crate) fn tbn_band(a: &PlaneRows, bt: &BitRows, row0: usize, rows: usize, ba
             for j in j0..jend {
                 let (p, m) = tbn_popcnt(ap, am, bt.row(j));
                 band[i * n + j] = p as i32 - m as i32;
+            }
+        }
+    }
+}
+
+/// K-paneled TBN band: as [`tnn_band_kp`] but against binary bit-columns.
+/// The ¬t padding-bit argument of [`tbn_gemm`] holds per window too:
+/// a⁺/a⁻ padding bits are 0, so the AND masks them in every panel.
+pub(crate) fn tbn_band_kp(a: &PlaneRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [i32], kp_words: usize) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    let w = a.words_per_row;
+    let kp = kp_words.max(1);
+    band.fill(0);
+    for (j0, jn) in blocks(n, n_panel(kp.min(w.max(1)), 1)) {
+        let jend = j0 + jn;
+        for (w0, wn) in blocks(w, kp) {
+            let mut i = 0;
+            while i + 2 <= rows {
+                let ap = [a.plus_window(row0 + i, w0, wn), a.plus_window(row0 + i + 1, w0, wn)];
+                let am = [a.minus_window(row0 + i, w0, wn), a.minus_window(row0 + i + 1, w0, wn)];
+                let mut j = j0;
+                while j + 2 <= jend {
+                    let s = tbn_popcnt_2x2(ap, am, bt.row_window(j, w0, wn), bt.row_window(j + 1, w0, wn));
+                    for (r, sr) in s.iter().enumerate() {
+                        band[(i + r) * n + j] += sr[0].0 as i32 - sr[0].1 as i32;
+                        band[(i + r) * n + j + 1] += sr[1].0 as i32 - sr[1].1 as i32;
+                    }
+                    j += 2;
+                }
+                if j < jend {
+                    for r in 0..2 {
+                        let (p, m) = tbn_popcnt(ap[r], am[r], bt.row_window(j, w0, wn));
+                        band[(i + r) * n + j] += p as i32 - m as i32;
+                    }
+                }
+                i += 2;
+            }
+            if i < rows {
+                let (ap, am) = (a.plus_window(row0 + i, w0, wn), a.minus_window(row0 + i, w0, wn));
+                for j in j0..jend {
+                    let (p, m) = tbn_popcnt(ap, am, bt.row_window(j, w0, wn));
+                    band[i * n + j] += p as i32 - m as i32;
+                }
             }
         }
     }
@@ -314,6 +473,78 @@ pub(crate) fn dabnn_band(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, ba
     }
 }
 
+/// K-paneled daBNN band: per-panel f32 chunk sums spill into the f32
+/// `band` between panels. Popcount partials are exact f32 integers
+/// (≤ k < 2²³), so any regrouping — including the panel boundaries
+/// falling inside a 2-word chunk pair — leaves results bit-identical
+/// to [`dabnn_band`].
+pub(crate) fn dabnn_band_kp(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [f32], kp_words: usize) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    let w = a.words_per_row;
+    let kp = kp_words.max(1);
+    band.fill(0.0);
+    for (j0, jn) in blocks(n, n_panel(kp.min(w.max(1)), 1)) {
+        let jend = j0 + jn;
+        for (w0, wn) in blocks(w, kp) {
+            let mut i = 0;
+            while i + 4 <= rows {
+                let ar = [
+                    a.row_window(row0 + i, w0, wn),
+                    a.row_window(row0 + i + 1, w0, wn),
+                    a.row_window(row0 + i + 2, w0, wn),
+                    a.row_window(row0 + i + 3, w0, wn),
+                ];
+                for j in j0..jend {
+                    let br = bt.row_window(j, w0, wn);
+                    let mut acc = [0f32; 4];
+                    let mut t = 0;
+                    while t + 2 <= wn {
+                        for (r, arr) in ar.iter().enumerate() {
+                            let s = (arr[t] ^ br[t]).count_ones() + (arr[t + 1] ^ br[t + 1]).count_ones();
+                            acc[r] += s as f32; // per-128-bit convert, as in daBNN
+                        }
+                        t += 2;
+                    }
+                    while t < wn {
+                        for (r, arr) in ar.iter().enumerate() {
+                            acc[r] += (arr[t] ^ br[t]).count_ones() as f32;
+                        }
+                        t += 1;
+                    }
+                    for (r, &av) in acc.iter().enumerate() {
+                        band[(i + r) * n + j] += av;
+                    }
+                }
+                i += 4;
+            }
+            while i < rows {
+                let arr = a.row_window(row0 + i, w0, wn);
+                for j in j0..jend {
+                    let br = bt.row_window(j, w0, wn);
+                    let mut acc = 0f32;
+                    let mut t = 0;
+                    while t + 2 <= wn {
+                        let s = (arr[t] ^ br[t]).count_ones() + (arr[t + 1] ^ br[t + 1]).count_ones();
+                        acc += s as f32;
+                        t += 2;
+                    }
+                    while t < wn {
+                        acc += (arr[t] ^ br[t]).count_ones() as f32;
+                        t += 1;
+                    }
+                    band[i * n + j] += acc;
+                }
+                i += 1;
+            }
+        }
+    }
+    let kf = a.k as f32;
+    for v in band.iter_mut() {
+        *v = kf - 2.0 * *v;
+    }
+}
+
 // -------------------------------------------------------------------
 // F32 baseline
 // -------------------------------------------------------------------
@@ -368,6 +599,82 @@ pub(crate) fn f32_band(a: &MatF32, b_panels: &[Vec<f32>], n: usize, row0: usize,
                 }
             }
             for (j, &v) in acc.iter().take(n_eff).enumerate() {
+                band[i * n + j0 + j] = v;
+            }
+            i += 1;
+        }
+    }
+}
+
+/// K-paneled f32 band: the depth loop is split into `kp` panels; each
+/// panel accumulates in registers and spills into per-tile wide sums.
+/// Unlike the integer kinds this *changes the rounding association*, so
+/// results can differ from [`f32_band`] in the last ulp — callers compare
+/// with a tolerance (as all f32 paths are tested against the oracle).
+pub(crate) fn f32_band_kp(
+    a: &MatF32,
+    b_panels: &[Vec<f32>],
+    n: usize,
+    row0: usize,
+    rows: usize,
+    band: &mut [f32],
+    kp: usize,
+) {
+    let k = a.cols;
+    let kp = kp.max(1);
+    debug_assert_eq!(band.len(), rows * n);
+    for (cb, panel) in b_panels.iter().enumerate() {
+        let j0 = cb * 8;
+        let n_eff = (n - j0).min(8);
+        let mut i = 0;
+        while i + 4 <= rows {
+            let mut wide = [[0f32; 8]; 4];
+            let rows4 = [
+                a.row_slice(row0 + i),
+                a.row_slice(row0 + i + 1),
+                a.row_slice(row0 + i + 2),
+                a.row_slice(row0 + i + 3),
+            ];
+            for (d0, dn) in blocks(k, kp) {
+                let mut acc = [[0f32; 8]; 4];
+                for d in d0..d0 + dn {
+                    let bv = &panel[d * 8..d * 8 + 8];
+                    for (r, row) in rows4.iter().enumerate() {
+                        let av = row[d];
+                        for j in 0..8 {
+                            acc[r][j] += av * bv[j];
+                        }
+                    }
+                }
+                for r in 0..4 {
+                    for j in 0..8 {
+                        wide[r][j] += acc[r][j];
+                    }
+                }
+            }
+            for (r, wr) in wide.iter().enumerate() {
+                for (j, &v) in wr.iter().take(n_eff).enumerate() {
+                    band[(i + r) * n + j0 + j] = v;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let mut wide = [0f32; 8];
+            let row = a.row_slice(row0 + i);
+            for (d0, dn) in blocks(k, kp) {
+                let mut acc = [0f32; 8];
+                for d in d0..d0 + dn {
+                    let bv = &panel[d * 8..d * 8 + 8];
+                    for j in 0..8 {
+                        acc[j] += row[d] * bv[j];
+                    }
+                }
+                for j in 0..8 {
+                    wide[j] += acc[j];
+                }
+            }
+            for (j, &v) in wide.iter().take(n_eff).enumerate() {
                 band[i * n + j0 + j] = v;
             }
             i += 1;
@@ -450,6 +757,101 @@ pub(crate) fn u8_band(
             for j in 0..n_eff {
                 let v = acc[j] as i32 - zb * row_sum as i32 - za * col_sums[j0 + j] + k as i32 * za * zb;
                 band[i * n + j0 + j] = v;
+            }
+            i += 1;
+        }
+    }
+}
+
+/// K-paneled u8 band: in-panel dot products and row sums accumulate in
+/// u32 (safe for panel depths up to the paper's k_max = 66051, eq. (4))
+/// and spill into i64 wide sums between panels; the eq. (3) epilogue runs
+/// in i64 over the full depth, so the paneled path stays exact at depths
+/// where the unpaneled u32 accumulation would wrap.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn u8_band_kp(
+    a: &MatU8,
+    b_panels: &[Vec<u8>],
+    n: usize,
+    za: i32,
+    zb: i32,
+    col_sums: &[i32],
+    row0: usize,
+    rows: usize,
+    band: &mut [i32],
+    kp: usize,
+) {
+    let k = a.cols;
+    // The driver (`KPanel::elems`) owns the u32-safe Table II depth
+    // bound; like the other band kernels this only guards degeneracy.
+    let kp = kp.max(1);
+    debug_assert_eq!(band.len(), rows * n);
+    for (cb, panel) in b_panels.iter().enumerate() {
+        let j0 = cb * 8;
+        let n_eff = (n - j0).min(8);
+        let mut i = 0;
+        while i + 4 <= rows {
+            let rows4 = [
+                &a.data[(row0 + i) * k..(row0 + i + 1) * k],
+                &a.data[(row0 + i + 1) * k..(row0 + i + 2) * k],
+                &a.data[(row0 + i + 2) * k..(row0 + i + 3) * k],
+                &a.data[(row0 + i + 3) * k..(row0 + i + 4) * k],
+            ];
+            let mut wide = [[0i64; 8]; 4];
+            let mut row_sum = [0i64; 4];
+            for (d0, dn) in blocks(k, kp) {
+                let mut acc = [[0u32; 8]; 4];
+                let mut rs = [0u32; 4];
+                for d in d0..d0 + dn {
+                    let bv = &panel[d * 8..d * 8 + 8];
+                    for (r, row) in rows4.iter().enumerate() {
+                        let a32 = row[d] as u32;
+                        rs[r] += a32;
+                        for j in 0..8 {
+                            acc[r][j] += a32 * bv[j] as u32;
+                        }
+                    }
+                }
+                for r in 0..4 {
+                    row_sum[r] += rs[r] as i64;
+                    for j in 0..8 {
+                        wide[r][j] += acc[r][j] as i64;
+                    }
+                }
+            }
+            for r in 0..4 {
+                for j in 0..n_eff {
+                    let v = wide[r][j] - zb as i64 * row_sum[r] - za as i64 * col_sums[j0 + j] as i64
+                        + k as i64 * za as i64 * zb as i64;
+                    band[(i + r) * n + j0 + j] = v as i32;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let row = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
+            let mut wide = [0i64; 8];
+            let mut row_sum = 0i64;
+            for (d0, dn) in blocks(k, kp) {
+                let mut acc = [0u32; 8];
+                let mut rs = 0u32;
+                for d in d0..d0 + dn {
+                    let bv = &panel[d * 8..d * 8 + 8];
+                    let a32 = row[d] as u32;
+                    rs += a32;
+                    for j in 0..8 {
+                        acc[j] += a32 * bv[j] as u32;
+                    }
+                }
+                row_sum += rs as i64;
+                for j in 0..8 {
+                    wide[j] += acc[j] as i64;
+                }
+            }
+            for j in 0..n_eff {
+                let v = wide[j] - zb as i64 * row_sum - za as i64 * col_sums[j0 + j] as i64
+                    + k as i64 * za as i64 * zb as i64;
+                band[i * n + j0 + j] = v as i32;
             }
             i += 1;
         }

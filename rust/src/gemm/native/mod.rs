@@ -13,7 +13,22 @@
 //!
 //! # The execution hierarchy
 //!
-//! From the outside in, a native multiplication is structured as:
+//! From the outside in, a native multiplication is structured as four
+//! blocking levels (register tile → K panel → N panel → row band, reading
+//! inside-out):
+//!
+//! ```text
+//! row band   (threads)   ┌──────────────────────────────────────────┐
+//!                        │ N panel (L1)   ┌───────────────────────┐ │
+//!                        │                │ K panel (16-bit safe) │ │
+//!                        │                │  ┌─────────────────┐  │ │
+//!                        │                │  │ register tile   │  │ │
+//!                        │                │  │ 4×2 / 2×2 / 4×8 │  │ │
+//!                        │                │  └─────────────────┘  │ │
+//!                        │                │   spill → i32 band    │ │
+//!                        │                └───────────────────────┘ │
+//!                        └──────────────────────────────────────────┘
+//! ```
 //!
 //! 1. **Thread bands** ([`block::parallel_row_bands`]): C is split into
 //!    contiguous row bands, one scoped worker thread per band (row count
@@ -25,17 +40,47 @@
 //!    panels sized so a panel's packed words fit in L1; the panel then
 //!    stays hot across the band's entire row loop instead of being
 //!    re-streamed from memory once per A-row.
-//! 3. **Register tiles** (`kernels::*_band`): within a panel, outputs are
+//! 3. **K panels** ([`block::KPanel`], `kernels::*_band_kp`): within a
+//!    column panel, the depth loop is split into panels whose in-panel
+//!    accumulator sums fit the kind's safe bound ([`block::safe_k`], the
+//!    paper's Table II `k_max`); panel partials spill into the row band's
+//!    i32 (daBNN: f32, U8: i64) accumulators between panels, and the
+//!    per-kind epilogue runs once over the full-depth sums. Per-kind
+//!    safe-K formula (eq. (4) family):
+//!
+//!    | kind            | in-panel accumulator    | safe K               |
+//!    |-----------------|-------------------------|----------------------|
+//!    | BNN / TNN / TBN | signed 16-bit (\|z\|≤1) | 2¹⁵ − 1 = 32767      |
+//!    | U4              | u16 / (15·15)           | 291                  |
+//!    | U8              | u32 / (255·255)         | 66051                |
+//!    | daBNN           | f32 exact integers      | 2²³ − 1              |
+//!    | F32             | f32 (lossy anyway)      | unbounded            |
+//!
+//!    `KPanel::Auto` resolves to a single panel whenever K fits the
+//!    bound, and the drivers then dispatch straight to the unpaneled
+//!    band kernels (no spill passes, trivially bit-identical; U8 is the
+//!    deliberate exception — it always takes the paneled band, whose
+//!    i64 epilogue is exact where `u8_band`'s i32 epilogue can wrap) —
+//!    proven
+//!    word-for-word by `tests/gemm_property.rs` — while the multi-panel
+//!    spill makes deep products (K > 32767) exact where pure 16-bit
+//!    accumulation would wrap (`tests/overflow_boundary.rs`). The
+//!    `*_band` / `*_band_kp` kernel pairs are deliberate: `*_band` is
+//!    the shallow-K fast path, `*_band_kp` the deep-K path; changes to
+//!    the tile loops must be mirrored in both (the property suite pins
+//!    them together).
+//! 4. **Register tiles** (`kernels::*_band`): within a panel, outputs are
 //!    computed as R×C tiles — 4×2 for BNN/daBNN, 2×2 for TNN/TBN (each
 //!    ternary output carries two accumulators, z⁺ and z⁻), 4×8 for
 //!    F32/U8 — with all accumulators live in registers. Each loaded A
 //!    word is used C times and each B word R times, the same
 //!    loads-per-operation reduction the paper's 16×8 NEON microkernel
 //!    achieves with value broadcasting (§III-B).
-//! 4. **Vectorized inner dots** ([`simd_popcnt`]): the per-tile word loop
-//!    is an AVX2 `vpshufb` nibble-LUT popcount (Mula's method) where
-//!    available, with scalar `count_ones` fallback and differential tests
-//!    between the two everywhere.
+//!
+//! Below the tiles, the **vectorized inner dots** ([`simd_popcnt`]): the
+//! per-tile word loop is an AVX2 `vpshufb` nibble-LUT popcount (Mula's
+//! method) where available, with scalar `count_ones` fallback and
+//! differential tests between the two everywhere.
 //!
 //! The seed's one-output-at-a-time kernels survive as
 //! `kernels::*_gemm_rowdot`; `benches/gemm_micro` tracks the tiled and
@@ -57,5 +102,8 @@ pub mod pack_fast;
 pub mod simd_popcnt;
 
 pub use bits::{BitRows, PlaneRows};
-pub use block::{bnn_gemm_mt, dabnn_gemm_mt, f32_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, u8_gemm_mt, Threading};
+pub use block::{
+    bnn_gemm_kp_mt, bnn_gemm_mt, dabnn_gemm_kp_mt, dabnn_gemm_mt, f32_gemm_kp_mt, f32_gemm_mt, safe_k,
+    tbn_gemm_kp_mt, tbn_gemm_mt, tnn_gemm_kp_mt, tnn_gemm_mt, u8_gemm_kp_mt, u8_gemm_mt, KPanel, Threading,
+};
 pub use kernels::*;

@@ -1,9 +1,10 @@
 //! Layers of the QNN engine.
 
-use crate::conv::conv2d::{ConvKind, LowBitConv};
+use crate::conv::conv2d::{ConvKind, ConvScratch, LowBitConv};
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
-use crate::gemm::native::{BitRows, PlaneRows};
+use crate::gemm::native::{
+    bnn_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, BitRows, KPanel, PlaneRows, Threading,
+};
 use crate::util::mat::{MatF32, MatI32, MatI8};
 
 /// Activation quantizer applied after the folded affine.
@@ -83,8 +84,18 @@ pub struct QConv2d {
 }
 
 impl QConv2d {
+    /// One-shot forward (allocates fresh scratch). Hot callers hold a
+    /// [`ConvScratch`] + accumulator tensor and use
+    /// [`QConv2d::forward_with`].
     pub fn forward(&self, input: &Tensor3<i8>) -> Feature {
-        let acc = self.conv.forward(input);
+        let mut scratch = ConvScratch::new();
+        let mut acc = Tensor3::zeros(0, 0, 0);
+        self.forward_with(input, &mut scratch, &mut acc)
+    }
+
+    /// Forward using caller-owned conv scratch and accumulator storage.
+    pub fn forward_with(&self, input: &Tensor3<i8>, scratch: &mut ConvScratch, acc: &mut Tensor3<i32>) -> Feature {
+        self.conv.forward_into(input, scratch, acc);
         let c = acc.c;
         match self.act {
             Activation::None => {
@@ -104,6 +115,57 @@ impl QConv2d {
                 Feature::Q(out)
             }
         }
+    }
+}
+
+/// Reusable scratch arena for [`QDense::forward_with`], mirroring
+/// [`ConvScratch`]: the flattened activation row, its packed bit/plane
+/// form, and the GEMM output row. Grown on demand and reused, so
+/// steady-state dense forwards perform no heap allocation in the GEMM.
+pub struct DenseScratch {
+    a: MatI8,
+    bits: BitRows,
+    planes: PlaneRows,
+    c: MatI32,
+}
+
+impl DenseScratch {
+    pub fn new() -> Self {
+        DenseScratch {
+            a: MatI8::zeros(0, 0),
+            bits: BitRows::empty(),
+            planes: PlaneRows::empty(),
+            c: MatI32::zeros(0, 0),
+        }
+    }
+}
+
+impl Default for DenseScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-network scratch threaded through [`crate::nn::Network`] forward
+/// passes: one conv arena + accumulator tensor shared by all conv layers
+/// (shapes only shrink or grow monotonically toward the largest layer)
+/// and one dense arena shared by all dense layers.
+pub struct NetScratch {
+    pub conv: ConvScratch,
+    pub dense: DenseScratch,
+    /// Reused integer accumulator tensor for conv layers.
+    pub conv_acc: Tensor3<i32>,
+}
+
+impl NetScratch {
+    pub fn new() -> Self {
+        NetScratch { conv: ConvScratch::new(), dense: DenseScratch::new(), conv_acc: Tensor3::zeros(0, 0, 0) }
+    }
+}
+
+impl Default for NetScratch {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -146,16 +208,63 @@ impl QDense {
         }
     }
 
+    /// One-shot forward (allocates fresh scratch). Hot callers hold a
+    /// [`DenseScratch`] and use [`QDense::forward_with`].
     pub fn forward(&self, input: &Tensor3<i8>) -> Feature {
+        let mut scratch = DenseScratch::new();
+        self.forward_with(input, &mut scratch)
+    }
+
+    /// Forward using caller-owned scratch: the flatten, the bit/plane
+    /// packing and the GEMM output all reuse the arena's buffers, so a
+    /// steady-state sequence of calls performs no heap allocation on the
+    /// GEMM path (the returned `Feature` still owns fresh storage).
+    pub fn forward_with(&self, input: &Tensor3<i8>, scratch: &mut DenseScratch) -> Feature {
         let flat = input.h * input.w * input.c;
         assert_eq!(flat, self.in_features, "dense input size mismatch");
-        let a = MatI8 { rows: 1, cols: flat, data: input.data.clone() };
-        let mut c = MatI32::zeros(1, self.out_features);
+        scratch.a.rows = 1;
+        scratch.a.cols = flat;
+        scratch.a.data.clear();
+        scratch.a.data.extend_from_slice(&input.data);
+        scratch.c.rows = 1;
+        scratch.c.cols = self.out_features;
+        scratch.c.data.clear();
+        scratch.c.data.resize(self.out_features, 0);
+        // Single activation row: nothing to thread over, but the K-panel
+        // level keeps even very deep flattened features exact.
         match self.kind {
-            ConvKind::Bnn => bnn_gemm(&BitRows::from_binary(&a), self.packed_bits.as_ref().unwrap(), &mut c),
-            ConvKind::Tnn => tnn_gemm(&PlaneRows::from_ternary(&a), self.packed_planes.as_ref().unwrap(), &mut c),
-            ConvKind::Tbn => tbn_gemm(&PlaneRows::from_ternary(&a), self.packed_bits.as_ref().unwrap(), &mut c),
+            ConvKind::Bnn => {
+                scratch.bits.repack_binary(&scratch.a);
+                bnn_gemm_kp_mt(
+                    &scratch.bits,
+                    self.packed_bits.as_ref().unwrap(),
+                    &mut scratch.c,
+                    Threading::Single,
+                    KPanel::Auto,
+                );
+            }
+            ConvKind::Tnn => {
+                scratch.planes.repack_ternary(&scratch.a);
+                tnn_gemm_kp_mt(
+                    &scratch.planes,
+                    self.packed_planes.as_ref().unwrap(),
+                    &mut scratch.c,
+                    Threading::Single,
+                    KPanel::Auto,
+                );
+            }
+            ConvKind::Tbn => {
+                scratch.planes.repack_ternary(&scratch.a);
+                tbn_gemm_kp_mt(
+                    &scratch.planes,
+                    self.packed_bits.as_ref().unwrap(),
+                    &mut scratch.c,
+                    Threading::Single,
+                    KPanel::Auto,
+                );
+            }
         }
+        let c = &scratch.c;
         match self.act {
             Activation::None => {
                 let data = c.data.iter().enumerate().map(|(j, &v)| self.scale[j] * v as f32 + self.bias[j]).collect();
@@ -248,10 +357,17 @@ pub enum Layer {
 
 impl Layer {
     pub fn forward(&self, x: Feature) -> Feature {
+        let mut scratch = NetScratch::new();
+        self.forward_with(x, &mut scratch)
+    }
+
+    /// Forward with a shared per-network scratch arena (the zero-alloc
+    /// hot path used by [`crate::nn::Network::forward_with`]).
+    pub fn forward_with(&self, x: Feature, scratch: &mut NetScratch) -> Feature {
         match self {
             Layer::InputQuant(l) => Feature::Q(l.forward(x.expect_f())),
-            Layer::QConv(l) => l.forward(x.expect_q()),
-            Layer::QDense(l) => l.forward(x.expect_q()),
+            Layer::QConv(l) => l.forward_with(x.expect_q(), &mut scratch.conv, &mut scratch.conv_acc),
+            Layer::QDense(l) => l.forward_with(x.expect_q(), &mut scratch.dense),
             Layer::DenseF32(l) => {
                 // The head accepts either f32 features or low-bit
                 // activations (which it widens to f32 — standard for a
@@ -341,6 +457,49 @@ mod tests {
         match dense.forward(&input) {
             Feature::F(out) => assert_eq!(out.c, 10),
             _ => panic!("expected f32 output"),
+        }
+    }
+
+    /// `forward_with` matches `forward` and, at steady state, the dense
+    /// scratch arena performs no reallocation — mirroring the
+    /// `ConvScratch` pointer-stability tests.
+    #[test]
+    fn dense_scratch_is_zero_alloc_at_steady_state() {
+        let mut rng = Rng::new(0xE2);
+        for kind in [ConvKind::Bnn, ConvKind::Tnn, ConvKind::Tbn] {
+            let w = match kind {
+                ConvKind::Tnn => MatI8::random_ternary(48, 10, &mut rng),
+                _ => MatI8::random_binary(48, 10, &mut rng),
+            };
+            let dense = QDense::new(kind, &w, vec![1.0; 10], vec![0.0; 10], Activation::None);
+            let input = match kind {
+                ConvKind::Bnn => Tensor3::random_binary(2, 3, 8, &mut rng),
+                _ => Tensor3::random_ternary(2, 3, 8, &mut rng),
+            };
+            let want = match dense.forward(&input) {
+                Feature::F(t) => t.data,
+                _ => panic!("expected f32 output"),
+            };
+            let mut scratch = DenseScratch::new();
+            let got = match dense.forward_with(&input, &mut scratch) {
+                Feature::F(t) => t.data,
+                _ => panic!("expected f32 output"),
+            };
+            assert_eq!(got, want, "{kind:?}");
+            let (a_ptr, c_ptr) = (scratch.a.data.as_ptr(), scratch.c.data.as_ptr());
+            let bits_ptr = scratch.bits.data.as_ptr();
+            let planes_ptr = scratch.planes.plus.as_ptr();
+            let got2 = match dense.forward_with(&input, &mut scratch) {
+                Feature::F(t) => t.data,
+                _ => panic!("expected f32 output"),
+            };
+            assert_eq!(got2, want, "{kind:?} second pass");
+            assert_eq!(scratch.a.data.as_ptr(), a_ptr, "{kind:?}: flatten buffer reallocated");
+            assert_eq!(scratch.c.data.as_ptr(), c_ptr, "{kind:?}: output buffer reallocated");
+            match kind {
+                ConvKind::Bnn => assert_eq!(scratch.bits.data.as_ptr(), bits_ptr, "bits reallocated"),
+                _ => assert_eq!(scratch.planes.plus.as_ptr(), planes_ptr, "planes reallocated"),
+            }
         }
     }
 

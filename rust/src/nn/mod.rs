@@ -24,6 +24,6 @@ pub mod network;
 pub mod twin;
 
 pub use builder::{build_from_config, LayerSpec, NetConfig};
-pub use layers::{Activation, Feature, Layer};
+pub use layers::{Activation, DenseScratch, Feature, Layer, NetScratch};
 pub use network::Network;
 pub use twin::{agreement, build_f32_twin, F32Twin};

@@ -1,7 +1,7 @@
 //! Sequential network executor with per-layer timing.
 
 use crate::conv::tensor::Tensor3;
-use crate::nn::layers::{Feature, Layer};
+use crate::nn::layers::{Feature, Layer, NetScratch};
 use std::time::Instant;
 
 /// Per-layer timing record from an instrumented forward pass.
@@ -25,19 +25,36 @@ impl Network {
     }
 
     /// Forward an f32 image through the network; returns the final
-    /// feature (logits for classifier nets).
+    /// feature (logits for classifier nets). Allocates fresh scratch;
+    /// hot callers (the batched engine) hold a [`NetScratch`] and use
+    /// [`Network::forward_with`].
     pub fn forward(&self, image: &Tensor3<f32>) -> Feature {
+        let mut scratch = NetScratch::new();
+        self.forward_with(image, &mut scratch)
+    }
+
+    /// Forward reusing a caller-owned scratch arena across layers (and,
+    /// via the caller, across images): the conv and dense GEMM paths
+    /// perform no heap allocation once the arena has grown to the
+    /// largest layer's shapes.
+    pub fn forward_with(&self, image: &Tensor3<f32>, scratch: &mut NetScratch) -> Feature {
         assert_eq!((image.h, image.w, image.c), self.input_dims, "input dims mismatch");
         let mut x = Feature::F(image.clone());
         for layer in &self.layers {
-            x = layer.forward(x);
+            x = layer.forward_with(x, scratch);
         }
         x
     }
 
     /// Forward returning classifier logits.
     pub fn logits(&self, image: &Tensor3<f32>) -> Vec<f32> {
-        match self.forward(image) {
+        let mut scratch = NetScratch::new();
+        self.logits_with(image, &mut scratch)
+    }
+
+    /// As [`Network::logits`] with caller-owned scratch.
+    pub fn logits_with(&self, image: &Tensor3<f32>, scratch: &mut NetScratch) -> Vec<f32> {
+        match self.forward_with(image, scratch) {
             Feature::F(t) => t.data,
             Feature::Q(t) => t.data.iter().map(|&v| v as f32).collect(),
         }
@@ -115,6 +132,24 @@ mod tests {
         let mut rng = Rng::new(3);
         let img = Tensor3::random(12, 12, 1, &mut rng);
         assert_eq!(net.logits(&img), net.logits(&img));
+    }
+
+    /// Scratch-reusing forwards match fresh-scratch forwards and keep the
+    /// arena's buffers stable across images at steady state.
+    #[test]
+    fn logits_with_reuses_scratch_across_images() {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        let net = build_from_config(&cfg, 11);
+        let mut rng = Rng::new(5);
+        let imgs: Vec<_> = (0..3).map(|_| Tensor3::random(12, 12, 1, &mut rng)).collect();
+        let mut scratch = NetScratch::new();
+        // Warm the arena, then record pointers.
+        assert_eq!(net.logits_with(&imgs[0], &mut scratch), net.logits(&imgs[0]));
+        let acc_ptr = scratch.conv_acc.data.as_ptr();
+        for img in &imgs {
+            assert_eq!(net.logits_with(img, &mut scratch), net.logits(img));
+        }
+        assert_eq!(scratch.conv_acc.data.as_ptr(), acc_ptr, "conv accumulator reallocated at steady state");
     }
 
     #[test]

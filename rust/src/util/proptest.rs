@@ -3,8 +3,11 @@
 //!
 //! Provides seeded random-case generation with failure reporting that
 //! includes the case seed, so any failing case can be replayed
-//! deterministically, plus a greedy size-shrinking loop for the common
-//! "random matrix shape" generators used across the GEMM tests.
+//! deterministically ([`check`]), plus a greedy size-shrinking loop for
+//! the common "random matrix shape" properties used across the GEMM
+//! tests ([`check_shrink`]): on failure the harness halves/decrements
+//! each dimension while the property keeps failing, and reports the
+//! minimal failing shape alongside the original one.
 
 use crate::util::Rng;
 
@@ -50,6 +53,95 @@ fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
     } else {
         "<non-string panic>".to_string()
     }
+}
+
+/// Run a shape-based property with greedy shrinking. Per case, `gen_shape`
+/// draws a random `(m, n, k)`; `prop` must regenerate its data from the
+/// given [`Rng`] (re-seeded identically for every replay of the case) and
+/// panic on failure. On a failing case the harness shrinks the shape to a
+/// minimal failing one — halving, then decrementing, each dimension while
+/// the failure persists — and reports both shapes plus the case seed.
+pub fn check_shrink(
+    cfg: Config,
+    name: &str,
+    gen_shape: impl Fn(&mut Rng) -> (usize, usize, usize),
+    prop: impl Fn(usize, usize, usize, &mut Rng),
+) {
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let shape = gen_shape(&mut rng);
+        if let Some(msg) = shape_failure(&prop, shape, seed) {
+            let (min, min_msg) = shrink_shape(&prop, shape, seed, msg);
+            panic!(
+                "property '{name}' failed on case {i} (seed={seed:#x}) at shape (m,n,k)={shape:?}; \
+                 minimal failing shape {min:?}: {min_msg}"
+            );
+        }
+    }
+}
+
+/// Run `prop` once at `shape` with a deterministic data Rng; `Some(msg)`
+/// if it panicked.
+fn shape_failure(
+    prop: &impl Fn(usize, usize, usize, &mut Rng),
+    (m, n, k): (usize, usize, usize),
+    seed: u64,
+) -> Option<String> {
+    let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(m, n, k, &mut rng)))
+        .err()
+        .map(|e| panic_message(&e))
+}
+
+/// Greedy shrink: repeatedly try halving, then decrementing, each
+/// dimension (floor 1), keeping any candidate that still fails. Converges
+/// in O(log) steps per dimension; capped defensively.
+fn shrink_shape(
+    prop: &impl Fn(usize, usize, usize, &mut Rng),
+    mut shape: (usize, usize, usize),
+    seed: u64,
+    mut msg: String,
+) -> ((usize, usize, usize), String) {
+    // Shrink replays panic internally by design, which makes the default
+    // hook print a backtrace per replay. Deliberately left alone: the
+    // panic hook is process-global, and swapping it here would race with
+    // parallel test threads (a concurrent failing suite could restore
+    // the silent hook last, muting diagnostics for the rest of the run).
+    // Shrinking only happens on an already-failing property, where the
+    // extra noise is tolerable.
+    let mut budget = 512;
+    loop {
+        let mut advanced = false;
+        for dim in 0..3 {
+            let cur = [shape.0, shape.1, shape.2][dim];
+            for cand_val in [cur / 2, cur.saturating_sub(1)] {
+                if cand_val < 1 || cand_val >= cur {
+                    continue;
+                }
+                let mut cand = shape;
+                match dim {
+                    0 => cand.0 = cand_val,
+                    1 => cand.1 = cand_val,
+                    _ => cand.2 = cand_val,
+                }
+                budget -= 1;
+                if let Some(m2) = shape_failure(prop, cand, seed) {
+                    shape = cand;
+                    msg = m2;
+                    advanced = true;
+                    break;
+                }
+            }
+            if advanced {
+                break;
+            }
+        }
+        if !advanced || budget <= 0 {
+            break;
+        }
+    }
+    (shape, msg)
 }
 
 /// Generate a random GEMM problem size. Sizes are biased toward microkernel
@@ -102,6 +194,36 @@ mod tests {
         });
         std::panic::set_hook(prev);
         std::panic::resume_unwind(r.unwrap_err());
+    }
+
+    #[test]
+    fn check_shrink_passes_for_true_property() {
+        check_shrink(
+            Config { cases: 16, base_seed: 7 },
+            "shapes are positive",
+            |rng| gemm_shape(rng, 32, 32, 64),
+            |m, n, k, _| assert!(m >= 1 && n >= 1 && k >= 1),
+        );
+    }
+
+    /// Shrinking finds the minimal failing shape: a property failing iff
+    /// `m ≥ 3 ∧ k ≥ 5` must be reported at exactly (3, 1, 5).
+    #[test]
+    fn check_shrink_reports_minimal_shape() {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check_shrink(
+                Config { cases: 8, base_seed: 1 },
+                "m<3 or k<5",
+                |_| (20, 9, 40),
+                |m, _, k, _| assert!(m < 3 || k < 5, "too big"),
+            )
+        });
+        std::panic::set_hook(prev);
+        let msg = panic_message(&r.expect_err("property must fail"));
+        assert!(msg.contains("minimal failing shape (3, 1, 5)"), "got: {msg}");
+        assert!(msg.contains("(m,n,k)=(20, 9, 40)"), "got: {msg}");
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Edge-case tests for the batching coordinator and the native engine:
+//! degenerate batch sizes, shutdown with an empty or partially drained
+//! queue, dropped reply channels, and thread-count invariance of the
+//! engine's results.
+
+use std::time::Duration;
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::gemm::native::Threading;
+use tbgemm::nn::{build_from_config, NetConfig};
+use tbgemm::util::Rng;
+
+fn server(max_batch: usize, threading: Threading) -> InferenceServer {
+    let net = build_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 21);
+    let engine = Box::new(NativeEngine::new(net, "edge").with_threading(threading));
+    InferenceServer::start(engine, BatcherConfig { max_batch, max_wait: Duration::from_millis(1) }, 64)
+}
+
+/// `max_batch = 1` degenerates to strict one-request batches: every
+/// response reports batch_size 1 and every request is answered.
+#[test]
+fn max_batch_one_serves_singletons() {
+    let srv = server(1, Threading::Single);
+    let mut rng = Rng::new(31);
+    let pending: Vec<_> = (0..12).map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng))).collect();
+    for rx in pending {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.batch_size, 1);
+        assert_eq!(resp.logits.len(), 3);
+    }
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 12);
+    assert!((m.mean_batch_size - 1.0).abs() < 1e-9);
+}
+
+/// Shutting down a server whose channel never saw a request exits
+/// cleanly (the worker is blocked on the empty channel at that moment).
+#[test]
+fn shutdown_on_empty_channel_is_clean() {
+    let srv = server(4, Threading::Single);
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 0);
+    assert_eq!(m.batches, 0);
+}
+
+/// Shutdown races a filling batch: requests submitted immediately before
+/// shutdown are all drained and answered, none dropped — the batcher's
+/// channel close lands mid-batch-collection.
+#[test]
+fn shutdown_mid_batch_drains_pending_requests() {
+    for n in [1usize, 3, 7] {
+        let srv = server(8, Threading::Single);
+        let mut rng = Rng::new(32);
+        let pending: Vec<_> = (0..n).map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng))).collect();
+        let m = srv.shutdown(); // joins the worker: everything drains first
+        assert_eq!(m.requests, n as u64, "n={n}");
+        for rx in pending {
+            let resp = rx.recv().expect("drained response");
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+        }
+    }
+}
+
+/// A caller abandoning its reply channel must not wedge the worker or
+/// affect other requests in the same batch.
+#[test]
+fn dropped_reply_receiver_does_not_stall_worker() {
+    let srv = server(4, Threading::Single);
+    let mut rng = Rng::new(33);
+    drop(srv.submit(Tensor3::random(8, 8, 1, &mut rng))); // abandoned
+    let resp = srv.infer(Tensor3::random(8, 8, 1, &mut rng));
+    assert_eq!(resp.logits.len(), 3);
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 2);
+}
+
+/// NativeEngine results are identical across `--threads 1` and `auto`:
+/// the row-band threading (and the scratch reuse behind it) never changes
+/// logits bit-for-bit.
+#[test]
+fn engine_logits_identical_across_thread_counts() {
+    let mut rng = Rng::new(34);
+    let images: Vec<_> = (0..6).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+    let single = server(4, Threading::Fixed(1));
+    let auto = server(4, Threading::Auto);
+    for img in &images {
+        let a = single.infer(img.clone());
+        let b = auto.infer(img.clone());
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.predicted, b.predicted);
+    }
+    single.shutdown();
+    auto.shutdown();
+}

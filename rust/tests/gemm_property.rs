@@ -1,0 +1,184 @@
+//! Property-based differential suite for the K-paneled native GEMM path.
+//!
+//! Every case draws a random `(m, n, k)` shape (deep-K cases cross the
+//! 16-bit safe bound of 32767), a random thread count in 1..=8 and a
+//! random K-panel depth (or `Auto`), regenerates random inputs from the
+//! case seed, and checks the K-paneled multithreaded driver word-for-word
+//! against the scalar oracles in `gemm/reference.rs` — for all six
+//! kernels: BNN, TNN, TBN, daBNN, U8 and F32. Failures shrink to a
+//! minimal failing shape via `util::proptest::check_shrink`.
+//!
+//! The base seed is deterministic; CI pins it explicitly through the
+//! `TBGEMM_PROP_SEED` environment variable so the suite is replayable
+//! byte-for-byte across runs.
+
+use tbgemm::gemm::native::{
+    bnn_gemm_kp_mt, dabnn_gemm_kp_mt, f32_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, u8_gemm_kp_mt, BitRows,
+    KPanel, PlaneRows, Threading,
+};
+use tbgemm::gemm::native::{f32_gemm, kernels};
+use tbgemm::gemm::reference;
+use tbgemm::util::mat::{MatF32, MatI32, MatI8, MatU8};
+use tbgemm::util::proptest::{check_shrink, gemm_shape, Config};
+use tbgemm::util::Rng;
+
+/// Per-test config: base seed from `TBGEMM_PROP_SEED` when set (CI pins
+/// it), with a per-test offset so the six suites draw distinct cases.
+fn cfg(offset: u64, cases: usize) -> Config {
+    let base = std::env::var("TBGEMM_PROP_SEED").ok().and_then(|v| v.parse::<u64>().ok()).unwrap_or(0x00C0_FFEE);
+    Config { cases, base_seed: base.wrapping_add(offset) }
+}
+
+/// Random GEMM shape: mostly moderate, with a deep-K band (m, n kept
+/// small there so the scalar oracle stays fast) that crosses the 16-bit
+/// accumulation bound — K reaches ≥ 32768.
+fn shape(rng: &mut Rng) -> (usize, usize, usize) {
+    match rng.below(4) {
+        // Deep K: straddles safe_k = 32767 from both sides.
+        0 => (1 + rng.below(10), 1 + rng.below(8), 30_000 + rng.below(6_000)),
+        // Medium K around im2col depths (3×3×512 = 4608).
+        1 => (1 + rng.below(20), 1 + rng.below(16), 2_048 + rng.below(4_096)),
+        // Small, boundary-biased shapes.
+        _ => gemm_shape(rng, 33, 25, 300),
+    }
+}
+
+/// Random K-panel config: `Auto` or an explicit depth in `1..=2k`
+/// (explicit depths above the safe bound exercise the clamp).
+fn k_panel(rng: &mut Rng, k: usize) -> KPanel {
+    if rng.below(4) == 0 {
+        KPanel::Auto
+    } else {
+        KPanel::Depth(1 + rng.below(2 * k))
+    }
+}
+
+fn threads(rng: &mut Rng) -> Threading {
+    Threading::Fixed(1 + rng.below(8))
+}
+
+#[test]
+fn bnn_kp_mt_matches_reference() {
+    check_shrink(cfg(0x10, 24), "bnn kp vs oracle", shape, |m, n, k, rng| {
+        let th = threads(rng);
+        let kp = k_panel(rng, k);
+        let a = MatI8::random_binary(m, k, rng);
+        let b = MatI8::random_binary(k, n, rng);
+        let want = reference::gemm_i8(&a, &b);
+        let mut c = MatI32::zeros(m, n);
+        bnn_gemm_kp_mt(&BitRows::from_binary(&a), &BitRows::from_binary_transposed(&b), &mut c, th, kp);
+        assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+    });
+}
+
+#[test]
+fn tnn_kp_mt_matches_reference() {
+    check_shrink(cfg(0x20, 24), "tnn kp vs oracle", shape, |m, n, k, rng| {
+        let th = threads(rng);
+        let kp = k_panel(rng, k);
+        let a = MatI8::random_ternary(m, k, rng);
+        let b = MatI8::random_ternary(k, n, rng);
+        let want = reference::gemm_i8(&a, &b);
+        let mut c = MatI32::zeros(m, n);
+        tnn_gemm_kp_mt(&PlaneRows::from_ternary(&a), &PlaneRows::from_ternary_transposed(&b), &mut c, th, kp);
+        assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+    });
+}
+
+#[test]
+fn tbn_kp_mt_matches_reference() {
+    check_shrink(cfg(0x30, 24), "tbn kp vs oracle", shape, |m, n, k, rng| {
+        let th = threads(rng);
+        let kp = k_panel(rng, k);
+        let a = MatI8::random_ternary(m, k, rng);
+        let b = MatI8::random_binary(k, n, rng);
+        let want = reference::gemm_i8(&a, &b);
+        let mut c = MatI32::zeros(m, n);
+        tbn_gemm_kp_mt(&PlaneRows::from_ternary(&a), &BitRows::from_binary_transposed(&b), &mut c, th, kp);
+        assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+    });
+}
+
+#[test]
+fn dabnn_kp_mt_matches_reference() {
+    check_shrink(cfg(0x40, 16), "dabnn kp vs oracle", shape, |m, n, k, rng| {
+        let th = threads(rng);
+        let kp = k_panel(rng, k);
+        let a = MatI8::random_binary(m, k, rng);
+        let b = MatI8::random_binary(k, n, rng);
+        let want = reference::gemm_i8(&a, &b);
+        let mut c = MatF32::zeros(m, n);
+        dabnn_gemm_kp_mt(&BitRows::from_binary(&a), &BitRows::from_binary_transposed(&b), &mut c, th, kp);
+        // f32 popcount partials are exact integers below 2²³, so the
+        // comparison is word-for-word after the integer cast.
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j}) m={m} n={n} k={k} th={th:?} kp={kp:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn u8_kp_mt_matches_reference() {
+    check_shrink(cfg(0x50, 16), "u8 kp vs oracle", shape, |m, n, k, rng| {
+        let th = threads(rng);
+        let kp = k_panel(rng, k);
+        let za = rng.below(256) as i32;
+        let zb = rng.below(256) as i32;
+        let a = MatU8::random(m, k, rng);
+        let b = MatU8::random(k, n, rng);
+        let panels = kernels::pack_b_panels_u8(&b);
+        let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
+        let want = reference::gemm_u8_centered(&a, &b, za, zb);
+        let mut c = MatI32::zeros(m, n);
+        u8_gemm_kp_mt(&a, &panels, n, za, zb, &col_sums, &mut c, th, kp);
+        assert_eq!(c.data, want.data, "m={m} n={n} k={k} za={za} zb={zb} th={th:?} kp={kp:?}");
+    });
+}
+
+/// F32: with `KPanel::Auto` the depth stays one panel, so the paneled
+/// driver is bit-identical to the unpaneled kernel; explicit panels
+/// change the rounding association, so those cases compare against the
+/// scalar oracle with a depth-scaled tolerance.
+#[test]
+fn f32_kp_mt_matches_reference() {
+    check_shrink(
+        cfg(0x60, 16),
+        "f32 kp vs oracle",
+        // f32 has no safe-K bound; cap the depth so the tolerance model
+        // stays tight.
+        |rng| {
+            let (m, n, _) = gemm_shape(rng, 25, 20, 64);
+            (m, n, 1 + rng.below(4096))
+        },
+        |m, n, k, rng| {
+            let th = threads(rng);
+            let kp = k_panel(rng, k);
+            let a = MatF32::random(m, k, rng);
+            let b = MatF32::random(k, n, rng);
+            let panels = kernels::pack_b_panels_f32(&b);
+            let mut c = MatF32::zeros(m, n);
+            f32_gemm_kp_mt(&a, &panels, n, &mut c, th, kp);
+            if kp == KPanel::Auto {
+                // Word-for-word against the unpaneled kernel.
+                let mut want = MatF32::zeros(m, n);
+                f32_gemm(&a, &panels, n, &mut want);
+                assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?}");
+            }
+            let want = reference::gemm_f32(&a, &b);
+            // Absolute floor scales with √k (random-walk magnitude of the
+            // partial sums), relative part with the result.
+            let tol_scale = 1e-6 * (k as f32).max(64.0);
+            for i in 0..m {
+                for j in 0..n {
+                    let (g, w) = (c.get(i, j), want.get(i, j));
+                    assert!(
+                        (g - w).abs() <= tol_scale * ((k as f32).sqrt() + w.abs()),
+                        "({i},{j}): {g} vs {w}, m={m} n={n} k={k} th={th:?} kp={kp:?}"
+                    );
+                }
+            }
+        },
+    );
+}

@@ -1,0 +1,177 @@
+//! Overflow-boundary regression tests pinning the per-kind safe-K bounds
+//! of the K-paneled accumulation scheme (paper Table II / eq. (4)).
+//!
+//! Adversarial all-ones and alternating-sign inputs are placed at depths
+//! just below and just above the 16-bit accumulation limit, asserting
+//! that the paneled path stays exact exactly where a pure 16-bit
+//! accumulator would wrap. The i16 wrap itself is demonstrated on the
+//! expected values, so the bound is pinned on both sides: 32767 fits,
+//! 32768 does not. Run under `--release` in CI as well, so the overflow
+//! behavior is checked with optimizations (and without debug overflow
+//! checks) enabled.
+
+use tbgemm::gemm::native::{
+    bnn_gemm_kp_mt, kernels, safe_k, tbn_gemm_kp_mt, tnn_gemm_kp_mt, u8_gemm_kp_mt, BitRows, KPanel, PlaneRows,
+    Threading,
+};
+use tbgemm::gemm::reference;
+use tbgemm::gemm::Kind;
+use tbgemm::util::mat::{MatI32, MatI8, MatU8};
+
+/// The 16-bit bound for the low-bit kinds and its neighbours.
+const K_SAFE: usize = 32767;
+
+#[test]
+fn safe_k_bounds_are_pinned() {
+    assert_eq!(safe_k(Kind::Bnn), K_SAFE);
+    assert_eq!(safe_k(Kind::Tnn), K_SAFE);
+    assert_eq!(safe_k(Kind::Tbn), K_SAFE);
+    assert_eq!(safe_k(Kind::U8), 66051);
+    assert_eq!(safe_k(Kind::U4), 291);
+    assert_eq!(safe_k(Kind::DaBnn), (1 << 23) - 1);
+    // The boundary itself: ±32767 round-trips through i16, ±32768 wraps.
+    assert_eq!(K_SAFE as i16 as i32, K_SAFE as i32);
+    assert_eq!(-(K_SAFE as i32) as i16 as i32, -(K_SAFE as i32));
+    assert_ne!((K_SAFE as i32 + 1) as i16 as i32, K_SAFE as i32 + 1);
+}
+
+/// Run one adversarial low-bit case at depth `k` against the oracle, for
+/// a spread of panel configs (including single-word panels) and threads.
+fn assert_lowbit_exact(a: &MatI8, b: &MatI8, k: usize, binary_a: bool, binary_b: bool) {
+    let want = reference::gemm_i8(a, b);
+    let (m, n) = (a.rows, b.cols);
+    let panels = [KPanel::Auto, KPanel::Depth(64), KPanel::Depth(4096), KPanel::Depth(k)];
+    for kp in panels {
+        for th in [Threading::Single, Threading::Fixed(4)] {
+            let mut c = MatI32::zeros(m, n);
+            match (binary_a, binary_b) {
+                (true, true) => bnn_gemm_kp_mt(
+                    &BitRows::from_binary(a),
+                    &BitRows::from_binary_transposed(b),
+                    &mut c,
+                    th,
+                    kp,
+                ),
+                (false, false) => tnn_gemm_kp_mt(
+                    &PlaneRows::from_ternary(a),
+                    &PlaneRows::from_ternary_transposed(b),
+                    &mut c,
+                    th,
+                    kp,
+                ),
+                (false, true) => tbn_gemm_kp_mt(
+                    &PlaneRows::from_ternary(a),
+                    &BitRows::from_binary_transposed(b),
+                    &mut c,
+                    th,
+                    kp,
+                ),
+                _ => unreachable!("no binary×ternary kind"),
+            }
+            assert_eq!(c.data, want.data, "k={k} kp={kp:?} th={th:?}");
+        }
+    }
+}
+
+/// BNN all-ones at the boundary: same-sign inputs drive the output to
+/// +k; at k = 32768 the 16-bit epilogue value would wrap to −32768 while
+/// the paneled i32 path stays exact. Opposite signs pin −k (which first
+/// exceeds i16 at −32769).
+#[test]
+fn bnn_all_ones_straddles_16bit_bound() {
+    for k in [K_SAFE, K_SAFE + 1] {
+        let a = MatI8::from_fn(2, k, |_, _| 1);
+        let b_same = MatI8::from_fn(k, 2, |_, _| 1);
+        let b_opp = MatI8::from_fn(k, 2, |_, _| -1);
+        assert_lowbit_exact(&a, &b_same, k, true, true);
+        assert_lowbit_exact(&a, &b_opp, k, true, true);
+        // The pinned expected values.
+        let want = reference::gemm_i8(&a, &b_same);
+        assert_eq!(want.get(0, 0), k as i32);
+        if k > K_SAFE {
+            // A 16-bit accumulator would report −32768 here.
+            assert_ne!(want.get(0, 0) as i16 as i32, want.get(0, 0));
+        } else {
+            assert_eq!(want.get(0, 0) as i16 as i32, want.get(0, 0));
+        }
+    }
+}
+
+/// BNN alternating signs at the boundary: fully cancelling products keep
+/// the output at 0 (or ±1 for odd k) no matter the depth — the paneled
+/// path must agree with the oracle bit-for-bit through the cancellation.
+#[test]
+fn bnn_alternating_sign_cancels_exactly() {
+    for k in [K_SAFE, K_SAFE + 1] {
+        let a = MatI8::from_fn(2, k, |_, t| if t % 2 == 0 { 1 } else { -1 });
+        let b = MatI8::from_fn(k, 2, |_, _| 1);
+        assert_lowbit_exact(&a, &b, k, true, true);
+        let want = reference::gemm_i8(&a, &b);
+        assert_eq!(want.get(0, 0), (k % 2) as i32);
+    }
+}
+
+/// TNN all-ones: z⁺ = k drives the plane difference to +k, first
+/// overflowing i16 at 32768.
+#[test]
+fn tnn_all_ones_straddles_16bit_bound() {
+    for k in [K_SAFE, K_SAFE + 1] {
+        let a = MatI8::from_fn(2, k, |_, _| 1);
+        let b = MatI8::from_fn(k, 2, |_, _| 1);
+        assert_lowbit_exact(&a, &b, k, false, false);
+        assert_eq!(reference::gemm_i8(&a, &b).get(0, 0), k as i32);
+    }
+}
+
+/// TNN alternating ternary (+1/0/−1 pattern) above the bound: partial
+/// cancellation with a nonzero residue, exact through the panels.
+#[test]
+fn tnn_alternating_pattern_above_bound() {
+    let k = K_SAFE + 1;
+    let a = MatI8::from_fn(2, k, |_, t| [1i8, 0, -1][t % 3]);
+    let b = MatI8::from_fn(k, 2, |t, _| if t % 2 == 0 { 1 } else { -1 });
+    assert_lowbit_exact(&a, &b, k, false, false);
+}
+
+/// TBN all-ones at the boundary (ternary activations × binary weights).
+#[test]
+fn tbn_all_ones_straddles_16bit_bound() {
+    for k in [K_SAFE, K_SAFE + 1] {
+        let a = MatI8::from_fn(2, k, |_, _| 1);
+        let b = MatI8::from_fn(k, 2, |_, _| -1);
+        assert_lowbit_exact(&a, &b, k, false, true);
+        assert_eq!(reference::gemm_i8(&a, &b).get(0, 0), -(k as i32));
+    }
+}
+
+/// U8 at its u32 bound (k_max = 66051): all-255 inputs make the raw dot
+/// product exceed u32::MAX one element past the bound, so an unpaneled
+/// 32-bit accumulation would wrap; the paneled path (u32 in-panel, i64
+/// spill) stays exact. Zero points of 255 keep the centered result at 0,
+/// well inside i32.
+#[test]
+fn u8_all_max_straddles_u32_bound() {
+    let bound = safe_k(Kind::U8);
+    for k in [bound, bound + 1] {
+        let (m, n) = (2usize, 2usize);
+        let a = MatU8 { rows: m, cols: k, data: vec![255; m * k] };
+        let b = MatU8 { rows: k, cols: n, data: vec![255; k * n] };
+        let (za, zb) = (255, 255);
+        let panels = kernels::pack_b_panels_u8(&b);
+        let col_sums: Vec<i32> = (0..n).map(|_| (k * 255) as i32).collect();
+        let want = reference::gemm_u8_centered(&a, &b, za, zb);
+        assert_eq!(want.get(0, 0), 0);
+        for kp in [KPanel::Auto, KPanel::Depth(1 << 20)] {
+            let mut c = MatI32::zeros(m, n);
+            u8_gemm_kp_mt(&a, &panels, n, za, zb, &col_sums, &mut c, Threading::Single, kp);
+            assert_eq!(c.data, want.data, "k={k} kp={kp:?}");
+        }
+        // The raw dot itself crosses u32::MAX exactly past the bound.
+        let raw = k as u64 * 255 * 255;
+        if k > bound {
+            assert!(raw > u32::MAX as u64);
+        } else {
+            assert!(raw <= u32::MAX as u64);
+        }
+    }
+}
