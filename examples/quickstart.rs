@@ -1,18 +1,41 @@
 //! Quickstart: the library's public GEMM API in five minutes.
 //!
 //! Multiplies a ternary activation matrix by pre-packed ternary weights
-//! three ways — the emulated-NEON driver (the paper's exact instruction
-//! sequences), the native fast path, and the scalar oracle — and checks
-//! they agree. Then does the same for binary and ternary-binary products.
+//! through one `GemmPlan` on all three backends — the scalar oracle, the
+//! emulated-NEON path (the paper's exact instruction sequences), and the
+//! native fast path — and checks they agree. Then does the same for
+//! binary and ternary-binary products.
 //!
-//! Run: `cargo run --release --example quickstart`
+//! NOTE: this directory sits outside the `rust/` cargo package, so
+//! these examples are documentation — they are not compiled by CI. The
+//! same backend-sweep flow is compiled and run as `tests/plan_api.rs`
+//! and `tests/blocked_gemm.rs`.
 
-use tbgemm::gemm::driver::{GemmDriver, Lhs};
-use tbgemm::gemm::native::kernels::{bnn_gemm, tbn_gemm, tnn_gemm};
-use tbgemm::gemm::native::{BitRows, PlaneRows};
-use tbgemm::gemm::reference::gemm_i8;
-use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::gemm::{Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
+use tbgemm::util::mat::MatI8;
 use tbgemm::util::Rng;
+
+/// Pack `b` once per backend, run `a · b`, and check all backends agree.
+fn verify(kind: Kind, a: &MatI8, b: &MatI8) {
+    let mut results: Vec<Vec<i32>> = Vec::new();
+    // Caller-owned output + scratch, reused across every run.
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    for backend in Backend::ALL {
+        // 1. Plan: pack the weights once, offline (the paper's PackedB).
+        let plan = GemmPlan::new(GemmConfig::new(kind, backend), Weights::I8(b))
+            .expect("valid weights for this kind");
+        // 2. Execute into the caller-owned buffers (typed errors, no
+        //    per-call allocation on the native hot path).
+        plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("matching LHS");
+        results.push(out.as_i32().expect("low-bit kinds produce i32").data.clone());
+    }
+    assert!(results.windows(2).all(|w| w[0] == w[1]));
+    println!(
+        "{:?} {}×{} · {}×{}: reference ≡ emulated ≡ native ✓",
+        kind, a.rows, a.cols, b.rows, b.cols
+    );
+}
 
 fn main() {
     let mut rng = Rng::new(2022);
@@ -20,44 +43,18 @@ fn main() {
     // matrix — one point of the paper's experimental grid.
     let (m, k, n) = (72, 256, 24);
 
-    // --- TNN ---------------------------------------------------------
+    // TNN: ternary × ternary.
     let a = MatI8::random_ternary(m, k, &mut rng);
     let b = MatI8::random_ternary(k, n, &mut rng);
+    verify(Kind::Tnn, &a, &b);
 
-    // 1. Pack the weights once, offline (the paper's PackedB).
-    let driver = GemmDriver::new_tnn(&b);
-    // 2. Multiply with the emulated NEON microkernels.
-    let c_emu = driver.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
-    // 3. Multiply with the native fast path.
-    let ap = PlaneRows::from_ternary(&a);
-    let bt = PlaneRows::from_ternary_transposed(&b);
-    let mut c_native = MatI32::zeros(m, n);
-    tnn_gemm(&ap, &bt, &mut c_native);
-    // 4. Check both against the scalar oracle.
-    let oracle = gemm_i8(&a, &b);
-    assert_eq!(c_emu.data, oracle.data);
-    assert_eq!(c_native.data, oracle.data);
-    println!("TNN {m}×{k} · {k}×{n}: emulated ≡ native ≡ oracle ✓");
-
-    // --- TBN: ternary activations × binary weights --------------------
+    // TBN: ternary activations × binary weights.
     let bw = MatI8::random_binary(k, n, &mut rng);
-    let c_emu = GemmDriver::new_tbn(&bw).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
-    let mut c_native = MatI32::zeros(m, n);
-    tbn_gemm(&ap, &BitRows::from_binary_transposed(&bw), &mut c_native);
-    let oracle = gemm_i8(&a, &bw);
-    assert_eq!(c_emu.data, oracle.data);
-    assert_eq!(c_native.data, oracle.data);
-    println!("TBN {m}×{k} · {k}×{n}: emulated ≡ native ≡ oracle ✓");
+    verify(Kind::Tbn, &a, &bw);
 
-    // --- BNN: binary × binary -----------------------------------------
+    // BNN: binary × binary.
     let ab = MatI8::random_binary(m, k, &mut rng);
-    let c_emu = GemmDriver::new_bnn(&bw).multiply_emulated(Lhs::I8(&ab)).unwrap_i32();
-    let mut c_native = MatI32::zeros(m, n);
-    bnn_gemm(&BitRows::from_binary(&ab), &BitRows::from_binary_transposed(&bw), &mut c_native);
-    let oracle = gemm_i8(&ab, &bw);
-    assert_eq!(c_emu.data, oracle.data);
-    assert_eq!(c_native.data, oracle.data);
-    println!("BNN {m}×{k} · {k}×{n}: emulated ≡ native ≡ oracle ✓");
+    verify(Kind::Bnn, &ab, &bw);
 
     println!("\nAll three low-bit multiplications verified. Next steps:");
     println!("  repro table2            # regenerate the paper's Table II");

@@ -13,7 +13,7 @@ use tbgemm::conv::stripe::StripeConv;
 use tbgemm::conv::tensor::Tensor3;
 use tbgemm::gemm::native::pack_fast;
 use tbgemm::gemm::native::simd_popcnt as sp;
-use tbgemm::gemm::native::{BitRows, PlaneRows};
+use tbgemm::gemm::native::PlaneRows;
 use tbgemm::util::mat::MatI8;
 use tbgemm::util::timer::bench_loop;
 use tbgemm::util::Rng;
@@ -110,17 +110,18 @@ fn main() {
         28
     );
 
-    // 5. U4 depth-block size sweep (correct blocks are ≤290; larger
-    // would overflow — we sweep the safe sizes to show the tradeoff).
-    use tbgemm::gemm::native::kernels::{pack_b_panels_u8, u4_gemm};
-    use tbgemm::util::mat::{MatI32, MatU8};
+    // 5. U4 at depth 580 (two internal 290-deep 16-bit blocks + the
+    // eq. (3) epilogue), through the plan API.
+    use tbgemm::gemm::{GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
+    use tbgemm::util::mat::MatU8;
     let au = MatU8::random_below(120, 580, 15, &mut rng);
     let bu = MatU8::random_below(580, 48, 15, &mut rng);
-    let panels = pack_b_panels_u8(&bu);
-    let col_sums: Vec<i32> = (0..48).map(|j| (0..580).map(|t| bu.get(t, j) as i32).sum()).collect();
-    let mut c = MatI32::zeros(120, 48);
+    let plan = GemmPlan::new(GemmConfig::native(Kind::U4), Weights::U8 { b: &bu, za: 3, zb: 5 })
+        .expect("u4 plan");
+    let mut c = GemmOut::new_i32();
+    let mut gemm_scratch = GemmScratch::new();
     let t = bench_loop(0.2, 200, || {
-        u4_gemm(&au, &panels, 48, 3, 5, &col_sums, &mut c);
+        plan.run(Lhs::U8(&au), &mut c, &mut gemm_scratch).expect("u4 gemm");
     });
     println!("5. U4 GEMM 120×48×580 (two 290-blocks + epilogue): {:.3} ms", t.mean * 1e3);
 

@@ -1,21 +1,25 @@
-//! Microbenchmark of the native GEMM kernels: the seven-algorithm ladder
-//! at a paper-grid point (120×48×256), the tiling/threading speedup
-//! ladder at the acceptance shape (256×256×2048), and the TNN
+//! Microbenchmark of the native GEMM path through the plan/execute API:
+//! the seven-algorithm ladder at a paper-grid point (120×48×256), the
+//! tiling/threading ladder at the acceptance shape (256×256×2048)
+//! including the widened BNN 4×4 tile, the deep-K ladder, and the TNN
 //! packing-vs-kernel split.
 //!
+//! Every variant runs through `GemmPlan::run`, so per-iteration cost
+//! includes the Algorithm-2 A-packing into the reused scratch arena
+//! (the paper's timed protocol: B packed offline, A packed per
+//! multiplication) and zero per-call heap allocation.
+//!
 //! Emits `BENCH_gemm.json` — one record per (kind, variant, shape) with
-//! ns/iter and effective GOPS (2·m·n·k ops) — so later PRs can track the
-//! perf trajectory mechanically.
+//! ns/iter and effective GOPS (2·m·n·k ops) — compared against the
+//! committed `BENCH_gemm.baseline.json` by `tools/bench_gate.py` in CI.
 //!
 //! Run: `cargo bench --bench gemm_micro`
 
 use tbgemm::bench::grid::time_algorithm;
-use tbgemm::gemm::native::kernels as nk;
-use tbgemm::gemm::native::{
-    bnn_gemm_kp_mt, bnn_gemm_mt, tbn_gemm_mt, tnn_gemm_kp_mt, tnn_gemm_mt, BitRows, KPanel, PlaneRows, Threading,
+use tbgemm::gemm::{
+    GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Tile, Weights,
 };
-use tbgemm::gemm::Kind;
-use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::util::mat::MatI8;
 use tbgemm::util::timer::bench_loop;
 use tbgemm::util::Rng;
 
@@ -48,13 +52,22 @@ impl Record {
     }
 }
 
+/// Build a native BNN/TNN/TBN plan with the given knobs.
+fn lowbit_plan(kind: Kind, b: &MatI8, threading: Threading, k_panel: KPanel, tile: Tile) -> GemmPlan {
+    GemmPlan::new(
+        GemmConfig::native(kind).with_threading(threading).with_k_panel(k_panel).with_tile(tile),
+        Weights::I8(b),
+    )
+    .expect("bench plan")
+}
+
 fn main() {
     let mut records: Vec<Record> = Vec::new();
 
     // --- the seven-algorithm ladder at a paper-grid point ---------------
     let point = (120usize, 48usize, 256usize);
     let macs = (point.0 * point.1 * point.2) as f64;
-    println!("native kernels at H×W×D = {point:?} ({:.1} MMAC):", macs / 1e6);
+    println!("native plans at H×W×D = {point:?} ({:.1} MMAC):", macs / 1e6);
     let mut baseline_f32 = None;
     for kind in Kind::ALL {
         let gt = time_algorithm(kind, &[point], 5, 5, 42);
@@ -82,19 +95,16 @@ fn main() {
 
     // --- tiling + threading ladder at the acceptance shape --------------
     let (m, n, k) = (256usize, 256usize, 2048usize);
-    println!("\ntiling/threading ladder at {m}×{n}×{k} (kernel only, A pre-packed):");
+    println!("\ntiling/threading ladder at {m}×{n}×{k} (plan run incl. A-packing):");
     let mut rng = Rng::new(0x517E);
     let ab = MatI8::random_binary(m, k, &mut rng);
     let bb = MatI8::random_binary(k, n, &mut rng);
     let at = MatI8::random_ternary(m, k, &mut rng);
     let bt3 = MatI8::random_ternary(k, n, &mut rng);
-    let a_bits = BitRows::from_binary(&ab);
-    let b_bits = BitRows::from_binary_transposed(&bb);
-    let a_planes = PlaneRows::from_ternary(&at);
-    let b_planes = PlaneRows::from_ternary_transposed(&bt3);
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
 
-    let mut c = MatI32::zeros(m, n);
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
     let mut report = |kind: &'static str, variant: &'static str, t: f64, rowdot_t: f64, threads: usize| {
         println!(
             "  {kind:<4} {variant:<9} ({threads:>2} thr) {:>9.3} ms   {:>7.2} GMAC/s   {:>5.2}× vs rowdot",
@@ -105,26 +115,41 @@ fn main() {
         records.push(Record { kind, variant, m, n, k, ns_per_iter: t * 1e9 });
     };
 
-    let t_rd = bench_loop(0.4, 50, || nk::bnn_gemm_rowdot(&a_bits, &b_bits, &mut c)).mean;
-    report("BNN", "rowdot", t_rd, t_rd, 1);
-    let t = bench_loop(0.4, 50, || nk::bnn_gemm(&a_bits, &b_bits, &mut c)).mean;
-    report("BNN", "tiled", t, t_rd, 1);
-    let t = bench_loop(0.4, 50, || bnn_gemm_mt(&a_bits, &b_bits, &mut c, Threading::Auto)).mean;
-    report("BNN", "tiled_mt", t, t_rd, cores);
-
-    let t_rd = bench_loop(0.4, 50, || nk::tnn_gemm_rowdot(&a_planes, &b_planes, &mut c)).mean;
-    report("TNN", "rowdot", t_rd, t_rd, 1);
-    let t = bench_loop(0.4, 50, || nk::tnn_gemm(&a_planes, &b_planes, &mut c)).mean;
-    report("TNN", "tiled", t, t_rd, 1);
-    let t = bench_loop(0.4, 50, || tnn_gemm_mt(&a_planes, &b_planes, &mut c, Threading::Auto)).mean;
-    report("TNN", "tiled_mt", t, t_rd, cores);
-
-    let t_rd = bench_loop(0.4, 50, || nk::tbn_gemm_rowdot(&a_planes, &b_bits, &mut c)).mean;
-    report("TBN", "rowdot", t_rd, t_rd, 1);
-    let t = bench_loop(0.4, 50, || nk::tbn_gemm(&a_planes, &b_bits, &mut c)).mean;
-    report("TBN", "tiled", t, t_rd, 1);
-    let t = bench_loop(0.4, 50, || tbn_gemm_mt(&a_planes, &b_bits, &mut c, Threading::Auto)).mean;
-    report("TBN", "tiled_mt", t, t_rd, cores);
+    // One config ladder per low-bit kind: rowdot → tiled → (wide4x4) →
+    // tiled_mt, all through the same plan entry point.
+    let ladders: [(&'static str, Kind, &MatI8, &MatI8, bool); 3] = [
+        ("BNN", Kind::Bnn, &ab, &bb, true),
+        ("TNN", Kind::Tnn, &at, &bt3, false),
+        ("TBN", Kind::Tbn, &at, &bb, false),
+    ];
+    for (label, kind, a, b, has_wide) in ladders {
+        let rowdot = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Rowdot);
+        let t_rd = bench_loop(0.4, 50, || {
+            rowdot.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+        })
+        .mean;
+        report(label, "rowdot", t_rd, t_rd, 1);
+        let tiled = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Auto);
+        let t = bench_loop(0.4, 50, || {
+            tiled.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+        })
+        .mean;
+        report(label, "tiled", t, t_rd, 1);
+        if has_wide {
+            let wide = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Wide);
+            let t = bench_loop(0.4, 50, || {
+                wide.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+            })
+            .mean;
+            report(label, "wide4x4", t, t_rd, 1);
+        }
+        let mt = lowbit_plan(kind, b, Threading::Auto, KPanel::Auto, Tile::Auto);
+        let t = bench_loop(0.4, 50, || {
+            mt.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+        })
+        .mean;
+        report(label, "tiled_mt", t, t_rd, cores);
+    }
 
     // --- deep-K ladder: rowdot vs tiled vs K-paneled vs tiled_mt --------
     // The K-panel level caps in-panel accumulation at the 16-bit-safe
@@ -132,7 +157,7 @@ fn main() {
     // the paneled path must track the tiled path (acceptance: no slower
     // at K = 2048 — by construction, since Auto dispatches shallow K to
     // the unpaneled band; `kpanel_forced` tracks the real spill cost).
-    println!("\ndeep-K ladder (BNN/TNN, 128×128×K, kernel only):");
+    println!("\ndeep-K ladder (BNN/TNN, 128×128×K, plan run incl. A-packing):");
     let (m, n) = (128usize, 128usize);
     for &k in &[2048usize, 8192, 32768] {
         let mut rng = Rng::new(0xDEE9 + k as u64);
@@ -140,81 +165,75 @@ fn main() {
         let bb = MatI8::random_binary(k, n, &mut rng);
         let at = MatI8::random_ternary(m, k, &mut rng);
         let bt3 = MatI8::random_ternary(k, n, &mut rng);
-        let a_bits = BitRows::from_binary(&ab);
-        let b_bits = BitRows::from_binary_transposed(&bb);
-        let a_planes = PlaneRows::from_ternary(&at);
-        let b_planes = PlaneRows::from_ternary_transposed(&bt3);
-        let mut c = MatI32::zeros(m, n);
         let mut report = |kind: &'static str, variant: &'static str, t: f64, rowdot_t: f64, threads: usize| {
             println!(
-                "  {kind:<4} K={k:<6} {variant:<9} ({threads:>2} thr) {:>9.3} ms  {:>7.2} GMAC/s  {:>5.2}× vs rowdot",
+                "  {kind:<4} K={k:<6} {variant:<13} ({threads:>2} thr) {:>9.3} ms  {:>7.2} GMAC/s  {:>5.2}× vs rowdot",
                 t * 1e3,
                 (m * n * k) as f64 / t / 1e9,
                 rowdot_t / t
             );
             records.push(Record { kind, variant, m, n, k, ns_per_iter: t * 1e9 });
         };
-
-        let t_rd = bench_loop(0.25, 30, || nk::bnn_gemm_rowdot(&a_bits, &b_bits, &mut c)).mean;
-        report("BNN", "rowdot", t_rd, t_rd, 1);
-        let t = bench_loop(0.25, 30, || nk::bnn_gemm(&a_bits, &b_bits, &mut c)).mean;
-        report("BNN", "tiled", t, t_rd, 1);
-        // Production path: Auto dispatches shallow K to the unpaneled
-        // band, so rungs below the bound match "tiled" by construction —
-        // recorded anyway as the regression signal: if the dispatch ever
-        // breaks, "kpanel" diverges from "tiled" at shallow K.
-        let t = bench_loop(0.25, 30, || {
-            bnn_gemm_kp_mt(&a_bits, &b_bits, &mut c, Threading::Single, KPanel::Auto)
-        })
-        .mean;
-        report("BNN", "kpanel", t, t_rd, 1);
-        // Forced spill path (1024-bit panels): the true K-panel overhead
-        // at every rung, not just past the 16-bit bound.
-        let t = bench_loop(0.25, 30, || {
-            bnn_gemm_kp_mt(&a_bits, &b_bits, &mut c, Threading::Single, KPanel::Depth(1024))
-        })
-        .mean;
-        report("BNN", "kpanel_forced", t, t_rd, 1);
-        let t = bench_loop(0.25, 30, || bnn_gemm_mt(&a_bits, &b_bits, &mut c, Threading::Auto)).mean;
-        report("BNN", "tiled_mt", t, t_rd, cores);
-
-        let t_rd = bench_loop(0.25, 30, || nk::tnn_gemm_rowdot(&a_planes, &b_planes, &mut c)).mean;
-        report("TNN", "rowdot", t_rd, t_rd, 1);
-        let t = bench_loop(0.25, 30, || nk::tnn_gemm(&a_planes, &b_planes, &mut c)).mean;
-        report("TNN", "tiled", t, t_rd, 1);
-        let t = bench_loop(0.25, 30, || {
-            tnn_gemm_kp_mt(&a_planes, &b_planes, &mut c, Threading::Single, KPanel::Auto)
-        })
-        .mean;
-        report("TNN", "kpanel", t, t_rd, 1);
-        let t = bench_loop(0.25, 30, || {
-            tnn_gemm_kp_mt(&a_planes, &b_planes, &mut c, Threading::Single, KPanel::Depth(1024))
-        })
-        .mean;
-        report("TNN", "kpanel_forced", t, t_rd, 1);
-        let t = bench_loop(0.25, 30, || tnn_gemm_mt(&a_planes, &b_planes, &mut c, Threading::Auto)).mean;
-        report("TNN", "tiled_mt", t, t_rd, cores);
+        let deep_ladders: [(&'static str, Kind, &MatI8, &MatI8); 2] =
+            [("BNN", Kind::Bnn, &ab, &bb), ("TNN", Kind::Tnn, &at, &bt3)];
+        for (label, kind, a, b) in deep_ladders {
+            let rowdot = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Rowdot);
+            let t_rd = bench_loop(0.25, 30, || {
+                rowdot.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+            })
+            .mean;
+            report(label, "rowdot", t_rd, t_rd, 1);
+            // Production path (KPanel::Auto): dispatches shallow K to
+            // the unpaneled band and splits past the 16-bit bound —
+            // through the plan API this single rung subsumes the old
+            // separate "tiled"/"kpanel" pair, which were the same config.
+            let tiled = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Auto);
+            let t = bench_loop(0.25, 30, || {
+                tiled.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+            })
+            .mean;
+            report(label, "tiled", t, t_rd, 1);
+            // Forced spill path (1024-bit panels): the true K-panel
+            // overhead at every rung, not just past the 16-bit bound —
+            // the dispatch-regression signal is "kpanel_forced" vs
+            // "tiled" at shallow K (spill cost) converging past 32767
+            // (where "tiled" spills too).
+            let forced = lowbit_plan(kind, b, Threading::Single, KPanel::Depth(1024), Tile::Auto);
+            let t = bench_loop(0.25, 30, || {
+                forced.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+            })
+            .mean;
+            report(label, "kpanel_forced", t, t_rd, 1);
+            let mt = lowbit_plan(kind, b, Threading::Auto, KPanel::Auto, Tile::Auto);
+            let t = bench_loop(0.25, 30, || {
+                mt.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+            })
+            .mean;
+            report(label, "tiled_mt", t, t_rd, cores);
+        }
     }
 
     // --- packing-vs-kernel split for TNN --------------------------------
+    // The plan packs A per run (Algorithm 2); splitting run time into
+    // pack + kernel shows how much of the multiplication the request-path
+    // packing costs.
     let point = (120usize, 48usize, 256usize);
     let mut rng = Rng::new(7);
     let a = MatI8::random_ternary(point.0, point.2, &mut rng);
     let b = MatI8::random_ternary(point.2, point.1, &mut rng);
-    let bt = PlaneRows::from_ternary_transposed(&b);
+    use tbgemm::gemm::native::PlaneRows;
     let pack_stats = bench_loop(0.2, 200, || {
         std::hint::black_box(PlaneRows::from_ternary(&a));
     });
-    let ap = PlaneRows::from_ternary(&a);
-    let mut c = MatI32::zeros(point.0, point.1);
-    let kernel_stats = bench_loop(0.2, 200, || {
-        nk::tnn_gemm(&ap, &bt, &mut c);
+    let plan = lowbit_plan(Kind::Tnn, &b, Threading::Single, KPanel::Auto, Tile::Auto);
+    let run_stats = bench_loop(0.2, 200, || {
+        plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("gemm");
     });
     println!(
-        "\nTNN split: pack-A {:.3} ms, kernel {:.3} ms ({:.0}% packing)",
+        "\nTNN split: pack-A {:.3} ms of {:.3} ms plan run ({:.0}% packing)",
         pack_stats.mean * 1e3,
-        kernel_stats.mean * 1e3,
-        100.0 * pack_stats.mean / (pack_stats.mean + kernel_stats.mean)
+        run_stats.mean * 1e3,
+        100.0 * pack_stats.mean / run_stats.mean
     );
 
     // --- machine-readable output ----------------------------------------

@@ -7,10 +7,8 @@
 //! parameters, we took the median of 5 measurements... and repeated the
 //! whole experiment [50] times, taking the average."
 
-use crate::gemm::native::kernels as nk;
-use crate::gemm::native::{BitRows, PlaneRows};
-use crate::gemm::Kind;
-use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
+use crate::gemm::{GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
+use crate::util::mat::{MatF32, MatI8, MatU8};
 use crate::util::timer::paper_protocol;
 use crate::util::Rng;
 
@@ -46,84 +44,68 @@ pub struct GridTimes {
 }
 
 /// Time one algorithm over `grid` with the paper's protocol
-/// (`reps` × median-of-`inner`). The right matrix is pre-packed outside
-/// the timed region ("one can reorder it... beforehand"); packing the
-/// left matrix is part of the timed multiplication, as in Algorithm 2.
+/// (`reps` × median-of-`inner`), through the plan/execute API
+/// ([`GemmPlan`], native backend). The right matrix is packed into the
+/// plan outside the timed region ("one can reorder it... beforehand");
+/// packing the left matrix is part of the timed multiplication, as in
+/// Algorithm 2 — `run` repacks it into the reused scratch arena, so the
+/// timed region performs no heap allocation at steady state.
 pub fn time_algorithm(kind: Kind, grid: &[GridPoint], reps: usize, inner: usize, seed: u64) -> GridTimes {
     let mut rng = Rng::new(seed);
     let mut times = Vec::with_capacity(grid.len());
     for &(h, w, d) in grid {
-        let t = match kind {
-            Kind::Bnn => {
-                let a = MatI8::random_binary(h, d, &mut rng);
-                let b = MatI8::random_binary(d, w, &mut rng);
-                let bt = BitRows::from_binary_transposed(&b);
-                let mut c = MatI32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    let ab = BitRows::from_binary(&a);
-                    nk::bnn_gemm(&ab, &bt, &mut c);
-                })
-            }
-            Kind::Tnn => {
-                let a = MatI8::random_ternary(h, d, &mut rng);
-                let b = MatI8::random_ternary(d, w, &mut rng);
-                let bt = PlaneRows::from_ternary_transposed(&b);
-                let mut c = MatI32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    let ap = PlaneRows::from_ternary(&a);
-                    nk::tnn_gemm(&ap, &bt, &mut c);
-                })
-            }
-            Kind::Tbn => {
-                let a = MatI8::random_ternary(h, d, &mut rng);
-                let b = MatI8::random_binary(d, w, &mut rng);
-                let bt = BitRows::from_binary_transposed(&b);
-                let mut c = MatI32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    let ap = PlaneRows::from_ternary(&a);
-                    nk::tbn_gemm(&ap, &bt, &mut c);
-                })
-            }
-            Kind::DaBnn => {
-                let a = MatI8::random_binary(h, d, &mut rng);
-                let b = MatI8::random_binary(d, w, &mut rng);
-                let bt = BitRows::from_binary_transposed(&b);
-                let mut c = MatF32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    let ab = BitRows::from_binary(&a);
-                    nk::dabnn_gemm(&ab, &bt, &mut c);
-                })
-            }
-            Kind::F32 => {
-                let a = MatF32::random(h, d, &mut rng);
-                let b = MatF32::random(d, w, &mut rng);
-                let panels = nk::pack_b_panels_f32(&b);
-                let mut c = MatF32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    nk::f32_gemm(&a, &panels, w, &mut c);
-                })
-            }
-            Kind::U8 => {
-                let a = MatU8::random(h, d, &mut rng);
-                let b = MatU8::random(d, w, &mut rng);
-                let panels = nk::pack_b_panels_u8(&b);
-                let col_sums: Vec<i32> = (0..w).map(|j| (0..d).map(|t| b.get(t, j) as i32).sum()).collect();
-                let mut c = MatI32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    nk::u8_gemm(&a, &panels, w, 3, 5, &col_sums, &mut c);
-                })
-            }
-            Kind::U4 => {
-                let a = MatU8::random_below(h, d, 15, &mut rng);
-                let b = MatU8::random_below(d, w, 15, &mut rng);
-                let panels = nk::pack_b_panels_u8(&b);
-                let col_sums: Vec<i32> = (0..w).map(|j| (0..d).map(|t| b.get(t, j) as i32).sum()).collect();
-                let mut c = MatI32::zeros(h, w);
-                paper_protocol(reps, inner, || {
-                    nk::u4_gemm(&a, &panels, w, 3, 5, &col_sums, &mut c);
-                })
-            }
-        };
+        // Synthesize (A, B) for this kind; B is packed into the plan.
+        let (lhs_i8, lhs_u8, lhs_f32, plan): (Option<MatI8>, Option<MatU8>, Option<MatF32>, GemmPlan) =
+            match kind {
+                Kind::Bnn | Kind::DaBnn => {
+                    let a = MatI8::random_binary(h, d, &mut rng);
+                    let b = MatI8::random_binary(d, w, &mut rng);
+                    let plan = GemmPlan::new(GemmConfig::native(kind), Weights::I8(&b)).expect("plan");
+                    (Some(a), None, None, plan)
+                }
+                Kind::Tnn => {
+                    let a = MatI8::random_ternary(h, d, &mut rng);
+                    let b = MatI8::random_ternary(d, w, &mut rng);
+                    let plan = GemmPlan::new(GemmConfig::native(kind), Weights::I8(&b)).expect("plan");
+                    (Some(a), None, None, plan)
+                }
+                Kind::Tbn => {
+                    let a = MatI8::random_ternary(h, d, &mut rng);
+                    let b = MatI8::random_binary(d, w, &mut rng);
+                    let plan = GemmPlan::new(GemmConfig::native(kind), Weights::I8(&b)).expect("plan");
+                    (Some(a), None, None, plan)
+                }
+                Kind::F32 => {
+                    let a = MatF32::random(h, d, &mut rng);
+                    let b = MatF32::random(d, w, &mut rng);
+                    let plan = GemmPlan::new(GemmConfig::native(kind), Weights::F32(&b)).expect("plan");
+                    (None, None, Some(a), plan)
+                }
+                Kind::U8 => {
+                    let a = MatU8::random(h, d, &mut rng);
+                    let b = MatU8::random(d, w, &mut rng);
+                    let plan = GemmPlan::new(GemmConfig::native(kind), Weights::U8 { b: &b, za: 3, zb: 5 })
+                        .expect("plan");
+                    (None, Some(a), None, plan)
+                }
+                Kind::U4 => {
+                    let a = MatU8::random_below(h, d, 15, &mut rng);
+                    let b = MatU8::random_below(d, w, 15, &mut rng);
+                    let plan = GemmPlan::new(GemmConfig::native(kind), Weights::U8 { b: &b, za: 3, zb: 5 })
+                        .expect("plan");
+                    (None, Some(a), None, plan)
+                }
+            };
+        let mut out = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+        let mut scratch = GemmScratch::new();
+        let t = paper_protocol(reps, inner, || {
+            let lhs = match (&lhs_i8, &lhs_u8, &lhs_f32) {
+                (Some(a), _, _) => Lhs::I8(a),
+                (_, Some(a), _) => Lhs::U8(a),
+                _ => Lhs::F32(lhs_f32.as_ref().expect("an LHS variant is always set")),
+            };
+            plan.run(lhs, &mut out, &mut scratch).expect("grid gemm");
+        });
         times.push(((h, w, d), t));
     }
     GridTimes { kind, times }

@@ -1,10 +1,12 @@
 //! Convolution parameters, the direct (oracle) convolution, and the
-//! GeMM-based convolution built on im2col + the low-bit drivers.
+//! GeMM-based convolution built on im2col + a built-once low-bit
+//! [`crate::gemm::GemmPlan`].
 
 use crate::conv::im2col::im2col_into;
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::block::{bnn_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, KPanel, Threading};
-use crate::gemm::native::{BitRows, PlaneRows};
+use crate::gemm::{
+    GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Tile, Weights,
+};
 use crate::util::mat::{MatI32, MatI8};
 
 /// Square-window convolution hyper-parameters.
@@ -76,23 +78,32 @@ pub enum ConvKind {
     Tbn,
 }
 
-/// Reusable scratch arena for [`LowBitConv::forward_into`] (and the
-/// stripe path): the im2col matrix, the packed activation bits/planes.
-/// All buffers are grown on demand and reused across calls, so a
-/// steady-state sequence of forward passes at fixed (or shrinking) shapes
-/// performs no heap allocation.
+impl ConvKind {
+    /// The GEMM kind implementing this convolution.
+    pub fn gemm_kind(self) -> Kind {
+        match self {
+            ConvKind::Bnn => Kind::Bnn,
+            ConvKind::Tnn => Kind::Tnn,
+            ConvKind::Tbn => Kind::Tbn,
+        }
+    }
+}
+
+/// Reusable scratch arena for [`LowBitConv::forward_into`]: the im2col
+/// matrix plus the shared GEMM packing arena
+/// ([`crate::gemm::GemmScratch`]). All buffers are grown on demand and
+/// reused across calls, so a steady-state sequence of forward passes at
+/// fixed (or shrinking) shapes performs no heap allocation.
 pub struct ConvScratch {
     /// The unrolled im2col activation matrix.
-    a: MatI8,
-    /// Packed binary activations (BNN).
-    bits: BitRows,
-    /// Packed ternary activation planes (TNN/TBN).
-    planes: PlaneRows,
+    pub(crate) a: MatI8,
+    /// The plan's LHS packing arena (bit rows / plane rows).
+    pub gemm: GemmScratch,
 }
 
 impl ConvScratch {
     pub fn new() -> Self {
-        ConvScratch { a: MatI8::zeros(0, 0), bits: BitRows::empty(), planes: PlaneRows::empty() }
+        ConvScratch { a: MatI8::zeros(0, 0), gemm: GemmScratch::new() }
     }
 }
 
@@ -102,66 +113,50 @@ impl Default for ConvScratch {
     }
 }
 
-/// A convolution layer with pre-packed weights, executed as
-/// im2col + native low-bit GEMM (the deployment path of the paper).
-/// The GEMM runs tiled + cache-blocked, and multithreaded per the
-/// layer's [`Threading`] config.
+/// A convolution layer with a pre-built [`GemmPlan`] (weights packed
+/// once, offline), executed as im2col + low-bit GEMM — the deployment
+/// path of the paper. The GEMM runs tiled + cache-blocked, and
+/// multithreaded per the plan's [`Threading`] config.
 pub struct LowBitConv {
     pub kind: ConvKind,
     pub params: ConvParams,
     pub c_in: usize,
     pub c_out: usize,
-    /// Worker threads for the GEMM (default: single-threaded).
-    pub threading: Threading,
-    /// Depth blocking for the GEMM (default: automatic — panels sized to
-    /// the kind's 16-bit-safe bound, one panel for shallow products).
-    pub k_panel: KPanel,
-    /// Weights packed offline: bit rows (binary) or plane rows (ternary)
-    /// of the transposed weight matrix.
-    packed_bits: Option<BitRows>,
-    packed_planes: Option<PlaneRows>,
+    /// The built-once multiplication plan (native backend).
+    plan: GemmPlan,
 }
 
 impl LowBitConv {
-    /// Pack `weights` (`depth × c_out`, im2col depth order) offline.
+    /// Pack `weights` (`depth × c_out`, im2col depth order) offline into
+    /// a native-backend [`GemmPlan`].
     pub fn new(kind: ConvKind, params: ConvParams, c_in: usize, weights: &MatI8) -> Self {
         assert_eq!(weights.rows, params.depth(c_in), "weight depth mismatch");
         let c_out = weights.cols;
-        let (packed_bits, packed_planes) = match kind {
-            ConvKind::Bnn | ConvKind::Tbn => {
-                assert!(weights.is_binary(), "{kind:?} weights must be ±1");
-                (Some(BitRows::from_binary_transposed(weights)), None)
-            }
-            ConvKind::Tnn => {
-                assert!(weights.is_ternary());
-                (None, Some(PlaneRows::from_ternary_transposed(weights)))
-            }
-        };
-        LowBitConv {
-            kind,
-            params,
-            c_in,
-            c_out,
-            threading: Threading::Single,
-            k_panel: KPanel::Auto,
-            packed_bits,
-            packed_planes,
-        }
+        let plan = GemmPlan::new(GemmConfig::native(kind.gemm_kind()), Weights::I8(weights))
+            .unwrap_or_else(|e| panic!("{kind:?} conv weights rejected: {e}"));
+        LowBitConv { kind, params, c_in, c_out, plan }
     }
 
     /// Builder-style threading override.
     pub fn with_threading(mut self, threading: Threading) -> Self {
-        self.threading = threading;
+        self.plan.set_threading(threading);
         self
     }
 
     pub fn set_threading(&mut self, threading: Threading) {
-        self.threading = threading;
+        self.plan.set_threading(threading);
     }
 
     /// Builder-style K-panel override (deep-K depth blocking).
     pub fn with_k_panel(mut self, k_panel: KPanel) -> Self {
-        self.k_panel = k_panel;
+        self.plan.set_k_panel(k_panel);
+        self
+    }
+
+    /// Builder-style register-tile override (e.g. the widened 4×4 BNN
+    /// tile, [`Tile::Wide`]).
+    pub fn with_tile(mut self, tile: Tile) -> Self {
+        self.plan.set_tile(tile);
         self
     }
 
@@ -192,45 +187,18 @@ impl LowBitConv {
         out.h = oh;
         out.w = ow;
         out.c = self.c_out;
-        out.data.clear();
-        out.data.resize(rows * self.c_out, 0);
         // The GEMM output layout (row = oy·ow + ox, col = channel) is
-        // exactly the HWC tensor layout, so the kernels write straight
-        // into the output tensor's storage.
-        let mut c = MatI32 { rows, cols: self.c_out, data: std::mem::take(&mut out.data) };
-        match self.kind {
-            ConvKind::Bnn => {
-                scratch.bits.repack_binary(&scratch.a);
-                bnn_gemm_kp_mt(
-                    &scratch.bits,
-                    self.packed_bits.as_ref().unwrap(),
-                    &mut c,
-                    self.threading,
-                    self.k_panel,
-                );
-            }
-            ConvKind::Tnn => {
-                scratch.planes.repack_ternary(&scratch.a);
-                tnn_gemm_kp_mt(
-                    &scratch.planes,
-                    self.packed_planes.as_ref().unwrap(),
-                    &mut c,
-                    self.threading,
-                    self.k_panel,
-                );
-            }
-            ConvKind::Tbn => {
-                scratch.planes.repack_ternary(&scratch.a);
-                tbn_gemm_kp_mt(
-                    &scratch.planes,
-                    self.packed_bits.as_ref().unwrap(),
-                    &mut c,
-                    self.threading,
-                    self.k_panel,
-                );
-            }
+        // exactly the HWC tensor layout, so the plan writes straight into
+        // the output tensor's storage (moved into the GemmOut wrapper and
+        // back; the plan sizes it in place).
+        let mut c = GemmOut::I32(MatI32 { rows: 0, cols: 0, data: std::mem::take(&mut out.data) });
+        self.plan
+            .run(Lhs::I8(&scratch.a), &mut c, &mut scratch.gemm)
+            .unwrap_or_else(|e| panic!("conv GEMM plan invariant violated: {e}"));
+        match c {
+            GemmOut::I32(m) => out.data = m.data,
+            GemmOut::F32(_) => unreachable!("conv kinds produce i32 output"),
         }
-        out.data = c.data;
     }
 }
 

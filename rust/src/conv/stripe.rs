@@ -14,27 +14,26 @@
 
 use crate::conv::conv2d::{ConvKind, ConvParams};
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::block::{bnn_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, KPanel, Threading};
-use crate::gemm::native::{BitRows, PlaneRows};
-use crate::util::mat::{MatI32, MatI8};
+use crate::gemm::{GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Lhs, Threading, Weights};
+use crate::util::mat::MatI8;
 
 /// Reusable scratch arena for [`StripeConv::forward_into`]: one stripe's
-/// patch matrix, its packed form, and the stripe GEMM output. Grown on
+/// patch matrix, the shared GEMM packing arena
+/// ([`crate::gemm::GemmScratch`]), and the stripe GEMM output. Grown on
 /// demand; steady-state forward passes perform no heap allocation.
 pub struct StripeScratch {
     stripe: MatI8,
-    bits: BitRows,
-    planes: PlaneRows,
-    c: MatI32,
+    /// The plan's LHS packing arena.
+    pub gemm: GemmScratch,
+    c: GemmOut,
 }
 
 impl StripeScratch {
     pub fn new() -> Self {
         StripeScratch {
             stripe: MatI8::zeros(0, 0),
-            bits: BitRows::empty(),
-            planes: PlaneRows::empty(),
-            c: MatI32::zeros(0, 0),
+            gemm: GemmScratch::new(),
+            c: GemmOut::new_i32(),
         }
     }
 }
@@ -45,57 +44,38 @@ impl Default for StripeScratch {
     }
 }
 
-/// A convolution layer computed stripe-by-stripe. Weights are packed
-/// offline exactly as in [`crate::conv::conv2d::LowBitConv`].
+/// A convolution layer computed stripe-by-stripe over a built-once
+/// [`GemmPlan`] (weights packed offline exactly as in
+/// [`crate::conv::conv2d::LowBitConv`]).
 pub struct StripeConv {
     pub kind: ConvKind,
     pub params: ConvParams,
     pub c_in: usize,
     pub c_out: usize,
-    /// Worker threads for each stripe GEMM (default: single-threaded;
-    /// stripes are short, so this pays off only for wide outputs).
-    pub threading: Threading,
-    /// Depth blocking for each stripe GEMM (default: automatic).
-    pub k_panel: KPanel,
-    packed_bits: Option<BitRows>,
-    packed_planes: Option<PlaneRows>,
+    /// The built-once multiplication plan (native backend); its
+    /// threading applies per stripe GEMM (stripes are short, so it pays
+    /// off only for wide outputs).
+    plan: GemmPlan,
 }
 
 impl StripeConv {
     pub fn new(kind: ConvKind, params: ConvParams, c_in: usize, weights: &MatI8) -> Self {
         assert_eq!(weights.rows, params.depth(c_in), "weight depth mismatch");
         let c_out = weights.cols;
-        let (packed_bits, packed_planes) = match kind {
-            ConvKind::Bnn | ConvKind::Tbn => {
-                assert!(weights.is_binary());
-                (Some(BitRows::from_binary_transposed(weights)), None)
-            }
-            ConvKind::Tnn => {
-                assert!(weights.is_ternary());
-                (None, Some(PlaneRows::from_ternary_transposed(weights)))
-            }
-        };
-        StripeConv {
-            kind,
-            params,
-            c_in,
-            c_out,
-            threading: Threading::Single,
-            k_panel: KPanel::Auto,
-            packed_bits,
-            packed_planes,
-        }
+        let plan = GemmPlan::new(GemmConfig::native(kind.gemm_kind()), Weights::I8(weights))
+            .unwrap_or_else(|e| panic!("{kind:?} stripe-conv weights rejected: {e}"));
+        StripeConv { kind, params, c_in, c_out, plan }
     }
 
     /// Builder-style threading override.
     pub fn with_threading(mut self, threading: Threading) -> Self {
-        self.threading = threading;
+        self.plan.set_threading(threading);
         self
     }
 
     /// Builder-style K-panel override (deep-K depth blocking).
     pub fn with_k_panel(mut self, k_panel: KPanel) -> Self {
-        self.k_panel = k_panel;
+        self.plan.set_k_panel(k_panel);
         self
     }
 
@@ -128,15 +108,11 @@ impl StripeConv {
         out.c = self.c_out;
         out.data.clear();
         out.data.resize(oh * ow * self.c_out, 0);
-        // Reused stripe buffers.
+        // Reused stripe buffer (the plan sizes the output in place).
         scratch.stripe.rows = ow;
         scratch.stripe.cols = depth;
         scratch.stripe.data.clear();
         scratch.stripe.data.resize(ow * depth, 0);
-        scratch.c.rows = ow;
-        scratch.c.cols = self.c_out;
-        scratch.c.data.clear();
-        scratch.c.data.resize(ow * self.c_out, 0);
         for oy in 0..oh {
             // Fill the stripe: patch rows for output row oy.
             for ox in 0..ow {
@@ -161,42 +137,18 @@ impl StripeConv {
                     }
                 }
             }
-            match self.kind {
-                ConvKind::Bnn => {
-                    scratch.bits.repack_binary(&scratch.stripe);
-                    bnn_gemm_kp_mt(
-                        &scratch.bits,
-                        self.packed_bits.as_ref().unwrap(),
-                        &mut scratch.c,
-                        self.threading,
-                        self.k_panel,
-                    )
-                }
-                ConvKind::Tnn => {
-                    scratch.planes.repack_ternary(&scratch.stripe);
-                    tnn_gemm_kp_mt(
-                        &scratch.planes,
-                        self.packed_planes.as_ref().unwrap(),
-                        &mut scratch.c,
-                        self.threading,
-                        self.k_panel,
-                    )
-                }
-                ConvKind::Tbn => {
-                    scratch.planes.repack_ternary(&scratch.stripe);
-                    tbn_gemm_kp_mt(
-                        &scratch.planes,
-                        self.packed_bits.as_ref().unwrap(),
-                        &mut scratch.c,
-                        self.threading,
-                        self.k_panel,
-                    )
-                }
-            }
+            self.plan
+                .run(Lhs::I8(&scratch.stripe), &mut scratch.c, &mut scratch.gemm)
+                .unwrap_or_else(|e| panic!("stripe GEMM plan invariant violated: {e}"));
             // Stripe output is (ox, f)-major — exactly the HWC slice of
             // output row oy.
             let row_base = oy * ow * self.c_out;
-            out.data[row_base..row_base + ow * self.c_out].copy_from_slice(&scratch.c.data);
+            match &scratch.c {
+                GemmOut::I32(cm) => {
+                    out.data[row_base..row_base + ow * self.c_out].copy_from_slice(&cm.data)
+                }
+                GemmOut::F32(_) => unreachable!("stripe kinds produce i32 output"),
+            }
         }
     }
 }

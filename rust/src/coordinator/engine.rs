@@ -17,11 +17,13 @@ pub trait InferenceEngine: Send {
     fn name(&self) -> String;
 }
 
-/// The native low-bit engine: the paper's kernels under a [`Network`].
-/// Holds a per-engine [`NetScratch`] arena reused across requests and
-/// batches, so steady-state inference performs no heap allocation on the
-/// GEMM paths (the worker thread owns the engine, so the `RefCell` is
-/// never contended).
+/// The native low-bit engine: the paper's kernels under a [`Network`]
+/// of built-once [`crate::gemm::GemmPlan`]s. Holds a per-engine
+/// [`NetScratch`] arena (conv + dense arenas over the unified
+/// [`crate::gemm::GemmScratch`]) reused across requests and batches, so
+/// steady-state inference performs no heap allocation on the GEMM paths
+/// (the worker thread owns the engine, so the `RefCell` is never
+/// contended).
 pub struct NativeEngine {
     pub network: Network,
     pub label: String,
@@ -36,7 +38,7 @@ impl NativeEngine {
     /// Run every conv GEMM under this threading config. Intra-op
     /// parallelism composes with the coordinator's batching: the worker
     /// thread fans each convolution out over row bands.
-    pub fn with_threading(mut self, threading: crate::gemm::native::Threading) -> Self {
+    pub fn with_threading(mut self, threading: crate::gemm::Threading) -> Self {
         self.network.set_threading(threading);
         self
     }

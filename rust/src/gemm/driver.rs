@@ -15,9 +15,14 @@
 //! [`crate::gemm::micro`], used for correctness and Table II) and the
 //! **native** path ([`crate::gemm::native`], used for Table III wall-clock
 //! benchmarks). Both are tested against the scalar oracles.
+//!
+//! This module is a crate-internal engine: the public entry point is the
+//! plan/execute API in [`crate::gemm::plan`], which wraps this driver as
+//! [`crate::gemm::Backend::Emulated`].
 
 use crate::gemm::micro;
 use crate::gemm::pack;
+use crate::gemm::plan::{GemmOut, Lhs};
 use crate::gemm::Kind;
 use crate::simd::reg::Neon;
 use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
@@ -33,61 +38,12 @@ pub const K_BLK_LOWBIT: usize = 4096;
 /// Depth-block for U4 (16-bit accumulators, k_max = 291 ⇒ largest even
 /// block is 290).
 pub const K_BLK_U4: usize = 290;
-/// Depth-block for U8 (32-bit accumulators, k_max = 66051).
+/// Depth-block for U8 (32-bit accumulators, k_max = 66051). The u8
+/// driver accumulates a full product in u32 (its shapes stay far below
+/// the bound); the constant documents the limit and pins it to the
+/// native `safe_k` view in the tests below.
+#[cfg_attr(not(test), allow(dead_code))]
 pub const K_BLK_U8: usize = 66050;
-
-/// Left-hand input accepted by a packed-B multiplier.
-pub enum Lhs<'a> {
-    I8(&'a MatI8),
-    U8(&'a MatU8),
-    F32(&'a MatF32),
-}
-
-/// Output of a multiplication. Low-bit kinds produce i32 (widened from
-/// the in-kernel 16-bit accumulators); F32 and daBNN produce f32.
-#[derive(Clone, Debug)]
-pub enum GemmOut {
-    I32(MatI32),
-    F32(MatF32),
-}
-
-impl GemmOut {
-    pub fn rows(&self) -> usize {
-        match self {
-            GemmOut::I32(m) => m.rows,
-            GemmOut::F32(m) => m.rows,
-        }
-    }
-
-    pub fn cols(&self) -> usize {
-        match self {
-            GemmOut::I32(m) => m.cols,
-            GemmOut::F32(m) => m.cols,
-        }
-    }
-
-    /// Element as f64 (for cross-path comparisons).
-    pub fn at(&self, r: usize, c: usize) -> f64 {
-        match self {
-            GemmOut::I32(m) => m.get(r, c) as f64,
-            GemmOut::F32(m) => m.get(r, c) as f64,
-        }
-    }
-
-    pub fn unwrap_i32(self) -> MatI32 {
-        match self {
-            GemmOut::I32(m) => m,
-            _ => panic!("expected i32 output"),
-        }
-    }
-
-    pub fn unwrap_f32(self) -> MatF32 {
-        match self {
-            GemmOut::F32(m) => m,
-            _ => panic!("expected f32 output"),
-        }
-    }
-}
 
 /// Algorithm selector for [`GemmDriver`]. `Algo` owns the packed right
 /// matrix and any constants the epilogue needs.
@@ -381,6 +337,22 @@ mod tests {
     use crate::util::proptest::{check, gemm_shape, Config};
     use crate::util::Rng;
 
+    /// Test-side destructuring (the public API's typed accessor is
+    /// [`GemmOut::as_i32`]; panicking here is test-failure reporting).
+    fn i32_out(out: GemmOut) -> MatI32 {
+        match out {
+            GemmOut::I32(m) => m,
+            GemmOut::F32(_) => panic!("expected i32 output"),
+        }
+    }
+
+    fn f32_out(out: GemmOut) -> MatF32 {
+        match out {
+            GemmOut::F32(m) => m,
+            GemmOut::I32(_) => panic!("expected f32 output"),
+        }
+    }
+
     fn assert_i32_eq(got: &MatI32, want: &MatI32, ctx: &str) {
         assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{ctx}");
         for i in 0..got.rows {
@@ -397,7 +369,7 @@ mod tests {
             let a = MatI8::random_binary(m, k, rng);
             let b = MatI8::random_binary(k, n, rng);
             let drv = GemmDriver::new_bnn(&b);
-            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            let c = i32_out(drv.multiply_emulated(Lhs::I8(&a)));
             assert_i32_eq(&c, &reference::gemm_i8(&a, &b), &format!("m={m} n={n} k={k}"));
         });
     }
@@ -409,7 +381,7 @@ mod tests {
             let a = MatI8::random_ternary(m, k, rng);
             let b = MatI8::random_ternary(k, n, rng);
             let drv = GemmDriver::new_tnn(&b);
-            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            let c = i32_out(drv.multiply_emulated(Lhs::I8(&a)));
             assert_i32_eq(&c, &reference::gemm_i8(&a, &b), &format!("m={m} n={n} k={k}"));
         });
     }
@@ -421,7 +393,7 @@ mod tests {
             let a = MatI8::random_ternary(m, k, rng);
             let b = MatI8::random_binary(k, n, rng);
             let drv = GemmDriver::new_tbn(&b);
-            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            let c = i32_out(drv.multiply_emulated(Lhs::I8(&a)));
             assert_i32_eq(&c, &reference::gemm_i8(&a, &b), &format!("m={m} n={n} k={k}"));
         });
     }
@@ -435,7 +407,7 @@ mod tests {
             let za = rng.below(256) as i32;
             let zb = rng.below(256) as i32;
             let drv = GemmDriver::new_u8(&b, za, zb);
-            let c = drv.multiply_emulated(Lhs::U8(&a)).unwrap_i32();
+            let c = i32_out(drv.multiply_emulated(Lhs::U8(&a)));
             assert_i32_eq(&c, &reference::gemm_u8_centered(&a, &b, za, zb), &format!("m={m} n={n} k={k}"));
         });
     }
@@ -452,7 +424,7 @@ mod tests {
             let za = rng.below(16) as i32;
             let zb = rng.below(16) as i32;
             let drv = GemmDriver::new_u4(&b, za, zb);
-            let c = drv.multiply_emulated(Lhs::U8(&a)).unwrap_i32();
+            let c = i32_out(drv.multiply_emulated(Lhs::U8(&a)));
             assert_i32_eq(&c, &reference::gemm_u8_centered(&a, &b, za, zb), &format!("m={m} n={n} k={k}"));
         });
     }
@@ -465,7 +437,7 @@ mod tests {
             let a = MatF32::random(m, k, &mut rng);
             let b = MatF32::random(k, n, &mut rng);
             let drv = GemmDriver::new_f32(&b);
-            let c = drv.multiply_emulated(Lhs::F32(&a)).unwrap_f32();
+            let c = f32_out(drv.multiply_emulated(Lhs::F32(&a)));
             let want = reference::gemm_f32(&a, &b);
             for i in 0..m {
                 for j in 0..n {
@@ -483,7 +455,7 @@ mod tests {
             let a = MatI8::random_binary(m, k, rng);
             let b = MatI8::random_binary(k, n, rng);
             let drv = GemmDriver::new_dabnn(&b);
-            let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_f32();
+            let c = f32_out(drv.multiply_emulated(Lhs::I8(&a)));
             let want = reference::gemm_i8(&a, &b);
             for i in 0..m {
                 for j in 0..n {
@@ -501,7 +473,7 @@ mod tests {
         let a = MatI8::random_ternary(4, k, &mut rng);
         let b = MatI8::random_ternary(k, 4, &mut rng);
         let drv = GemmDriver::new_tnn(&b);
-        let c = drv.multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+        let c = i32_out(drv.multiply_emulated(Lhs::I8(&a)));
         assert_i32_eq(&c, &reference::gemm_i8(&a, &b), "deep k");
     }
 

@@ -4,6 +4,10 @@
 //!
 //! Layout of the module:
 //!
+//! * [`plan`] — **the public boundary**: the plan/execute API
+//!   ([`GemmPlan`], [`GemmConfig`], [`Backend`]) — weights are packed
+//!   once into a plan, which then runs any number of multiplications
+//!   into caller-owned output with typed errors ([`GemmError`]).
 //! * [`encode`] — the paper's §III-A: 1-bit binary and 2-bit ternary value
 //!   encodings and the Boolean product formulas of Table I.
 //! * [`pack`] — §III-B/C/D: the `Ablock` / `Bblock` storage orders each
@@ -11,19 +15,23 @@
 //! * [`micro`] — the microkernels as emulated-NEON instruction sequences
 //!   (Figs. 1-3), traced for Table II.
 //! * [`native`] — portable fast paths (u64 bit-ops) implementing the same
-//!   algorithms for wall-clock benchmarks (Table III).
-//! * [`driver`] — the paper's Algorithm 2: the blocked GEMM loop with a
-//!   pre-packed `B` ("PackedB": weights are packed once, offline).
-//! * [`reference`] — naive scalar oracles every path is tested against.
+//!   algorithms for wall-clock benchmarks (Table III); dispatched as
+//!   [`Backend::Native`].
+//! * `driver` (crate-internal) — the paper's Algorithm 2 over the
+//!   emulated microkernels; dispatched as [`Backend::Emulated`].
+//! * [`reference`] — naive scalar oracles every path is tested against;
+//!   dispatched as [`Backend::Reference`].
 
-pub mod driver;
+pub(crate) mod driver;
 pub mod encode;
 pub mod micro;
 pub mod native;
 pub mod pack;
+pub mod plan;
 pub mod reference;
 
-pub use driver::{Algo, GemmDriver};
+pub use native::{safe_k, KPanel, Threading};
+pub use plan::{Backend, GemmConfig, GemmError, GemmOut, GemmPlan, GemmScratch, Lhs, Tile, Weights};
 
 /// The three low-bit multiplications the paper proposes plus the four
 /// baselines it compares against (Table II / Table III row order).

@@ -172,7 +172,7 @@ where
 // total popcount fits f32's integer range, K < 2²⁴).
 
 /// Binary GEMM, K-paneled + tiled + cache-blocked + threaded.
-pub fn bnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
+pub(crate) fn bnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
@@ -190,12 +190,32 @@ pub fn bnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Thre
 }
 
 /// Binary GEMM, tiled + cache-blocked + threaded over row bands.
-pub fn bnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn bnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
     bnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
 }
 
+/// Binary GEMM with the widened 4×4 register tile
+/// ([`crate::gemm::plan::Tile::Wide`]) on the shallow-K path. Deep-K
+/// products (more than one K panel) fall back to the 4×2 spill kernel,
+/// so results are bit-identical to [`bnn_gemm_kp_mt`] everywhere.
+pub(crate) fn bnn_gemm_wide_mt(a: &BitRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    let kpw = k_panel.words(a.k, a.words_per_row, Kind::Bnn);
+    let single = kpw >= a.words_per_row;
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        if single {
+            kernels::bnn_band_wide(a, bt, row0, rows, band);
+        } else {
+            kernels::bnn_band_kp(a, bt, row0, rows, band, kpw);
+        }
+    });
+}
+
 /// Ternary GEMM, K-paneled + tiled + cache-blocked + threaded.
-pub fn tnn_gemm_kp_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
+pub(crate) fn tnn_gemm_kp_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
@@ -211,12 +231,13 @@ pub fn tnn_gemm_kp_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: 
 }
 
 /// Ternary GEMM, tiled + cache-blocked + threaded over row bands.
-pub fn tnn_gemm_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn tnn_gemm_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading) {
     tnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
 }
 
 /// Ternary-binary GEMM, K-paneled + tiled + cache-blocked + threaded.
-pub fn tbn_gemm_kp_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
+pub(crate) fn tbn_gemm_kp_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
@@ -232,7 +253,8 @@ pub fn tbn_gemm_kp_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Th
 }
 
 /// Ternary-binary GEMM, tiled + cache-blocked + threaded over row bands.
-pub fn tbn_gemm_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn tbn_gemm_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading) {
     tbn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
 }
 
@@ -240,7 +262,7 @@ pub fn tbn_gemm_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threa
 /// are exact integers while sums stay below 2²⁴ (total K < 2²⁴, far
 /// above any real im2col depth), so results are bit-identical to
 /// [`kernels::dabnn_gemm`] at any thread count and panel size there.
-pub fn dabnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Threading, k_panel: KPanel) {
+pub(crate) fn dabnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let threads = threading.worker_count(a.rows);
@@ -255,15 +277,10 @@ pub fn dabnn_gemm_kp_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Th
     });
 }
 
-/// daBNN-style binary GEMM, threaded over row bands.
-pub fn dabnn_gemm_mt(a: &BitRows, bt: &BitRows, c: &mut MatF32, threading: Threading) {
-    dabnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
-}
-
 /// f32 GEMM, K-paneled + threaded. With `KPanel::Auto` the depth stays a
 /// single panel (no f32 safe-K bound), keeping results bit-identical to
 /// [`kernels::f32_gemm`]; explicit panels change rounding association.
-pub fn f32_gemm_kp_mt(
+pub(crate) fn f32_gemm_kp_mt(
     a: &MatF32,
     b_panels: &[Vec<f32>],
     n: usize,
@@ -284,17 +301,11 @@ pub fn f32_gemm_kp_mt(
     });
 }
 
-/// f32 GEMM, threaded over row bands. Per-output accumulation order is
-/// unchanged, so results are bit-identical to [`kernels::f32_gemm`].
-pub fn f32_gemm_mt(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32, threading: Threading) {
-    f32_gemm_kp_mt(a, b_panels, n, c, threading, KPanel::Auto);
-}
-
 /// u8 GEMM with zero-point compensation, K-paneled + threaded: u32
 /// in-panel accumulation, i64 spill and epilogue (exact past the u32
 /// depth bound where the unpaneled kernel would wrap).
 #[allow(clippy::too_many_arguments)]
-pub fn u8_gemm_kp_mt(
+pub(crate) fn u8_gemm_kp_mt(
     a: &MatU8,
     b_panels: &[Vec<u8>],
     n: usize,
@@ -311,21 +322,6 @@ pub fn u8_gemm_kp_mt(
     parallel_row_bands(&mut c.data, n, a.rows, threads, |row0, rows, band| {
         kernels::u8_band_kp(a, b_panels, n, za, zb, col_sums, row0, rows, band, kp);
     });
-}
-
-/// u8 GEMM with zero-point compensation, threaded over row bands.
-#[allow(clippy::too_many_arguments)]
-pub fn u8_gemm_mt(
-    a: &MatU8,
-    b_panels: &[Vec<u8>],
-    n: usize,
-    za: i32,
-    zb: i32,
-    col_sums: &[i32],
-    c: &mut MatI32,
-    threading: Threading,
-) {
-    u8_gemm_kp_mt(a, b_panels, n, za, zb, col_sums, c, threading, KPanel::Auto);
 }
 
 #[cfg(test)]

@@ -27,6 +27,7 @@ use crate::gemm::native::bits::{BitRows, PlaneRows};
 use crate::gemm::native::block::{blocks, n_panel};
 use crate::gemm::native::simd_popcnt::{
     tbn_popcnt, tbn_popcnt_2x2, tnn_popcnt, tnn_popcnt_2x2, xor_popcnt, xor_popcnt2, xor_popcnt_4x2,
+    xor_popcnt_4x4,
 };
 use crate::util::mat::{MatF32, MatI32, MatU8};
 
@@ -36,7 +37,8 @@ use crate::util::mat::{MatF32, MatI32, MatU8};
 
 /// Binary GEMM. `a` holds bit rows of A, `bt` bit rows of Bᵀ.
 /// Register-tiled (4 A-rows × 2 B-columns) with L1-blocked B panels.
-pub fn bnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn bnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     bnn_band(a, bt, 0, a.rows, &mut c.data);
@@ -53,6 +55,65 @@ pub(crate) fn bnn_band(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band
         while i + 4 <= rows {
             let ar = [a.row(row0 + i), a.row(row0 + i + 1), a.row(row0 + i + 2), a.row(row0 + i + 3)];
             let mut j = j0;
+            while j + 2 <= jend {
+                let s = xor_popcnt_4x2(ar, bt.row(j), bt.row(j + 1));
+                for (r, sr) in s.iter().enumerate() {
+                    band[(i + r) * n + j] = k - 2 * sr[0] as i32;
+                    band[(i + r) * n + j + 1] = k - 2 * sr[1] as i32;
+                }
+                j += 2;
+            }
+            if j < jend {
+                for (r, arr) in ar.iter().enumerate() {
+                    band[(i + r) * n + j] = k - 2 * xor_popcnt(arr, bt.row(j)) as i32;
+                }
+            }
+            i += 4;
+        }
+        // Remainder rows (< 4): the 2-column row-dot path.
+        while i < rows {
+            let arr = a.row(row0 + i);
+            let mut j = j0;
+            while j + 2 <= jend {
+                let (s0, s1) = xor_popcnt2(arr, bt.row(j), bt.row(j + 1));
+                band[i * n + j] = k - 2 * s0 as i32;
+                band[i * n + j + 1] = k - 2 * s1 as i32;
+                j += 2;
+            }
+            if j < jend {
+                band[i * n + j] = k - 2 * xor_popcnt(arr, bt.row(j)) as i32;
+            }
+            i += 1;
+        }
+    }
+}
+
+/// Rows `row0..row0+rows` of the BNN product into `band` with the
+/// widened 4×4 register tile ([`crate::gemm::plan::Tile::Wide`]): each
+/// loaded A word feeds 4 B columns and each B word 4 A rows, halving the
+/// loads-per-output of the 4×2 tile on wide outputs. Column remainders
+/// fall back to the 4×2 / 2×1 paths and row remainders to the row-dot
+/// path, so results are bit-identical to [`bnn_band`] (integer popcount
+/// sums regroup freely).
+pub(crate) fn bnn_band_wide(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, band: &mut [i32]) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    let k = a.k as i32;
+    for (j0, jn) in blocks(n, n_panel(bt.words_per_row, 1)) {
+        let jend = j0 + jn;
+        let mut i = 0;
+        while i + 4 <= rows {
+            let ar = [a.row(row0 + i), a.row(row0 + i + 1), a.row(row0 + i + 2), a.row(row0 + i + 3)];
+            let mut j = j0;
+            while j + 4 <= jend {
+                let s = xor_popcnt_4x4(ar, [bt.row(j), bt.row(j + 1), bt.row(j + 2), bt.row(j + 3)]);
+                for (r, sr) in s.iter().enumerate() {
+                    for (c, &v) in sr.iter().enumerate() {
+                        band[(i + r) * n + j + c] = k - 2 * v as i32;
+                    }
+                }
+                j += 4;
+            }
             while j + 2 <= jend {
                 let s = xor_popcnt_4x2(ar, bt.row(j), bt.row(j + 1));
                 for (r, sr) in s.iter().enumerate() {
@@ -150,7 +211,7 @@ pub(crate) fn bnn_band_kp(a: &BitRows, bt: &BitRows, row0: usize, rows: usize, b
 
 /// The seed's BNN kernel: independent row-dots, 2× column unrolling.
 /// Kept as the differential / benchmark baseline for the tiled kernel.
-pub fn bnn_gemm_rowdot(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
+pub(crate) fn bnn_gemm_rowdot(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let k = a.k as i32;
@@ -178,7 +239,8 @@ pub fn bnn_gemm_rowdot(a: &BitRows, bt: &BitRows, c: &mut MatI32) {
 /// Ternary GEMM. `a` holds plane rows of A, `bt` plane rows of Bᵀ.
 /// Register-tiled (2×2; each output needs two accumulators, z⁺ and z⁻)
 /// with L1-blocked B panels.
-pub fn tnn_gemm(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn tnn_gemm(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     tnn_band(a, bt, 0, a.rows, &mut c.data);
@@ -276,7 +338,7 @@ pub(crate) fn tnn_band_kp(a: &PlaneRows, bt: &PlaneRows, row0: usize, rows: usiz
 }
 
 /// The seed's TNN kernel: one vectorized plane-product pass per (i, j).
-pub fn tnn_gemm_rowdot(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
+pub(crate) fn tnn_gemm_rowdot(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let n = bt.rows;
@@ -298,7 +360,8 @@ pub fn tnn_gemm_rowdot(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32) {
 ///
 /// y⁺ = ¬y♭, y⁻ = y♭. Note ¬y♭ sets the depth-padding bits of the last
 /// word, but a⁺/a⁻ padding bits are 0, so the AND masks them out.
-pub fn tbn_gemm(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn tbn_gemm(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     tbn_band(a, bt, 0, a.rows, &mut c.data);
@@ -386,7 +449,7 @@ pub(crate) fn tbn_band_kp(a: &PlaneRows, bt: &BitRows, row0: usize, rows: usize,
 }
 
 /// The seed's TBN kernel: one vectorized pass per (i, j).
-pub fn tbn_gemm_rowdot(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
+pub(crate) fn tbn_gemm_rowdot(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     let n = bt.rows;
@@ -411,7 +474,8 @@ pub fn tbn_gemm_rowdot(a: &PlaneRows, bt: &BitRows, c: &mut MatI32) {
 /// Tiled over 4 A-rows (B words loaded once per 4 rows) while keeping the
 /// per-output chunk order — and therefore the f32 rounding — bit-identical
 /// to the row-dot form.
-pub fn dabnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatF32) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn dabnn_gemm(a: &BitRows, bt: &BitRows, c: &mut MatF32) {
     assert_eq!(a.k, bt.k, "depth mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
     dabnn_band(a, bt, 0, a.rows, &mut c.data);
@@ -551,7 +615,8 @@ pub(crate) fn dabnn_band_kp(a: &BitRows, bt: &BitRows, row0: usize, rows: usize,
 
 /// f32 GEMM, register-blocked 4×8 with B pre-transposed to row-panels of
 /// 8 columns (`bp[d*8 + c]` = B[d][col0+c]), k-major streams.
-pub fn f32_gemm(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn f32_gemm(a: &MatF32, b_panels: &[Vec<f32>], n: usize, c: &mut MatF32) {
     let m = a.rows;
     assert_eq!((c.rows, c.cols), (m, n));
     f32_band(a, b_panels, n, 0, m, &mut c.data);
@@ -690,7 +755,8 @@ pub(crate) fn f32_band_kp(
 /// panel, k-major (`panel[d*8 + c]`); `col_sums` precomputed offline.
 /// Register-tiled 4×8 (each loaded B vector feeds four row accumulators).
 #[allow(clippy::too_many_arguments)]
-pub fn u8_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn u8_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
     let (m, _) = (a.rows, a.cols);
     assert_eq!((c.rows, c.cols), (m, n));
     u8_band(a, b_panels, n, za, zb, col_sums, 0, m, &mut c.data);
@@ -698,6 +764,7 @@ pub fn u8_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_
 
 /// Rows `row0..row0+rows` of the u8 product into `band` (`rows × n`).
 #[allow(clippy::too_many_arguments)]
+#[cfg_attr(not(test), allow(dead_code))]
 pub(crate) fn u8_band(
     a: &MatU8,
     b_panels: &[Vec<u8>],
@@ -867,7 +934,7 @@ pub(crate) fn u8_band_kp(
 /// The u16 accumulators are the structural speed advantage over U8: twice
 /// the SIMD lanes per vector op after auto-vectorization.
 #[allow(clippy::too_many_arguments)]
-pub fn u4_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
+pub(crate) fn u4_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_sums: &[i32], c: &mut MatI32) {
     let (m, k) = (a.rows, a.cols);
     assert_eq!((c.rows, c.cols), (m, n));
     const KB: usize = 290;
@@ -910,7 +977,7 @@ pub fn u4_gemm(a: &MatU8, b_panels: &[Vec<u8>], n: usize, za: i32, zb: i32, col_
 // -------------------------------------------------------------------
 
 /// Pack B (k×n f32) into 8-column k-major panels for [`f32_gemm`].
-pub fn pack_b_panels_f32(b: &MatF32) -> Vec<Vec<f32>> {
+pub(crate) fn pack_b_panels_f32(b: &MatF32) -> Vec<Vec<f32>> {
     (0..b.cols.div_ceil(8))
         .map(|cb| {
             let mut p = vec![0f32; b.rows * 8];
@@ -928,7 +995,7 @@ pub fn pack_b_panels_f32(b: &MatF32) -> Vec<Vec<f32>> {
 }
 
 /// Pack B (k×n u8) into 8-column k-major panels for [`u8_gemm`]/[`u4_gemm`].
-pub fn pack_b_panels_u8(b: &MatU8) -> Vec<Vec<u8>> {
+pub(crate) fn pack_b_panels_u8(b: &MatU8) -> Vec<Vec<u8>> {
     (0..b.cols.div_ceil(8))
         .map(|cb| {
             let mut p = vec![0u8; b.rows * 8];
@@ -1046,6 +1113,35 @@ mod tests {
         }
     }
 
+    /// The widened 4×4 BNN tile is bit-identical to the 4×2 tiled kernel
+    /// on shapes breaking every boundary: n % 4 ∈ {0,1,2,3}, m % 4 ≠ 0,
+    /// k not a multiple of 64.
+    #[test]
+    fn bnn_wide_tile_matches_tiled() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (4, 4, 64),
+            (5, 3, 65),
+            (8, 9, 127),
+            (4, 6, 128),
+            (3, 11, 130),
+            (12, 13, 191),
+            (17, 33, 257),
+        ];
+        let mut rng = crate::util::Rng::new(0xC9);
+        for &(m, n, k) in &shapes {
+            let a = MatI8::random_binary(m, k, &mut rng);
+            let b = MatI8::random_binary(k, n, &mut rng);
+            let ab = BitRows::from_binary(&a);
+            let bb = BitRows::from_binary_transposed(&b);
+            let mut c_tiled = MatI32::zeros(m, n);
+            bnn_gemm(&ab, &bb, &mut c_tiled);
+            let mut c_wide = MatI32::zeros(m, n);
+            bnn_band_wide(&ab, &bb, 0, m, &mut c_wide.data);
+            assert_eq!(c_wide.data, c_tiled.data, "m={m} n={n} k={k}");
+        }
+    }
+
     #[test]
     fn dabnn_native_vs_oracle() {
         check(Config { cases: 16, base_seed: 0xC3 }, "dabnn native", |rng| {
@@ -1121,12 +1217,16 @@ mod tests {
     /// Native and emulated paths agree exactly on the low-bit kinds.
     #[test]
     fn native_matches_emulated() {
-        use crate::gemm::driver::{GemmDriver, Lhs};
+        use crate::gemm::driver::GemmDriver;
+        use crate::gemm::plan::{GemmOut, Lhs};
         check(Config { cases: 8, base_seed: 0xC7 }, "native vs emulated", |rng| {
             let (m, n, k) = gemm_shape(rng, 33, 25, 100);
             let a = MatI8::random_ternary(m, k, rng);
             let b = MatI8::random_ternary(k, n, rng);
-            let emu = GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
+            let emu = match GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)) {
+                GemmOut::I32(m) => m,
+                GemmOut::F32(_) => panic!("expected i32 output"),
+            };
             let ap = PlaneRows::from_ternary(&a);
             let bp = PlaneRows::from_ternary_transposed(&b);
             let mut c = MatI32::zeros(m, n);

@@ -84,8 +84,17 @@
 //!
 //! The seed's one-output-at-a-time kernels survive as
 //! `kernels::*_gemm_rowdot`; `benches/gemm_micro` tracks the tiled and
-//! threaded speedup over them and emits `BENCH_gemm.json` for trend
-//! tracking across PRs.
+//! threaded speedup over them (through `Tile::Rowdot` plans) and emits
+//! `BENCH_gemm.json` for trend tracking across PRs.
+//!
+//! Everything in this module is **crate-internal execution machinery**:
+//! the public entry point is the plan/execute API
+//! ([`crate::gemm::GemmPlan`]), which dispatches to these kernels as
+//! [`crate::gemm::Backend::Native`]. Only the layout types
+//! ([`BitRows`], [`PlaneRows`]), the config vocabulary ([`Threading`],
+//! [`KPanel`], [`safe_k`]) and the vectorized primitives
+//! ([`simd_popcnt`], [`pack_fast`], for the ablation benches) stay
+//! public.
 //!
 //! Layout types ([`BitRows`], [`PlaneRows`]) hold bit-packed rows of the
 //! left matrix and bit-packed *columns* of the right matrix (i.e. `B` is
@@ -97,13 +106,9 @@
 
 pub mod bits;
 pub mod block;
-pub mod kernels;
+pub(crate) mod kernels;
 pub mod pack_fast;
 pub mod simd_popcnt;
 
 pub use bits::{BitRows, PlaneRows};
-pub use block::{
-    bnn_gemm_kp_mt, bnn_gemm_mt, dabnn_gemm_kp_mt, dabnn_gemm_mt, f32_gemm_kp_mt, f32_gemm_mt, safe_k,
-    tbn_gemm_kp_mt, tbn_gemm_mt, tnn_gemm_kp_mt, tnn_gemm_mt, u8_gemm_kp_mt, u8_gemm_mt, KPanel, Threading,
-};
-pub use kernels::*;
+pub use block::{safe_k, KPanel, Threading};

@@ -91,6 +91,21 @@ pub fn xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
     scalar_xor_popcnt_4x2(a, b0, b1)
 }
 
+/// 4×4 binary tile: `s[r][c] = Σ popcount(a[r] ⊕ b[c])`. The widened
+/// BNN tile ([`crate::gemm::plan::Tile::Wide`]): each loaded A word
+/// feeds 4 columns and each B word 4 rows.
+#[inline]
+pub fn xor_popcnt_4x4(a: [&[u64]; 4], b: [&[u64]; 4]) -> [[u32; 4]; 4] {
+    debug_assert!(a.iter().all(|r| r.len() == b[0].len()) && b.iter().all(|r| r.len() == b[0].len()));
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return unsafe { avx2::xor_popcnt_4x4(a, b) };
+        }
+    }
+    scalar_xor_popcnt_4x4(a, b)
+}
+
 /// 2×2 ternary tile: `s[r][c] = (z⁺, z⁻)` plane popcounts of row `r`
 /// against column `c` (eq. (7) per output).
 #[inline]
@@ -158,6 +173,20 @@ pub fn scalar_xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2
             let av = a[r][t];
             s[r][0] += (av ^ w0).count_ones();
             s[r][1] += (av ^ w1).count_ones();
+        }
+    }
+    s
+}
+
+pub fn scalar_xor_popcnt_4x4(a: [&[u64]; 4], b: [&[u64]; 4]) -> [[u32; 4]; 4] {
+    let mut s = [[0u32; 4]; 4];
+    for t in 0..b[0].len() {
+        let bw = [b[0][t], b[1][t], b[2][t], b[3][t]];
+        for (r, ar) in a.iter().enumerate() {
+            let av = ar[t];
+            for (c, &bv) in bw.iter().enumerate() {
+                s[r][c] += (av ^ bv).count_ones();
+            }
         }
     }
     s
@@ -368,6 +397,39 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcnt_4x4(a: [&[u64]; 4], b: [&[u64]; 4]) -> [[u32; 4]; 4] {
+        let n = b[0].len();
+        let zero = _mm256_setzero_si256();
+        let mut acc = [[zero; 4]; 4];
+        let mut i = 0;
+        while i + 4 <= n {
+            let bv = [
+                loadu(b[0].as_ptr().add(i)),
+                loadu(b[1].as_ptr().add(i)),
+                loadu(b[2].as_ptr().add(i)),
+                loadu(b[3].as_ptr().add(i)),
+            ];
+            for r in 0..4 {
+                let av = loadu(a[r].as_ptr().add(i));
+                for c in 0..4 {
+                    acc[r][c] = acc_popcnt(acc[r][c], _mm256_xor_si256(av, bv[c]), zero);
+                }
+            }
+            i += 4;
+        }
+        let mut s = [[0u32; 4]; 4];
+        for r in 0..4 {
+            for c in 0..4 {
+                s[r][c] = hsum_epi64(acc[r][c]) as u32;
+                for t in i..n {
+                    s[r][c] += (a[r][t] ^ b[c][t]).count_ones();
+                }
+            }
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
     pub unsafe fn tnn_popcnt_2x2(
         ap: [&[u64]; 2],
@@ -525,6 +587,24 @@ mod tests {
             for r in 0..4 {
                 assert_eq!(s[r][0], scalar_xor_popcnt(&a[r], &b0), "n={n} r={r}");
                 assert_eq!(s[r][1], scalar_xor_popcnt(&a[r], &b1), "n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_popcnt_4x4_matches_dots() {
+        let mut rng = Rng::new(0xAC2);
+        for n in 0usize..=67 {
+            let a: Vec<Vec<u64>> = (0..4).map(|_| random_words(&mut rng, n)).collect();
+            let b: Vec<Vec<u64>> = (0..4).map(|_| random_words(&mut rng, n)).collect();
+            let ar = [&a[0][..], &a[1][..], &a[2][..], &a[3][..]];
+            let br = [&b[0][..], &b[1][..], &b[2][..], &b[3][..]];
+            let s = xor_popcnt_4x4(ar, br);
+            assert_eq!(s, scalar_xor_popcnt_4x4(ar, br), "n={n}");
+            for r in 0..4 {
+                for c in 0..4 {
+                    assert_eq!(s[r][c], scalar_xor_popcnt(&a[r], &b[c]), "n={n} r={r} c={c}");
+                }
             }
         }
     }

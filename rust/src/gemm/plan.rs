@@ -1,0 +1,843 @@
+//! The plan/execute GEMM API: the one public boundary of the matmul core.
+//!
+//! The paper's Algorithm 2 packs the constant right-hand (weight) matrix
+//! **once, offline** and reuses it per multiplication. [`GemmPlan`] is
+//! that idea as an API: a [`GemmConfig`] (kind, backend, threading, depth
+//! blocking, register tile) plus weights build a plan; [`GemmPlan::run`]
+//! then executes `C = A·B` into caller-owned output with **zero per-call
+//! heap allocation** on the native hot path and **typed errors**
+//! ([`GemmError`]) instead of panics for every contract violation a
+//! caller can cause (wrong LHS variant, depth mismatch, wrong output
+//! variant, empty dimensions).
+//!
+//! One plan dispatches all kinds ([`Kind`]) over three backends:
+//!
+//! * [`Backend::Reference`] — the scalar oracles, computed in place
+//!   (allocation-free; the ground truth every other path is tested
+//!   against).
+//! * [`Backend::Emulated`] — the instruction-exact NEON microkernel
+//!   emulation of [`crate::gemm::micro`] (used for Table II; allocates
+//!   internally, it is a correctness/tracing path, not a fast path).
+//! * [`Backend::Native`] — the blocked, multithreaded wall-clock path of
+//!   [`crate::gemm::native`]; LHS packing reuses the caller's
+//!   [`GemmScratch`] arena, so steady-state runs perform no heap
+//!   allocation.
+//!
+//! Differential tests and benches become one loop over [`Backend::ALL`]
+//! instead of per-kind copy-paste, and a future NEON-intrinsics backend
+//! is one new enum arm — not a new API.
+//!
+//! ```
+//! use tbgemm::gemm::{GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
+//! use tbgemm::util::mat::MatI8;
+//!
+//! // Weights (k=2, n=2), packed once.
+//! let b = MatI8 { rows: 2, cols: 2, data: vec![1, -1, 1, 1] };
+//! let plan = GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::I8(&b))?;
+//!
+//! // Run many times into caller-owned output + scratch.
+//! let a = MatI8 { rows: 1, cols: 2, data: vec![1, 1] };
+//! let (mut out, mut scratch) = (GemmOut::new_i32(), GemmScratch::new());
+//! plan.run(Lhs::I8(&a), &mut out, &mut scratch)?;
+//! assert_eq!(out.at(0, 0), 2.0); // 1·1 + 1·1
+//! assert_eq!(out.at(0, 1), 0.0); // 1·(−1) + 1·1
+//! # Ok::<(), tbgemm::gemm::GemmError>(())
+//! ```
+
+use crate::gemm::driver::GemmDriver;
+use crate::gemm::native::bits::{BitRows, PlaneRows};
+use crate::gemm::native::block::{
+    bnn_gemm_kp_mt, bnn_gemm_wide_mt, dabnn_gemm_kp_mt, f32_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt,
+    u8_gemm_kp_mt, KPanel, Threading,
+};
+use crate::gemm::native::kernels::{
+    bnn_gemm_rowdot, pack_b_panels_f32, pack_b_panels_u8, tbn_gemm_rowdot, tnn_gemm_rowdot, u4_gemm,
+};
+use crate::gemm::Kind;
+use crate::util::mat::{MatF32, MatI32, MatI8, MatU8};
+
+/// Which implementation executes the multiplication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Scalar oracle loops, computed in place. Ground truth.
+    Reference,
+    /// Instruction-exact emulated NEON microkernels (Table II substrate).
+    Emulated,
+    /// Blocked, register-tiled, multithreaded native path (Table III
+    /// substrate; the production hot path).
+    Native,
+}
+
+impl Backend {
+    /// All backends, for differential sweeps.
+    pub const ALL: [Backend; 3] = [Backend::Reference, Backend::Emulated, Backend::Native];
+}
+
+/// Register-tile selector for the native backend.
+///
+/// Ignored by the other backends, and by the native kinds that have a
+/// single tile shape (F32, U8, U4, daBNN fall back to [`Tile::Auto`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Tile {
+    /// The per-kind default (4×2 BNN/daBNN, 2×2 TNN/TBN, 4×8 F32/U8).
+    #[default]
+    Auto,
+    /// The seed's one-output-at-a-time row-dot kernels (BNN/TNN/TBN
+    /// only): the benchmark baseline. Single-threaded, single-panel.
+    Rowdot,
+    /// Widened 4×4 BNN tile: each loaded A word feeds 4 columns and each
+    /// B word 4 rows. BNN shallow-K only; deep-K products and the other
+    /// kinds fall back to [`Tile::Auto`].
+    Wide,
+}
+
+/// Everything that selects *how* a plan multiplies. Packing depends only
+/// on `kind` and `backend`; `threading`, `k_panel` and `tile` may be
+/// changed after the plan is built ([`GemmPlan::set_threading`] and
+/// friends) without repacking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmConfig {
+    pub kind: Kind,
+    pub backend: Backend,
+    /// Row-band worker threads (native backend only).
+    pub threading: Threading,
+    /// Depth blocking (native backend only; the emulated driver carries
+    /// its own fixed depth blocks, the reference oracle needs none).
+    pub k_panel: KPanel,
+    /// Register tile (native backend only).
+    pub tile: Tile,
+}
+
+impl GemmConfig {
+    /// A config with default execution knobs (single thread, automatic
+    /// K panels, per-kind default tile).
+    pub fn new(kind: Kind, backend: Backend) -> Self {
+        GemmConfig {
+            kind,
+            backend,
+            threading: Threading::Single,
+            k_panel: KPanel::Auto,
+            tile: Tile::Auto,
+        }
+    }
+
+    /// Shorthand for [`Backend::Native`].
+    pub fn native(kind: Kind) -> Self {
+        Self::new(kind, Backend::Native)
+    }
+
+    /// Shorthand for [`Backend::Emulated`].
+    pub fn emulated(kind: Kind) -> Self {
+        Self::new(kind, Backend::Emulated)
+    }
+
+    /// Shorthand for [`Backend::Reference`].
+    pub fn reference(kind: Kind) -> Self {
+        Self::new(kind, Backend::Reference)
+    }
+
+    pub fn with_threading(mut self, threading: Threading) -> Self {
+        self.threading = threading;
+        self
+    }
+
+    pub fn with_k_panel(mut self, k_panel: KPanel) -> Self {
+        self.k_panel = k_panel;
+        self
+    }
+
+    pub fn with_tile(mut self, tile: Tile) -> Self {
+        self.tile = tile;
+        self
+    }
+}
+
+/// Typed failure of plan construction or execution. No multiply-path
+/// entry point panics on caller input; every contract violation surfaces
+/// here.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GemmError {
+    /// The weights variant does not fit the configured kind (e.g. f32
+    /// weights for a BNN plan).
+    WeightsMismatch { kind: Kind, expected: &'static str, got: &'static str },
+    /// Weight values outside the kind's domain (BNN/TBN/daBNN: ±1,
+    /// TNN: {−1,0,1}, U4: 0..=15).
+    WeightDomain { kind: Kind, expected: &'static str },
+    /// The left-hand matrix variant does not fit the configured kind.
+    LhsMismatch { kind: Kind, expected: &'static str, got: &'static str },
+    /// Left-hand values outside the kind's domain. Checked eagerly on
+    /// the emulated backend (whose driver would otherwise panic); the
+    /// native backend checks the domain in debug builds only.
+    LhsDomain { kind: Kind, expected: &'static str },
+    /// LHS depth (columns) differs from the packed weights' depth.
+    DepthMismatch { expected: usize, got: usize },
+    /// The output variant does not fit the kind's result type (i32 for
+    /// the integer kinds, f32 for F32/daBNN).
+    OutputMismatch { kind: Kind, expected: &'static str, got: &'static str },
+    /// A dimension is zero: empty weights at build time (`k`, `n`) or an
+    /// empty LHS at run time (`m`).
+    EmptyDim { dim: &'static str },
+}
+
+impl std::fmt::Display for GemmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GemmError::WeightsMismatch { kind, expected, got } => {
+                write!(f, "{} plan expects {expected} weights, got {got}", kind.label())
+            }
+            GemmError::WeightDomain { kind, expected } => {
+                write!(f, "{} weights must be {expected}", kind.label())
+            }
+            GemmError::LhsMismatch { kind, expected, got } => {
+                write!(f, "{} plan expects an {expected} left-hand matrix, got {got}", kind.label())
+            }
+            GemmError::LhsDomain { kind, expected } => {
+                write!(f, "{} left-hand values must be {expected}", kind.label())
+            }
+            GemmError::DepthMismatch { expected, got } => {
+                write!(f, "depth mismatch: plan packed K={expected}, left-hand matrix has K={got}")
+            }
+            GemmError::OutputMismatch { kind, expected, got } => {
+                write!(f, "{} plan produces {expected} output, got a {got} output buffer", kind.label())
+            }
+            GemmError::EmptyDim { dim } => write!(f, "empty dimension: {dim} = 0"),
+        }
+    }
+}
+
+impl std::error::Error for GemmError {}
+
+/// Left-hand input accepted by [`GemmPlan::run`]: i8 for the low-bit
+/// kinds (BNN/TNN/TBN/daBNN), u8 for U8/U4, f32 for the F32 baseline.
+#[derive(Clone, Copy)]
+pub enum Lhs<'a> {
+    I8(&'a MatI8),
+    U8(&'a MatU8),
+    F32(&'a MatF32),
+}
+
+impl Lhs<'_> {
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            Lhs::I8(m) => (m.rows, m.cols),
+            Lhs::U8(m) => (m.rows, m.cols),
+            Lhs::F32(m) => (m.rows, m.cols),
+        }
+    }
+
+    fn variant(&self) -> &'static str {
+        match self {
+            Lhs::I8(_) => "i8",
+            Lhs::U8(_) => "u8",
+            Lhs::F32(_) => "f32",
+        }
+    }
+}
+
+/// Caller-owned output of a multiplication. The integer kinds produce
+/// i32 (widened from the in-kernel 16-bit accumulators); F32 and daBNN
+/// produce f32. [`GemmPlan::run`] resizes the buffer in place (steady
+/// state: no reallocation once capacity has grown to the largest shape).
+#[derive(Clone, Debug)]
+pub enum GemmOut {
+    I32(MatI32),
+    F32(MatF32),
+}
+
+impl GemmOut {
+    /// An empty i32 output buffer for the integer kinds.
+    pub fn new_i32() -> Self {
+        GemmOut::I32(MatI32::zeros(0, 0))
+    }
+
+    /// An empty f32 output buffer for F32/daBNN.
+    pub fn new_f32() -> Self {
+        GemmOut::F32(MatF32::zeros(0, 0))
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            GemmOut::I32(m) => m.rows,
+            GemmOut::F32(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            GemmOut::I32(m) => m.cols,
+            GemmOut::F32(m) => m.cols,
+        }
+    }
+
+    /// Element as f64 (for cross-path comparisons).
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        match self {
+            GemmOut::I32(m) => m.get(r, c) as f64,
+            GemmOut::F32(m) => m.get(r, c) as f64,
+        }
+    }
+
+    /// Borrow the i32 matrix, if this is an i32 output.
+    pub fn as_i32(&self) -> Option<&MatI32> {
+        match self {
+            GemmOut::I32(m) => Some(m),
+            GemmOut::F32(_) => None,
+        }
+    }
+
+    /// Borrow the f32 matrix, if this is an f32 output.
+    pub fn as_f32(&self) -> Option<&MatF32> {
+        match self {
+            GemmOut::F32(m) => Some(m),
+            GemmOut::I32(_) => None,
+        }
+    }
+
+    /// Consume into the i32 matrix, if this is an i32 output.
+    pub fn into_i32(self) -> Option<MatI32> {
+        match self {
+            GemmOut::I32(m) => Some(m),
+            GemmOut::F32(_) => None,
+        }
+    }
+
+    /// Consume into the f32 matrix, if this is an f32 output.
+    pub fn into_f32(self) -> Option<MatF32> {
+        match self {
+            GemmOut::F32(m) => Some(m),
+            GemmOut::I32(_) => None,
+        }
+    }
+
+    fn variant(&self) -> &'static str {
+        match self {
+            GemmOut::I32(_) => "i32",
+            GemmOut::F32(_) => "f32",
+        }
+    }
+}
+
+/// Weights handed to [`GemmPlan::new`]: i8 for BNN/TNN/TBN/daBNN, u8
+/// with zero points for U8/U4, f32 for the F32 baseline. Borrowed —
+/// packing copies what it needs; the caller keeps ownership.
+#[derive(Clone, Copy)]
+pub enum Weights<'a> {
+    I8(&'a MatI8),
+    U8 { b: &'a MatU8, za: i32, zb: i32 },
+    F32(&'a MatF32),
+}
+
+impl Weights<'_> {
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            Weights::I8(m) => (m.rows, m.cols),
+            Weights::U8 { b, .. } => (b.rows, b.cols),
+            Weights::F32(m) => (m.rows, m.cols),
+        }
+    }
+
+    fn variant(&self) -> &'static str {
+        match self {
+            Weights::I8(_) => "i8",
+            Weights::U8 { .. } => "u8",
+            Weights::F32(_) => "f32",
+        }
+    }
+}
+
+/// Reusable LHS-packing arena shared by every plan a caller runs: packed
+/// bit rows (BNN/daBNN) and plane rows (TNN/TBN). Buffers grow on demand
+/// and are reused across calls, so steady-state runs perform no heap
+/// allocation. `ConvScratch` / `StripeScratch` / `DenseScratch` all embed
+/// this one type instead of carrying ad-hoc packing buffers.
+pub struct GemmScratch {
+    /// Packed binary LHS rows (BNN/daBNN).
+    pub bits: BitRows,
+    /// Packed ternary LHS planes (TNN/TBN).
+    pub planes: PlaneRows,
+}
+
+impl GemmScratch {
+    pub fn new() -> Self {
+        GemmScratch { bits: BitRows::empty(), planes: PlaneRows::empty() }
+    }
+}
+
+impl Default for GemmScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Packed weights plus epilogue constants, per backend.
+enum Packed {
+    /// Native bit-columns (BNN/TBN/daBNN weights).
+    Bits(BitRows),
+    /// Native plane-columns (TNN weights).
+    Planes(PlaneRows),
+    /// Native f32 8-column panels.
+    PanelsF32(Vec<Vec<f32>>),
+    /// Native u8 8-column panels + eq. (3) constants (U8/U4).
+    PanelsU8 { panels: Vec<Vec<u8>>, col_sums: Vec<i32>, za: i32, zb: i32 },
+    /// The emulated driver (owns its own packed panels).
+    Emulated(GemmDriver),
+    /// Reference copies of the unpacked weights.
+    RefI8(MatI8),
+    RefU8 { b: MatU8, za: i32, zb: i32 },
+    RefF32(MatF32),
+}
+
+/// A built-once multiplication plan: packed weights + execution config.
+/// See the [module docs](self) for the API story.
+pub struct GemmPlan {
+    config: GemmConfig,
+    /// Depth (rows of B).
+    k: usize,
+    /// Width (cols of B).
+    n: usize,
+    packed: Packed,
+}
+
+impl GemmPlan {
+    /// Pack `weights` for `config`. Fails with a typed [`GemmError`] on a
+    /// kind/weights variant mismatch, out-of-domain weight values, or
+    /// empty weight dimensions.
+    pub fn new(config: GemmConfig, weights: Weights<'_>) -> Result<GemmPlan, GemmError> {
+        let kind = config.kind;
+        let (k, n) = weights.dims();
+        // Variant check first (a structural error beats a size error),
+        // then emptiness, then the value-domain scan.
+        let expected = match kind {
+            Kind::Bnn | Kind::Tnn | Kind::Tbn | Kind::DaBnn => "i8",
+            Kind::U8 | Kind::U4 => "u8",
+            Kind::F32 => "f32",
+        };
+        if expected != weights.variant() {
+            return Err(GemmError::WeightsMismatch { kind, expected, got: weights.variant() });
+        }
+        if k == 0 {
+            return Err(GemmError::EmptyDim { dim: "k" });
+        }
+        if n == 0 {
+            return Err(GemmError::EmptyDim { dim: "n" });
+        }
+        let packed = match (kind, &weights) {
+            (Kind::Bnn | Kind::Tbn | Kind::DaBnn, Weights::I8(b)) => {
+                if !b.is_binary() {
+                    return Err(GemmError::WeightDomain { kind, expected: "±1" });
+                }
+                match config.backend {
+                    Backend::Native => Packed::Bits(BitRows::from_binary_transposed(b)),
+                    Backend::Emulated => Packed::Emulated(match kind {
+                        Kind::Bnn => GemmDriver::new_bnn(b),
+                        Kind::Tbn => GemmDriver::new_tbn(b),
+                        _ => GemmDriver::new_dabnn(b),
+                    }),
+                    Backend::Reference => Packed::RefI8((*b).clone()),
+                }
+            }
+            (Kind::Tnn, Weights::I8(b)) => {
+                if !b.is_ternary() {
+                    return Err(GemmError::WeightDomain { kind, expected: "in {-1, 0, 1}" });
+                }
+                match config.backend {
+                    Backend::Native => Packed::Planes(PlaneRows::from_ternary_transposed(b)),
+                    Backend::Emulated => Packed::Emulated(GemmDriver::new_tnn(b)),
+                    Backend::Reference => Packed::RefI8((*b).clone()),
+                }
+            }
+            (Kind::U8 | Kind::U4, Weights::U8 { b, za, zb }) => {
+                if kind == Kind::U4 && !b.data.iter().all(|&v| v < 16) {
+                    return Err(GemmError::WeightDomain { kind, expected: "4-bit (0..=15)" });
+                }
+                match config.backend {
+                    Backend::Native => {
+                        let col_sums =
+                            (0..b.cols).map(|j| (0..b.rows).map(|t| b.get(t, j) as i32).sum()).collect();
+                        Packed::PanelsU8 { panels: pack_b_panels_u8(b), col_sums, za: *za, zb: *zb }
+                    }
+                    Backend::Emulated => Packed::Emulated(if kind == Kind::U8 {
+                        GemmDriver::new_u8(b, *za, *zb)
+                    } else {
+                        GemmDriver::new_u4(b, *za, *zb)
+                    }),
+                    Backend::Reference => Packed::RefU8 { b: (*b).clone(), za: *za, zb: *zb },
+                }
+            }
+            (Kind::F32, Weights::F32(b)) => match config.backend {
+                Backend::Native => Packed::PanelsF32(pack_b_panels_f32(b)),
+                Backend::Emulated => Packed::Emulated(GemmDriver::new_f32(b)),
+                Backend::Reference => Packed::RefF32((*b).clone()),
+            },
+            // The variant check above makes this unreachable; stay
+            // total (and panic-free) regardless.
+            _ => return Err(GemmError::WeightsMismatch { kind, expected, got: weights.variant() }),
+        };
+        Ok(GemmPlan { config, k, n, packed })
+    }
+
+    /// The plan's execution config.
+    pub fn config(&self) -> GemmConfig {
+        self.config
+    }
+
+    pub fn kind(&self) -> Kind {
+        self.config.kind
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.config.backend
+    }
+
+    /// Packed depth (rows of B; LHS must have this many columns).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Packed width (cols of B and of the output).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// True when this plan produces f32 output (F32 and daBNN kinds).
+    pub fn output_is_f32(&self) -> bool {
+        matches!(self.config.kind, Kind::F32 | Kind::DaBnn)
+    }
+
+    /// Change the worker-thread config without repacking.
+    pub fn set_threading(&mut self, threading: Threading) {
+        self.config.threading = threading;
+    }
+
+    /// Change the depth-blocking config without repacking.
+    pub fn set_k_panel(&mut self, k_panel: KPanel) {
+        self.config.k_panel = k_panel;
+    }
+
+    /// Change the register-tile config without repacking.
+    pub fn set_tile(&mut self, tile: Tile) {
+        self.config.tile = tile;
+    }
+
+    /// Execute `C = A·B` into `out`, packing the LHS into `scratch`.
+    ///
+    /// `out` is resized to `m × n` in place (reusing its buffer — steady
+    /// state reallocates nothing); `scratch` is only touched by the
+    /// native low-bit kinds. Value domains of the LHS (±1 / ternary /
+    /// 4-bit) are the caller's contract, checked in debug builds.
+    pub fn run(&self, lhs: Lhs<'_>, out: &mut GemmOut, scratch: &mut GemmScratch) -> Result<(), GemmError> {
+        let kind = self.config.kind;
+        let expected_lhs = match kind {
+            Kind::Bnn | Kind::Tnn | Kind::Tbn | Kind::DaBnn => "i8",
+            Kind::U8 | Kind::U4 => "u8",
+            Kind::F32 => "f32",
+        };
+        if expected_lhs != lhs.variant() {
+            return Err(GemmError::LhsMismatch { kind, expected: expected_lhs, got: lhs.variant() });
+        }
+        let (m, lk) = lhs.dims();
+        if lk != self.k {
+            return Err(GemmError::DepthMismatch { expected: self.k, got: lk });
+        }
+        if m == 0 {
+            return Err(GemmError::EmptyDim { dim: "m" });
+        }
+        let expected_out = if self.output_is_f32() { "f32" } else { "i32" };
+        if expected_out != out.variant() {
+            return Err(GemmError::OutputMismatch { kind, expected: expected_out, got: out.variant() });
+        }
+        // Size the caller-owned output in place (no realloc once capacity
+        // has grown to the largest shape seen).
+        match out {
+            GemmOut::I32(c) => {
+                c.rows = m;
+                c.cols = self.n;
+                c.data.clear();
+                c.data.resize(m * self.n, 0);
+            }
+            GemmOut::F32(c) => {
+                c.rows = m;
+                c.cols = self.n;
+                c.data.clear();
+                c.data.resize(m * self.n, 0.0);
+            }
+        }
+        match (&self.packed, lhs, &mut *out) {
+            // ---- native backend --------------------------------------
+            (Packed::Bits(bt), Lhs::I8(a), GemmOut::I32(c)) if kind == Kind::Bnn => {
+                debug_assert!(a.is_binary());
+                scratch.bits.repack_binary(a);
+                match self.config.tile {
+                    Tile::Rowdot => bnn_gemm_rowdot(&scratch.bits, bt, c),
+                    Tile::Wide => {
+                        bnn_gemm_wide_mt(&scratch.bits, bt, c, self.config.threading, self.config.k_panel)
+                    }
+                    Tile::Auto => {
+                        bnn_gemm_kp_mt(&scratch.bits, bt, c, self.config.threading, self.config.k_panel)
+                    }
+                }
+            }
+            (Packed::Planes(bt), Lhs::I8(a), GemmOut::I32(c)) => {
+                debug_assert!(a.is_ternary());
+                scratch.planes.repack_ternary(a);
+                match self.config.tile {
+                    Tile::Rowdot => tnn_gemm_rowdot(&scratch.planes, bt, c),
+                    _ => tnn_gemm_kp_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel),
+                }
+            }
+            (Packed::Bits(bt), Lhs::I8(a), GemmOut::I32(c)) => {
+                // Tbn: ternary activations against binary bit-columns.
+                debug_assert!(a.is_ternary());
+                scratch.planes.repack_ternary(a);
+                match self.config.tile {
+                    Tile::Rowdot => tbn_gemm_rowdot(&scratch.planes, bt, c),
+                    _ => tbn_gemm_kp_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel),
+                }
+            }
+            (Packed::Bits(bt), Lhs::I8(a), GemmOut::F32(c)) => {
+                // DaBnn (the only f32-output bit kind).
+                debug_assert!(a.is_binary());
+                scratch.bits.repack_binary(a);
+                dabnn_gemm_kp_mt(&scratch.bits, bt, c, self.config.threading, self.config.k_panel);
+            }
+            (Packed::PanelsF32(panels), Lhs::F32(a), GemmOut::F32(c)) => {
+                f32_gemm_kp_mt(a, panels, self.n, c, self.config.threading, self.config.k_panel);
+            }
+            (Packed::PanelsU8 { panels, col_sums, za, zb }, Lhs::U8(a), GemmOut::I32(c)) => {
+                if kind == Kind::U4 {
+                    // U4 carries its own fixed 16-bit-safe depth blocks
+                    // (eq. (4): ≤290) and is single-threaded; the
+                    // threading / k_panel knobs do not apply.
+                    debug_assert!(a.data.iter().all(|&v| v < 16));
+                    u4_gemm(a, panels, self.n, *za, *zb, col_sums, c);
+                } else {
+                    u8_gemm_kp_mt(
+                        a,
+                        panels,
+                        self.n,
+                        *za,
+                        *zb,
+                        col_sums,
+                        c,
+                        self.config.threading,
+                        self.config.k_panel,
+                    );
+                }
+            }
+            // ---- emulated backend ------------------------------------
+            (Packed::Emulated(driver), lhs, out) => {
+                // Correctness/tracing path: the microkernel emulation
+                // allocates internally; copy its result into the
+                // caller-owned buffer. Its per-kind drivers assert value
+                // domains, so check them here and fail typed instead.
+                match (kind, &lhs) {
+                    (Kind::Bnn | Kind::DaBnn, Lhs::I8(a)) if !a.is_binary() => {
+                        return Err(GemmError::LhsDomain { kind, expected: "±1" })
+                    }
+                    (Kind::Tnn | Kind::Tbn, Lhs::I8(a)) if !a.is_ternary() => {
+                        return Err(GemmError::LhsDomain { kind, expected: "in {-1, 0, 1}" })
+                    }
+                    (Kind::U4, Lhs::U8(a)) if !a.data.iter().all(|&v| v < 16) => {
+                        return Err(GemmError::LhsDomain { kind, expected: "4-bit (0..=15)" })
+                    }
+                    _ => {}
+                }
+                let res = driver.multiply_emulated(lhs);
+                match (res, out) {
+                    (GemmOut::I32(r), GemmOut::I32(c)) => c.data.copy_from_slice(&r.data),
+                    (GemmOut::F32(r), GemmOut::F32(c)) => c.data.copy_from_slice(&r.data),
+                    // Output variant was validated above.
+                    (_, out) => {
+                        return Err(GemmError::OutputMismatch {
+                            kind,
+                            expected: expected_out,
+                            got: out.variant(),
+                        })
+                    }
+                }
+            }
+            // ---- reference backend (in place, allocation-free) -------
+            (Packed::RefI8(b), Lhs::I8(a), GemmOut::I32(c)) => {
+                for i in 0..m {
+                    for j in 0..self.n {
+                        let mut acc = 0i32;
+                        for t in 0..self.k {
+                            acc += a.get(i, t) as i32 * b.get(t, j) as i32;
+                        }
+                        c.set(i, j, acc);
+                    }
+                }
+            }
+            (Packed::RefI8(b), Lhs::I8(a), GemmOut::F32(c)) => {
+                // DaBnn reference: the popcount form is exactly the
+                // integer dot product, emitted as f32.
+                for i in 0..m {
+                    for j in 0..self.n {
+                        let mut acc = 0i32;
+                        for t in 0..self.k {
+                            acc += a.get(i, t) as i32 * b.get(t, j) as i32;
+                        }
+                        c.set(i, j, acc as f32);
+                    }
+                }
+            }
+            (Packed::RefU8 { b, za, zb }, Lhs::U8(a), GemmOut::I32(c)) => {
+                // The centered form of eq. (3), the U8/U4 ground truth.
+                for i in 0..m {
+                    for j in 0..self.n {
+                        let mut acc = 0i32;
+                        for t in 0..self.k {
+                            acc += (a.get(i, t) as i32 - za) * (b.get(t, j) as i32 - zb);
+                        }
+                        c.set(i, j, acc);
+                    }
+                }
+            }
+            (Packed::RefF32(b), Lhs::F32(a), GemmOut::F32(c)) => {
+                for i in 0..m {
+                    for j in 0..self.n {
+                        let mut acc = 0f32;
+                        for t in 0..self.k {
+                            acc += a.get(i, t) * b.get(t, j);
+                        }
+                        c.set(i, j, acc);
+                    }
+                }
+            }
+            // The variant checks above make this unreachable; stay total
+            // (and panic-free) regardless.
+            (_, lhs, _) => {
+                return Err(GemmError::LhsMismatch { kind, expected: expected_lhs, got: lhs.variant() })
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::reference;
+    use crate::util::Rng;
+
+    fn run_native(kind: Kind, a: &MatI8, b: &MatI8) -> GemmOut {
+        let plan = GemmPlan::new(GemmConfig::native(kind), Weights::I8(b)).expect("plan");
+        let mut out = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+        let mut scratch = GemmScratch::new();
+        plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("run");
+        out
+    }
+
+    #[test]
+    fn all_backends_agree_on_bnn() {
+        let mut rng = Rng::new(0x9A1);
+        let a = MatI8::random_binary(9, 70, &mut rng);
+        let b = MatI8::random_binary(70, 5, &mut rng);
+        let want = reference::gemm_i8(&a, &b);
+        for backend in Backend::ALL {
+            let plan = GemmPlan::new(GemmConfig::new(Kind::Bnn, backend), Weights::I8(&b)).expect("plan");
+            let mut out = GemmOut::new_i32();
+            let mut scratch = GemmScratch::new();
+            plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
+            assert_eq!(out.as_i32().unwrap().data, want.data, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn native_tnn_and_tbn_match_oracle() {
+        let mut rng = Rng::new(0x9A2);
+        let at = MatI8::random_ternary(7, 130, &mut rng);
+        let btern = MatI8::random_ternary(130, 6, &mut rng);
+        let bbin = MatI8::random_binary(130, 6, &mut rng);
+        let out = run_native(Kind::Tnn, &at, &btern);
+        assert_eq!(out.as_i32().unwrap().data, reference::gemm_i8(&at, &btern).data);
+        let out = run_native(Kind::Tbn, &at, &bbin);
+        assert_eq!(out.as_i32().unwrap().data, reference::gemm_i8(&at, &bbin).data);
+    }
+
+    #[test]
+    fn dabnn_produces_f32_equal_to_integer_oracle() {
+        let mut rng = Rng::new(0x9A3);
+        let a = MatI8::random_binary(5, 200, &mut rng);
+        let b = MatI8::random_binary(200, 4, &mut rng);
+        let want = reference::gemm_i8(&a, &b);
+        let out = run_native(Kind::DaBnn, &a, &b);
+        let c = out.as_f32().unwrap();
+        for i in 0..5 {
+            for j in 0..4 {
+                assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn error_cases_are_typed() {
+        let mut rng = Rng::new(0x9A4);
+        let b = MatI8::random_binary(16, 4, &mut rng);
+        let plan = GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::I8(&b)).expect("plan");
+        let mut scratch = GemmScratch::new();
+
+        // Wrong LHS variant.
+        let au8 = MatU8::random(2, 16, &mut rng);
+        let mut out = GemmOut::new_i32();
+        assert_eq!(
+            plan.run(Lhs::U8(&au8), &mut out, &mut scratch),
+            Err(GemmError::LhsMismatch { kind: Kind::Bnn, expected: "i8", got: "u8" })
+        );
+        // Depth mismatch.
+        let a = MatI8::random_binary(2, 8, &mut rng);
+        assert_eq!(
+            plan.run(Lhs::I8(&a), &mut out, &mut scratch),
+            Err(GemmError::DepthMismatch { expected: 16, got: 8 })
+        );
+        // Wrong output variant.
+        let a = MatI8::random_binary(2, 16, &mut rng);
+        let mut fout = GemmOut::new_f32();
+        assert_eq!(
+            plan.run(Lhs::I8(&a), &mut fout, &mut scratch),
+            Err(GemmError::OutputMismatch { kind: Kind::Bnn, expected: "i32", got: "f32" })
+        );
+        // Empty LHS.
+        let empty = MatI8::zeros(0, 16);
+        assert_eq!(
+            plan.run(Lhs::I8(&empty), &mut out, &mut scratch),
+            Err(GemmError::EmptyDim { dim: "m" })
+        );
+        // Build-time: weights variant, domain, empty dims.
+        let f = MatF32::zeros(4, 4);
+        assert!(matches!(
+            GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::F32(&f)),
+            Err(GemmError::WeightsMismatch { .. })
+        ));
+        let tern = MatI8::zeros(4, 4); // zeros are not ±1
+        assert!(matches!(
+            GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::I8(&tern)),
+            Err(GemmError::WeightDomain { .. })
+        ));
+        assert_eq!(
+            GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::I8(&MatI8::zeros(0, 4))).err(),
+            Some(GemmError::EmptyDim { dim: "k" })
+        );
+        assert_eq!(
+            GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::I8(&MatI8::zeros(16, 0))).err(),
+            Some(GemmError::EmptyDim { dim: "n" })
+        );
+    }
+
+    #[test]
+    fn u4_weight_domain_is_checked() {
+        let b = MatU8 { rows: 2, cols: 2, data: vec![3, 16, 0, 1] };
+        assert!(matches!(
+            GemmPlan::new(GemmConfig::native(Kind::U4), Weights::U8 { b: &b, za: 0, zb: 0 }),
+            Err(GemmError::WeightDomain { .. })
+        ));
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = GemmError::DepthMismatch { expected: 64, got: 32 };
+        assert!(e.to_string().contains("K=64"));
+        let e = GemmError::WeightDomain { kind: Kind::Bnn, expected: "±1" };
+        assert_eq!(e.to_string(), "BNN weights must be ±1");
+    }
+}

@@ -36,6 +36,18 @@
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! The matmul core's **public boundary** is the plan/execute API in
+//! [`gemm::plan`]: a [`gemm::GemmConfig`] + weights build a
+//! [`gemm::GemmPlan`] once, which then runs any number of
+//! multiplications into caller-owned output across all kinds and
+//! backends. The per-kind kernel free functions are crate-internal.
+
+// Kernel-style codebase conventions: indexed loop nests mirror the
+// paper's algorithms (and index several buffers at once), blocked-GEMM
+// driver signatures carry the full blocking configuration, and scratch
+// arenas expose `new()` constructors alongside `Default`.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments, clippy::new_without_default)]
 
 pub mod bench;
 pub mod conv;

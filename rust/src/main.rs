@@ -212,9 +212,11 @@ fn parse_kind(s: &str) -> ConvKind {
     }
 }
 
-/// `--threads auto|N` → a GEMM threading config (default single).
-fn parse_threading(s: Option<&str>) -> tbgemm::gemm::native::Threading {
-    use tbgemm::gemm::native::Threading;
+/// `--threads auto|N` → a GEMM threading config (default single). The
+/// config lands on every layer's [`tbgemm::gemm::GemmPlan`] through
+/// `Network::set_threading`.
+fn parse_threading(s: Option<&str>) -> tbgemm::gemm::Threading {
+    use tbgemm::gemm::Threading;
     match s {
         Some("auto") => Threading::Auto,
         Some(n) => n.parse().map(Threading::Fixed).unwrap_or(Threading::Single),
@@ -239,7 +241,7 @@ fn cmd_infer(kind: String, images: usize) {
     println!("class histogram: {hist:?}");
 }
 
-fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::native::Threading) {
+fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading) {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
     let net = build_from_config(&cfg, 0xCAFE);
     let server = InferenceServer::start(

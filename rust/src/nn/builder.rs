@@ -7,6 +7,11 @@
 //! the XNOR/TWN scaling factors folded into the per-channel affine.
 //! A parallel [`build_f32_twin`] constructs the matching full-precision
 //! network (used by examples to compare QNN against F32 output).
+//!
+//! Construction is the **plan-build** phase of the plan/execute split:
+//! every `LowBitConv` / `QDense` built here packs its weights once into
+//! a [`crate::gemm::GemmPlan`]; the serving hot path only ever calls
+//! `run` on those plans.
 
 use crate::conv::conv2d::{ConvKind, ConvParams, LowBitConv};
 use crate::nn::layers::{Activation, DenseF32, InputQuant, Layer, QConv2d, QDense};

@@ -2,10 +2,8 @@
 
 use crate::conv::conv2d::{ConvKind, ConvScratch, LowBitConv};
 use crate::conv::tensor::Tensor3;
-use crate::gemm::native::{
-    bnn_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, BitRows, KPanel, PlaneRows, Threading,
-};
-use crate::util::mat::{MatF32, MatI32, MatI8};
+use crate::gemm::{GemmConfig, GemmOut, GemmPlan, GemmScratch, Lhs, Weights};
+use crate::util::mat::{MatF32, MatI8};
 
 /// Activation quantizer applied after the folded affine.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -119,24 +117,20 @@ impl QConv2d {
 }
 
 /// Reusable scratch arena for [`QDense::forward_with`], mirroring
-/// [`ConvScratch`]: the flattened activation row, its packed bit/plane
-/// form, and the GEMM output row. Grown on demand and reused, so
-/// steady-state dense forwards perform no heap allocation in the GEMM.
+/// [`ConvScratch`]: the flattened activation row, the shared GEMM
+/// packing arena ([`crate::gemm::GemmScratch`]), and the GEMM output
+/// row. Grown on demand and reused, so steady-state dense forwards
+/// perform no heap allocation in the GEMM.
 pub struct DenseScratch {
     a: MatI8,
-    bits: BitRows,
-    planes: PlaneRows,
-    c: MatI32,
+    /// The plan's LHS packing arena.
+    pub gemm: GemmScratch,
+    c: GemmOut,
 }
 
 impl DenseScratch {
     pub fn new() -> Self {
-        DenseScratch {
-            a: MatI8::zeros(0, 0),
-            bits: BitRows::empty(),
-            planes: PlaneRows::empty(),
-            c: MatI32::zeros(0, 0),
-        }
+        DenseScratch { a: MatI8::zeros(0, 0), gemm: GemmScratch::new(), c: GemmOut::new_i32() }
     }
 }
 
@@ -149,7 +143,9 @@ impl Default for DenseScratch {
 /// Per-network scratch threaded through [`crate::nn::Network`] forward
 /// passes: one conv arena + accumulator tensor shared by all conv layers
 /// (shapes only shrink or grow monotonically toward the largest layer)
-/// and one dense arena shared by all dense layers.
+/// and one dense arena shared by all dense layers. Both arenas embed the
+/// unified [`crate::gemm::GemmScratch`] packing arena the GEMM plans
+/// run into.
 pub struct NetScratch {
     pub conv: ConvScratch,
     pub dense: DenseScratch,
@@ -169,13 +165,13 @@ impl Default for NetScratch {
     }
 }
 
-/// A low-bit fully-connected layer over flattened features.
+/// A low-bit fully-connected layer over flattened features, running a
+/// built-once [`GemmPlan`].
 pub struct QDense {
     pub kind: ConvKind,
     pub in_features: usize,
     pub out_features: usize,
-    packed_bits: Option<BitRows>,
-    packed_planes: Option<PlaneRows>,
+    plan: GemmPlan,
     pub scale: Vec<f32>,
     pub bias: Vec<f32>,
     pub act: Activation,
@@ -184,24 +180,18 @@ pub struct QDense {
 impl QDense {
     /// `weights`: `in_features × out_features`.
     pub fn new(kind: ConvKind, weights: &MatI8, scale: Vec<f32>, bias: Vec<f32>, act: Activation) -> Self {
-        let (packed_bits, packed_planes) = match kind {
-            ConvKind::Bnn | ConvKind::Tbn => {
-                assert!(weights.is_binary());
-                (Some(BitRows::from_binary_transposed(weights)), None)
-            }
-            ConvKind::Tnn => {
-                assert!(weights.is_ternary());
-                (None, Some(PlaneRows::from_ternary_transposed(weights)))
-            }
-        };
+        // Single activation row: nothing to thread over, so the plan
+        // keeps the default single-thread / auto-K-panel config (the
+        // K-panel level still keeps very deep flattened features exact).
+        let plan = GemmPlan::new(GemmConfig::native(kind.gemm_kind()), Weights::I8(weights))
+            .unwrap_or_else(|e| panic!("{kind:?} dense weights rejected: {e}"));
         assert_eq!(scale.len(), weights.cols);
         assert_eq!(bias.len(), weights.cols);
         QDense {
             kind,
             in_features: weights.rows,
             out_features: weights.cols,
-            packed_bits,
-            packed_planes,
+            plan,
             scale,
             bias,
             act,
@@ -226,45 +216,13 @@ impl QDense {
         scratch.a.cols = flat;
         scratch.a.data.clear();
         scratch.a.data.extend_from_slice(&input.data);
-        scratch.c.rows = 1;
-        scratch.c.cols = self.out_features;
-        scratch.c.data.clear();
-        scratch.c.data.resize(self.out_features, 0);
-        // Single activation row: nothing to thread over, but the K-panel
-        // level keeps even very deep flattened features exact.
-        match self.kind {
-            ConvKind::Bnn => {
-                scratch.bits.repack_binary(&scratch.a);
-                bnn_gemm_kp_mt(
-                    &scratch.bits,
-                    self.packed_bits.as_ref().unwrap(),
-                    &mut scratch.c,
-                    Threading::Single,
-                    KPanel::Auto,
-                );
-            }
-            ConvKind::Tnn => {
-                scratch.planes.repack_ternary(&scratch.a);
-                tnn_gemm_kp_mt(
-                    &scratch.planes,
-                    self.packed_planes.as_ref().unwrap(),
-                    &mut scratch.c,
-                    Threading::Single,
-                    KPanel::Auto,
-                );
-            }
-            ConvKind::Tbn => {
-                scratch.planes.repack_ternary(&scratch.a);
-                tbn_gemm_kp_mt(
-                    &scratch.planes,
-                    self.packed_bits.as_ref().unwrap(),
-                    &mut scratch.c,
-                    Threading::Single,
-                    KPanel::Auto,
-                );
-            }
-        }
-        let c = &scratch.c;
+        self.plan
+            .run(Lhs::I8(&scratch.a), &mut scratch.c, &mut scratch.gemm)
+            .unwrap_or_else(|e| panic!("dense GEMM plan invariant violated: {e}"));
+        let c = match &scratch.c {
+            GemmOut::I32(m) => m,
+            GemmOut::F32(_) => unreachable!("dense kinds produce i32 output"),
+        };
         match self.act {
             Activation::None => {
                 let data = c.data.iter().enumerate().map(|(j, &v)| self.scale[j] * v as f32 + self.bias[j]).collect();
@@ -400,7 +358,7 @@ impl Layer {
     /// Propagate a threading config to the layers that run a blocked GEMM
     /// (currently the convolutions; the dense layers are single-row
     /// multiplications with nothing to parallelize over).
-    pub fn set_threading(&mut self, threading: crate::gemm::native::Threading) {
+    pub fn set_threading(&mut self, threading: crate::gemm::Threading) {
         if let Layer::QConv(l) = self {
             l.conv.set_threading(threading);
         }
@@ -486,19 +444,24 @@ mod tests {
                 _ => panic!("expected f32 output"),
             };
             assert_eq!(got, want, "{kind:?}");
-            let (a_ptr, c_ptr) = (scratch.a.data.as_ptr(), scratch.c.data.as_ptr());
-            let bits_ptr = scratch.bits.data.as_ptr();
-            let planes_ptr = scratch.planes.plus.as_ptr();
+            let (a_ptr, c_ptr) =
+                (scratch.a.data.as_ptr(), scratch.c.as_i32().expect("i32 out").data.as_ptr());
+            let bits_ptr = scratch.gemm.bits.data.as_ptr();
+            let planes_ptr = scratch.gemm.planes.plus.as_ptr();
             let got2 = match dense.forward_with(&input, &mut scratch) {
                 Feature::F(t) => t.data,
                 _ => panic!("expected f32 output"),
             };
             assert_eq!(got2, want, "{kind:?} second pass");
             assert_eq!(scratch.a.data.as_ptr(), a_ptr, "{kind:?}: flatten buffer reallocated");
-            assert_eq!(scratch.c.data.as_ptr(), c_ptr, "{kind:?}: output buffer reallocated");
+            assert_eq!(
+                scratch.c.as_i32().expect("i32 out").data.as_ptr(),
+                c_ptr,
+                "{kind:?}: output buffer reallocated"
+            );
             match kind {
-                ConvKind::Bnn => assert_eq!(scratch.bits.data.as_ptr(), bits_ptr, "bits reallocated"),
-                _ => assert_eq!(scratch.planes.plus.as_ptr(), planes_ptr, "planes reallocated"),
+                ConvKind::Bnn => assert_eq!(scratch.gemm.bits.data.as_ptr(), bits_ptr, "bits reallocated"),
+                _ => assert_eq!(scratch.gemm.planes.plus.as_ptr(), planes_ptr, "planes reallocated"),
             }
         }
     }

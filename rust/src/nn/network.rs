@@ -89,8 +89,9 @@ impl Network {
         self.layers.len()
     }
 
-    /// Set the GEMM threading config on every layer that runs one.
-    pub fn set_threading(&mut self, threading: crate::gemm::native::Threading) {
+    /// Set the GEMM threading config on every layer that runs one (the
+    /// config lands on each layer's [`crate::gemm::GemmPlan`]).
+    pub fn set_threading(&mut self, threading: crate::gemm::Threading) {
         for layer in &mut self.layers {
             layer.set_threading(threading);
         }

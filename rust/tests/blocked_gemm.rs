@@ -1,19 +1,19 @@
-//! Differential tests for the blocked execution layer: tiled and
-//! multithreaded native kernels vs the scalar oracles and vs the seed's
-//! row-dot kernels, on adversarial shapes — m/n not multiples of the
-//! register tile, k not a multiple of 64 (partial last word), single-row
-//! and single-column matrices — at 1 through 8 threads.
+//! Backend-sweep differential tests through the one [`GemmPlan`] API:
+//! every kind × every backend × a thread spread, on adversarial shapes —
+//! m/n not multiples of the register tiles (4×2, 2×2, 4×8, 4×4 wide),
+//! k not a multiple of 64 (partial last word), single-row and
+//! single-column matrices. What used to be per-kind copy-paste over the
+//! `*_gemm_mt` free-function zoo is now one loop over [`Backend::ALL`].
 
-use tbgemm::gemm::native::kernels as nk;
-use tbgemm::gemm::native::{
-    bnn_gemm_mt, dabnn_gemm_mt, f32_gemm_mt, tbn_gemm_mt, tnn_gemm_mt, u8_gemm_mt, BitRows, PlaneRows, Threading,
-};
 use tbgemm::gemm::reference;
-use tbgemm::util::mat::{MatF32, MatI32, MatI8, MatU8};
+use tbgemm::gemm::{
+    Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Threading, Weights,
+};
+use tbgemm::util::mat::{MatF32, MatI8, MatU8};
 use tbgemm::util::Rng;
 
-/// Shapes chosen to break every blocking boundary: register tiles (4×2,
-/// 2×2, 4×8), the 64-bit word, the L1 column panel, and the row bands.
+/// Shapes chosen to break every blocking boundary: register tiles, the
+/// 64-bit word, the L1 column panel, and the row bands.
 const SHAPES: [(usize, usize, usize); 9] = [
     (1, 1, 1),
     (1, 17, 64),
@@ -26,120 +26,119 @@ const SHAPES: [(usize, usize, usize); 9] = [
     (65, 24, 512),
 ];
 
-const THREADS: std::ops::RangeInclusive<usize> = 1..=8;
+/// Threads exercised on the native backend (the other backends ignore
+/// the config; one pass suffices there).
+const NATIVE_THREADS: [usize; 4] = [1, 2, 5, 8];
+
+fn run_plan(plan: &GemmPlan, lhs: Lhs<'_>) -> GemmOut {
+    let mut out = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+    let mut scratch = GemmScratch::new();
+    plan.run(lhs, &mut out, &mut scratch).expect("plan run");
+    out
+}
+
+/// For each backend (and each thread count on native), build a plan,
+/// run it, and hand the result to `check(label, out)`.
+fn sweep(kind: Kind, weights: Weights<'_>, lhs: Lhs<'_>, check: &dyn Fn(&str, &GemmOut)) {
+    for backend in Backend::ALL {
+        let threads: &[usize] = if backend == Backend::Native { &NATIVE_THREADS } else { &[1] };
+        for &t in threads {
+            let cfg = GemmConfig::new(kind, backend).with_threading(Threading::Fixed(t));
+            let plan = GemmPlan::new(cfg, weights).expect("plan");
+            let out = run_plan(&plan, lhs);
+            check(&format!("{kind:?} {backend:?} t={t}"), &out);
+        }
+    }
+}
 
 #[test]
-fn lowbit_mt_matches_oracle_all_shapes_and_threads() {
+fn lowbit_kinds_all_backends_match_oracle() {
     let mut rng = Rng::new(0xB0B);
     for &(m, n, k) in &SHAPES {
         let ab = MatI8::random_binary(m, k, &mut rng);
         let bb = MatI8::random_binary(k, n, &mut rng);
         let at = MatI8::random_ternary(m, k, &mut rng);
         let bt = MatI8::random_ternary(k, n, &mut rng);
-        let a_bits = BitRows::from_binary(&ab);
-        let b_bits = BitRows::from_binary_transposed(&bb);
-        let a_planes = PlaneRows::from_ternary(&at);
-        let b_planes = PlaneRows::from_ternary_transposed(&bt);
-        let want_bnn = reference::gemm_i8(&ab, &bb);
-        let want_tnn = reference::gemm_i8(&at, &bt);
-        let want_tbn = reference::gemm_i8(&at, &bb);
-        for threads in THREADS {
-            let th = Threading::Fixed(threads);
-            let mut c = MatI32::zeros(m, n);
-            bnn_gemm_mt(&a_bits, &b_bits, &mut c, th);
-            assert_eq!(c.data, want_bnn.data, "bnn m={m} n={n} k={k} t={threads}");
-            let mut c = MatI32::zeros(m, n);
-            tnn_gemm_mt(&a_planes, &b_planes, &mut c, th);
-            assert_eq!(c.data, want_tnn.data, "tnn m={m} n={n} k={k} t={threads}");
-            let mut c = MatI32::zeros(m, n);
-            tbn_gemm_mt(&a_planes, &b_bits, &mut c, th);
-            assert_eq!(c.data, want_tbn.data, "tbn m={m} n={n} k={k} t={threads}");
+        let cases: [(Kind, &MatI8, &MatI8); 3] =
+            [(Kind::Bnn, &ab, &bb), (Kind::Tnn, &at, &bt), (Kind::Tbn, &at, &bb)];
+        for (kind, a, b) in cases {
+            let want = reference::gemm_i8(a, b);
+            sweep(kind, Weights::I8(b), Lhs::I8(a), &|label, out| {
+                let got = out.as_i32().expect("i32 out");
+                assert_eq!(got.data, want.data, "{label} m={m} n={n} k={k}");
+            });
         }
     }
 }
 
-/// The tiled single-thread kernels equal the seed row-dot kernels exactly
-/// (same popcount arithmetic, different loop order — integers, so any
-/// reordering must be invisible).
+/// daBNN produces f32 whose values are exact integers at these depths,
+/// on every backend.
 #[test]
-fn tiled_matches_rowdot_kernels() {
-    let mut rng = Rng::new(0xB0C);
-    for &(m, n, k) in &SHAPES {
-        let ab = MatI8::random_binary(m, k, &mut rng);
-        let bb = MatI8::random_binary(k, n, &mut rng);
-        let at = MatI8::random_ternary(m, k, &mut rng);
-        let a_bits = BitRows::from_binary(&ab);
-        let b_bits = BitRows::from_binary_transposed(&bb);
-        let a_planes = PlaneRows::from_ternary(&at);
-
-        let (mut tiled, mut rowdot) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
-        nk::bnn_gemm(&a_bits, &b_bits, &mut tiled);
-        nk::bnn_gemm_rowdot(&a_bits, &b_bits, &mut rowdot);
-        assert_eq!(tiled.data, rowdot.data, "bnn m={m} n={n} k={k}");
-
-        let (mut tiled, mut rowdot) = (MatI32::zeros(m, n), MatI32::zeros(m, n));
-        nk::tbn_gemm(&a_planes, &b_bits, &mut tiled);
-        nk::tbn_gemm_rowdot(&a_planes, &b_bits, &mut rowdot);
-        assert_eq!(tiled.data, rowdot.data, "tbn m={m} n={n} k={k}");
-    }
-}
-
-/// daBNN keeps per-output f32 accumulation order under tiling and
-/// threading, so it stays bit-identical to the i32 oracle at these depths.
-#[test]
-fn dabnn_mt_matches_oracle() {
+fn dabnn_all_backends_match_oracle() {
     let mut rng = Rng::new(0xB0D);
     for &(m, n, k) in &[(1usize, 5usize, 64usize), (9, 6, 130), (21, 13, 384)] {
         let a = MatI8::random_binary(m, k, &mut rng);
         let b = MatI8::random_binary(k, n, &mut rng);
-        let ab = BitRows::from_binary(&a);
-        let bb = BitRows::from_binary_transposed(&b);
         let want = reference::gemm_i8(&a, &b);
-        for threads in [1usize, 3, 8] {
-            let mut c = MatF32::zeros(m, n);
-            dabnn_gemm_mt(&ab, &bb, &mut c, Threading::Fixed(threads));
+        sweep(Kind::DaBnn, Weights::I8(&b), Lhs::I8(&a), &|label, out| {
+            let got = out.as_f32().expect("f32 out");
             for i in 0..m {
                 for j in 0..n {
-                    assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j}) t={threads}");
+                    assert_eq!(got.get(i, j) as i32, want.get(i, j), "{label} ({i},{j})");
                 }
             }
-        }
+        });
     }
 }
 
-/// f32 threading preserves per-output accumulation order: threaded output
-/// is bit-identical to the single-threaded kernel.
+/// F32: native threading preserves per-output accumulation order
+/// (bit-identical across thread counts); every backend matches the
+/// oracle within tolerance.
 #[test]
-fn f32_mt_matches_single_thread_exactly() {
+fn f32_all_backends_match_oracle() {
     let mut rng = Rng::new(0xB0E);
     for &(m, n, k) in &[(1usize, 9usize, 40usize), (13, 17, 33), (37, 25, 64)] {
         let a = MatF32::random(m, k, &mut rng);
         let b = MatF32::random(k, n, &mut rng);
-        let panels = nk::pack_b_panels_f32(&b);
-        let mut want = MatF32::zeros(m, n);
-        nk::f32_gemm(&a, &panels, n, &mut want);
-        for threads in THREADS {
-            let mut c = MatF32::zeros(m, n);
-            f32_gemm_mt(&a, &panels, n, &mut c, Threading::Fixed(threads));
-            assert_eq!(c.data, want.data, "m={m} n={n} k={k} t={threads}");
-        }
+        let want = reference::gemm_f32(&a, &b);
+        // Threading must not change native f32 results at all.
+        let plan1 = GemmPlan::new(GemmConfig::native(Kind::F32), Weights::F32(&b)).expect("plan");
+        let single = run_plan(&plan1, Lhs::F32(&a));
+        sweep(Kind::F32, Weights::F32(&b), Lhs::F32(&a), &|label, out| {
+            let got = out.as_f32().expect("f32 out");
+            if label.contains("Native") {
+                assert_eq!(got.data, single.as_f32().expect("f32 out").data, "{label}");
+            }
+            for i in 0..m {
+                for j in 0..n {
+                    let (g, w) = (got.get(i, j), want.get(i, j));
+                    assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{label} ({i},{j}): {g} vs {w}");
+                }
+            }
+        });
     }
 }
 
 #[test]
-fn u8_mt_matches_oracle() {
+fn u8_and_u4_all_backends_match_oracle() {
     let mut rng = Rng::new(0xB0F);
     for &(m, n, k) in &[(1usize, 8usize, 50usize), (11, 9, 64), (30, 23, 100)] {
+        // U8: full-range values and zero points.
         let a = MatU8::random(m, k, &mut rng);
         let b = MatU8::random(k, n, &mut rng);
         let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
-        let panels = nk::pack_b_panels_u8(&b);
-        let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
         let want = reference::gemm_u8_centered(&a, &b, za, zb);
-        for threads in [1usize, 2, 5, 8] {
-            let mut c = MatI32::zeros(m, n);
-            u8_gemm_mt(&a, &panels, n, za, zb, &col_sums, &mut c, Threading::Fixed(threads));
-            assert_eq!(c.data, want.data, "m={m} n={n} k={k} t={threads}");
-        }
+        sweep(Kind::U8, Weights::U8 { b: &b, za, zb }, Lhs::U8(&a), &|label, out| {
+            assert_eq!(out.as_i32().expect("i32 out").data, want.data, "{label} m={m} n={n} k={k}");
+        });
+        // U4: 4-bit values and zero points (crosses its 290 depth block
+        // in the k=300+ property suite; here the adversarial shapes).
+        let a4 = MatU8::random_below(m, k, 15, &mut rng);
+        let b4 = MatU8::random_below(k, n, 15, &mut rng);
+        let (za4, zb4) = (rng.below(16) as i32, rng.below(16) as i32);
+        let want4 = reference::gemm_u8_centered(&a4, &b4, za4, zb4);
+        sweep(Kind::U4, Weights::U8 { b: &b4, za: za4, zb: zb4 }, Lhs::U8(&a4), &|label, out| {
+            assert_eq!(out.as_i32().expect("i32 out").data, want4.data, "{label} m={m} n={n} k={k}");
+        });
     }
 }

@@ -1,24 +1,26 @@
-//! Property-based differential suite for the K-paneled native GEMM path.
+//! Property-based differential suite for the native GEMM path, driven
+//! through the plan/execute API ([`GemmPlan`], `Backend::Native`).
 //!
 //! Every case draws a random `(m, n, k)` shape (deep-K cases cross the
-//! 16-bit safe bound of 32767), a random thread count in 1..=8 and a
-//! random K-panel depth (or `Auto`), regenerates random inputs from the
-//! case seed, and checks the K-paneled multithreaded driver word-for-word
+//! 16-bit safe bound of 32767), a random thread count in 1..=8, a random
+//! K-panel depth (or `Auto`) and — for BNN — a random register tile
+//! (`Auto` 4×2 / `Wide` 4×4 / the seed's `Rowdot` baseline), regenerates
+//! random inputs from the case seed, and checks the plan word-for-word
 //! against the scalar oracles in `gemm/reference.rs` — for all six
-//! kernels: BNN, TNN, TBN, daBNN, U8 and F32. Failures shrink to a
-//! minimal failing shape via `util::proptest::check_shrink`.
+//! threaded kernels: BNN, TNN, TBN, daBNN, U8 and F32 (U4 is covered by
+//! the backend sweep in `tests/blocked_gemm.rs`; its native path has a
+//! fixed internal depth block). Failures shrink to a minimal failing
+//! shape via `util::proptest::check_shrink`.
 //!
 //! The base seed is deterministic; CI pins it explicitly through the
 //! `TBGEMM_PROP_SEED` environment variable so the suite is replayable
 //! byte-for-byte across runs.
 
-use tbgemm::gemm::native::{
-    bnn_gemm_kp_mt, dabnn_gemm_kp_mt, f32_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt, u8_gemm_kp_mt, BitRows,
-    KPanel, PlaneRows, Threading,
-};
-use tbgemm::gemm::native::{f32_gemm, kernels};
 use tbgemm::gemm::reference;
-use tbgemm::util::mat::{MatF32, MatI32, MatI8, MatU8};
+use tbgemm::gemm::{
+    GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Tile, Weights,
+};
+use tbgemm::util::mat::{MatF32, MatI8, MatU8};
 use tbgemm::util::proptest::{check_shrink, gemm_shape, Config};
 use tbgemm::util::Rng;
 
@@ -57,60 +59,81 @@ fn threads(rng: &mut Rng) -> Threading {
     Threading::Fixed(1 + rng.below(8))
 }
 
+/// A native plan for `kind` with randomized execution knobs.
+fn native_plan(kind: Kind, weights: Weights<'_>, th: Threading, kp: KPanel, tile: Tile) -> GemmPlan {
+    GemmPlan::new(GemmConfig::native(kind).with_threading(th).with_k_panel(kp).with_tile(tile), weights)
+        .expect("plan build")
+}
+
+fn run(plan: &GemmPlan, lhs: Lhs<'_>) -> GemmOut {
+    let mut out = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+    let mut scratch = GemmScratch::new();
+    plan.run(lhs, &mut out, &mut scratch).expect("plan run");
+    out
+}
+
 #[test]
-fn bnn_kp_mt_matches_reference() {
-    check_shrink(cfg(0x10, 24), "bnn kp vs oracle", shape, |m, n, k, rng| {
+fn bnn_plan_matches_reference() {
+    check_shrink(cfg(0x10, 24), "bnn plan vs oracle", shape, |m, n, k, rng| {
         let th = threads(rng);
         let kp = k_panel(rng, k);
+        // Randomize the register tile too: Auto (4×2), Wide (4×4), and
+        // occasionally the seed Rowdot baseline (single-threaded).
+        let tile = [Tile::Auto, Tile::Wide, Tile::Auto, Tile::Rowdot][rng.below(4)];
         let a = MatI8::random_binary(m, k, rng);
         let b = MatI8::random_binary(k, n, rng);
         let want = reference::gemm_i8(&a, &b);
-        let mut c = MatI32::zeros(m, n);
-        bnn_gemm_kp_mt(&BitRows::from_binary(&a), &BitRows::from_binary_transposed(&b), &mut c, th, kp);
-        assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+        let plan = native_plan(Kind::Bnn, Weights::I8(&b), th, kp, tile);
+        let out = run(&plan, Lhs::I8(&a));
+        assert_eq!(
+            out.as_i32().expect("i32 out").data,
+            want.data,
+            "m={m} n={n} k={k} th={th:?} kp={kp:?} tile={tile:?}"
+        );
     });
 }
 
 #[test]
-fn tnn_kp_mt_matches_reference() {
-    check_shrink(cfg(0x20, 24), "tnn kp vs oracle", shape, |m, n, k, rng| {
+fn tnn_plan_matches_reference() {
+    check_shrink(cfg(0x20, 24), "tnn plan vs oracle", shape, |m, n, k, rng| {
         let th = threads(rng);
         let kp = k_panel(rng, k);
         let a = MatI8::random_ternary(m, k, rng);
         let b = MatI8::random_ternary(k, n, rng);
         let want = reference::gemm_i8(&a, &b);
-        let mut c = MatI32::zeros(m, n);
-        tnn_gemm_kp_mt(&PlaneRows::from_ternary(&a), &PlaneRows::from_ternary_transposed(&b), &mut c, th, kp);
-        assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+        let plan = native_plan(Kind::Tnn, Weights::I8(&b), th, kp, Tile::Auto);
+        let out = run(&plan, Lhs::I8(&a));
+        assert_eq!(out.as_i32().expect("i32 out").data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
     });
 }
 
 #[test]
-fn tbn_kp_mt_matches_reference() {
-    check_shrink(cfg(0x30, 24), "tbn kp vs oracle", shape, |m, n, k, rng| {
+fn tbn_plan_matches_reference() {
+    check_shrink(cfg(0x30, 24), "tbn plan vs oracle", shape, |m, n, k, rng| {
         let th = threads(rng);
         let kp = k_panel(rng, k);
         let a = MatI8::random_ternary(m, k, rng);
         let b = MatI8::random_binary(k, n, rng);
         let want = reference::gemm_i8(&a, &b);
-        let mut c = MatI32::zeros(m, n);
-        tbn_gemm_kp_mt(&PlaneRows::from_ternary(&a), &BitRows::from_binary_transposed(&b), &mut c, th, kp);
-        assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+        let plan = native_plan(Kind::Tbn, Weights::I8(&b), th, kp, Tile::Auto);
+        let out = run(&plan, Lhs::I8(&a));
+        assert_eq!(out.as_i32().expect("i32 out").data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
     });
 }
 
 #[test]
-fn dabnn_kp_mt_matches_reference() {
-    check_shrink(cfg(0x40, 16), "dabnn kp vs oracle", shape, |m, n, k, rng| {
+fn dabnn_plan_matches_reference() {
+    check_shrink(cfg(0x40, 16), "dabnn plan vs oracle", shape, |m, n, k, rng| {
         let th = threads(rng);
         let kp = k_panel(rng, k);
         let a = MatI8::random_binary(m, k, rng);
         let b = MatI8::random_binary(k, n, rng);
         let want = reference::gemm_i8(&a, &b);
-        let mut c = MatF32::zeros(m, n);
-        dabnn_gemm_kp_mt(&BitRows::from_binary(&a), &BitRows::from_binary_transposed(&b), &mut c, th, kp);
+        let plan = native_plan(Kind::DaBnn, Weights::I8(&b), th, kp, Tile::Auto);
+        let out = run(&plan, Lhs::I8(&a));
         // f32 popcount partials are exact integers below 2²³, so the
         // comparison is word-for-word after the integer cast.
+        let c = out.as_f32().expect("f32 out");
         for i in 0..m {
             for j in 0..n {
                 assert_eq!(c.get(i, j) as i32, want.get(i, j), "({i},{j}) m={m} n={n} k={k} th={th:?} kp={kp:?}");
@@ -120,32 +143,35 @@ fn dabnn_kp_mt_matches_reference() {
 }
 
 #[test]
-fn u8_kp_mt_matches_reference() {
-    check_shrink(cfg(0x50, 16), "u8 kp vs oracle", shape, |m, n, k, rng| {
+fn u8_plan_matches_reference() {
+    check_shrink(cfg(0x50, 16), "u8 plan vs oracle", shape, |m, n, k, rng| {
         let th = threads(rng);
         let kp = k_panel(rng, k);
         let za = rng.below(256) as i32;
         let zb = rng.below(256) as i32;
         let a = MatU8::random(m, k, rng);
         let b = MatU8::random(k, n, rng);
-        let panels = kernels::pack_b_panels_u8(&b);
-        let col_sums: Vec<i32> = (0..n).map(|j| (0..k).map(|t| b.get(t, j) as i32).sum()).collect();
         let want = reference::gemm_u8_centered(&a, &b, za, zb);
-        let mut c = MatI32::zeros(m, n);
-        u8_gemm_kp_mt(&a, &panels, n, za, zb, &col_sums, &mut c, th, kp);
-        assert_eq!(c.data, want.data, "m={m} n={n} k={k} za={za} zb={zb} th={th:?} kp={kp:?}");
+        let plan = native_plan(Kind::U8, Weights::U8 { b: &b, za, zb }, th, kp, Tile::Auto);
+        let out = run(&plan, Lhs::U8(&a));
+        assert_eq!(
+            out.as_i32().expect("i32 out").data,
+            want.data,
+            "m={m} n={n} k={k} za={za} zb={zb} th={th:?} kp={kp:?}"
+        );
     });
 }
 
-/// F32: with `KPanel::Auto` the depth stays one panel, so the paneled
-/// driver is bit-identical to the unpaneled kernel; explicit panels
-/// change the rounding association, so those cases compare against the
-/// scalar oracle with a depth-scaled tolerance.
+/// F32: with `KPanel::Auto` the depth stays one panel and threading
+/// preserves per-output accumulation order, so the threaded plan is
+/// bit-identical to the single-threaded one; explicit panels change the
+/// rounding association, so all cases compare against the scalar oracle
+/// with a depth-scaled tolerance.
 #[test]
-fn f32_kp_mt_matches_reference() {
+fn f32_plan_matches_reference() {
     check_shrink(
         cfg(0x60, 16),
-        "f32 kp vs oracle",
+        "f32 plan vs oracle",
         // f32 has no safe-K bound; cap the depth so the tolerance model
         // stays tight.
         |rng| {
@@ -157,14 +183,14 @@ fn f32_kp_mt_matches_reference() {
             let kp = k_panel(rng, k);
             let a = MatF32::random(m, k, rng);
             let b = MatF32::random(k, n, rng);
-            let panels = kernels::pack_b_panels_f32(&b);
-            let mut c = MatF32::zeros(m, n);
-            f32_gemm_kp_mt(&a, &panels, n, &mut c, th, kp);
+            let plan = native_plan(Kind::F32, Weights::F32(&b), th, kp, Tile::Auto);
+            let out = run(&plan, Lhs::F32(&a));
+            let c = out.as_f32().expect("f32 out");
             if kp == KPanel::Auto {
-                // Word-for-word against the unpaneled kernel.
-                let mut want = MatF32::zeros(m, n);
-                f32_gemm(&a, &panels, n, &mut want);
-                assert_eq!(c.data, want.data, "m={m} n={n} k={k} th={th:?}");
+                // Word-for-word against the single-threaded plan.
+                let single = native_plan(Kind::F32, Weights::F32(&b), Threading::Single, kp, Tile::Auto);
+                let sout = run(&single, Lhs::F32(&a));
+                assert_eq!(c.data, sout.as_f32().expect("f32 out").data, "m={m} n={n} k={k} th={th:?}");
             }
             let want = reference::gemm_f32(&a, &b);
             // Absolute floor scales with √k (random-walk magnitude of the

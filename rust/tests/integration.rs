@@ -7,31 +7,35 @@ use tbgemm::bench::{grid, predicted, ratio};
 use tbgemm::conv::conv2d::{direct_conv_i8, ConvKind, ConvParams, LowBitConv};
 use tbgemm::conv::tensor::Tensor3;
 use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
-use tbgemm::gemm::driver::{GemmDriver, Lhs};
-use tbgemm::gemm::native::kernels::tnn_gemm;
-use tbgemm::gemm::native::PlaneRows;
 use tbgemm::gemm::reference::gemm_i8;
-use tbgemm::gemm::Kind;
+use tbgemm::gemm::{Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
 use tbgemm::nn::builder::{build_from_config, NetConfig};
 use tbgemm::quant::{c_in_max, k_max};
-use tbgemm::util::mat::{MatI32, MatI8};
+use tbgemm::util::mat::MatI8;
 use tbgemm::util::Rng;
 use std::time::Duration;
 
-/// Paper-grid shape: emulated driver ≡ native kernel ≡ oracle at a full
-/// 64-point-grid member (72×24×128).
+/// Run a TNN multiplication through the plan API on the given backend.
+fn tnn_plan_run(backend: Backend, a: &MatI8, b: &MatI8) -> Vec<i32> {
+    let plan = GemmPlan::new(GemmConfig::new(Kind::Tnn, backend), Weights::I8(b)).expect("plan");
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("run");
+    out.into_i32().expect("i32 out").data
+}
+
+/// Paper-grid shape: emulated backend ≡ native backend ≡ oracle at a
+/// full 64-point-grid member (72×24×128), through one GemmPlan loop.
 #[test]
 fn paper_grid_point_consistency() {
     let (h, w, d) = (72, 24, 128);
     let mut rng = Rng::new(0x1111);
     let a = MatI8::random_ternary(h, d, &mut rng);
     let b = MatI8::random_ternary(d, w, &mut rng);
-    let emu = GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
-    let mut native = MatI32::zeros(h, w);
-    tnn_gemm(&PlaneRows::from_ternary(&a), &PlaneRows::from_ternary_transposed(&b), &mut native);
     let oracle = gemm_i8(&a, &b);
-    assert_eq!(emu.data, oracle.data);
-    assert_eq!(native.data, oracle.data);
+    for backend in Backend::ALL {
+        assert_eq!(tnn_plan_run(backend, &a, &b), oracle.data, "{backend:?}");
+    }
 }
 
 /// A conv layer built on the packed GEMM equals the direct convolution
@@ -112,14 +116,13 @@ fn measured_lowbit_beats_f32_smoke() {
     assert!(bnnt < tnnt, "BNN ({bnnt:.2e}s) must beat TNN ({tnnt:.2e}s)");
 }
 
-/// Deep-depth TNN through the driver (depth-block widening) at a
-/// CNN-like extreme: 3×3 conv over 1024 channels → depth 9216.
+/// Deep-depth TNN through the emulated backend (depth-block widening)
+/// at a CNN-like extreme: 3×3 conv over 1024 channels → depth 9216.
 #[test]
 fn deep_depth_widening_correct() {
     let mut rng = Rng::new(0x5555);
     let d = 9216;
     let a = MatI8::random_ternary(2, d, &mut rng);
     let b = MatI8::random_ternary(d, 3, &mut rng);
-    let got = GemmDriver::new_tnn(&b).multiply_emulated(Lhs::I8(&a)).unwrap_i32();
-    assert_eq!(got.data, gemm_i8(&a, &b).data);
+    assert_eq!(tnn_plan_run(Backend::Emulated, &a, &b), gemm_i8(&a, &b).data);
 }

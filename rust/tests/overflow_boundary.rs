@@ -1,5 +1,6 @@
 //! Overflow-boundary regression tests pinning the per-kind safe-K bounds
-//! of the K-paneled accumulation scheme (paper Table II / eq. (4)).
+//! of the K-paneled accumulation scheme (paper Table II / eq. (4)),
+//! driven through the plan/execute API (`GemmPlan`, native backend).
 //!
 //! Adversarial all-ones and alternating-sign inputs are placed at depths
 //! just below and just above the 16-bit accumulation limit, asserting
@@ -10,13 +11,12 @@
 //! behavior is checked with optimizations (and without debug overflow
 //! checks) enabled.
 
-use tbgemm::gemm::native::{
-    bnn_gemm_kp_mt, kernels, safe_k, tbn_gemm_kp_mt, tnn_gemm_kp_mt, u8_gemm_kp_mt, BitRows, KPanel, PlaneRows,
-    Threading,
-};
 use tbgemm::gemm::reference;
-use tbgemm::gemm::Kind;
-use tbgemm::util::mat::{MatI32, MatI8, MatU8};
+use tbgemm::gemm::{
+    safe_k, GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Weights,
+};
+use tbgemm::util::mat::{MatI8, MatU8};
+use tbgemm::util::Rng;
 
 /// The 16-bit bound for the low-bit kinds and its neighbours.
 const K_SAFE: usize = 32767;
@@ -36,39 +36,22 @@ fn safe_k_bounds_are_pinned() {
 }
 
 /// Run one adversarial low-bit case at depth `k` against the oracle, for
-/// a spread of panel configs (including single-word panels) and threads.
-fn assert_lowbit_exact(a: &MatI8, b: &MatI8, k: usize, binary_a: bool, binary_b: bool) {
+/// a spread of panel configs (including single-word panels) and threads,
+/// through the plan API.
+fn assert_lowbit_exact(kind: Kind, a: &MatI8, b: &MatI8, k: usize) {
     let want = reference::gemm_i8(a, b);
-    let (m, n) = (a.rows, b.cols);
     let panels = [KPanel::Auto, KPanel::Depth(64), KPanel::Depth(4096), KPanel::Depth(k)];
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
     for kp in panels {
         for th in [Threading::Single, Threading::Fixed(4)] {
-            let mut c = MatI32::zeros(m, n);
-            match (binary_a, binary_b) {
-                (true, true) => bnn_gemm_kp_mt(
-                    &BitRows::from_binary(a),
-                    &BitRows::from_binary_transposed(b),
-                    &mut c,
-                    th,
-                    kp,
-                ),
-                (false, false) => tnn_gemm_kp_mt(
-                    &PlaneRows::from_ternary(a),
-                    &PlaneRows::from_ternary_transposed(b),
-                    &mut c,
-                    th,
-                    kp,
-                ),
-                (false, true) => tbn_gemm_kp_mt(
-                    &PlaneRows::from_ternary(a),
-                    &BitRows::from_binary_transposed(b),
-                    &mut c,
-                    th,
-                    kp,
-                ),
-                _ => unreachable!("no binary×ternary kind"),
-            }
-            assert_eq!(c.data, want.data, "k={k} kp={kp:?} th={th:?}");
+            let plan = GemmPlan::new(
+                GemmConfig::native(kind).with_threading(th).with_k_panel(kp),
+                Weights::I8(b),
+            )
+            .expect("plan");
+            plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("run");
+            assert_eq!(out.as_i32().expect("i32 out").data, want.data, "k={k} kp={kp:?} th={th:?}");
         }
     }
 }
@@ -83,8 +66,8 @@ fn bnn_all_ones_straddles_16bit_bound() {
         let a = MatI8::from_fn(2, k, |_, _| 1);
         let b_same = MatI8::from_fn(k, 2, |_, _| 1);
         let b_opp = MatI8::from_fn(k, 2, |_, _| -1);
-        assert_lowbit_exact(&a, &b_same, k, true, true);
-        assert_lowbit_exact(&a, &b_opp, k, true, true);
+        assert_lowbit_exact(Kind::Bnn, &a, &b_same, k);
+        assert_lowbit_exact(Kind::Bnn, &a, &b_opp, k);
         // The pinned expected values.
         let want = reference::gemm_i8(&a, &b_same);
         assert_eq!(want.get(0, 0), k as i32);
@@ -105,7 +88,7 @@ fn bnn_alternating_sign_cancels_exactly() {
     for k in [K_SAFE, K_SAFE + 1] {
         let a = MatI8::from_fn(2, k, |_, t| if t % 2 == 0 { 1 } else { -1 });
         let b = MatI8::from_fn(k, 2, |_, _| 1);
-        assert_lowbit_exact(&a, &b, k, true, true);
+        assert_lowbit_exact(Kind::Bnn, &a, &b, k);
         let want = reference::gemm_i8(&a, &b);
         assert_eq!(want.get(0, 0), (k % 2) as i32);
     }
@@ -118,7 +101,7 @@ fn tnn_all_ones_straddles_16bit_bound() {
     for k in [K_SAFE, K_SAFE + 1] {
         let a = MatI8::from_fn(2, k, |_, _| 1);
         let b = MatI8::from_fn(k, 2, |_, _| 1);
-        assert_lowbit_exact(&a, &b, k, false, false);
+        assert_lowbit_exact(Kind::Tnn, &a, &b, k);
         assert_eq!(reference::gemm_i8(&a, &b).get(0, 0), k as i32);
     }
 }
@@ -130,7 +113,7 @@ fn tnn_alternating_pattern_above_bound() {
     let k = K_SAFE + 1;
     let a = MatI8::from_fn(2, k, |_, t| [1i8, 0, -1][t % 3]);
     let b = MatI8::from_fn(k, 2, |t, _| if t % 2 == 0 { 1 } else { -1 });
-    assert_lowbit_exact(&a, &b, k, false, false);
+    assert_lowbit_exact(Kind::Tnn, &a, &b, k);
 }
 
 /// TBN all-ones at the boundary (ternary activations × binary weights).
@@ -139,7 +122,7 @@ fn tbn_all_ones_straddles_16bit_bound() {
     for k in [K_SAFE, K_SAFE + 1] {
         let a = MatI8::from_fn(2, k, |_, _| 1);
         let b = MatI8::from_fn(k, 2, |_, _| -1);
-        assert_lowbit_exact(&a, &b, k, false, true);
+        assert_lowbit_exact(Kind::Tbn, &a, &b, k);
         assert_eq!(reference::gemm_i8(&a, &b).get(0, 0), -(k as i32));
     }
 }
@@ -157,14 +140,18 @@ fn u8_all_max_straddles_u32_bound() {
         let a = MatU8 { rows: m, cols: k, data: vec![255; m * k] };
         let b = MatU8 { rows: k, cols: n, data: vec![255; k * n] };
         let (za, zb) = (255, 255);
-        let panels = kernels::pack_b_panels_u8(&b);
-        let col_sums: Vec<i32> = (0..n).map(|_| (k * 255) as i32).collect();
         let want = reference::gemm_u8_centered(&a, &b, za, zb);
         assert_eq!(want.get(0, 0), 0);
+        let mut out = GemmOut::new_i32();
+        let mut scratch = GemmScratch::new();
         for kp in [KPanel::Auto, KPanel::Depth(1 << 20)] {
-            let mut c = MatI32::zeros(m, n);
-            u8_gemm_kp_mt(&a, &panels, n, za, zb, &col_sums, &mut c, Threading::Single, kp);
-            assert_eq!(c.data, want.data, "k={k} kp={kp:?}");
+            let plan = GemmPlan::new(
+                GemmConfig::native(Kind::U8).with_k_panel(kp),
+                Weights::U8 { b: &b, za, zb },
+            )
+            .expect("plan");
+            plan.run(Lhs::U8(&a), &mut out, &mut scratch).expect("run");
+            assert_eq!(out.as_i32().expect("i32 out").data, want.data, "k={k} kp={kp:?}");
         }
         // The raw dot itself crosses u32::MAX exactly past the bound.
         let raw = k as u64 * 255 * 255;
@@ -174,4 +161,21 @@ fn u8_all_max_straddles_u32_bound() {
             assert!(raw <= u32::MAX as u64);
         }
     }
+}
+
+/// The emulated backend's fixed depth blocks stay exact across the same
+/// boundary (its driver widens into i32 between 4096-deep blocks) — the
+/// two backends agree word-for-word just past the 16-bit bound.
+#[test]
+fn emulated_backend_exact_past_the_bound() {
+    let k = K_SAFE + 1;
+    let mut rng = Rng::new(0x0B1);
+    let a = MatI8::random_ternary(2, k, &mut rng);
+    let b = MatI8::random_ternary(k, 2, &mut rng);
+    let want = reference::gemm_i8(&a, &b);
+    let plan = GemmPlan::new(GemmConfig::emulated(Kind::Tnn), Weights::I8(&b)).expect("plan");
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
+    assert_eq!(out.as_i32().expect("i32 out").data, want.data);
 }

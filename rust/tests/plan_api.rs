@@ -1,0 +1,273 @@
+//! Contract tests for the plan/execute API: typed error cases, plan
+//! reuse (pack once / run many) with pointer-stability asserts on the
+//! shared [`GemmScratch`] arena and the caller-owned output, and the
+//! widened BNN 4×4 tile behind the plan config.
+
+use tbgemm::gemm::reference;
+use tbgemm::gemm::{
+    Backend, GemmConfig, GemmError, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Threading, Tile, Weights,
+};
+use tbgemm::util::mat::{MatF32, MatI8, MatU8};
+use tbgemm::util::Rng;
+
+// ---- typed error cases -------------------------------------------------
+
+/// Wrong LHS variant is a typed error on every backend, for a low-bit
+/// kind, a byte kind, and the f32 baseline.
+#[test]
+fn wrong_lhs_variant_is_typed() {
+    let mut rng = Rng::new(0xE40);
+    let b_i8 = MatI8::random_binary(32, 4, &mut rng);
+    let b_u8 = MatU8::random(32, 4, &mut rng);
+    let b_f32 = MatF32::random(32, 4, &mut rng);
+    let a_f32 = MatF32::random(2, 32, &mut rng);
+    let a_i8 = MatI8::random_binary(2, 32, &mut rng);
+    let mut scratch = GemmScratch::new();
+    for backend in Backend::ALL {
+        let plan = GemmPlan::new(GemmConfig::new(Kind::Bnn, backend), Weights::I8(&b_i8)).expect("plan");
+        let mut out = GemmOut::new_i32();
+        assert_eq!(
+            plan.run(Lhs::F32(&a_f32), &mut out, &mut scratch),
+            Err(GemmError::LhsMismatch { kind: Kind::Bnn, expected: "i8", got: "f32" }),
+            "{backend:?}"
+        );
+        let plan = GemmPlan::new(GemmConfig::new(Kind::U8, backend), Weights::U8 { b: &b_u8, za: 1, zb: 2 })
+            .expect("plan");
+        assert_eq!(
+            plan.run(Lhs::I8(&a_i8), &mut out, &mut scratch),
+            Err(GemmError::LhsMismatch { kind: Kind::U8, expected: "u8", got: "i8" }),
+            "{backend:?}"
+        );
+        let plan = GemmPlan::new(GemmConfig::new(Kind::F32, backend), Weights::F32(&b_f32)).expect("plan");
+        let mut fout = GemmOut::new_f32();
+        assert_eq!(
+            plan.run(Lhs::I8(&a_i8), &mut fout, &mut scratch),
+            Err(GemmError::LhsMismatch { kind: Kind::F32, expected: "f32", got: "i8" }),
+            "{backend:?}"
+        );
+    }
+}
+
+/// K mismatch and zero-dim matrices are typed errors; nothing panics.
+#[test]
+fn depth_and_empty_dims_are_typed() {
+    let mut rng = Rng::new(0xE41);
+    let b = MatI8::random_ternary(48, 6, &mut rng);
+    let plan = GemmPlan::new(GemmConfig::native(Kind::Tnn), Weights::I8(&b)).expect("plan");
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    let a_short = MatI8::random_ternary(3, 47, &mut rng);
+    assert_eq!(
+        plan.run(Lhs::I8(&a_short), &mut out, &mut scratch),
+        Err(GemmError::DepthMismatch { expected: 48, got: 47 })
+    );
+    let a_empty = MatI8::zeros(0, 48);
+    assert_eq!(
+        plan.run(Lhs::I8(&a_empty), &mut out, &mut scratch),
+        Err(GemmError::EmptyDim { dim: "m" })
+    );
+    // Empty weights fail at build time, per dimension.
+    assert_eq!(
+        GemmPlan::new(GemmConfig::native(Kind::Tnn), Weights::I8(&MatI8::zeros(0, 6))).err(),
+        Some(GemmError::EmptyDim { dim: "k" })
+    );
+    assert_eq!(
+        GemmPlan::new(GemmConfig::native(Kind::Tnn), Weights::I8(&MatI8::zeros(48, 0))).err(),
+        Some(GemmError::EmptyDim { dim: "n" })
+    );
+}
+
+/// The output-variant contract is typed: an f32 buffer for an i32 kind
+/// (and vice versa) is rejected without touching the buffer.
+#[test]
+fn output_variant_is_typed() {
+    let mut rng = Rng::new(0xE42);
+    let b = MatI8::random_binary(16, 2, &mut rng);
+    let a = MatI8::random_binary(1, 16, &mut rng);
+    let mut scratch = GemmScratch::new();
+    let bnn = GemmPlan::new(GemmConfig::native(Kind::Bnn), Weights::I8(&b)).expect("plan");
+    let mut fout = GemmOut::new_f32();
+    assert_eq!(
+        bnn.run(Lhs::I8(&a), &mut fout, &mut scratch),
+        Err(GemmError::OutputMismatch { kind: Kind::Bnn, expected: "i32", got: "f32" })
+    );
+    let dabnn = GemmPlan::new(GemmConfig::native(Kind::DaBnn), Weights::I8(&b)).expect("plan");
+    let mut iout = GemmOut::new_i32();
+    assert_eq!(
+        dabnn.run(Lhs::I8(&a), &mut iout, &mut scratch),
+        Err(GemmError::OutputMismatch { kind: Kind::DaBnn, expected: "f32", got: "i32" })
+    );
+}
+
+/// The emulated backend rejects out-of-domain LHS values with a typed
+/// error (its microkernel drivers would otherwise assert).
+#[test]
+fn emulated_lhs_domain_is_typed() {
+    let mut rng = Rng::new(0xE43);
+    let b = MatI8::random_binary(16, 2, &mut rng);
+    let plan = GemmPlan::new(GemmConfig::emulated(Kind::Bnn), Weights::I8(&b)).expect("plan");
+    let a_ternary = MatI8::zeros(2, 16); // zeros are not ±1
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    assert_eq!(
+        plan.run(Lhs::I8(&a_ternary), &mut out, &mut scratch),
+        Err(GemmError::LhsDomain { kind: Kind::Bnn, expected: "±1" })
+    );
+}
+
+// ---- plan reuse: pack once, run many -----------------------------------
+
+/// Pack once / run many times across "batches": after a warm-up run, no
+/// buffer in the shared scratch arena or the caller-owned output may
+/// reallocate, for every kind on the native backend, and every run must
+/// match the reference backend.
+#[test]
+fn plan_reuse_is_zero_alloc_at_steady_state() {
+    let mut rng = Rng::new(0xE44);
+    let (m, n, k) = (13, 9, 200);
+    let mut scratch = GemmScratch::new();
+    for kind in Kind::ALL {
+        // Weights + reference plan.
+        let b_i8_bin = MatI8::random_binary(k, n, &mut rng);
+        let b_i8_ter = MatI8::random_ternary(k, n, &mut rng);
+        let b_u8 = MatU8::random_below(k, n, 15, &mut rng);
+        let b_f32 = MatF32::random(k, n, &mut rng);
+        let weights = match kind {
+            Kind::Bnn | Kind::Tbn | Kind::DaBnn => Weights::I8(&b_i8_bin),
+            Kind::Tnn => Weights::I8(&b_i8_ter),
+            Kind::U8 | Kind::U4 => Weights::U8 { b: &b_u8, za: 3, zb: 5 },
+            Kind::F32 => Weights::F32(&b_f32),
+        };
+        let plan = GemmPlan::new(GemmConfig::native(kind), weights).expect("plan");
+        let reference = GemmPlan::new(GemmConfig::reference(kind), weights).expect("ref plan");
+        let mut out = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+        let mut want = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+
+        // Warm-up batch, then record every arena pointer.
+        let batches: Vec<(Option<MatI8>, Option<MatU8>, Option<MatF32>)> = (0..4)
+            .map(|_| match kind {
+                Kind::Bnn | Kind::DaBnn => (Some(MatI8::random_binary(m, k, &mut rng)), None, None),
+                Kind::Tnn | Kind::Tbn => (Some(MatI8::random_ternary(m, k, &mut rng)), None, None),
+                Kind::U8 | Kind::U4 => (None, Some(MatU8::random_below(m, k, 15, &mut rng)), None),
+                Kind::F32 => (None, None, Some(MatF32::random(m, k, &mut rng))),
+            })
+            .collect();
+        fn as_lhs(batch: &(Option<MatI8>, Option<MatU8>, Option<MatF32>)) -> Lhs<'_> {
+            match batch {
+                (Some(a), _, _) => Lhs::I8(a),
+                (_, Some(a), _) => Lhs::U8(a),
+                (_, _, Some(a)) => Lhs::F32(a),
+                _ => unreachable!("one LHS variant is always set"),
+            }
+        }
+        plan.run(as_lhs(&batches[0]), &mut out, &mut scratch).expect("warm-up run");
+        let bits_ptr = scratch.bits.data.as_ptr();
+        let planes_ptr = scratch.planes.plus.as_ptr();
+        let out_ptr = match &out {
+            GemmOut::I32(c) => c.data.as_ptr() as usize,
+            GemmOut::F32(c) => c.data.as_ptr() as usize,
+        };
+
+        for (i, batch) in batches.iter().enumerate() {
+            plan.run(as_lhs(batch), &mut out, &mut scratch).expect("steady-state run");
+            reference.run(as_lhs(batch), &mut want, &mut scratch).expect("reference run");
+            // Results match the reference backend (f32 kinds at this
+            // depth: daBNN exact; F32 tolerance below).
+            match (&out, &want) {
+                (GemmOut::I32(c), GemmOut::I32(w)) => assert_eq!(c.data, w.data, "{kind:?} batch {i}"),
+                (GemmOut::F32(c), GemmOut::F32(w)) => {
+                    for (x, y) in c.data.iter().zip(&w.data) {
+                        assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{kind:?} batch {i}: {x} vs {y}");
+                    }
+                }
+                _ => panic!("output variants diverged"),
+            }
+            // Pointer stability: no per-call heap allocation.
+            assert_eq!(scratch.bits.data.as_ptr(), bits_ptr, "{kind:?}: bits arena reallocated");
+            assert_eq!(scratch.planes.plus.as_ptr(), planes_ptr, "{kind:?}: plane arena reallocated");
+            let now = match &out {
+                GemmOut::I32(c) => c.data.as_ptr() as usize,
+                GemmOut::F32(c) => c.data.as_ptr() as usize,
+            };
+            assert_eq!(now, out_ptr, "{kind:?}: output buffer reallocated");
+        }
+    }
+}
+
+// ---- the widened 4×4 BNN tile ------------------------------------------
+
+/// `Tile::Wide` is bit-identical to `Tile::Auto` (and the oracle) on
+/// column counts exercising every 4/2/1-column remainder, with and
+/// without threading, and falls back to the spill kernel on deep K.
+#[test]
+fn wide_tile_matches_auto_and_oracle() {
+    let mut rng = Rng::new(0xE45);
+    for &(m, n, k) in &[
+        (4usize, 4usize, 64usize),
+        (5, 1, 65),
+        (6, 2, 127),
+        (7, 3, 128),
+        (9, 5, 130),
+        (11, 6, 191),
+        (13, 7, 257),
+        (3, 9, 64),
+    ] {
+        let a = MatI8::random_binary(m, k, &mut rng);
+        let b = MatI8::random_binary(k, n, &mut rng);
+        let want = reference::gemm_i8(&a, &b);
+        for th in [Threading::Single, Threading::Fixed(3)] {
+            for tile in [Tile::Auto, Tile::Wide] {
+                let plan = GemmPlan::new(
+                    GemmConfig::native(Kind::Bnn).with_threading(th).with_tile(tile),
+                    Weights::I8(&b),
+                )
+                .expect("plan");
+                let mut out = GemmOut::new_i32();
+                let mut scratch = GemmScratch::new();
+                plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
+                assert_eq!(
+                    out.as_i32().expect("i32 out").data,
+                    want.data,
+                    "m={m} n={n} k={k} th={th:?} tile={tile:?}"
+                );
+            }
+        }
+    }
+    // Deep K (> 32767): Wide falls back to the K-paneled 4×2 kernel and
+    // stays exact.
+    let k = 32_768;
+    let a = MatI8::from_fn(2, k, |_, _| 1);
+    let b = MatI8::from_fn(k, 5, |_, _| 1);
+    let plan = GemmPlan::new(GemmConfig::native(Kind::Bnn).with_tile(Tile::Wide), Weights::I8(&b))
+        .expect("plan");
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
+    assert!(out.as_i32().expect("i32 out").data.iter().all(|&v| v == k as i32));
+}
+
+/// `Tile::Rowdot` (the seed baseline) agrees with the tiled default
+/// through the same plan API, for all three low-bit kinds.
+#[test]
+fn rowdot_tile_matches_auto() {
+    let mut rng = Rng::new(0xE46);
+    let (m, n, k) = (9, 7, 130);
+    let cases = [
+        (Kind::Bnn, MatI8::random_binary(m, k, &mut rng), MatI8::random_binary(k, n, &mut rng)),
+        (Kind::Tnn, MatI8::random_ternary(m, k, &mut rng), MatI8::random_ternary(k, n, &mut rng)),
+        (Kind::Tbn, MatI8::random_ternary(m, k, &mut rng), MatI8::random_binary(k, n, &mut rng)),
+    ];
+    for (kind, a, b) in &cases {
+        let mut results = Vec::new();
+        for tile in [Tile::Auto, Tile::Rowdot] {
+            let plan = GemmPlan::new(GemmConfig::native(*kind).with_tile(tile), Weights::I8(b))
+                .expect("plan");
+            let mut out = GemmOut::new_i32();
+            let mut scratch = GemmScratch::new();
+            plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("run");
+            results.push(out.into_i32().expect("i32 out").data);
+        }
+        assert_eq!(results[0], results[1], "{kind:?}");
+        assert_eq!(results[0], reference::gemm_i8(a, b).data, "{kind:?} vs oracle");
+    }
+}

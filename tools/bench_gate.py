@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Compare a fresh gemm_micro run against the committed baseline.
+
+`cargo bench --bench gemm_micro` (run from `rust/`) writes
+`rust/BENCH_gemm.json`: a JSON array of records
+`{kind, variant, m, n, k, ns_per_iter, gops}`. This gate compares that
+fresh run against the committed `rust/BENCH_gemm.baseline.json` keyed by
+`(kind, variant, m, n, k)` and fails (exit 1) when any record regresses
+by more than `--tolerance` (default 1.6x slower, i.e. fresh gops <
+baseline gops / 1.6 — generous, because CI machines are noisy and
+shared; the gate exists to catch order-of-magnitude regressions like a
+dead dispatch or a lost SIMD path, not single-digit percent drift).
+
+Seeding / refreshing the baseline (run on the reference host):
+
+    cd rust && cargo bench --bench gemm_micro
+    cp BENCH_gemm.json BENCH_gemm.baseline.json
+    git add BENCH_gemm.baseline.json
+
+An empty baseline array (the committed placeholder until a reference
+host measures one) makes the gate print the fresh table and exit 0.
+
+Usage:
+    python3 tools/bench_gate.py [--fresh rust/BENCH_gemm.json]
+        [--baseline rust/BENCH_gemm.baseline.json] [--tolerance 1.6]
+"""
+
+import argparse
+import json
+import sys
+
+
+def key(rec):
+    return (rec["kind"], rec["variant"], rec["m"], rec["n"], rec["k"])
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a JSON array of records")
+    return {key(r): r for r in data}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default="rust/BENCH_gemm.json")
+    ap.add_argument("--baseline", default="rust/BENCH_gemm.baseline.json")
+    ap.add_argument("--tolerance", type=float, default=1.6,
+                    help="max allowed slowdown factor vs baseline (default 1.6)")
+    args = ap.parse_args()
+
+    try:
+        fresh = load(args.fresh)
+    except FileNotFoundError:
+        raise SystemExit(f"fresh run not found: {args.fresh} (run `cargo bench --bench gemm_micro` first)")
+    try:
+        baseline = load(args.baseline)
+    except FileNotFoundError:
+        print(f"bench_gate: no baseline at {args.baseline}; nothing to gate against.")
+        print("Seed it on the reference host (see tools/bench_gate.py docstring).")
+        return 0
+
+    if not baseline:
+        print(f"bench_gate: baseline {args.baseline} is empty (placeholder); gate skipped.")
+        print(f"Fresh run has {len(fresh)} records. Seed the baseline on the reference host:")
+        print("    cd rust && cargo bench --bench gemm_micro && cp BENCH_gemm.json BENCH_gemm.baseline.json")
+        return 0
+
+    regressions, improved, missing = [], 0, []
+    for k, base in sorted(baseline.items()):
+        if k not in fresh:
+            missing.append(k)
+            continue
+        f, b = fresh[k], base
+        ratio = b["gops"] / f["gops"] if f["gops"] > 0 else float("inf")
+        if ratio > args.tolerance:
+            regressions.append((k, b["gops"], f["gops"], ratio))
+        elif ratio < 1.0:
+            improved += 1
+
+    print(f"bench_gate: {len(baseline)} baseline records, {len(fresh)} fresh, "
+          f"{improved} improved, {len(regressions)} regressed (tolerance {args.tolerance}x)")
+    for k in missing:
+        print(f"  WARNING: baseline record {k} missing from fresh run (renamed variant?)")
+    new_keys = sorted(set(fresh) - set(baseline))
+    for k in new_keys:
+        print(f"  note: new record {k} not in baseline yet")
+    if regressions:
+        print("REGRESSIONS (fresh slower than baseline beyond tolerance):")
+        for k, bg, fg, ratio in regressions:
+            print(f"  {k}: baseline {bg:.3f} gops -> fresh {fg:.3f} gops ({ratio:.2f}x slower)")
+        return 1
+    print("bench_gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
