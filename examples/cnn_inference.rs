@@ -11,7 +11,8 @@
 
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::nn::builder::{plan_from_config, NetConfig};
+use tbgemm::nn::{NetOut, NetPlanConfig};
 use tbgemm::util::Rng;
 use std::collections::BTreeMap;
 
@@ -25,19 +26,23 @@ fn main() {
     let mut results = Vec::new();
     for kind in [ConvKind::Tnn, ConvKind::Tbn, ConvKind::Bnn] {
         let cfg = NetConfig::mobile_cnn(kind, h, w, c, classes);
-        let net = build_from_config(&cfg, 0xCAFE);
+        let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("valid config");
+        let mut scratch = plan.make_scratch();
+        let mut out = NetOut::new();
         // Warm-up + correctness sanity: logits finite, predictions vary.
         let mut preds = std::collections::BTreeSet::new();
         for img in batch.iter().take(8) {
-            preds.insert(net.predict(img));
+            plan.run(img, &mut out, &mut scratch).expect("plan-shaped image");
+            preds.insert(out.predicted());
         }
         assert!(!preds.is_empty());
 
         let t0 = std::time::Instant::now();
         let mut layer_time: BTreeMap<&'static str, f64> = BTreeMap::new();
+        let mut timings = Vec::new();
         for img in &batch {
-            let (_, timings) = net.forward_timed(img);
-            for t in timings {
+            plan.run_timed(img, &mut out, &mut scratch, &mut timings).expect("plan-shaped image");
+            for t in &timings {
                 *layer_time.entry(t.name).or_insert(0.0) += t.seconds;
             }
         }

@@ -10,26 +10,30 @@
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
 use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
-use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::nn::builder::{plan_from_config, NetConfig};
+use tbgemm::nn::NetPlanConfig;
 use tbgemm::runtime::XlaRuntime;
 use tbgemm::util::Rng;
 use std::time::Duration;
 
 fn main() {
-    // ---- native engine under the coordinator -------------------------
+    // ---- replica pool under the coordinator --------------------------
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
-    println!("starting coordinator over a TNN mobile CNN ({} params)", cfg.param_count());
-    let net = build_from_config(&cfg, 0xCAFE);
+    println!("starting coordinator over a TNN mobile CNN plan ({} params), 2 replicas", cfg.param_count());
+    let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("valid config");
     let server = InferenceServer::start(
-        Box::new(NativeEngine::new(net, "tnn-mobile")),
+        Box::new(NativeEngine::new(plan, "tnn-mobile")),
         BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
         256,
+        2,
     );
 
     let requests = 512usize;
     let mut rng = Rng::new(0x5E4E);
     let t0 = std::time::Instant::now();
-    let pending: Vec<_> = (0..requests).map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng))).collect();
+    let pending: Vec<_> = (0..requests)
+        .map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng)).expect("server up"))
+        .collect();
     let mut class_hist = [0usize; 10];
     for rx in pending {
         let resp = rx.recv().expect("response");
@@ -39,9 +43,10 @@ fn main() {
     let m = server.shutdown();
     println!("served {requests} requests in {:.2} s → {:.1} req/s", dt, requests as f64 / dt);
     println!(
-        "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs max={}µs",
-        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.max_latency_us
+        "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs p99={}µs max={}µs",
+        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.max_latency_us
     );
+    println!("per-replica requests: {:?}", m.replica_requests);
     println!("prediction histogram: {class_hist:?}");
     assert_eq!(m.requests as usize, requests, "no request lost");
 

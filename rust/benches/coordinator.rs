@@ -1,15 +1,39 @@
 //! Benchmark of the serving coordinator: throughput and latency vs batch
-//! size, plus the coordinator's overhead over bare engine calls (DESIGN.md
-//! §Perf target: <5% at batch 8).
+//! size, the coordinator's overhead over bare engine calls (DESIGN.md
+//! §Perf target: <5% at batch 8), and replica-pool scaling at a fixed
+//! batch size.
 //!
 //! Run: `cargo bench --bench coordinator`
 
+use std::time::Duration;
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
 use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
-use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::nn::builder::{plan_from_config, NetConfig};
+use tbgemm::nn::{NetOut, NetPlanConfig};
 use tbgemm::util::Rng;
-use std::time::Duration;
+
+fn serve(
+    requests: &[Tensor3<f32>],
+    max_batch: usize,
+    replicas: usize,
+) -> (f64, tbgemm::coordinator::MetricsSnapshot) {
+    let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
+    let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
+    let server = InferenceServer::start(
+        Box::new(NativeEngine::new(plan, "bench")),
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+        256,
+        replicas,
+    );
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = requests.iter().map(|img| server.submit(img.clone()).expect("server up")).collect();
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (dt, server.shutdown())
+}
 
 fn main() {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
@@ -17,30 +41,21 @@ fn main() {
     let mut rng = Rng::new(17);
     let images: Vec<Tensor3<f32>> = (0..requests).map(|_| Tensor3::random(28, 28, 1, &mut rng)).collect();
 
-    // Bare engine baseline (no coordinator).
-    let net = build_from_config(&cfg, 0xCAFE);
+    // Bare plan baseline (no coordinator).
+    let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
+    let mut scratch = plan.make_scratch();
+    let mut out = NetOut::new();
     let t0 = std::time::Instant::now();
     for img in &images {
-        std::hint::black_box(net.logits(img));
+        plan.run(img, &mut out, &mut scratch).expect("run");
+        std::hint::black_box(&out.logits);
     }
     let bare = t0.elapsed().as_secs_f64();
-    println!("bare engine:      {requests} images in {:.3} s ({:.1} img/s)", bare, requests as f64 / bare);
+    println!("bare plan:        {requests} images in {:.3} s ({:.1} img/s)", bare, requests as f64 / bare);
 
     let mut batch8_time = None;
     for max_batch in [1usize, 4, 8, 16] {
-        let net = build_from_config(&cfg, 0xCAFE);
-        let server = InferenceServer::start(
-            Box::new(NativeEngine::new(net, "bench")),
-            BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-            256,
-        );
-        let t0 = std::time::Instant::now();
-        let pending: Vec<_> = images.iter().map(|img| server.submit(img.clone())).collect();
-        for rx in pending {
-            rx.recv().unwrap();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let m = server.shutdown();
+        let (dt, m) = serve(&images, max_batch, 1);
         println!(
             "coordinator b={max_batch:>2}: {requests} images in {:.3} s ({:.1} img/s), mean batch {:.2}, p95 {} µs",
             dt,
@@ -54,5 +69,20 @@ fn main() {
     }
     let overhead = (batch8_time.unwrap() - bare) / bare * 100.0;
     println!("\ncoordinator overhead at batch 8: {overhead:.1}% (target < 5%, single-producer load)");
+
+    // Replica-pool scaling at batch 16 (the ROADMAP's batch-level
+    // parallelism item): same stream, growing pool.
+    println!("\nreplica pool at batch 16:");
+    for replicas in [1usize, 2, 4] {
+        let (dt, m) = serve(&images, 16, replicas);
+        println!(
+            "  replicas={replicas}: {:.3} s ({:.1} img/s), p50 {} µs, p99 {} µs, loads {:?}",
+            dt,
+            requests as f64 / dt,
+            m.p50_latency_us,
+            m.p99_latency_us,
+            m.replica_requests
+        );
+    }
     println!("coordinator OK");
 }

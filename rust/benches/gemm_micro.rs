@@ -115,14 +115,16 @@ fn main() {
         records.push(Record { kind, variant, m, n, k, ns_per_iter: t * 1e9 });
     };
 
-    // One config ladder per low-bit kind: rowdot → tiled → (wide4x4) →
-    // tiled_mt, all through the same plan entry point.
-    let ladders: [(&'static str, Kind, &MatI8, &MatI8, bool); 3] = [
-        ("BNN", Kind::Bnn, &ab, &bb, true),
-        ("TNN", Kind::Tnn, &at, &bt3, false),
-        ("TBN", Kind::Tbn, &at, &bb, false),
+    // One config ladder per low-bit kind: rowdot → tiled → (wide tile) →
+    // tiled_mt, all through the same plan entry point. The wide rungs are
+    // the widened register tiles: BNN 4×4 ("wide4x4") and TNN 2×4
+    // ("tnn_wide"); TBN has no wide tile yet.
+    let ladders: [(&'static str, Kind, &MatI8, &MatI8, Option<&'static str>); 3] = [
+        ("BNN", Kind::Bnn, &ab, &bb, Some("wide4x4")),
+        ("TNN", Kind::Tnn, &at, &bt3, Some("tnn_wide")),
+        ("TBN", Kind::Tbn, &at, &bb, None),
     ];
-    for (label, kind, a, b, has_wide) in ladders {
+    for (label, kind, a, b, wide_variant) in ladders {
         let rowdot = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Rowdot);
         let t_rd = bench_loop(0.4, 50, || {
             rowdot.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
@@ -135,13 +137,13 @@ fn main() {
         })
         .mean;
         report(label, "tiled", t, t_rd, 1);
-        if has_wide {
+        if let Some(variant) = wide_variant {
             let wide = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Wide);
             let t = bench_loop(0.4, 50, || {
                 wide.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
             })
             .mean;
-            report(label, "wide4x4", t, t_rd, 1);
+            report(label, variant, t, t_rd, 1);
         }
         let mt = lowbit_plan(kind, b, Threading::Auto, KPanel::Auto, Tile::Auto);
         let t = bench_loop(0.4, 50, || {

@@ -1,0 +1,129 @@
+//! Quickstart: the library's two public plan/execute boundaries in five
+//! minutes.
+//!
+//! Part 1 — the **GEMM boundary** (`GemmPlan`): multiply a ternary
+//! activation matrix by pre-packed ternary weights on all three backends
+//! — the scalar oracle, the emulated-NEON path (the paper's exact
+//! instruction sequences), and the native fast path — and check they
+//! agree. Same for binary and ternary-binary products.
+//!
+//! Part 2 — the **network boundary** (`NetPlan`): build a mobile-class
+//! ternary CNN plan (shapes and quantization domains verified once, at
+//! build), run a handful of images with zero steady-state allocation,
+//! check backend agreement end-to-end, and serve the same plan through
+//! the batching coordinator's replica pool.
+//!
+//! This example lives inside the `rust/` cargo package and is compiled
+//! and executed by CI (`cargo run --release --example quickstart`).
+
+use tbgemm::conv::conv2d::ConvKind;
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::gemm::{Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
+use tbgemm::nn::builder::{plan_from_config, NetConfig};
+use tbgemm::nn::{NetOut, NetPlanConfig};
+use tbgemm::util::mat::MatI8;
+use tbgemm::util::Rng;
+use std::time::Duration;
+
+/// Pack `b` once per backend, run `a · b`, and check all backends agree.
+fn verify(kind: Kind, a: &MatI8, b: &MatI8) {
+    let mut results: Vec<Vec<i32>> = Vec::new();
+    // Caller-owned output + scratch, reused across every run.
+    let mut out = GemmOut::new_i32();
+    let mut scratch = GemmScratch::new();
+    for backend in Backend::ALL {
+        // 1. Plan: pack the weights once, offline (the paper's PackedB).
+        let plan = GemmPlan::new(GemmConfig::new(kind, backend), Weights::I8(b))
+            .expect("valid weights for this kind");
+        // 2. Execute into the caller-owned buffers (typed errors, no
+        //    per-call allocation on the native hot path).
+        plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("matching LHS");
+        results.push(out.as_i32().expect("low-bit kinds produce i32").data.clone());
+    }
+    assert!(results.windows(2).all(|w| w[0] == w[1]));
+    println!(
+        "{:?} {}×{} · {}×{}: reference ≡ emulated ≡ native ✓",
+        kind, a.rows, a.cols, b.rows, b.cols
+    );
+}
+
+fn main() {
+    // ---- part 1: the GEMM boundary -----------------------------------
+    let mut rng = Rng::new(2022);
+    // A 72×256 ternary activation matrix times a 256×24 ternary weight
+    // matrix — one point of the paper's experimental grid.
+    let (m, k, n) = (72, 256, 24);
+
+    // TNN: ternary × ternary.
+    let a = MatI8::random_ternary(m, k, &mut rng);
+    let b = MatI8::random_ternary(k, n, &mut rng);
+    verify(Kind::Tnn, &a, &b);
+
+    // TBN: ternary activations × binary weights.
+    let bw = MatI8::random_binary(k, n, &mut rng);
+    verify(Kind::Tbn, &a, &bw);
+
+    // BNN: binary × binary.
+    let ab = MatI8::random_binary(m, k, &mut rng);
+    verify(Kind::Bnn, &ab, &bw);
+
+    // ---- part 2: the network boundary --------------------------------
+    let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
+    // 1. Plan: realize the config (weights packed once per layer) and
+    //    statically verify every shape and domain handoff.
+    let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default())
+        .expect("built-in config is a valid chain");
+    // 2. Execute into caller-owned output + scratch: zero heap
+    //    allocation after warm-up, typed NetError instead of panics.
+    let mut scratch = plan.make_scratch();
+    let mut out = NetOut::new();
+    let mut hist = [0usize; 10];
+    let images: Vec<Tensor3<f32>> = (0..16).map(|_| Tensor3::random(28, 28, 1, &mut rng)).collect();
+    for img in &images {
+        plan.run(img, &mut out, &mut scratch).expect("plan-shaped image");
+        hist[out.predicted()] += 1;
+    }
+    println!("NetPlan {:?} → {} logits; prediction histogram {hist:?}", plan.input_dims(), plan.out_features());
+
+    // Whole-network backend differential: the reference-backend plan
+    // produces bit-identical logits (integer GEMMs, same f32 epilogues).
+    let oracle = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default().with_backend(Backend::Reference))
+        .expect("plan");
+    let mut oracle_scratch = oracle.make_scratch();
+    let mut oracle_out = NetOut::new();
+    oracle.run(&images[0], &mut oracle_out, &mut oracle_scratch).expect("run");
+    plan.run(&images[0], &mut out, &mut scratch).expect("run");
+    assert_eq!(out.logits, oracle_out.logits);
+    println!("NetPlan native ≡ reference logits ✓");
+
+    // 3. Serve: the same plan behind the batching coordinator, batches
+    //    split across 2 engine replicas sharing the packed weights.
+    let served = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
+    let server = InferenceServer::start(
+        Box::new(NativeEngine::new(served, "quickstart")),
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        64,
+        2,
+    );
+    let pending: Vec<_> =
+        images.iter().map(|img| server.submit(img.clone()).expect("server up")).collect();
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx.recv().expect("response");
+        // Served logits are bit-identical to the local plan runs.
+        plan.run(img, &mut out, &mut scratch).expect("run");
+        assert_eq!(resp.logits, out.logits);
+    }
+    let metrics = server.shutdown();
+    println!(
+        "served {} requests over {} replicas (loads {:?}) ✓",
+        metrics.requests,
+        metrics.replica_requests.len(),
+        metrics.replica_requests
+    );
+
+    println!("\nBoth plan/execute boundaries verified. Next steps:");
+    println!("  repro table2                      # regenerate the paper's Table II");
+    println!("  repro table3 --smoke              # a quick Table III run");
+    println!("  repro serve --requests 256 --replicas 4");
+}

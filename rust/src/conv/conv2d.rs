@@ -5,7 +5,8 @@
 use crate::conv::im2col::im2col_into;
 use crate::conv::tensor::Tensor3;
 use crate::gemm::{
-    GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Tile, Weights,
+    Backend, GemmConfig, GemmError, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Tile,
+    Weights,
 };
 use crate::util::mat::{MatI32, MatI8};
 
@@ -105,6 +106,12 @@ impl ConvScratch {
     pub fn new() -> Self {
         ConvScratch { a: MatI8::zeros(0, 0), gemm: GemmScratch::new() }
     }
+
+    /// Pre-grow the im2col buffer to `elems` elements (the plan-build
+    /// warm-up; steady-state forwards then never reallocate it).
+    pub(crate) fn reserve(&mut self, elems: usize) {
+        self.a.data.reserve(elems.saturating_sub(self.a.data.len()));
+    }
 }
 
 impl Default for ConvScratch {
@@ -122,8 +129,14 @@ pub struct LowBitConv {
     pub params: ConvParams,
     pub c_in: usize,
     pub c_out: usize,
-    /// The built-once multiplication plan (native backend).
+    /// The built-once multiplication plan.
     plan: GemmPlan,
+    /// The quantized weights, retained so [`LowBitConv::configure`] can
+    /// rebuild the plan on another backend without the original matrix.
+    /// Deliberate memory trade-off: the raw i8 copy (~1 byte/weight, a
+    /// few hundred KB for the mobile CNN) buys whole-network backend
+    /// differentials as a one-flag config change.
+    weights: MatI8,
 }
 
 impl LowBitConv {
@@ -134,7 +147,28 @@ impl LowBitConv {
         let c_out = weights.cols;
         let plan = GemmPlan::new(GemmConfig::native(kind.gemm_kind()), Weights::I8(weights))
             .unwrap_or_else(|e| panic!("{kind:?} conv weights rejected: {e}"));
-        LowBitConv { kind, params, c_in, c_out, plan }
+        LowBitConv { kind, params, c_in, c_out, plan, weights: weights.clone() }
+    }
+
+    /// Apply a full execution config. Threading / K-panel / tile land on
+    /// the existing plan without repacking; a backend change rebuilds the
+    /// plan from the retained weights (packing once for the new backend).
+    pub fn configure(
+        &mut self,
+        backend: Backend,
+        threading: Threading,
+        k_panel: KPanel,
+        tile: Tile,
+    ) -> Result<(), GemmError> {
+        if backend == self.plan.backend() {
+            self.plan.set_threading(threading);
+            self.plan.set_k_panel(k_panel);
+            self.plan.set_tile(tile);
+        } else {
+            let config = GemmConfig { kind: self.kind.gemm_kind(), backend, threading, k_panel, tile };
+            self.plan = GemmPlan::new(config, Weights::I8(&self.weights))?;
+        }
+        Ok(())
     }
 
     /// Builder-style threading override.
@@ -161,20 +195,30 @@ impl LowBitConv {
     }
 
     /// Run the convolution. Binary activations pad with `+1`, ternary
-    /// with `0`. Allocates fresh scratch; hot callers should hold a
+    /// with `0`. Allocates fresh scratch and panics on a malformed input
+    /// (a convenience wrapper for tests and benches); hot callers hold a
     /// [`ConvScratch`] + output tensor and use [`LowBitConv::forward_into`].
     pub fn forward(&self, input: &Tensor3<i8>) -> Tensor3<i32> {
         let mut scratch = ConvScratch::new();
         let mut out = Tensor3::zeros(0, 0, 0);
-        self.forward_into(input, &mut scratch, &mut out);
+        self.forward_into(input, &mut scratch, &mut out)
+            .unwrap_or_else(|e| panic!("LowBitConv::forward: {e}"));
         out
     }
 
     /// Run the convolution into caller-owned scratch and output storage.
     /// `out` is resized to `oh × ow × c_out`; in steady state (same or
     /// smaller shape as a previous call) no heap allocation occurs.
-    pub fn forward_into(&self, input: &Tensor3<i8>, scratch: &mut ConvScratch, out: &mut Tensor3<i32>) {
-        assert_eq!(input.c, self.c_in);
+    ///
+    /// A channel-count mismatch surfaces as the plan's typed
+    /// [`GemmError::DepthMismatch`] (the im2col depth no longer matches
+    /// the packed weights); nothing on this path panics.
+    pub fn forward_into(
+        &self,
+        input: &Tensor3<i8>,
+        scratch: &mut ConvScratch,
+        out: &mut Tensor3<i32>,
+    ) -> Result<(), GemmError> {
         let (oh, ow) = self.params.out_dims(input.h, input.w);
         let pad_value = match self.kind {
             ConvKind::Bnn => 1i8,
@@ -192,13 +236,11 @@ impl LowBitConv {
         // the output tensor's storage (moved into the GemmOut wrapper and
         // back; the plan sizes it in place).
         let mut c = GemmOut::I32(MatI32 { rows: 0, cols: 0, data: std::mem::take(&mut out.data) });
-        self.plan
-            .run(Lhs::I8(&scratch.a), &mut c, &mut scratch.gemm)
-            .unwrap_or_else(|e| panic!("conv GEMM plan invariant violated: {e}"));
-        match c {
-            GemmOut::I32(m) => out.data = m.data,
-            GemmOut::F32(_) => unreachable!("conv kinds produce i32 output"),
+        let run = self.plan.run(Lhs::I8(&scratch.a), &mut c, &mut scratch.gemm);
+        if let GemmOut::I32(m) = c {
+            out.data = m.data;
         }
+        run
     }
 }
 
@@ -271,10 +313,10 @@ mod tests {
             };
             let mut scratch = ConvScratch::new();
             let mut out = Tensor3::zeros(0, 0, 0);
-            conv.forward_into(&input, &mut scratch, &mut out);
+            conv.forward_into(&input, &mut scratch, &mut out).expect("conv");
             assert_eq!(out.data, conv.forward(&input).data, "{kind:?}");
             let (a_ptr, out_ptr) = (scratch.a.data.as_ptr(), out.data.as_ptr());
-            conv.forward_into(&input, &mut scratch, &mut out);
+            conv.forward_into(&input, &mut scratch, &mut out).expect("conv");
             assert_eq!(scratch.a.data.as_ptr(), a_ptr, "{kind:?}: scratch reallocated");
             assert_eq!(out.data.as_ptr(), out_ptr, "{kind:?}: output reallocated");
             assert_eq!(out.data, conv.forward(&input).data, "{kind:?} second pass");

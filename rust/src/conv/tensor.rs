@@ -43,6 +43,18 @@ impl<T: Copy + Default> Tensor3<T> {
     pub fn pixels(&self) -> usize {
         self.h * self.w
     }
+
+    /// Resize in place to `h × w × c`, zero-filled, reusing the existing
+    /// allocation: once capacity has grown to the largest shape a caller
+    /// uses, no further heap allocation occurs (the arena contract of
+    /// [`crate::nn::NetScratch`]).
+    pub fn resize_to(&mut self, h: usize, w: usize, c: usize) {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.clear();
+        self.data.resize(h * w * c, T::default());
+    }
 }
 
 impl Tensor3<i8> {

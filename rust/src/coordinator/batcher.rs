@@ -1,4 +1,11 @@
 //! Dynamic batching policy.
+//!
+//! The batcher only *groups* requests; how a batch is then executed is
+//! the worker's business — since the replica-pool redesign it is split
+//! into contiguous per-replica chunks by
+//! [`crate::coordinator::engine::EnginePool::infer_batch`], so a larger
+//! `max_batch` directly widens the batch-level parallelism available to
+//! the pool.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

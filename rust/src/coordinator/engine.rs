@@ -1,74 +1,180 @@
-//! Inference engines the coordinator can drive.
+//! Inference engines the coordinator can drive, and the replica pool
+//! that fans a dynamic batch out across them.
 
 use crate::conv::tensor::Tensor3;
-use crate::nn::layers::NetScratch;
-use crate::nn::network::Network;
-use std::cell::RefCell;
+use crate::nn::plan::{NetOut, NetPlan};
+use crate::nn::NetScratch;
+use std::sync::Arc;
 
-/// A batched inference engine. Implementations must be `Send` so the
-/// worker thread can own them.
+/// A batched inference engine. Implementations must be `Send` so worker
+/// and replica threads can own them; `infer_batch` takes `&mut self` so
+/// each engine can hold plain (lock-free) scratch state.
 pub trait InferenceEngine: Send {
     /// Classify a batch of images; returns one logit vector per image.
-    fn infer_batch(&self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>>;
+    fn infer_batch(&mut self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>>;
 
     /// Expected input dims.
     fn input_dims(&self) -> (usize, usize, usize);
 
     fn name(&self) -> String;
+
+    /// Clone this engine for the replica pool: replicas share the
+    /// immutable packed plan (weights are packed exactly once, however
+    /// many replicas serve them) and own fresh per-replica scratch.
+    fn replicate(&self) -> Box<dyn InferenceEngine>;
 }
 
-/// The native low-bit engine: the paper's kernels under a [`Network`]
-/// of built-once [`crate::gemm::GemmPlan`]s. Holds a per-engine
-/// [`NetScratch`] arena (conv + dense arenas over the unified
-/// [`crate::gemm::GemmScratch`]) reused across requests and batches, so
-/// steady-state inference performs no heap allocation on the GEMM paths
-/// (the worker thread owns the engine, so the `RefCell` is never
-/// contended).
+/// The native low-bit engine: a thin **plan + scratch holder** — an
+/// `Arc`-shared built-once [`NetPlan`] (the paper's kernels behind the
+/// network-level plan/execute boundary) plus this replica's private
+/// [`NetScratch`] / [`NetOut`], reused across requests and batches so
+/// steady-state inference performs no heap allocation on the network
+/// path.
 pub struct NativeEngine {
-    pub network: Network,
-    pub label: String,
-    scratch: RefCell<NetScratch>,
+    plan: Arc<NetPlan>,
+    label: String,
+    scratch: NetScratch,
+    out: NetOut,
 }
 
 impl NativeEngine {
-    pub fn new(network: Network, label: impl Into<String>) -> Self {
-        NativeEngine { network, label: label.into(), scratch: RefCell::new(NetScratch::new()) }
+    /// Wrap a built plan (the common single-engine entry point).
+    pub fn new(plan: NetPlan, label: impl Into<String>) -> Self {
+        Self::shared(Arc::new(plan), label)
     }
 
-    /// Run every conv GEMM under this threading config. Intra-op
-    /// parallelism composes with the coordinator's batching: the worker
-    /// thread fans each convolution out over row bands.
-    pub fn with_threading(mut self, threading: crate::gemm::Threading) -> Self {
-        self.network.set_threading(threading);
-        self
+    /// Wrap an already-shared plan (replicas of one pool).
+    pub fn shared(plan: Arc<NetPlan>, label: impl Into<String>) -> Self {
+        let scratch = plan.make_scratch();
+        NativeEngine { plan, label: label.into(), scratch, out: NetOut::new() }
+    }
+
+    /// The underlying network plan.
+    pub fn plan(&self) -> &NetPlan {
+        &self.plan
     }
 }
 
 impl InferenceEngine for NativeEngine {
-    fn infer_batch(&self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
-        let scratch = &mut *self.scratch.borrow_mut();
-        images.iter().map(|img| self.network.logits_with(img, scratch)).collect()
+    fn infer_batch(&mut self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
+        images
+            .iter()
+            .map(|img| match self.plan.run(img, &mut self.out, &mut self.scratch) {
+                Ok(()) => self.out.logits.clone(),
+                // A mis-shaped image (the one per-call NetError a caller
+                // can cause) yields empty logits instead of killing the
+                // worker; the serving CLI and tests always submit
+                // plan-shaped images.
+                Err(_) => Vec::new(),
+            })
+            .collect()
     }
 
     fn input_dims(&self) -> (usize, usize, usize) {
-        self.network.input_dims
+        self.plan.input_dims()
     }
 
     fn name(&self) -> String {
         self.label.clone()
+    }
+
+    fn replicate(&self) -> Box<dyn InferenceEngine> {
+        Box::new(NativeEngine::shared(Arc::clone(&self.plan), self.label.clone()))
+    }
+}
+
+/// A pool of engine replicas serving one model: replica 0 is the engine
+/// the pool was built from, the rest are [`InferenceEngine::replicate`]
+/// clones sharing its packed weights. [`EnginePool::infer_batch`] splits
+/// each dynamic batch into contiguous per-replica chunks and runs them
+/// on scoped threads — **batch-level** parallelism composing with the
+/// per-GEMM row-band [`crate::gemm::Threading`] inside each replica.
+/// Chunking preserves request order and every image is computed by the
+/// same plan, so logits are bit-identical for any replica count.
+pub struct EnginePool {
+    engines: Vec<Box<dyn InferenceEngine>>,
+}
+
+impl EnginePool {
+    /// Build a pool of `replicas` engines (clamped to ≥ 1) from one
+    /// prototype engine.
+    pub fn new(engine: Box<dyn InferenceEngine>, replicas: usize) -> Self {
+        let mut engines = Vec::with_capacity(replicas.max(1));
+        for _ in 1..replicas.max(1) {
+            engines.push(engine.replicate());
+        }
+        engines.insert(0, engine);
+        EnginePool { engines }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        self.engines[0].input_dims()
+    }
+
+    pub fn name(&self) -> String {
+        self.engines[0].name()
+    }
+
+    /// Run a batch split across the replicas. Returns the outputs in
+    /// request order plus the per-replica request counts (for
+    /// [`crate::coordinator::metrics::Metrics`]). A single chunk runs
+    /// inline on replica 0 — no thread is spawned for work one engine
+    /// would serve anyway.
+    pub fn infer_batch(&mut self, images: &[Tensor3<f32>]) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let replicas = self.engines.len();
+        let mut loads = vec![0usize; replicas];
+        if images.is_empty() {
+            return (Vec::new(), loads);
+        }
+        let chunk_len = images.len().div_ceil(replicas);
+        if images.len() <= chunk_len {
+            loads[0] = images.len();
+            return (self.engines[0].infer_batch(images), loads);
+        }
+        let chunk_sizes: Vec<usize> = images.chunks(chunk_len).map(|c| c.len()).collect();
+        let chunk_results: Vec<Vec<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = images
+                .chunks(chunk_len)
+                .zip(self.engines.iter_mut())
+                .map(|(chunk, engine)| scope.spawn(move || engine.infer_batch(chunk)))
+                .collect();
+            // A panicked replica contributes a chunk of *empty* logits of
+            // its full assigned length, so downstream request/response
+            // pairing stays aligned: only that replica's callers see
+            // empty logits, never another request's results.
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(i, h)| h.join().unwrap_or_else(|_| vec![Vec::new(); chunk_sizes[i]]))
+                .collect()
+        });
+        let mut outputs = Vec::with_capacity(images.len());
+        for (i, chunk) in chunk_results.into_iter().enumerate() {
+            loads[i] = chunk.len();
+            outputs.extend(chunk);
+        }
+        (outputs, loads)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::builder::{build_from_config, NetConfig};
+    use crate::nn::builder::{plan_from_config, NetConfig};
+    use crate::nn::NetPlanConfig;
     use crate::util::Rng;
+
+    fn tiny_plan(seed: u64) -> NetPlan {
+        plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), seed, NetPlanConfig::default()).expect("plan")
+    }
 
     #[test]
     fn native_engine_batches() {
-        let net = build_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 1);
-        let engine = NativeEngine::new(net, "tnn-tiny");
+        let mut engine = NativeEngine::new(tiny_plan(1), "tnn-tiny");
         let mut rng = Rng::new(2);
         let images: Vec<_> = (0..4).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
         let out = engine.infer_batch(&images);
@@ -80,12 +186,99 @@ mod tests {
     /// A threaded engine produces the same logits as a single-threaded one.
     #[test]
     fn threaded_engine_matches_single() {
-        use crate::gemm::native::Threading;
+        use crate::gemm::Threading;
         let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
-        let single = NativeEngine::new(build_from_config(&cfg, 1), "single");
-        let threaded = NativeEngine::new(build_from_config(&cfg, 1), "mt").with_threading(Threading::Fixed(4));
+        let mut single = NativeEngine::new(
+            plan_from_config(&cfg, 1, NetPlanConfig::default()).expect("plan"),
+            "single",
+        );
+        let mut threaded = NativeEngine::new(
+            plan_from_config(&cfg, 1, NetPlanConfig::default().with_threading(Threading::Fixed(4)))
+                .expect("plan"),
+            "mt",
+        );
         let mut rng = Rng::new(3);
         let images: Vec<_> = (0..3).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
         assert_eq!(single.infer_batch(&images), threaded.infer_batch(&images));
+    }
+
+    /// Pool outputs are bit-identical across replica counts, stay in
+    /// request order, and the per-replica loads account for every image.
+    #[test]
+    fn pool_is_replica_count_invariant() {
+        let mut rng = Rng::new(4);
+        let images: Vec<_> = (0..11).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+        let mut pool1 = EnginePool::new(Box::new(NativeEngine::new(tiny_plan(9), "p1")), 1);
+        let (want, loads1) = pool1.infer_batch(&images);
+        assert_eq!(loads1, vec![11]);
+        for replicas in [2usize, 3, 4, 8] {
+            let mut pool = EnginePool::new(Box::new(NativeEngine::new(tiny_plan(9), "pN")), replicas);
+            assert_eq!(pool.replicas(), replicas);
+            let (got, loads) = pool.infer_batch(&images);
+            assert_eq!(got, want, "replicas={replicas}");
+            assert_eq!(loads.len(), replicas);
+            assert_eq!(loads.iter().sum::<usize>(), images.len(), "replicas={replicas}");
+        }
+    }
+
+    /// A mis-shaped image yields empty logits, not a panic.
+    #[test]
+    fn mis_shaped_image_yields_empty_logits() {
+        let mut engine = NativeEngine::new(tiny_plan(5), "shape");
+        let mut rng = Rng::new(6);
+        let out = engine.infer_batch(&[Tensor3::random(9, 9, 1, &mut rng)]);
+        assert_eq!(out, vec![Vec::<f32>::new()]);
+    }
+
+    /// A panicking replica must not shift other requests' results: its
+    /// chunk degrades to empty logits of the right length, and the
+    /// healthy replica's outputs stay paired with their own images.
+    #[test]
+    fn panicked_replica_keeps_outputs_aligned() {
+        struct HealthyThenPanicking(NativeEngine);
+        impl InferenceEngine for HealthyThenPanicking {
+            fn infer_batch(&mut self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
+                self.0.infer_batch(images)
+            }
+            fn input_dims(&self) -> (usize, usize, usize) {
+                self.0.input_dims()
+            }
+            fn name(&self) -> String {
+                self.0.name()
+            }
+            fn replicate(&self) -> Box<dyn InferenceEngine> {
+                struct Panicking;
+                impl InferenceEngine for Panicking {
+                    fn infer_batch(&mut self, _images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
+                        panic!("replica crashed (test)");
+                    }
+                    fn input_dims(&self) -> (usize, usize, usize) {
+                        (8, 8, 1)
+                    }
+                    fn name(&self) -> String {
+                        "panicking".into()
+                    }
+                    fn replicate(&self) -> Box<dyn InferenceEngine> {
+                        Box::new(Panicking)
+                    }
+                }
+                Box::new(Panicking)
+            }
+        }
+
+        let mut rng = Rng::new(7);
+        let images: Vec<_> = (0..4).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+        let mut healthy = NativeEngine::new(tiny_plan(9), "h");
+        let want = healthy.infer_batch(&images);
+        // Replica 0 healthy, replica 1 panics: chunks of 2 images each.
+        let mut pool =
+            EnginePool::new(Box::new(HealthyThenPanicking(NativeEngine::new(tiny_plan(9), "h"))), 2);
+        let (got, loads) = pool.infer_batch(&images);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0], want[0]);
+        assert_eq!(got[1], want[1]);
+        assert_eq!(got[2], Vec::<f32>::new());
+        assert_eq!(got[3], Vec::<f32>::new());
+        assert_eq!(loads, vec![2, 2]);
     }
 }

@@ -1,5 +1,7 @@
-//! Serving metrics: request counts, latency quantiles, batch-size stats.
+//! Serving metrics: request counts, latency quantiles, batch-size
+//! histogram, and per-replica load counters.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Shared metrics accumulator (worker writes, callers snapshot).
@@ -14,6 +16,8 @@ struct Inner {
     batches: u64,
     batch_size_sum: u64,
     latencies_us: Vec<u64>,
+    batch_size_hist: BTreeMap<usize, u64>,
+    replica_requests: Vec<u64>,
 }
 
 /// A point-in-time copy of the metrics.
@@ -24,7 +28,12 @@ pub struct MetricsSnapshot {
     pub mean_batch_size: f64,
     pub p50_latency_us: u64,
     pub p95_latency_us: u64,
+    pub p99_latency_us: u64,
     pub max_latency_us: u64,
+    /// Executed-batch-size histogram: `(batch_size, batches)` ascending.
+    pub batch_size_hist: Vec<(usize, u64)>,
+    /// Requests served by each engine replica (index = replica id).
+    pub replica_requests: Vec<u64>,
 }
 
 impl Metrics {
@@ -32,14 +41,21 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record one executed batch and the end-to-end latency of each of
-    /// its requests (µs).
-    pub fn record_batch(&self, latencies_us: &[u64]) {
+    /// Record one executed batch: the end-to-end latency of each of its
+    /// requests (µs) and how many of them each replica served.
+    pub fn record_batch(&self, latencies_us: &[u64], replica_loads: &[usize]) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.requests += latencies_us.len() as u64;
         m.batch_size_sum += latencies_us.len() as u64;
         m.latencies_us.extend_from_slice(latencies_us);
+        *m.batch_size_hist.entry(latencies_us.len()).or_insert(0) += 1;
+        if m.replica_requests.len() < replica_loads.len() {
+            m.replica_requests.resize(replica_loads.len(), 0);
+        }
+        for (i, &load) in replica_loads.iter().enumerate() {
+            m.replica_requests[i] += load as u64;
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -59,7 +75,10 @@ impl Metrics {
             mean_batch_size: if m.batches > 0 { m.batch_size_sum as f64 / m.batches as f64 } else { 0.0 },
             p50_latency_us: q(0.5),
             p95_latency_us: q(0.95),
+            p99_latency_us: q(0.99),
             max_latency_us: lat.last().copied().unwrap_or(0),
+            batch_size_hist: m.batch_size_hist.iter().map(|(&s, &n)| (s, n)).collect(),
+            replica_requests: m.replica_requests.clone(),
         }
     }
 }
@@ -71,14 +90,37 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_batch(&[100, 200, 300]);
-        m.record_batch(&[400]);
+        m.record_batch(&[100, 200, 300], &[2, 1]);
+        m.record_batch(&[400], &[1, 0]);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
         assert_eq!(s.max_latency_us, 400);
         assert!(s.p50_latency_us >= 100 && s.p50_latency_us <= 300);
+        assert!(s.p95_latency_us <= s.p99_latency_us && s.p99_latency_us <= s.max_latency_us);
+    }
+
+    #[test]
+    fn batch_size_histogram_counts_batches() {
+        let m = Metrics::new();
+        m.record_batch(&[1, 2, 3], &[3]);
+        m.record_batch(&[4, 5, 6], &[3]);
+        m.record_batch(&[7], &[1]);
+        let s = m.snapshot();
+        assert_eq!(s.batch_size_hist, vec![(1, 1), (3, 2)]);
+    }
+
+    #[test]
+    fn replica_counters_accumulate_per_index() {
+        let m = Metrics::new();
+        m.record_batch(&[10, 20, 30, 40], &[2, 2]);
+        m.record_batch(&[50, 60, 70], &[2, 1]);
+        // A later batch may report more replicas (pool resized counters).
+        m.record_batch(&[80], &[0, 0, 1]);
+        let s = m.snapshot();
+        assert_eq!(s.replica_requests, vec![4, 3, 1]);
+        assert_eq!(s.replica_requests.iter().sum::<u64>(), s.requests);
     }
 
     #[test]
@@ -86,5 +128,8 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p95_latency_us, 0);
+        assert_eq!(s.p99_latency_us, 0);
+        assert!(s.batch_size_hist.is_empty());
+        assert!(s.replica_requests.is_empty());
     }
 }

@@ -1,17 +1,20 @@
-//! The serving coordinator: a batching inference server over the QNN
-//! engine (or an XLA-compiled model), in the style of production model
-//! routers.
+//! The serving coordinator: a batching inference server over a pool of
+//! QNN engine replicas, in the style of production model routers.
 //!
 //! The paper motivates its kernels with "recognition on mobile devices";
 //! this module is the deployment harness around them: requests enter a
 //! bounded queue, a dynamic batcher groups them (up to `max_batch`,
 //! waiting at most `max_wait` after the first request), a worker thread
-//! executes the batch on an [`engine::InferenceEngine`], and latency /
-//! throughput metrics are recorded.
+//! splits each batch across the [`engine::EnginePool`]'s replicas —
+//! thin [`crate::nn::NetPlan`] + scratch holders sharing one set of
+//! packed weights — and latency / throughput / per-replica metrics are
+//! recorded. Replica-level batch parallelism composes with the per-GEMM
+//! row-band [`crate::gemm::Threading`] inside each plan.
 //!
 //! Everything is std-only (threads + channels): the build environment has
 //! no async runtime, and a CPU inference server at this scale is
-//! well-served by a worker thread per engine.
+//! well-served by one worker thread fanning out to scoped replica
+//! threads.
 
 pub mod batcher;
 pub mod engine;
@@ -19,6 +22,6 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::BatcherConfig;
-pub use engine::{InferenceEngine, NativeEngine};
+pub use engine::{EnginePool, InferenceEngine, NativeEngine};
 pub use metrics::MetricsSnapshot;
-pub use server::{InferenceServer, Request, Response};
+pub use server::{InferenceServer, Request, Response, ServerClosed};

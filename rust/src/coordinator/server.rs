@@ -1,9 +1,17 @@
 //! The inference server: bounded submission queue → dynamic batcher →
-//! worker thread → per-request response channels.
+//! worker thread → replica pool → per-request response channels.
+//!
+//! The worker owns an [`EnginePool`]: each dynamic batch is split into
+//! contiguous per-replica chunks executed on scoped threads (batch-level
+//! parallelism), composing with the per-GEMM row-band threading inside
+//! each replica's plan. Submission is fully typed: [`InferenceServer::submit`]
+//! returns [`ServerClosed`] instead of panicking when the worker has
+//! stopped (shutdown or a died engine), and shutdown drains every
+//! pending request before joining.
 
 use crate::conv::tensor::Tensor3;
 use crate::coordinator::batcher::{next_batch, BatcherConfig};
-use crate::coordinator::engine::InferenceEngine;
+use crate::coordinator::engine::{EnginePool, InferenceEngine};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -19,7 +27,7 @@ pub struct Request {
 }
 
 /// A classification response.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub logits: Vec<f32>,
@@ -29,7 +37,20 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// A running inference server (one worker thread).
+/// The server's queue is closed: the worker has shut down or died (e.g.
+/// an engine panic), so no further responses will ever be produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerClosed;
+
+impl std::fmt::Display for ServerClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inference server is closed (worker stopped)")
+    }
+}
+
+impl std::error::Error for ServerClosed {}
+
+/// A running inference server (one worker thread over a replica pool).
 pub struct InferenceServer {
     tx: Option<SyncSender<Request>>,
     worker: Option<JoinHandle<()>>,
@@ -38,39 +59,54 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the server over `engine`. `queue_depth` bounds the
+    /// Start the server over `replicas` copies of `engine` (clamped to
+    /// ≥ 1; replicas share the engine's packed plan via
+    /// [`InferenceEngine::replicate`]). `queue_depth` bounds the
     /// submission queue (backpressure: submit blocks when full).
-    pub fn start(engine: Box<dyn InferenceEngine>, cfg: BatcherConfig, queue_depth: usize) -> Self {
+    pub fn start(
+        engine: Box<dyn InferenceEngine>,
+        cfg: BatcherConfig,
+        queue_depth: usize,
+        replicas: usize,
+    ) -> Self {
+        let pool = EnginePool::new(engine, replicas);
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_depth);
         let metrics = Arc::new(Metrics::new());
         let worker_metrics = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
             .name("tbgemm-worker".into())
-            .spawn(move || worker_loop(rx, engine, cfg, worker_metrics))
+            .spawn(move || worker_loop(rx, pool, cfg, worker_metrics))
             .expect("spawning worker");
         InferenceServer { tx: Some(tx), worker: Some(worker), metrics, next_id: 0.into() }
     }
 
-    /// Submit an image; returns the receiver for its response. Blocks if
-    /// the queue is full (backpressure).
-    pub fn submit(&self, image: Tensor3<f32>) -> Receiver<Response> {
+    /// Submit an image; returns the receiver for its response, or
+    /// [`ServerClosed`] when the worker is gone (never panics). Blocks
+    /// while the queue is full (backpressure).
+    pub fn submit(&self, image: Tensor3<f32>) -> Result<Receiver<Response>, ServerClosed> {
         let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let req = Request { id, image, submitted: Instant::now(), reply };
-        self.tx.as_ref().expect("server running").send(req).expect("worker alive");
-        rx
+        match self.tx.as_ref() {
+            Some(tx) => tx.send(req).map_err(|_| ServerClosed)?,
+            None => return Err(ServerClosed),
+        }
+        Ok(rx)
     }
 
-    /// Submit and wait for the response.
-    pub fn infer(&self, image: Tensor3<f32>) -> Response {
-        self.submit(image).recv().expect("worker replies")
+    /// Submit and wait for the response. [`ServerClosed`] also covers a
+    /// worker that died after accepting the request (dropped reply).
+    pub fn infer(&self, image: Tensor3<f32>) -> Result<Response, ServerClosed> {
+        self.submit(image)?.recv().map_err(|_| ServerClosed)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
-    /// Drain and stop the worker.
+    /// Drain and stop the worker: the queue closes, the worker serves
+    /// every already-submitted request (mid-batch shutdown included),
+    /// then exits and is joined.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.tx.take(); // close the channel; worker drains and exits
         if let Some(w) = self.worker.take() {
@@ -89,26 +125,29 @@ impl Drop for InferenceServer {
     }
 }
 
-fn worker_loop(rx: Receiver<Request>, engine: Box<dyn InferenceEngine>, cfg: BatcherConfig, metrics: Arc<Metrics>) {
+fn worker_loop(rx: Receiver<Request>, mut pool: EnginePool, cfg: BatcherConfig, metrics: Arc<Metrics>) {
     while let Some(batch) = next_batch(&rx, &cfg) {
         let images: Vec<Tensor3<f32>> = batch.iter().map(|r| r.image.clone()).collect();
-        let outputs = engine.infer_batch(&images);
-        debug_assert_eq!(outputs.len(), batch.len());
+        let (outputs, replica_loads) = pool.infer_batch(&images);
         let mut latencies = Vec::with_capacity(batch.len());
         let bsize = batch.len();
+        // The pool keeps `outputs` aligned with `images` even when a
+        // replica dies (its chunk degrades to empty logits), so this zip
+        // never mispairs; a panic on the single-replica inline path
+        // kills the worker instead, surfacing as `ServerClosed`.
         for (req, logits) in batch.into_iter().zip(outputs) {
             let latency_us = req.submitted.elapsed().as_micros() as u64;
             latencies.push(latency_us);
             let predicted = logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
             // Receiver may have been dropped (caller gave up): ignore.
             let _ = req.reply.send(Response { id: req.id, logits, predicted, latency_us, batch_size: bsize });
         }
-        metrics.record_batch(&latencies);
+        metrics.record_batch(&latencies, &replica_loads);
     }
 }
 
@@ -116,26 +155,29 @@ fn worker_loop(rx: Receiver<Request>, engine: Box<dyn InferenceEngine>, cfg: Bat
 mod tests {
     use super::*;
     use crate::coordinator::engine::NativeEngine;
-    use crate::nn::builder::{build_from_config, NetConfig};
+    use crate::nn::builder::{plan_from_config, NetConfig};
+    use crate::nn::NetPlanConfig;
     use crate::util::proptest::{check, Config};
     use crate::util::Rng;
     use std::time::Duration;
 
-    fn tiny_server(max_batch: usize) -> InferenceServer {
-        let net = build_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 11);
-        let engine = Box::new(NativeEngine::new(net, "test"));
+    fn tiny_server(max_batch: usize, replicas: usize) -> InferenceServer {
+        let plan =
+            plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 11, NetPlanConfig::default()).expect("plan");
+        let engine = Box::new(NativeEngine::new(plan, "test"));
         InferenceServer::start(
             engine,
             BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
             64,
+            replicas,
         )
     }
 
     #[test]
     fn single_request_roundtrip() {
-        let server = tiny_server(4);
+        let server = tiny_server(4, 1);
         let mut rng = Rng::new(1);
-        let resp = server.infer(Tensor3::random(8, 8, 1, &mut rng));
+        let resp = server.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
         assert_eq!(resp.logits.len(), 3);
         assert!(resp.predicted < 3);
         let m = server.shutdown();
@@ -143,17 +185,18 @@ mod tests {
     }
 
     /// Property: every submitted request receives exactly one response
-    /// with its own id, regardless of batch boundaries.
+    /// with its own id, regardless of batch boundaries and replica count.
     #[test]
     fn every_request_answered_exactly_once() {
         check(Config { cases: 6, base_seed: 0xF0 }, "requests answered", |rng| {
             let n = 1 + rng.below(24);
             let max_batch = 1 + rng.below(8);
-            let server = tiny_server(max_batch);
+            let replicas = 1 + rng.below(4);
+            let server = tiny_server(max_batch, replicas);
             let mut pending = Vec::new();
             for _ in 0..n {
                 let img = Tensor3::random(8, 8, 1, rng);
-                pending.push(server.submit(img));
+                pending.push(server.submit(img).expect("server up"));
             }
             let mut ids: Vec<u64> = pending.iter().map(|rx| rx.recv().expect("response").id).collect();
             ids.sort_unstable();
@@ -161,6 +204,7 @@ mod tests {
             assert_eq!(ids.len(), n, "each id exactly once");
             let m = server.shutdown();
             assert_eq!(m.requests, n as u64);
+            assert_eq!(m.replica_requests.iter().sum::<u64>(), n as u64);
         });
     }
 
@@ -170,11 +214,11 @@ mod tests {
     fn batch_sizes_bounded() {
         check(Config { cases: 4, base_seed: 0xF1 }, "batch bound", |rng| {
             let max_batch = 1 + rng.below(6);
-            let server = tiny_server(max_batch);
+            let server = tiny_server(max_batch, 2);
             let n = 20;
             let mut pending = Vec::new();
             for _ in 0..n {
-                pending.push(server.submit(Tensor3::random(8, 8, 1, rng)));
+                pending.push(server.submit(Tensor3::random(8, 8, 1, rng)).expect("server up"));
             }
             for rx in pending {
                 let resp = rx.recv().unwrap();
@@ -183,29 +227,31 @@ mod tests {
             let m = server.shutdown();
             assert_eq!(m.requests, n as u64);
             assert!(m.mean_batch_size <= max_batch as f64 + 1e-9);
+            assert_eq!(m.batch_size_hist.iter().map(|&(s, c)| s as u64 * c).sum::<u64>(), n as u64);
         });
     }
 
     #[test]
     fn deterministic_logits_for_same_image() {
-        let server = tiny_server(4);
+        let server = tiny_server(4, 2);
         let mut rng = Rng::new(5);
         let img = Tensor3::random(8, 8, 1, &mut rng);
-        let a = server.infer(img.clone());
-        let b = server.infer(img);
+        let a = server.infer(img.clone()).expect("server up");
+        let b = server.infer(img).expect("server up");
         assert_eq!(a.logits, b.logits);
     }
 
     #[test]
     fn metrics_latency_populated() {
-        let server = tiny_server(2);
+        let server = tiny_server(2, 1);
         let mut rng = Rng::new(6);
         for _ in 0..5 {
-            server.infer(Tensor3::random(8, 8, 1, &mut rng));
+            server.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
         }
         let m = server.shutdown();
         assert_eq!(m.requests, 5);
         assert!(m.max_latency_us > 0);
         assert!(m.p50_latency_us <= m.p95_latency_us);
+        assert!(m.p95_latency_us <= m.p99_latency_us);
     }
 }

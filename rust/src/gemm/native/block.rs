@@ -236,6 +236,25 @@ pub(crate) fn tnn_gemm_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threadi
     tnn_gemm_kp_mt(a, bt, c, threading, KPanel::Auto);
 }
 
+/// Ternary GEMM with the widened 2×4 register tile
+/// ([`crate::gemm::plan::Tile::Wide`]) on the shallow-K path. Deep-K
+/// products (more than one K panel) fall back to the 2×2 spill kernel,
+/// so results are bit-identical to [`tnn_gemm_kp_mt`] everywhere.
+pub(crate) fn tnn_gemm_wide_mt(a: &PlaneRows, bt: &PlaneRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
+    assert_eq!(a.k, bt.k, "depth mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows));
+    let threads = threading.worker_count(a.rows);
+    let kpw = k_panel.words(a.k, a.words_per_row, Kind::Tnn);
+    let single = kpw >= a.words_per_row;
+    parallel_row_bands(&mut c.data, bt.rows, a.rows, threads, |row0, rows, band| {
+        if single {
+            kernels::tnn_band_wide(a, bt, row0, rows, band);
+        } else {
+            kernels::tnn_band_kp(a, bt, row0, rows, band, kpw);
+        }
+    });
+}
+
 /// Ternary-binary GEMM, K-paneled + tiled + cache-blocked + threaded.
 pub(crate) fn tbn_gemm_kp_mt(a: &PlaneRows, bt: &BitRows, c: &mut MatI32, threading: Threading, k_panel: KPanel) {
     assert_eq!(a.k, bt.k, "depth mismatch");

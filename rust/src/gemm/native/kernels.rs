@@ -26,8 +26,8 @@
 use crate::gemm::native::bits::{BitRows, PlaneRows};
 use crate::gemm::native::block::{blocks, n_panel};
 use crate::gemm::native::simd_popcnt::{
-    tbn_popcnt, tbn_popcnt_2x2, tnn_popcnt, tnn_popcnt_2x2, xor_popcnt, xor_popcnt2, xor_popcnt_4x2,
-    xor_popcnt_4x4,
+    tbn_popcnt, tbn_popcnt_2x2, tnn_popcnt, tnn_popcnt_2x2, tnn_popcnt_2x4, xor_popcnt, xor_popcnt2,
+    xor_popcnt_4x2, xor_popcnt_4x4,
 };
 use crate::util::mat::{MatF32, MatI32, MatU8};
 
@@ -257,6 +257,64 @@ pub(crate) fn tnn_band(a: &PlaneRows, bt: &PlaneRows, row0: usize, rows: usize, 
             let ap = [a.plus_row(row0 + i), a.plus_row(row0 + i + 1)];
             let am = [a.minus_row(row0 + i), a.minus_row(row0 + i + 1)];
             let mut j = j0;
+            while j + 2 <= jend {
+                let s =
+                    tnn_popcnt_2x2(ap, am, bt.plus_row(j), bt.minus_row(j), bt.plus_row(j + 1), bt.minus_row(j + 1));
+                for (r, sr) in s.iter().enumerate() {
+                    band[(i + r) * n + j] = sr[0].0 as i32 - sr[0].1 as i32;
+                    band[(i + r) * n + j + 1] = sr[1].0 as i32 - sr[1].1 as i32;
+                }
+                j += 2;
+            }
+            if j < jend {
+                for r in 0..2 {
+                    let (p, m) = tnn_popcnt(ap[r], am[r], bt.plus_row(j), bt.minus_row(j));
+                    band[(i + r) * n + j] = p as i32 - m as i32;
+                }
+            }
+            i += 2;
+        }
+        if i < rows {
+            let (ap, am) = (a.plus_row(row0 + i), a.minus_row(row0 + i));
+            for j in j0..jend {
+                let (p, m) = tnn_popcnt(ap, am, bt.plus_row(j), bt.minus_row(j));
+                band[i * n + j] = p as i32 - m as i32;
+            }
+        }
+    }
+}
+
+/// Rows `row0..row0+rows` of the TNN product into `band` with the
+/// widened 2×4 register tile ([`crate::gemm::plan::Tile::Wide`]): each
+/// loaded A plane pair feeds 4 B columns and each B plane pair 2 A rows,
+/// halving the loads-per-output of the 2×2 tile on wide outputs. Column
+/// remainders fall back to the 2×2 / 1-column paths and row remainders
+/// to the row-dot path, so results are bit-identical to [`tnn_band`]
+/// (integer plane popcount sums regroup freely).
+pub(crate) fn tnn_band_wide(a: &PlaneRows, bt: &PlaneRows, row0: usize, rows: usize, band: &mut [i32]) {
+    let n = bt.rows;
+    debug_assert_eq!(band.len(), rows * n);
+    for (j0, jn) in blocks(n, n_panel(bt.words_per_row, 2)) {
+        let jend = j0 + jn;
+        let mut i = 0;
+        while i + 2 <= rows {
+            let ap = [a.plus_row(row0 + i), a.plus_row(row0 + i + 1)];
+            let am = [a.minus_row(row0 + i), a.minus_row(row0 + i + 1)];
+            let mut j = j0;
+            while j + 4 <= jend {
+                let s = tnn_popcnt_2x4(
+                    ap,
+                    am,
+                    [bt.plus_row(j), bt.plus_row(j + 1), bt.plus_row(j + 2), bt.plus_row(j + 3)],
+                    [bt.minus_row(j), bt.minus_row(j + 1), bt.minus_row(j + 2), bt.minus_row(j + 3)],
+                );
+                for (r, sr) in s.iter().enumerate() {
+                    for (c, &(p, m)) in sr.iter().enumerate() {
+                        band[(i + r) * n + j + c] = p as i32 - m as i32;
+                    }
+                }
+                j += 4;
+            }
             while j + 2 <= jend {
                 let s =
                     tnn_popcnt_2x2(ap, am, bt.plus_row(j), bt.minus_row(j), bt.plus_row(j + 1), bt.minus_row(j + 1));
@@ -1138,6 +1196,35 @@ mod tests {
             bnn_gemm(&ab, &bb, &mut c_tiled);
             let mut c_wide = MatI32::zeros(m, n);
             bnn_band_wide(&ab, &bb, 0, m, &mut c_wide.data);
+            assert_eq!(c_wide.data, c_tiled.data, "m={m} n={n} k={k}");
+        }
+    }
+
+    /// The widened 2×4 TNN tile is bit-identical to the 2×2 tiled kernel
+    /// on shapes breaking every boundary: n % 4 ∈ {0,1,2,3}, m % 2 ≠ 0,
+    /// k not a multiple of 64.
+    #[test]
+    fn tnn_wide_tile_matches_tiled() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (2, 4, 64),
+            (5, 3, 65),
+            (8, 9, 127),
+            (4, 6, 128),
+            (3, 11, 130),
+            (12, 13, 191),
+            (17, 33, 257),
+        ];
+        let mut rng = crate::util::Rng::new(0xCA);
+        for &(m, n, k) in &shapes {
+            let a = MatI8::random_ternary(m, k, &mut rng);
+            let b = MatI8::random_ternary(k, n, &mut rng);
+            let ap = PlaneRows::from_ternary(&a);
+            let bp = PlaneRows::from_ternary_transposed(&b);
+            let mut c_tiled = MatI32::zeros(m, n);
+            tnn_gemm(&ap, &bp, &mut c_tiled);
+            let mut c_wide = MatI32::zeros(m, n);
+            tnn_band_wide(&ap, &bp, 0, m, &mut c_wide.data);
             assert_eq!(c_wide.data, c_tiled.data, "m={m} n={n} k={k}");
         }
     }

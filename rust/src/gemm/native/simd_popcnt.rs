@@ -128,6 +128,28 @@ pub fn tnn_popcnt_2x2(
     scalar_tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1)
 }
 
+/// 2×4 ternary tile: `s[r][c] = (z⁺, z⁻)` plane popcounts of row `r`
+/// against column `c`. The widened TNN tile
+/// ([`crate::gemm::plan::Tile::Wide`]): each loaded A plane pair feeds 4
+/// columns and each B plane pair 2 rows, halving the loads-per-output of
+/// the 2×2 tile on wide outputs.
+#[inline]
+pub fn tnn_popcnt_2x4(
+    ap: [&[u64]; 2],
+    am: [&[u64]; 2],
+    bp: [&[u64]; 4],
+    bm: [&[u64]; 4],
+) -> [[(u32, u32); 4]; 2] {
+    debug_assert!(ap[0].len() == bp[0].len() && bp.iter().all(|c| c.len() == bp[0].len()));
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return unsafe { avx2::tnn_popcnt_2x4(ap, am, bp, bm) };
+        }
+    }
+    scalar_tnn_popcnt_2x4(ap, am, bp, bm)
+}
+
 /// 2×2 ternary×binary tile (bit-columns `t0`, `t1`; 1 encodes −1).
 #[inline]
 pub fn tbn_popcnt_2x2(ap: [&[u64]; 2], am: [&[u64]; 2], t0: &[u64], t1: &[u64]) -> [[(u32, u32); 2]; 2] {
@@ -204,6 +226,26 @@ pub fn scalar_tnn_popcnt_2x2(
     let mut s = [[(0u32, 0u32); 2]; 2];
     for t in 0..bp0.len() {
         let cols = [(bp0[t], bm0[t]), (bp1[t], bm1[t])];
+        for r in 0..2 {
+            let (xp, xm) = (ap[r][t], am[r][t]);
+            for (c, &(yp, ym)) in cols.iter().enumerate() {
+                s[r][c].0 += ((xp & yp) | (xm & ym)).count_ones();
+                s[r][c].1 += ((xp & ym) | (xm & yp)).count_ones();
+            }
+        }
+    }
+    s
+}
+
+pub fn scalar_tnn_popcnt_2x4(
+    ap: [&[u64]; 2],
+    am: [&[u64]; 2],
+    bp: [&[u64]; 4],
+    bm: [&[u64]; 4],
+) -> [[(u32, u32); 4]; 2] {
+    let mut s = [[(0u32, 0u32); 4]; 2];
+    for t in 0..bp[0].len() {
+        let cols = [(bp[0][t], bm[0][t]), (bp[1][t], bm[1][t]), (bp[2][t], bm[2][t]), (bp[3][t], bm[3][t])];
         for r in 0..2 {
             let (xp, xm) = (ap[r][t], am[r][t]);
             for (c, &(yp, ym)) in cols.iter().enumerate() {
@@ -476,6 +518,57 @@ mod avx2 {
     }
 
     #[target_feature(enable = "avx2")]
+    pub unsafe fn tnn_popcnt_2x4(
+        ap: [&[u64]; 2],
+        am: [&[u64]; 2],
+        bp: [&[u64]; 4],
+        bm: [&[u64]; 4],
+    ) -> [[(u32, u32); 4]; 2] {
+        let n = bp[0].len();
+        let zero = _mm256_setzero_si256();
+        let mut accp = [[zero; 4]; 2];
+        let mut accm = [[zero; 4]; 2];
+        let mut i = 0;
+        while i + 4 <= n {
+            let yp = [
+                loadu(bp[0].as_ptr().add(i)),
+                loadu(bp[1].as_ptr().add(i)),
+                loadu(bp[2].as_ptr().add(i)),
+                loadu(bp[3].as_ptr().add(i)),
+            ];
+            let ym = [
+                loadu(bm[0].as_ptr().add(i)),
+                loadu(bm[1].as_ptr().add(i)),
+                loadu(bm[2].as_ptr().add(i)),
+                loadu(bm[3].as_ptr().add(i)),
+            ];
+            for r in 0..2 {
+                let xp = loadu(ap[r].as_ptr().add(i));
+                let xm = loadu(am[r].as_ptr().add(i));
+                for c in 0..4 {
+                    let zp = _mm256_or_si256(_mm256_and_si256(xp, yp[c]), _mm256_and_si256(xm, ym[c]));
+                    let zm = _mm256_or_si256(_mm256_and_si256(xp, ym[c]), _mm256_and_si256(xm, yp[c]));
+                    accp[r][c] = acc_popcnt(accp[r][c], zp, zero);
+                    accm[r][c] = acc_popcnt(accm[r][c], zm, zero);
+                }
+            }
+            i += 4;
+        }
+        let mut s = [[(0u32, 0u32); 4]; 2];
+        for r in 0..2 {
+            for c in 0..4 {
+                let (mut p, mut m) = (hsum_epi64(accp[r][c]) as u32, hsum_epi64(accm[r][c]) as u32);
+                for t in i..n {
+                    p += ((ap[r][t] & bp[c][t]) | (am[r][t] & bm[c][t])).count_ones();
+                    m += ((ap[r][t] & bm[c][t]) | (am[r][t] & bp[c][t])).count_ones();
+                }
+                s[r][c] = (p, m);
+            }
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
     pub unsafe fn tbn_popcnt_2x2(
         ap: [&[u64]; 2],
         am: [&[u64]; 2],
@@ -631,6 +724,24 @@ mod tests {
             assert_eq!(s[0][1], scalar_tnn_popcnt(&ap0, &am0, &bp1, &bm1), "n={n}");
             assert_eq!(s[1][0], scalar_tnn_popcnt(&ap1, &am1, &bp0, &bm0), "n={n}");
             assert_eq!(s[1][1], scalar_tnn_popcnt(&ap1, &am1, &bp1, &bm1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tnn_popcnt_2x4_matches_dots() {
+        let mut rng = Rng::new(0xAC3);
+        for n in 0usize..=67 {
+            let (ap0, am0) = random_planes(&mut rng, n);
+            let (ap1, am1) = random_planes(&mut rng, n);
+            let cols: Vec<(Vec<u64>, Vec<u64>)> = (0..4).map(|_| random_planes(&mut rng, n)).collect();
+            let bp = [&cols[0].0[..], &cols[1].0[..], &cols[2].0[..], &cols[3].0[..]];
+            let bm = [&cols[0].1[..], &cols[1].1[..], &cols[2].1[..], &cols[3].1[..]];
+            let s = tnn_popcnt_2x4([&ap0, &ap1], [&am0, &am1], bp, bm);
+            assert_eq!(s, scalar_tnn_popcnt_2x4([&ap0, &ap1], [&am0, &am1], bp, bm), "n={n}");
+            for (c, col) in cols.iter().enumerate() {
+                assert_eq!(s[0][c], scalar_tnn_popcnt(&ap0, &am0, &col.0, &col.1), "n={n} c={c}");
+                assert_eq!(s[1][c], scalar_tnn_popcnt(&ap1, &am1, &col.0, &col.1), "n={n} c={c}");
+            }
         }
     }
 

@@ -48,7 +48,7 @@ use crate::gemm::driver::GemmDriver;
 use crate::gemm::native::bits::{BitRows, PlaneRows};
 use crate::gemm::native::block::{
     bnn_gemm_kp_mt, bnn_gemm_wide_mt, dabnn_gemm_kp_mt, f32_gemm_kp_mt, tbn_gemm_kp_mt, tnn_gemm_kp_mt,
-    u8_gemm_kp_mt, KPanel, Threading,
+    tnn_gemm_wide_mt, u8_gemm_kp_mt, KPanel, Threading,
 };
 use crate::gemm::native::kernels::{
     bnn_gemm_rowdot, pack_b_panels_f32, pack_b_panels_u8, tbn_gemm_rowdot, tnn_gemm_rowdot, u4_gemm,
@@ -85,9 +85,10 @@ pub enum Tile {
     /// The seed's one-output-at-a-time row-dot kernels (BNN/TNN/TBN
     /// only): the benchmark baseline. Single-threaded, single-panel.
     Rowdot,
-    /// Widened 4×4 BNN tile: each loaded A word feeds 4 columns and each
-    /// B word 4 rows. BNN shallow-K only; deep-K products and the other
-    /// kinds fall back to [`Tile::Auto`].
+    /// Widened register tiles: 4×4 for BNN (each loaded A word feeds 4
+    /// columns and each B word 4 rows) and 2×4 for TNN (each loaded A
+    /// plane pair feeds 4 columns). Shallow-K only; deep-K products and
+    /// the other kinds fall back to [`Tile::Auto`].
     Wide,
 }
 
@@ -582,7 +583,12 @@ impl GemmPlan {
                 scratch.planes.repack_ternary(a);
                 match self.config.tile {
                     Tile::Rowdot => tnn_gemm_rowdot(&scratch.planes, bt, c),
-                    _ => tnn_gemm_kp_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel),
+                    Tile::Wide => {
+                        tnn_gemm_wide_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel)
+                    }
+                    Tile::Auto => {
+                        tnn_gemm_kp_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel)
+                    }
                 }
             }
             (Packed::Bits(bt), Lhs::I8(a), GemmOut::I32(c)) => {

@@ -37,11 +37,18 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 //!
-//! The matmul core's **public boundary** is the plan/execute API in
-//! [`gemm::plan`]: a [`gemm::GemmConfig`] + weights build a
-//! [`gemm::GemmPlan`] once, which then runs any number of
-//! multiplications into caller-owned output across all kinds and
-//! backends. The per-kind kernel free functions are crate-internal.
+//! The crate exposes **two plan/execute boundaries**, one per level:
+//!
+//! * [`gemm::plan`] — a [`gemm::GemmConfig`] + weights build a
+//!   [`gemm::GemmPlan`] once, which then runs any number of
+//!   multiplications into caller-owned output across all kinds and
+//!   backends. The per-kind kernel free functions are crate-internal.
+//! * [`nn::plan`] — the same split at the network level: a layer chain
+//!   + [`nn::NetPlanConfig`] build a [`nn::NetPlan`] (all shapes and
+//!   quantization domains verified statically, all weights packed),
+//!   which runs whole-CNN inference with zero steady-state allocation
+//!   and typed [`nn::NetError`]s; the coordinator's replica pool serves
+//!   shared clones of one plan.
 
 // Kernel-style codebase conventions: indexed loop nests mirror the
 // paper's algorithms (and index several buffers at once), blocked-GEMM

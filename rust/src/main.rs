@@ -13,7 +13,9 @@
 //! * `explain <algo>` — the microkernel's instruction stream (the textual
 //!                rendering of the paper's Figs. 1–3).
 //! * `infer`    — run the QNN engine on synthetic images (TNN/TBN/BNN).
-//! * `serve`    — start the batching coordinator and run a load test.
+//! * `serve`    — start the batching coordinator over a replica pool
+//!                (`--replicas N`) and run a load test; emits the
+//!                machine-readable `BENCH_serve.json`.
 //! * `xla <artifact>` — load an AOT artifact and execute it.
 
 use tbgemm::bench::{grid, predicted, ratio};
@@ -23,7 +25,8 @@ use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
 use tbgemm::costmodel::table2;
 use tbgemm::gemm::encode;
 use tbgemm::gemm::Kind;
-use tbgemm::nn::builder::{build_from_config, NetConfig};
+use tbgemm::nn::builder::{plan_from_config, NetConfig};
+use tbgemm::nn::{NetOut, NetPlanConfig};
 use tbgemm::quant::overflow;
 #[cfg(feature = "xla")]
 use tbgemm::runtime::XlaRuntime;
@@ -59,6 +62,7 @@ fn main() {
             opt("--requests").and_then(|s| s.parse().ok()).unwrap_or(256),
             opt("--batch").and_then(|s| s.parse().ok()).unwrap_or(8),
             parse_threading(opt("--threads").as_deref()),
+            opt("--replicas").and_then(|s| s.parse().ok()).unwrap_or(1),
         ),
         #[cfg(feature = "xla")]
         "xla" => cmd_xla(args.get(1).map(String::as_str).unwrap_or("artifacts/model.hlo.txt")),
@@ -76,7 +80,7 @@ fn main() {
             println!("usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|xla> [flags]");
             println!("  table3 flags: --predicted --smoke --reps N --inner N");
             println!("  infer flags:  --kind tnn|tbn|bnn --images N");
-            println!("  serve flags:  --requests N --batch N --threads auto|N");
+            println!("  serve flags:  --requests N --batch N --threads auto|N --replicas N");
         }
     }
 }
@@ -213,8 +217,8 @@ fn parse_kind(s: &str) -> ConvKind {
 }
 
 /// `--threads auto|N` → a GEMM threading config (default single). The
-/// config lands on every layer's [`tbgemm::gemm::GemmPlan`] through
-/// `Network::set_threading`.
+/// config lands on every layer's [`tbgemm::gemm::GemmPlan`] through the
+/// [`NetPlanConfig`] handed to `NetPlan::build`.
 fn parse_threading(s: Option<&str>) -> tbgemm::gemm::Threading {
     use tbgemm::gemm::Threading;
     match s {
@@ -227,42 +231,74 @@ fn parse_threading(s: Option<&str>) -> tbgemm::gemm::Threading {
 fn cmd_infer(kind: String, images: usize) {
     let kind = parse_kind(&kind);
     let cfg = NetConfig::mobile_cnn(kind, 28, 28, 1, 10);
-    println!("building {kind:?} mobile CNN ({} params)...", cfg.param_count());
-    let net = build_from_config(&cfg, 0xCAFE);
+    println!("building {kind:?} mobile CNN plan ({} params)...", cfg.param_count());
+    let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("valid built-in config");
+    let mut scratch = plan.make_scratch();
+    let mut out = NetOut::new();
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let mut hist = [0usize; 10];
     for _ in 0..images {
         let img = Tensor3::random(28, 28, 1, &mut rng);
-        hist[net.predict(&img)] += 1;
+        plan.run(&img, &mut out, &mut scratch).expect("plan-shaped image");
+        hist[out.predicted()] += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("classified {images} images in {:.1} ms ({:.1} img/s)", dt * 1e3, images as f64 / dt);
     println!("class histogram: {hist:?}");
 }
 
-fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading) {
+fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading, replicas: usize) {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
-    let net = build_from_config(&cfg, 0xCAFE);
+    let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default().with_threading(threading))
+        .expect("valid built-in config");
     let server = InferenceServer::start(
-        Box::new(NativeEngine::new(net, "tnn-mobile").with_threading(threading)),
+        Box::new(NativeEngine::new(plan, "tnn-mobile")),
         BatcherConfig { max_batch: batch, ..Default::default() },
         128,
+        replicas,
     );
-    println!("serving {requests} requests (max_batch={batch}, gemm threading {threading:?})...");
+    println!(
+        "serving {requests} requests (max_batch={batch}, replicas={replicas}, gemm threading {threading:?})..."
+    );
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
-    let pending: Vec<_> = (0..requests).map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng))).collect();
+    let pending: Vec<_> = (0..requests)
+        .map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng)).expect("server up"))
+        .collect();
     for rx in pending {
         rx.recv().expect("response");
     }
     let dt = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
-    println!("throughput: {:.1} req/s", requests as f64 / dt);
+    let throughput = requests as f64 / dt;
+    println!("throughput: {throughput:.1} req/s");
     println!(
-        "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs max={}µs",
-        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.max_latency_us
+        "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs p99={}µs max={}µs",
+        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.max_latency_us
     );
+    println!("per-replica requests: {:?}", m.replica_requests);
+    // Machine-readable record for the serving bench gate (the serving
+    // sibling of gemm_micro's BENCH_gemm.json).
+    let hist: Vec<String> = m.batch_size_hist.iter().map(|(s, n)| format!("[{s},{n}]")).collect();
+    let reps: Vec<String> = m.replica_requests.iter().map(|r| r.to_string()).collect();
+    let json = format!(
+        "{{\"requests\":{requests},\"max_batch\":{batch},\"replicas\":{replicas},\
+\"throughput_rps\":{throughput:.1},\"p50_latency_us\":{},\"p95_latency_us\":{},\
+\"p99_latency_us\":{},\"max_latency_us\":{},\"mean_batch_size\":{:.3},\
+\"batch_size_hist\":[{}],\"replica_requests\":[{}]}}\n",
+        m.p50_latency_us,
+        m.p95_latency_us,
+        m.p99_latency_us,
+        m.max_latency_us,
+        m.mean_batch_size,
+        hist.join(","),
+        reps.join(","),
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("failed to write BENCH_serve.json: {e}"),
+    }
 }
 
 #[cfg(feature = "xla")]

@@ -10,12 +10,14 @@
 //!
 //! Construction is the **plan-build** phase of the plan/execute split:
 //! every `LowBitConv` / `QDense` built here packs its weights once into
-//! a [`crate::gemm::GemmPlan`]; the serving hot path only ever calls
-//! `run` on those plans.
+//! a [`crate::gemm::GemmPlan`], and [`plan_from_config`] wraps the
+//! result into a [`crate::nn::plan::NetPlan`] — the network-level plan
+//! whose `run` is all the serving hot path ever calls.
 
 use crate::conv::conv2d::{ConvKind, ConvParams, LowBitConv};
 use crate::nn::layers::{Activation, DenseF32, InputQuant, Layer, QConv2d, QDense};
 use crate::nn::network::Network;
+use crate::nn::plan::{NetError, NetPlan, NetPlanConfig};
 use crate::quant::lowbit::{binarize, ternarize, TernaryThreshold};
 use crate::util::mat::{MatF32, MatI8};
 use crate::util::Rng;
@@ -124,8 +126,24 @@ fn quantize_weights(kind: ConvKind, rows: usize, cols: usize, xs: &[f32]) -> (Ma
     }
 }
 
-/// Build the network with seeded synthetic weights.
+/// Build the network with seeded synthetic weights — the deprecated
+/// [`Network`] shim form of [`plan_from_config`].
 pub fn build_from_config(cfg: &NetConfig, seed: u64) -> Network {
+    let (input, layers) = build_layers(cfg, seed);
+    Network::new(input, layers)
+}
+
+/// Build a [`NetPlan`] directly from the declarative config: realize the
+/// layers with seeded synthetic weights (packing every layer's weights
+/// once) and run full static shape/domain inference under `plan_cfg`.
+pub fn plan_from_config(cfg: &NetConfig, seed: u64, plan_cfg: NetPlanConfig) -> Result<NetPlan, NetError> {
+    let (input, layers) = build_layers(cfg, seed);
+    NetPlan::build(input, layers, plan_cfg)
+}
+
+/// Realize a config into raw layers (plus the input dims): the common
+/// construction path behind [`build_from_config`] / [`plan_from_config`].
+pub fn build_layers(cfg: &NetConfig, seed: u64) -> ((usize, usize, usize), Vec<Layer>) {
     let mut rng = Rng::new(seed);
     let (mut h, mut w, mut c) = cfg.input;
     let mut layers = Vec::new();
@@ -188,7 +206,7 @@ pub fn build_from_config(cfg: &NetConfig, seed: u64) -> Network {
             }
         }
     }
-    Network::new(cfg.input, layers)
+    (cfg.input, layers)
 }
 
 #[cfg(test)]

@@ -1,8 +1,19 @@
 //! Layers of the QNN engine.
+//!
+//! Since the [`crate::nn::plan::NetPlan`] redesign, layers expose only
+//! **hot-path `*_into` forwards**: each writes its output into a
+//! caller-owned buffer (usually one of the two ping-pong [`ActArena`]s
+//! of [`NetScratch`]) and returns typed [`GemmError`]s instead of
+//! panicking. Shape and quantization-domain compatibility between
+//! consecutive layers is checked **once**, by [`NetPlan::build`]
+//! (`crate::nn::plan`) — the per-layer `expect_q` / `expect_f` panics
+//! and asserts of the old `Feature`-passing executor are gone.
 
 use crate::conv::conv2d::{ConvKind, ConvScratch, LowBitConv};
 use crate::conv::tensor::Tensor3;
-use crate::gemm::{GemmConfig, GemmOut, GemmPlan, GemmScratch, Lhs, Weights};
+use crate::gemm::{
+    Backend, GemmConfig, GemmError, GemmOut, GemmPlan, GemmScratch, KPanel, Lhs, Threading, Tile, Weights,
+};
 use crate::util::mat::{MatF32, MatI8};
 
 /// Activation quantizer applied after the folded affine.
@@ -16,39 +27,47 @@ pub enum Activation {
     None,
 }
 
-/// A feature map flowing through the network.
-#[derive(Clone, Debug)]
-pub enum Feature {
-    /// Low-bit activations (`{-1,1}` or `{-1,0,1}`).
-    Q(Tensor3<i8>),
+/// The value domain of an activation tensor flowing between layers —
+/// what the old `Feature` enum carried at run time, now inferred once at
+/// plan-build time ([`crate::nn::plan::NetPlan::build`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
     /// Full-precision activations.
-    F(Tensor3<f32>),
+    F32,
+    /// Binary activations `{-1, +1}`.
+    Binary,
+    /// Ternary activations `{-1, 0, +1}`.
+    Ternary,
 }
 
-impl Feature {
-    pub fn dims(&self) -> (usize, usize, usize) {
+impl Domain {
+    /// Human-readable name (used in [`crate::nn::plan::NetError`]).
+    pub fn label(self) -> &'static str {
         match self {
-            Feature::Q(t) => (t.h, t.w, t.c),
-            Feature::F(t) => (t.h, t.w, t.c),
+            Domain::F32 => "f32",
+            Domain::Binary => "binary",
+            Domain::Ternary => "ternary",
         }
     }
 
-    pub fn expect_q(&self) -> &Tensor3<i8> {
-        match self {
-            Feature::Q(t) => t,
-            _ => panic!("expected quantized feature"),
-        }
-    }
-
-    pub fn expect_f(&self) -> &Tensor3<f32> {
-        match self {
-            Feature::F(t) => t,
-            _ => panic!("expected f32 feature"),
-        }
+    /// True for the low-bit (i8-carried) domains.
+    pub fn is_quantized(self) -> bool {
+        self != Domain::F32
     }
 }
 
-fn apply_activation(x: f32, act: Activation) -> i8 {
+impl Activation {
+    /// The domain this quantizer produces.
+    pub fn out_domain(self) -> Domain {
+        match self {
+            Activation::Sign => Domain::Binary,
+            Activation::Ternary { .. } => Domain::Ternary,
+            Activation::None => Domain::F32,
+        }
+    }
+}
+
+pub(crate) fn apply_activation(x: f32, act: Activation) -> i8 {
     match act {
         Activation::Sign => {
             if x < 0.0 {
@@ -66,7 +85,26 @@ fn apply_activation(x: f32, act: Activation) -> i8 {
                 0
             }
         }
+        // `NetPlan::build` rejects quantizing layers configured with
+        // `None`, so this is unreachable through a built plan.
         Activation::None => unreachable!("None is not a quantizer"),
+    }
+}
+
+/// One ping-pong activation slot: a low-bit tensor and an f32 tensor
+/// sharing the slot (a layer writes whichever its output domain needs —
+/// statically known per layer, so each buffer grows once to its
+/// per-parity maximum and is then reused forever).
+pub struct ActArena {
+    /// Low-bit activations (`{-1,1}` or `{-1,0,1}`).
+    pub q: Tensor3<i8>,
+    /// Full-precision activations.
+    pub f: Tensor3<f32>,
+}
+
+impl ActArena {
+    pub fn new() -> Self {
+        ActArena { q: Tensor3::zeros(0, 0, 0), f: Tensor3::zeros(0, 0, 0) }
     }
 }
 
@@ -82,41 +120,41 @@ pub struct QConv2d {
 }
 
 impl QConv2d {
-    /// One-shot forward (allocates fresh scratch). Hot callers hold a
-    /// [`ConvScratch`] + accumulator tensor and use
-    /// [`QConv2d::forward_with`].
-    pub fn forward(&self, input: &Tensor3<i8>) -> Feature {
-        let mut scratch = ConvScratch::new();
-        let mut acc = Tensor3::zeros(0, 0, 0);
-        self.forward_with(input, &mut scratch, &mut acc)
-    }
-
-    /// Forward using caller-owned conv scratch and accumulator storage.
-    pub fn forward_with(&self, input: &Tensor3<i8>, scratch: &mut ConvScratch, acc: &mut Tensor3<i32>) -> Feature {
-        self.conv.forward_into(input, scratch, acc);
+    /// Hot-path forward into the arena: conv GEMM into `acc`, then the
+    /// folded affine + quantizer into `out.q` (or `out.f` when
+    /// `act == None`). Zero heap allocation at steady state; typed
+    /// errors, no panics (shape compatibility is the plan's build-time
+    /// contract).
+    pub fn forward_into(
+        &self,
+        input: &Tensor3<i8>,
+        scratch: &mut ConvScratch,
+        acc: &mut Tensor3<i32>,
+        out: &mut ActArena,
+    ) -> Result<(), GemmError> {
+        self.conv.forward_into(input, scratch, acc)?;
         let c = acc.c;
         match self.act {
             Activation::None => {
-                let mut out = Tensor3::zeros(acc.h, acc.w, c);
-                for (i, &v) in acc.data.iter().enumerate() {
+                out.f.resize_to(acc.h, acc.w, c);
+                for (o, (i, &v)) in out.f.data.iter_mut().zip(acc.data.iter().enumerate()) {
                     let ch = i % c;
-                    out.data[i] = self.scale[ch] * v as f32 + self.bias[ch];
+                    *o = self.scale[ch] * v as f32 + self.bias[ch];
                 }
-                Feature::F(out)
             }
             act => {
-                let mut out = Tensor3::zeros(acc.h, acc.w, c);
-                for (i, &v) in acc.data.iter().enumerate() {
+                out.q.resize_to(acc.h, acc.w, c);
+                for (o, (i, &v)) in out.q.data.iter_mut().zip(acc.data.iter().enumerate()) {
                     let ch = i % c;
-                    out.data[i] = apply_activation(self.scale[ch] * v as f32 + self.bias[ch], act);
+                    *o = apply_activation(self.scale[ch] * v as f32 + self.bias[ch], act);
                 }
-                Feature::Q(out)
             }
         }
+        Ok(())
     }
 }
 
-/// Reusable scratch arena for [`QDense::forward_with`], mirroring
+/// Reusable scratch arena for [`QDense::forward_into`], mirroring
 /// [`ConvScratch`]: the flattened activation row, the shared GEMM
 /// packing arena ([`crate::gemm::GemmScratch`]), and the GEMM output
 /// row. Grown on demand and reused, so steady-state dense forwards
@@ -132,6 +170,12 @@ impl DenseScratch {
     pub fn new() -> Self {
         DenseScratch { a: MatI8::zeros(0, 0), gemm: GemmScratch::new(), c: GemmOut::new_i32() }
     }
+
+    /// Pre-grow the flatten row to `flat` elements (the plan-build
+    /// warm-up; steady-state forwards then never reallocate it).
+    pub(crate) fn reserve(&mut self, flat: usize) {
+        self.a.data.reserve(flat.saturating_sub(self.a.data.len()));
+    }
 }
 
 impl Default for DenseScratch {
@@ -140,22 +184,32 @@ impl Default for DenseScratch {
     }
 }
 
-/// Per-network scratch threaded through [`crate::nn::Network`] forward
-/// passes: one conv arena + accumulator tensor shared by all conv layers
-/// (shapes only shrink or grow monotonically toward the largest layer)
-/// and one dense arena shared by all dense layers. Both arenas embed the
-/// unified [`crate::gemm::GemmScratch`] packing arena the GEMM plans
-/// run into.
+/// Per-plan scratch threaded through [`crate::nn::plan::NetPlan`] runs:
+/// one conv arena + integer accumulator shared by all conv layers, one
+/// dense arena shared by all dense layers (both embedding the unified
+/// [`crate::gemm::GemmScratch`] packing arena), and the **two ping-pong
+/// activation arenas** layer outputs alternate between. Every buffer
+/// grows monotonically to its per-plan maximum — sized up front by
+/// [`crate::nn::plan::NetPlan::make_scratch`] — so `run`/`run_batch`
+/// perform zero heap allocation after warm-up.
 pub struct NetScratch {
     pub conv: ConvScratch,
     pub dense: DenseScratch,
     /// Reused integer accumulator tensor for conv layers.
     pub conv_acc: Tensor3<i32>,
+    /// The ping-pong activation arenas: layer `i` writes arena `i % 2`
+    /// and reads the other (layer 0 reads the input image).
+    pub arenas: [ActArena; 2],
 }
 
 impl NetScratch {
     pub fn new() -> Self {
-        NetScratch { conv: ConvScratch::new(), dense: DenseScratch::new(), conv_acc: Tensor3::zeros(0, 0, 0) }
+        NetScratch {
+            conv: ConvScratch::new(),
+            dense: DenseScratch::new(),
+            conv_acc: Tensor3::zeros(0, 0, 0),
+            arenas: [ActArena::new(), ActArena::new()],
+        }
     }
 }
 
@@ -172,6 +226,9 @@ pub struct QDense {
     pub in_features: usize,
     pub out_features: usize,
     plan: GemmPlan,
+    /// Retained quantized weights (for backend rebuilds, as in
+    /// [`LowBitConv`]).
+    weights: MatI8,
     pub scale: Vec<f32>,
     pub bias: Vec<f32>,
     pub act: Activation,
@@ -192,52 +249,73 @@ impl QDense {
             in_features: weights.rows,
             out_features: weights.cols,
             plan,
+            weights: weights.clone(),
             scale,
             bias,
             act,
         }
     }
 
-    /// One-shot forward (allocates fresh scratch). Hot callers hold a
-    /// [`DenseScratch`] and use [`QDense::forward_with`].
-    pub fn forward(&self, input: &Tensor3<i8>) -> Feature {
-        let mut scratch = DenseScratch::new();
-        self.forward_with(input, &mut scratch)
+    /// Apply a full execution config (see [`LowBitConv::configure`]).
+    pub fn configure(
+        &mut self,
+        backend: Backend,
+        threading: Threading,
+        k_panel: KPanel,
+        tile: Tile,
+    ) -> Result<(), GemmError> {
+        if backend == self.plan.backend() {
+            self.plan.set_threading(threading);
+            self.plan.set_k_panel(k_panel);
+            self.plan.set_tile(tile);
+        } else {
+            let config = GemmConfig { kind: self.kind.gemm_kind(), backend, threading, k_panel, tile };
+            self.plan = GemmPlan::new(config, Weights::I8(&self.weights))?;
+        }
+        Ok(())
     }
 
-    /// Forward using caller-owned scratch: the flatten, the bit/plane
-    /// packing and the GEMM output all reuse the arena's buffers, so a
-    /// steady-state sequence of calls performs no heap allocation on the
-    /// GEMM path (the returned `Feature` still owns fresh storage).
-    pub fn forward_with(&self, input: &Tensor3<i8>, scratch: &mut DenseScratch) -> Feature {
-        let flat = input.h * input.w * input.c;
-        assert_eq!(flat, self.in_features, "dense input size mismatch");
+    /// Hot-path forward into the arena: flatten + GEMM + affine +
+    /// quantizer, reusing every buffer (zero heap allocation at steady
+    /// state). A flattened-size mismatch surfaces as the plan's typed
+    /// [`GemmError::DepthMismatch`].
+    pub fn forward_into(
+        &self,
+        input: &Tensor3<i8>,
+        scratch: &mut DenseScratch,
+        out: &mut ActArena,
+    ) -> Result<(), GemmError> {
         scratch.a.rows = 1;
-        scratch.a.cols = flat;
+        scratch.a.cols = input.data.len();
         scratch.a.data.clear();
         scratch.a.data.extend_from_slice(&input.data);
-        self.plan
-            .run(Lhs::I8(&scratch.a), &mut scratch.c, &mut scratch.gemm)
-            .unwrap_or_else(|e| panic!("dense GEMM plan invariant violated: {e}"));
+        self.plan.run(Lhs::I8(&scratch.a), &mut scratch.c, &mut scratch.gemm)?;
         let c = match &scratch.c {
             GemmOut::I32(m) => m,
-            GemmOut::F32(_) => unreachable!("dense kinds produce i32 output"),
+            // The dense kinds all produce i32; stay total regardless.
+            GemmOut::F32(_) => {
+                return Err(GemmError::OutputMismatch {
+                    kind: self.kind.gemm_kind(),
+                    expected: "i32",
+                    got: "f32",
+                })
+            }
         };
         match self.act {
             Activation::None => {
-                let data = c.data.iter().enumerate().map(|(j, &v)| self.scale[j] * v as f32 + self.bias[j]).collect();
-                Feature::F(Tensor3 { h: 1, w: 1, c: self.out_features, data })
+                out.f.resize_to(1, 1, self.out_features);
+                for (j, (o, &v)) in out.f.data.iter_mut().zip(&c.data).enumerate() {
+                    *o = self.scale[j] * v as f32 + self.bias[j];
+                }
             }
             act => {
-                let data = c
-                    .data
-                    .iter()
-                    .enumerate()
-                    .map(|(j, &v)| apply_activation(self.scale[j] * v as f32 + self.bias[j], act))
-                    .collect();
-                Feature::Q(Tensor3 { h: 1, w: 1, c: self.out_features, data })
+                out.q.resize_to(1, 1, self.out_features);
+                for (j, (o, &v)) in out.q.data.iter_mut().zip(&c.data).enumerate() {
+                    *o = apply_activation(self.scale[j] * v as f32 + self.bias[j], act);
+                }
             }
         }
+        Ok(())
     }
 }
 
@@ -248,27 +326,32 @@ pub struct DenseF32 {
 }
 
 impl DenseF32 {
-    pub fn forward(&self, input: &Tensor3<f32>) -> Tensor3<f32> {
-        let flat = input.h * input.w * input.c;
-        assert_eq!(flat, self.weights.rows);
+    /// Hot-path forward into `out` (resized to `1 × 1 × cols` in place).
+    /// A flattened-size mismatch surfaces as a typed
+    /// [`GemmError::DepthMismatch`], mirroring [`QDense::forward_into`].
+    pub fn forward_into(&self, input: &Tensor3<f32>, out: &mut Tensor3<f32>) -> Result<(), GemmError> {
+        if input.data.len() != self.weights.rows {
+            return Err(GemmError::DepthMismatch { expected: self.weights.rows, got: input.data.len() });
+        }
         let n = self.weights.cols;
-        let mut out = vec![0f32; n];
-        for (j, o) in out.iter_mut().enumerate() {
+        out.resize_to(1, 1, n);
+        for (j, o) in out.data.iter_mut().enumerate() {
             let mut acc = self.bias[j];
             for (t, &x) in input.data.iter().enumerate() {
                 acc += x * self.weights.get(t, j);
             }
             *o = acc;
         }
-        Tensor3 { h: 1, w: 1, c: n, data: out }
+        Ok(())
     }
 }
 
 /// 2×2 max-pool, stride 2, over low-bit activations (max of `{-1,0,1}`
-/// is well-defined and standard in BNN/TNN stacks).
-pub fn maxpool2x2_i8(t: &Tensor3<i8>) -> Tensor3<i8> {
+/// is well-defined and standard in BNN/TNN stacks), into a caller-owned
+/// output tensor.
+pub fn maxpool2x2_into(t: &Tensor3<i8>, out: &mut Tensor3<i8>) {
     let (oh, ow) = (t.h / 2, t.w / 2);
-    let mut out = Tensor3::zeros(oh, ow, t.c);
+    out.resize_to(oh, ow, t.c);
     for y in 0..oh {
         for x in 0..ow {
             for ch in 0..t.c {
@@ -281,6 +364,12 @@ pub fn maxpool2x2_i8(t: &Tensor3<i8>) -> Tensor3<i8> {
             }
         }
     }
+}
+
+/// Allocating convenience wrapper around [`maxpool2x2_into`].
+pub fn maxpool2x2_i8(t: &Tensor3<i8>) -> Tensor3<i8> {
+    let mut out = Tensor3::zeros(0, 0, 0);
+    maxpool2x2_into(t, &mut out);
     out
 }
 
@@ -290,16 +379,18 @@ pub struct InputQuant {
 }
 
 impl InputQuant {
-    pub fn forward(&self, input: &Tensor3<f32>) -> Tensor3<i8> {
-        let mut out = Tensor3::zeros(input.h, input.w, input.c);
+    /// Hot-path forward into `out` (resized in place).
+    pub fn forward_into(&self, input: &Tensor3<f32>, out: &mut Tensor3<i8>) {
+        out.resize_to(input.h, input.w, input.c);
         for (o, &x) in out.data.iter_mut().zip(&input.data) {
             *o = apply_activation(x, self.act);
         }
-        out
     }
 }
 
-/// A network layer (sequential graph node).
+/// A network layer (sequential graph node). Executed by
+/// [`crate::nn::plan::NetPlan`], which owns the inter-layer shape /
+/// domain contract.
 pub enum Layer {
     /// Quantize an f32 input into low-bit activations.
     InputQuant(InputQuant),
@@ -314,37 +405,6 @@ pub enum Layer {
 }
 
 impl Layer {
-    pub fn forward(&self, x: Feature) -> Feature {
-        let mut scratch = NetScratch::new();
-        self.forward_with(x, &mut scratch)
-    }
-
-    /// Forward with a shared per-network scratch arena (the zero-alloc
-    /// hot path used by [`crate::nn::Network::forward_with`]).
-    pub fn forward_with(&self, x: Feature, scratch: &mut NetScratch) -> Feature {
-        match self {
-            Layer::InputQuant(l) => Feature::Q(l.forward(x.expect_f())),
-            Layer::QConv(l) => l.forward_with(x.expect_q(), &mut scratch.conv, &mut scratch.conv_acc),
-            Layer::QDense(l) => l.forward_with(x.expect_q(), &mut scratch.dense),
-            Layer::DenseF32(l) => {
-                // The head accepts either f32 features or low-bit
-                // activations (which it widens to f32 — standard for a
-                // full-precision classifier after a quantized backbone).
-                let f = match x {
-                    Feature::F(t) => t,
-                    Feature::Q(t) => Tensor3 {
-                        h: t.h,
-                        w: t.w,
-                        c: t.c,
-                        data: t.data.iter().map(|&v| v as f32).collect(),
-                    },
-                };
-                Feature::F(l.forward(&f))
-            }
-            Layer::MaxPool2 => Feature::Q(maxpool2x2_i8(x.expect_q())),
-        }
-    }
-
     pub fn name(&self) -> &'static str {
         match self {
             Layer::InputQuant(_) => "input_quant",
@@ -358,9 +418,28 @@ impl Layer {
     /// Propagate a threading config to the layers that run a blocked GEMM
     /// (currently the convolutions; the dense layers are single-row
     /// multiplications with nothing to parallelize over).
-    pub fn set_threading(&mut self, threading: crate::gemm::Threading) {
+    pub fn set_threading(&mut self, threading: Threading) {
         if let Layer::QConv(l) = self {
             l.conv.set_threading(threading);
+        }
+    }
+
+    /// Apply a full GEMM execution config to this layer's plan (used by
+    /// [`crate::nn::plan::NetPlan::build`]); a backend change repacks the
+    /// layer's weights for the new backend.
+    pub(crate) fn configure_gemm(
+        &mut self,
+        backend: Backend,
+        threading: Threading,
+        k_panel: KPanel,
+        tile: Tile,
+    ) -> Result<(), GemmError> {
+        match self {
+            Layer::QConv(l) => l.conv.configure(backend, threading, k_panel, tile),
+            // Dense rows have nothing to thread over; keep them
+            // single-threaded regardless of the plan-wide config.
+            Layer::QDense(l) => l.configure(backend, Threading::Single, k_panel, tile),
+            _ => Ok(()),
         }
     }
 }
@@ -380,6 +459,9 @@ mod tests {
         assert_eq!(apply_activation(0.5, t), 1);
         assert_eq!(apply_activation(-0.5, t), -1);
         assert_eq!(apply_activation(0.1, t), 0);
+        assert_eq!(Activation::Sign.out_domain(), Domain::Binary);
+        assert_eq!(t.out_domain(), Domain::Ternary);
+        assert_eq!(Activation::None.out_domain(), Domain::F32);
     }
 
     #[test]
@@ -387,6 +469,9 @@ mod tests {
         let t = Tensor3 { h: 2, w: 2, c: 1, data: vec![-1, 0, 1, -1] };
         let p = maxpool2x2_i8(&t);
         assert_eq!(p.data, vec![1]);
+        let mut out = Tensor3::zeros(0, 0, 0);
+        maxpool2x2_into(&t, &mut out);
+        assert_eq!(out.data, vec![1]);
     }
 
     #[test]
@@ -397,13 +482,10 @@ mod tests {
         let conv = LowBitConv::new(ConvKind::Tnn, p, 4, &w);
         let layer = QConv2d { conv, scale: vec![0.1; 8], bias: vec![0.0; 8], act: Activation::Ternary { delta: 0.2 } };
         let input = Tensor3::random_ternary(6, 6, 4, &mut rng);
-        match layer.forward(&input) {
-            Feature::Q(out) => {
-                assert_eq!((out.h, out.w, out.c), (6, 6, 8));
-                assert!(out.data.iter().all(|&v| (-1..=1).contains(&v)));
-            }
-            _ => panic!("expected quantized output"),
-        }
+        let (mut scratch, mut acc, mut out) = (ConvScratch::new(), Tensor3::zeros(0, 0, 0), ActArena::new());
+        layer.forward_into(&input, &mut scratch, &mut acc, &mut out).expect("conv forward");
+        assert_eq!((out.q.h, out.q.w, out.q.c), (6, 6, 8));
+        assert!(out.q.data.iter().all(|&v| (-1..=1).contains(&v)));
     }
 
     #[test]
@@ -412,15 +494,27 @@ mod tests {
         let w = MatI8::random_binary(32, 10, &mut rng);
         let dense = QDense::new(ConvKind::Bnn, &w, vec![1.0; 10], vec![0.0; 10], Activation::None);
         let input = Tensor3 { h: 2, w: 2, c: 8, data: vec![1; 32] };
-        match dense.forward(&input) {
-            Feature::F(out) => assert_eq!(out.c, 10),
-            _ => panic!("expected f32 output"),
-        }
+        let (mut scratch, mut out) = (DenseScratch::new(), ActArena::new());
+        dense.forward_into(&input, &mut scratch, &mut out).expect("dense forward");
+        assert_eq!(out.f.c, 10);
     }
 
-    /// `forward_with` matches `forward` and, at steady state, the dense
-    /// scratch arena performs no reallocation — mirroring the
-    /// `ConvScratch` pointer-stability tests.
+    /// A flattened-size mismatch is a typed error, not a panic.
+    #[test]
+    fn qdense_size_mismatch_is_typed() {
+        let mut rng = Rng::new(0xE3);
+        let w = MatI8::random_binary(32, 10, &mut rng);
+        let dense = QDense::new(ConvKind::Bnn, &w, vec![1.0; 10], vec![0.0; 10], Activation::None);
+        let input = Tensor3 { h: 1, w: 1, c: 31, data: vec![1; 31] };
+        let (mut scratch, mut out) = (DenseScratch::new(), ActArena::new());
+        assert_eq!(
+            dense.forward_into(&input, &mut scratch, &mut out),
+            Err(crate::gemm::GemmError::DepthMismatch { expected: 32, got: 31 })
+        );
+    }
+
+    /// Steady-state dense forwards perform no reallocation in the arena
+    /// — mirroring the `ConvScratch` pointer-stability tests.
     #[test]
     fn dense_scratch_is_zero_alloc_at_steady_state() {
         let mut rng = Rng::new(0xE2);
@@ -434,31 +528,24 @@ mod tests {
                 ConvKind::Bnn => Tensor3::random_binary(2, 3, 8, &mut rng),
                 _ => Tensor3::random_ternary(2, 3, 8, &mut rng),
             };
-            let want = match dense.forward(&input) {
-                Feature::F(t) => t.data,
-                _ => panic!("expected f32 output"),
-            };
             let mut scratch = DenseScratch::new();
-            let got = match dense.forward_with(&input, &mut scratch) {
-                Feature::F(t) => t.data,
-                _ => panic!("expected f32 output"),
-            };
-            assert_eq!(got, want, "{kind:?}");
+            let mut out = ActArena::new();
+            dense.forward_into(&input, &mut scratch, &mut out).expect("dense forward");
+            let want = out.f.data.clone();
             let (a_ptr, c_ptr) =
                 (scratch.a.data.as_ptr(), scratch.c.as_i32().expect("i32 out").data.as_ptr());
             let bits_ptr = scratch.gemm.bits.data.as_ptr();
             let planes_ptr = scratch.gemm.planes.plus.as_ptr();
-            let got2 = match dense.forward_with(&input, &mut scratch) {
-                Feature::F(t) => t.data,
-                _ => panic!("expected f32 output"),
-            };
-            assert_eq!(got2, want, "{kind:?} second pass");
+            let out_ptr = out.f.data.as_ptr();
+            dense.forward_into(&input, &mut scratch, &mut out).expect("dense forward");
+            assert_eq!(out.f.data, want, "{kind:?} second pass");
             assert_eq!(scratch.a.data.as_ptr(), a_ptr, "{kind:?}: flatten buffer reallocated");
             assert_eq!(
                 scratch.c.as_i32().expect("i32 out").data.as_ptr(),
                 c_ptr,
                 "{kind:?}: output buffer reallocated"
             );
+            assert_eq!(out.f.data.as_ptr(), out_ptr, "{kind:?}: arena f buffer reallocated");
             match kind {
                 ConvKind::Bnn => assert_eq!(scratch.gemm.bits.data.as_ptr(), bits_ptr, "bits reallocated"),
                 _ => assert_eq!(scratch.gemm.planes.plus.as_ptr(), planes_ptr, "planes reallocated"),
@@ -470,6 +557,8 @@ mod tests {
     fn input_quant_binarizes_image() {
         let q = InputQuant { act: Activation::Sign };
         let img = Tensor3 { h: 1, w: 2, c: 1, data: vec![0.3, -0.3] };
-        assert_eq!(q.forward(&img).data, vec![1, -1]);
+        let mut out = Tensor3::zeros(0, 0, 0);
+        q.forward_into(&img, &mut out);
+        assert_eq!(out.data, vec![1, -1]);
     }
 }

@@ -14,16 +14,25 @@
 //! * The classifier head stays in f32 (standard practice: first and last
 //!   layers are the quality-critical ones).
 //!
-//! [`network::Network`] is a sequential graph of [`layers::Layer`];
-//! [`builder`] provides config-driven construction plus reference models
-//! used by the examples and the serving coordinator.
+//! **[`plan::NetPlan`] is the public boundary** (the network-level twin
+//! of [`crate::gemm::GemmPlan`]): [`NetPlan::build`](plan::NetPlan::build)
+//! verifies every layer shape and quantization-domain handoff once and
+//! packs all weights, and [`NetPlan::run`](plan::NetPlan::run) executes
+//! into caller-owned output with zero heap allocation after warm-up and
+//! typed [`plan::NetError`]s. [`builder`] provides config-driven
+//! construction ([`plan_from_config`]); [`network::Network`] survives
+//! only as a thin deprecated shim over a one-shot plan.
 
 pub mod builder;
 pub mod layers;
 pub mod network;
+pub mod plan;
 pub mod twin;
 
-pub use builder::{build_from_config, LayerSpec, NetConfig};
-pub use layers::{Activation, DenseScratch, Feature, Layer, NetScratch};
+pub use builder::{build_from_config, build_layers, plan_from_config, LayerSpec, NetConfig};
+pub use layers::{
+    ActArena, Activation, DenseF32, DenseScratch, Domain, InputQuant, Layer, NetScratch, QConv2d, QDense,
+};
 pub use network::Network;
-pub use twin::{agreement, build_f32_twin, F32Twin};
+pub use plan::{LayerTiming, NetError, NetOut, NetPlan, NetPlanConfig};
+pub use twin::{agreement, build_f32_twin, plan_agreement, F32Twin};

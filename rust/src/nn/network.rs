@@ -1,100 +1,104 @@
-//! Sequential network executor with per-layer timing.
+//! **Deprecated shim** over [`crate::nn::plan::NetPlan`].
+//!
+//! `Network` predates the network-level plan/execute API: it allocated
+//! fresh scratch per forward pass and panicked on shape/domain mistakes.
+//! It survives only as a thin convenience wrapper for tests, benches and
+//! examples — every method is one call into an owned [`NetPlan`], and
+//! construction panics where `NetPlan::build` would return a typed
+//! [`crate::nn::plan::NetError`]. New code should hold a `NetPlan` (plus
+//! a [`NetScratch`] and [`NetOut`]) directly; see the migration table in
+//! the repository README.
 
 use crate::conv::tensor::Tensor3;
-use crate::nn::layers::{Feature, Layer, NetScratch};
-use std::time::Instant;
+use crate::nn::layers::{Layer, NetScratch};
+use crate::nn::plan::{LayerTiming, NetOut, NetPlan, NetPlanConfig};
 
-/// Per-layer timing record from an instrumented forward pass.
-#[derive(Clone, Debug)]
-pub struct LayerTiming {
-    pub name: &'static str,
-    pub seconds: f64,
-    pub out_dims: (usize, usize, usize),
-}
-
-/// A sequential QNN.
+/// A sequential QNN — a deprecated one-shot wrapper around [`NetPlan`].
 pub struct Network {
-    pub layers: Vec<Layer>,
-    /// Input image dims (h, w, c) the network expects.
-    pub input_dims: (usize, usize, usize),
+    plan: NetPlan,
 }
 
 impl Network {
+    /// Build from raw layers with the default plan config.
+    ///
+    /// Deprecated construction path: panics on an invalid layer chain.
+    /// Use [`NetPlan::build`] for typed errors.
     pub fn new(input_dims: (usize, usize, usize), layers: Vec<Layer>) -> Self {
-        Network { layers, input_dims }
+        let plan = NetPlan::build(input_dims, layers, NetPlanConfig::default())
+            .unwrap_or_else(|e| panic!("Network::new (deprecated shim over NetPlan::build): {e}"));
+        Network { plan }
     }
 
-    /// Forward an f32 image through the network; returns the final
-    /// feature (logits for classifier nets). Allocates fresh scratch;
-    /// hot callers (the batched engine) hold a [`NetScratch`] and use
-    /// [`Network::forward_with`].
-    pub fn forward(&self, image: &Tensor3<f32>) -> Feature {
-        let mut scratch = NetScratch::new();
-        self.forward_with(image, &mut scratch)
+    /// Wrap an already-built plan.
+    pub fn from_plan(plan: NetPlan) -> Self {
+        Network { plan }
     }
 
-    /// Forward reusing a caller-owned scratch arena across layers (and,
-    /// via the caller, across images): the conv and dense GEMM paths
-    /// perform no heap allocation once the arena has grown to the
-    /// largest layer's shapes.
-    pub fn forward_with(&self, image: &Tensor3<f32>, scratch: &mut NetScratch) -> Feature {
-        assert_eq!((image.h, image.w, image.c), self.input_dims, "input dims mismatch");
-        let mut x = Feature::F(image.clone());
-        for layer in &self.layers {
-            x = layer.forward_with(x, scratch);
-        }
-        x
+    /// The underlying network plan.
+    pub fn plan(&self) -> &NetPlan {
+        &self.plan
     }
 
-    /// Forward returning classifier logits.
+    /// Unwrap into the underlying plan (the migration escape hatch).
+    pub fn into_plan(self) -> NetPlan {
+        self.plan
+    }
+
+    /// Input image dims (h, w, c) the network expects.
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        self.plan.input_dims()
+    }
+
+    /// Deprecated one-shot forward: returns the final logits, allocating
+    /// fresh scratch and panicking on a mis-shaped image. Hot callers use
+    /// [`NetPlan::run`] with caller-owned [`NetOut`] + [`NetScratch`].
+    pub fn forward(&self, image: &Tensor3<f32>) -> Vec<f32> {
+        self.logits(image)
+    }
+
+    /// Forward returning classifier logits (one-shot scratch).
     pub fn logits(&self, image: &Tensor3<f32>) -> Vec<f32> {
-        let mut scratch = NetScratch::new();
+        let mut scratch = self.plan.make_scratch();
         self.logits_with(image, &mut scratch)
     }
 
     /// As [`Network::logits`] with caller-owned scratch.
     pub fn logits_with(&self, image: &Tensor3<f32>, scratch: &mut NetScratch) -> Vec<f32> {
-        match self.forward_with(image, scratch) {
-            Feature::F(t) => t.data,
-            Feature::Q(t) => t.data.iter().map(|&v| v as f32).collect(),
-        }
+        let mut out = NetOut::new();
+        self.plan
+            .run(image, &mut out, scratch)
+            .unwrap_or_else(|e| panic!("Network::logits (deprecated shim over NetPlan::run): {e}"));
+        out.logits
     }
 
     /// Argmax class prediction.
     pub fn predict(&self, image: &Tensor3<f32>) -> usize {
-        let logits = self.logits(image);
-        logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+        let mut scratch = self.plan.make_scratch();
+        let mut out = NetOut::new();
+        self.plan
+            .run(image, &mut out, &mut scratch)
+            .unwrap_or_else(|e| panic!("Network::predict (deprecated shim over NetPlan::run): {e}"));
+        out.predicted()
     }
 
-    /// Instrumented forward pass: per-layer wall-clock.
-    pub fn forward_timed(&self, image: &Tensor3<f32>) -> (Feature, Vec<LayerTiming>) {
-        let mut x = Feature::F(image.clone());
-        let mut timings = Vec::with_capacity(self.layers.len());
-        for layer in &self.layers {
-            let t0 = Instant::now();
-            x = layer.forward(x);
-            timings.push(LayerTiming { name: layer.name(), seconds: t0.elapsed().as_secs_f64(), out_dims: x.dims() });
-        }
-        (x, timings)
+    /// Instrumented forward pass: logits plus per-layer wall-clock.
+    pub fn forward_timed(&self, image: &Tensor3<f32>) -> (Vec<f32>, Vec<LayerTiming>) {
+        let mut scratch = self.plan.make_scratch();
+        let mut out = NetOut::new();
+        let mut timings = Vec::new();
+        self.plan
+            .run_timed(image, &mut out, &mut scratch, &mut timings)
+            .unwrap_or_else(|e| panic!("Network::forward_timed (deprecated shim over NetPlan::run_timed): {e}"));
+        (out.logits, timings)
     }
 
-    /// Rough parameter count (low-bit weights count as their storage bits
-    /// / 8 would undersell them; we count logical weights).
     pub fn num_layers(&self) -> usize {
-        self.layers.len()
+        self.plan.num_layers()
     }
 
-    /// Set the GEMM threading config on every layer that runs one (the
-    /// config lands on each layer's [`crate::gemm::GemmPlan`]).
+    /// Set the GEMM threading config on every layer that runs one.
     pub fn set_threading(&mut self, threading: crate::gemm::Threading) {
-        for layer in &mut self.layers {
-            layer.set_threading(threading);
-        }
+        self.plan.set_threading(threading);
     }
 }
 
@@ -135,22 +139,18 @@ mod tests {
         assert_eq!(net.logits(&img), net.logits(&img));
     }
 
-    /// Scratch-reusing forwards match fresh-scratch forwards and keep the
-    /// arena's buffers stable across images at steady state.
+    /// Scratch-reusing forwards match fresh-scratch forwards (the shim's
+    /// contract on top of the plan's own pointer-stability tests).
     #[test]
     fn logits_with_reuses_scratch_across_images() {
         let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
         let net = build_from_config(&cfg, 11);
         let mut rng = Rng::new(5);
         let imgs: Vec<_> = (0..3).map(|_| Tensor3::random(12, 12, 1, &mut rng)).collect();
-        let mut scratch = NetScratch::new();
-        // Warm the arena, then record pointers.
-        assert_eq!(net.logits_with(&imgs[0], &mut scratch), net.logits(&imgs[0]));
-        let acc_ptr = scratch.conv_acc.data.as_ptr();
+        let mut scratch = net.plan().make_scratch();
         for img in &imgs {
             assert_eq!(net.logits_with(img, &mut scratch), net.logits(img));
         }
-        assert_eq!(scratch.conv_acc.data.as_ptr(), acc_ptr, "conv accumulator reallocated at steady state");
     }
 
     #[test]
@@ -159,7 +159,8 @@ mod tests {
         let net = build_from_config(&cfg, 10);
         let mut rng = Rng::new(4);
         let img = Tensor3::random(12, 12, 1, &mut rng);
-        let (_, t) = net.forward_timed(&img);
+        let (logits, t) = net.forward_timed(&img);
         assert_eq!(t.len(), net.num_layers());
+        assert_eq!(logits.len(), 4);
     }
 }

@@ -1,0 +1,651 @@
+//! The plan/execute API at the **network** boundary —
+//! [`crate::gemm::GemmPlan`]'s pack-offline / execute-hot split lifted
+//! from one multiplication to a whole CNN (the level the paper actually
+//! serves: "inference of convolutional and fully connected layers of
+//! TNNs, TBNs, and BNNs").
+//!
+//! [`NetPlan::build`] performs **full static inference over the layer
+//! chain once**: every conv / pool / dense input and output shape, every
+//! quantization-domain handoff (Sign → binary, Ternary → ternary, None →
+//! f32) and every folded-affine length is checked at build time and
+//! surfaces as a typed [`NetError`] — so the hot path carries no
+//! `expect_q` / `expect_f` panics and no per-layer asserts. Weights are
+//! already packed into built-once [`crate::gemm::GemmPlan`]s by layer
+//! construction;
+//! `build` re-targets them at the configured [`Backend`] and applies the
+//! plan-wide [`Threading`] / [`KPanel`] / [`Tile`] knobs without
+//! repacking where possible.
+//!
+//! [`NetPlan::run`] then executes the network into a caller-owned
+//! [`NetOut`] using a [`NetScratch`] whose **two ping-pong activation
+//! arenas** (layer `i` writes arena `i % 2`, reads the other) are sized
+//! at build time to the per-parity layer maxima — so `run` and
+//! [`NetPlan::run_batch`] perform **zero heap allocation after
+//! warm-up**, and return typed [`NetError`]s instead of panicking on
+//! every contract violation a caller can cause.
+//!
+//! ```
+//! use tbgemm::conv::tensor::Tensor3;
+//! use tbgemm::nn::{plan_from_config, NetConfig, NetOut, NetPlanConfig};
+//! use tbgemm::util::Rng;
+//!
+//! // Plan: static shape/domain inference + weights packed once.
+//! let cfg = NetConfig::tiny_tnn(8, 8, 1, 4);
+//! let plan = plan_from_config(&cfg, 42, NetPlanConfig::default())?;
+//!
+//! // Execute: run many images through caller-owned output + scratch.
+//! let (mut out, mut scratch) = (NetOut::new(), plan.make_scratch());
+//! let img = Tensor3::random(8, 8, 1, &mut Rng::new(7));
+//! plan.run(&img, &mut out, &mut scratch)?;
+//! assert_eq!(out.logits.len(), 4);
+//! # Ok::<(), tbgemm::nn::NetError>(())
+//! ```
+
+use crate::conv::tensor::Tensor3;
+use crate::gemm::{Backend, GemmError, KPanel, Threading, Tile};
+use crate::nn::layers::{maxpool2x2_into, ActArena, Domain, Layer, NetScratch};
+
+/// Everything that selects *how* a network plan executes. The weights
+/// themselves live in the layers; these knobs land on every layer's
+/// [`crate::gemm::GemmPlan`] at [`NetPlan::build`] time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetPlanConfig {
+    /// GEMM backend for every layer (Native is the serving path;
+    /// Reference/Emulated turn the whole network into a differential
+    /// oracle — the integer epilogues make logits bit-identical).
+    pub backend: Backend,
+    /// Row-band worker threads for the conv GEMMs (composes with the
+    /// coordinator's replica-level batch splitting).
+    pub threading: Threading,
+    /// Deep-K depth blocking.
+    pub k_panel: KPanel,
+    /// Register tile (e.g. the widened BNN 4×4 / TNN 2×4 tiles).
+    pub tile: Tile,
+}
+
+impl Default for NetPlanConfig {
+    fn default() -> Self {
+        NetPlanConfig {
+            backend: Backend::Native,
+            threading: Threading::Single,
+            k_panel: KPanel::Auto,
+            tile: Tile::Auto,
+        }
+    }
+}
+
+impl NetPlanConfig {
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_threading(mut self, threading: Threading) -> Self {
+        self.threading = threading;
+        self
+    }
+
+    pub fn with_k_panel(mut self, k_panel: KPanel) -> Self {
+        self.k_panel = k_panel;
+        self
+    }
+
+    pub fn with_tile(mut self, tile: Tile) -> Self {
+        self.tile = tile;
+        self
+    }
+}
+
+/// Typed failure of network-plan construction or execution. No entry
+/// point on the network path panics on caller input; every contract
+/// violation surfaces here (at [`NetPlan::build`] for anything static,
+/// at [`NetPlan::run`] only for per-call inputs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetError {
+    /// The image handed to `run` does not match the plan's input dims.
+    InputMismatch { expected: (usize, usize, usize), got: (usize, usize, usize) },
+    /// A layer's required activation domain differs from what the
+    /// previous layer produces (e.g. binary activations into a ternary
+    /// conv, or a quantized layer directly on the f32 input).
+    DomainMismatch { layer: usize, expected: &'static str, got: &'static str },
+    /// The layer chain is structurally invalid at `layer` (shape
+    /// mismatch between consecutive layers, affine length mismatch,
+    /// empty network, degenerate spatial dims, ...).
+    UnsupportedChain { layer: usize, reason: &'static str },
+    /// `run_batch` was handed `got` output slots for `expected` images.
+    OutputMismatch { expected: usize, got: usize },
+    /// A layer's GEMM plan rejected its configuration or execution
+    /// (e.g. repacking for a new backend failed).
+    Gemm { layer: usize, error: GemmError },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::InputMismatch { expected, got } => {
+                write!(f, "input dims mismatch: plan expects {expected:?}, got {got:?}")
+            }
+            NetError::DomainMismatch { layer, expected, got } => {
+                write!(f, "layer {layer}: expects {expected} activations, got {got}")
+            }
+            NetError::UnsupportedChain { layer, reason } => {
+                write!(f, "layer {layer}: unsupported layer chain: {reason}")
+            }
+            NetError::OutputMismatch { expected, got } => {
+                write!(f, "output batch mismatch: {expected} images but {got} output slots")
+            }
+            NetError::Gemm { layer, error } => write!(f, "layer {layer}: GEMM plan error: {error}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NetError::Gemm { error, .. } => Some(error),
+            _ => None,
+        }
+    }
+}
+
+/// Caller-owned output of a network run: the classifier logits, resized
+/// in place (steady state: no reallocation).
+#[derive(Clone, Debug, Default)]
+pub struct NetOut {
+    pub logits: Vec<f32>,
+}
+
+impl NetOut {
+    pub fn new() -> Self {
+        NetOut { logits: Vec::new() }
+    }
+
+    /// Argmax class prediction (0 for empty logits).
+    pub fn predicted(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in self.logits.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Per-layer timing record from an instrumented [`NetPlan::run_timed`].
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub name: &'static str,
+    pub seconds: f64,
+    pub out_dims: (usize, usize, usize),
+}
+
+/// Statically inferred per-layer output info (computed once at build).
+#[derive(Clone, Copy, Debug)]
+struct Stage {
+    out_dims: (usize, usize, usize),
+    out_domain: Domain,
+}
+
+/// A built-once network plan: the layer chain with statically verified
+/// shapes/domains, packed weights, and a precomputed scratch layout.
+/// See the [module docs](self) for the API story.
+pub struct NetPlan {
+    layers: Vec<Layer>,
+    input_dims: (usize, usize, usize),
+    stages: Vec<Stage>,
+    cfg: NetPlanConfig,
+    /// Per-parity ping-pong arena maxima (elements), quantized / f32.
+    max_q: [usize; 2],
+    max_f: [usize; 2],
+    /// Conv accumulator / im2col / dense-flatten maxima (elements).
+    max_conv_acc: usize,
+    max_im2col: usize,
+    max_dense_flat: usize,
+}
+
+impl NetPlan {
+    /// Build a plan over `layers` for images of `input_dims`, verifying
+    /// the whole chain statically and applying `cfg` to every layer's
+    /// GEMM plan. All shape/domain errors a misassembled network can
+    /// produce surface here, once — never in the hot path.
+    pub fn build(
+        input_dims: (usize, usize, usize),
+        mut layers: Vec<Layer>,
+        cfg: NetPlanConfig,
+    ) -> Result<NetPlan, NetError> {
+        if layers.is_empty() {
+            return Err(NetError::UnsupportedChain { layer: 0, reason: "network has no layers" });
+        }
+        let quantized = "quantized (binary/ternary)";
+        let (mut h, mut w, mut c) = input_dims;
+        let mut domain = Domain::F32;
+        let mut stages = Vec::with_capacity(layers.len());
+        let mut max_q = [0usize; 2];
+        let mut max_f = [0usize; 2];
+        let (mut max_conv_acc, mut max_im2col, mut max_dense_flat) = (0usize, 0usize, 0usize);
+        for (i, layer) in layers.iter_mut().enumerate() {
+            layer
+                .configure_gemm(cfg.backend, cfg.threading, cfg.k_panel, cfg.tile)
+                .map_err(|error| NetError::Gemm { layer: i, error })?;
+            let (out_dims, out_domain) = match &*layer {
+                Layer::InputQuant(l) => {
+                    if domain != Domain::F32 {
+                        return Err(NetError::DomainMismatch {
+                            layer: i,
+                            expected: "f32",
+                            got: domain.label(),
+                        });
+                    }
+                    let out = l.act.out_domain();
+                    if out == Domain::F32 {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "input quantizer must produce a quantized domain",
+                        });
+                    }
+                    ((h, w, c), out)
+                }
+                Layer::QConv(l) => {
+                    let required = conv_domain(l.conv.kind);
+                    if domain != required {
+                        return Err(NetError::DomainMismatch {
+                            layer: i,
+                            expected: required.label(),
+                            got: domain.label(),
+                        });
+                    }
+                    if c != l.conv.c_in {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "conv input channel count differs from the packed weights",
+                        });
+                    }
+                    if l.scale.len() != l.conv.c_out || l.bias.len() != l.conv.c_out {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "conv affine length differs from output channels",
+                        });
+                    }
+                    let (oh, ow) = l.conv.params.out_dims(h, w);
+                    if oh == 0 || ow == 0 {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "conv output is empty for this input size",
+                        });
+                    }
+                    max_conv_acc = max_conv_acc.max(oh * ow * l.conv.c_out);
+                    max_im2col = max_im2col.max(oh * ow * l.conv.params.depth(l.conv.c_in));
+                    ((oh, ow, l.conv.c_out), l.act.out_domain())
+                }
+                Layer::MaxPool2 => {
+                    if !domain.is_quantized() {
+                        return Err(NetError::DomainMismatch {
+                            layer: i,
+                            expected: quantized,
+                            got: domain.label(),
+                        });
+                    }
+                    if h < 2 || w < 2 {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "2x2 max-pool needs height and width of at least 2",
+                        });
+                    }
+                    ((h / 2, w / 2, c), domain)
+                }
+                Layer::QDense(l) => {
+                    let required = conv_domain(l.kind);
+                    if domain != required {
+                        return Err(NetError::DomainMismatch {
+                            layer: i,
+                            expected: required.label(),
+                            got: domain.label(),
+                        });
+                    }
+                    if h * w * c != l.in_features {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "dense input size differs from the packed weights",
+                        });
+                    }
+                    if l.scale.len() != l.out_features || l.bias.len() != l.out_features {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "dense affine length differs from output features",
+                        });
+                    }
+                    max_dense_flat = max_dense_flat.max(l.in_features);
+                    ((1, 1, l.out_features), l.act.out_domain())
+                }
+                Layer::DenseF32(l) => {
+                    if h * w * c != l.weights.rows {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "f32 head input size differs from its weights",
+                        });
+                    }
+                    if l.bias.len() != l.weights.cols {
+                        return Err(NetError::UnsupportedChain {
+                            layer: i,
+                            reason: "f32 head bias length differs from output features",
+                        });
+                    }
+                    if domain.is_quantized() && i > 0 {
+                        // The head widens low-bit input into the *read*
+                        // arena's f32 buffer before the matmul.
+                        let r = (i + 1) % 2;
+                        max_f[r] = max_f[r].max(h * w * c);
+                    }
+                    ((1, 1, l.weights.cols), Domain::F32)
+                }
+            };
+            let elems = out_dims.0 * out_dims.1 * out_dims.2;
+            let parity = i % 2;
+            if out_domain.is_quantized() {
+                max_q[parity] = max_q[parity].max(elems);
+            } else {
+                max_f[parity] = max_f[parity].max(elems);
+            }
+            stages.push(Stage { out_dims, out_domain });
+            (h, w, c) = out_dims;
+            domain = out_domain;
+        }
+        Ok(NetPlan {
+            layers,
+            input_dims,
+            stages,
+            cfg,
+            max_q,
+            max_f,
+            max_conv_acc,
+            max_im2col,
+            max_dense_flat,
+        })
+    }
+
+    /// The plan's execution config.
+    pub fn config(&self) -> NetPlanConfig {
+        self.cfg
+    }
+
+    /// Input image dims `(h, w, c)` the plan expects.
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        self.input_dims
+    }
+
+    /// Number of layers in the chain.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Length of the logits vector every run produces.
+    pub fn out_features(&self) -> usize {
+        self.stages.last().map(|s| s.out_dims.0 * s.out_dims.1 * s.out_dims.2).unwrap_or(0)
+    }
+
+    /// Statically inferred output dims of layer `i`.
+    pub fn stage_dims(&self, i: usize) -> Option<(usize, usize, usize)> {
+        self.stages.get(i).map(|s| s.out_dims)
+    }
+
+    /// A scratch arena pre-sized to this plan's layout: both ping-pong
+    /// activation arenas at their per-parity maxima plus the conv /
+    /// dense GEMM buffers, so even the *first* run performs no
+    /// activation-arena allocation (the GEMM bit-packing arenas inside
+    /// [`crate::gemm::GemmScratch`] still grow once, on warm-up).
+    pub fn make_scratch(&self) -> NetScratch {
+        let mut s = NetScratch::new();
+        for (parity, arena) in s.arenas.iter_mut().enumerate() {
+            arena.q.data.reserve(self.max_q[parity]);
+            arena.f.data.reserve(self.max_f[parity]);
+        }
+        s.conv_acc.data.reserve(self.max_conv_acc);
+        s.conv.reserve(self.max_im2col);
+        s.dense.reserve(self.max_dense_flat);
+        s
+    }
+
+    /// Re-target the per-GEMM row-band threading without repacking
+    /// (composes with the coordinator's replica-level parallelism).
+    pub fn set_threading(&mut self, threading: Threading) {
+        self.cfg.threading = threading;
+        for layer in &mut self.layers {
+            layer.set_threading(threading);
+        }
+    }
+
+    /// Execute the network on one image into the caller-owned `out`,
+    /// reusing `scratch`. Zero heap allocation after warm-up; the only
+    /// run-time error a caller can cause is [`NetError::InputMismatch`]
+    /// (everything else was verified at build).
+    pub fn run(&self, image: &Tensor3<f32>, out: &mut NetOut, scratch: &mut NetScratch) -> Result<(), NetError> {
+        self.run_inner(image, out, scratch, None)
+    }
+
+    /// As [`NetPlan::run`], recording per-layer wall-clock into
+    /// `timings` (cleared first).
+    pub fn run_timed(
+        &self,
+        image: &Tensor3<f32>,
+        out: &mut NetOut,
+        scratch: &mut NetScratch,
+        timings: &mut Vec<LayerTiming>,
+    ) -> Result<(), NetError> {
+        self.run_inner(image, out, scratch, Some(timings))
+    }
+
+    /// Execute the network on a batch of images, one output slot per
+    /// image (`outs.len()` must equal `images.len()`), sharing one
+    /// scratch across the whole batch.
+    pub fn run_batch(
+        &self,
+        images: &[Tensor3<f32>],
+        outs: &mut [NetOut],
+        scratch: &mut NetScratch,
+    ) -> Result<(), NetError> {
+        if images.len() != outs.len() {
+            return Err(NetError::OutputMismatch { expected: images.len(), got: outs.len() });
+        }
+        for (image, out) in images.iter().zip(outs.iter_mut()) {
+            self.run(image, out, scratch)?;
+        }
+        Ok(())
+    }
+
+    fn run_inner(
+        &self,
+        image: &Tensor3<f32>,
+        out: &mut NetOut,
+        scratch: &mut NetScratch,
+        mut timings: Option<&mut Vec<LayerTiming>>,
+    ) -> Result<(), NetError> {
+        let got = (image.h, image.w, image.c);
+        if got != self.input_dims {
+            return Err(NetError::InputMismatch { expected: self.input_dims, got });
+        }
+        if let Some(ts) = timings.as_mut() {
+            ts.clear();
+        }
+        let NetScratch { conv, dense, conv_acc, arenas } = scratch;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let t0 = timings.is_some().then(std::time::Instant::now);
+            let (dst, src) = arena_pair(arenas, i % 2);
+            match layer {
+                Layer::InputQuant(l) => {
+                    let f_in = if i == 0 { image } else { &src.f };
+                    l.forward_into(f_in, &mut dst.q);
+                }
+                Layer::QConv(l) => {
+                    if i == 0 {
+                        // Build rejects quantized layers on the f32
+                        // input; stay total (and panic-free) regardless.
+                        return Err(quantized_on_input(i));
+                    }
+                    l.forward_into(&src.q, conv, conv_acc, dst)
+                        .map_err(|error| NetError::Gemm { layer: i, error })?;
+                }
+                Layer::MaxPool2 => {
+                    if i == 0 {
+                        return Err(quantized_on_input(i));
+                    }
+                    maxpool2x2_into(&src.q, &mut dst.q);
+                }
+                Layer::QDense(l) => {
+                    if i == 0 {
+                        return Err(quantized_on_input(i));
+                    }
+                    l.forward_into(&src.q, dense, dst)
+                        .map_err(|error| NetError::Gemm { layer: i, error })?;
+                }
+                Layer::DenseF32(l) => {
+                    let result = if i == 0 {
+                        l.forward_into(image, &mut dst.f)
+                    } else if self.stages[i - 1].out_domain.is_quantized() {
+                        // Widen the low-bit activations into the read
+                        // arena's f32 buffer (idle at this point), then
+                        // run the full-precision head from there.
+                        src.f.resize_to(src.q.h, src.q.w, src.q.c);
+                        for (o, &v) in src.f.data.iter_mut().zip(&src.q.data) {
+                            *o = v as f32;
+                        }
+                        l.forward_into(&src.f, &mut dst.f)
+                    } else {
+                        l.forward_into(&src.f, &mut dst.f)
+                    };
+                    result.map_err(|error| NetError::Gemm { layer: i, error })?;
+                }
+            }
+            if let (Some(ts), Some(t0)) = (timings.as_mut(), t0) {
+                ts.push(LayerTiming {
+                    name: layer.name(),
+                    seconds: t0.elapsed().as_secs_f64(),
+                    out_dims: self.stages[i].out_dims,
+                });
+            }
+        }
+        // Copy the final activation into the caller-owned logits buffer
+        // (i8 domains widen to f32), reusing its capacity.
+        let last = (self.layers.len() - 1) % 2;
+        let arena = &arenas[last];
+        out.logits.clear();
+        match self.stages[self.layers.len() - 1].out_domain {
+            Domain::F32 => out.logits.extend_from_slice(&arena.f.data),
+            _ => out.logits.extend(arena.q.data.iter().map(|&v| v as f32)),
+        }
+        Ok(())
+    }
+}
+
+/// The activation domain a low-bit kind consumes.
+fn conv_domain(kind: crate::conv::conv2d::ConvKind) -> Domain {
+    match kind {
+        crate::conv::conv2d::ConvKind::Bnn => Domain::Binary,
+        crate::conv::conv2d::ConvKind::Tnn | crate::conv::conv2d::ConvKind::Tbn => Domain::Ternary,
+    }
+}
+
+fn quantized_on_input(layer: usize) -> NetError {
+    NetError::DomainMismatch { layer, expected: "quantized (binary/ternary)", got: "f32" }
+}
+
+/// Split the ping-pong pair into (write arena `w`, read arena `1 - w`).
+fn arena_pair(arenas: &mut [ActArena; 2], w: usize) -> (&mut ActArena, &mut ActArena) {
+    let (a, b) = arenas.split_at_mut(1);
+    if w == 0 {
+        (&mut a[0], &mut b[0])
+    } else {
+        (&mut b[0], &mut a[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::builder::{build_layers, plan_from_config, NetConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn build_infers_stage_dims() {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        let plan = plan_from_config(&cfg, 7, NetPlanConfig::default()).expect("plan");
+        // input_quant → conv(8) → pool → dense(4)
+        assert_eq!(plan.num_layers(), 4);
+        assert_eq!(plan.stage_dims(0), Some((12, 12, 1)));
+        assert_eq!(plan.stage_dims(1), Some((12, 12, 8)));
+        assert_eq!(plan.stage_dims(2), Some((6, 6, 8)));
+        assert_eq!(plan.stage_dims(3), Some((1, 1, 4)));
+        assert_eq!(plan.out_features(), 4);
+        assert_eq!(plan.input_dims(), (12, 12, 1));
+    }
+
+    #[test]
+    fn empty_chain_is_rejected() {
+        assert_eq!(
+            NetPlan::build((8, 8, 1), Vec::new(), NetPlanConfig::default()).err(),
+            Some(NetError::UnsupportedChain { layer: 0, reason: "network has no layers" })
+        );
+    }
+
+    #[test]
+    fn run_matches_per_seed_and_validates_input() {
+        let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+        let plan = plan_from_config(&cfg, 11, NetPlanConfig::default()).expect("plan");
+        let mut rng = Rng::new(5);
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        let (mut out, mut scratch) = (NetOut::new(), plan.make_scratch());
+        plan.run(&img, &mut out, &mut scratch).expect("run");
+        let first = out.logits.clone();
+        assert_eq!(first.len(), 3);
+        plan.run(&img, &mut out, &mut scratch).expect("run");
+        assert_eq!(out.logits, first, "deterministic across runs");
+        let wrong = Tensor3::random(9, 8, 1, &mut rng);
+        assert_eq!(
+            plan.run(&wrong, &mut out, &mut scratch),
+            Err(NetError::InputMismatch { expected: (8, 8, 1), got: (9, 8, 1) })
+        );
+    }
+
+    #[test]
+    fn run_timed_reports_every_layer() {
+        let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+        let plan = plan_from_config(&cfg, 11, NetPlanConfig::default()).expect("plan");
+        let mut rng = Rng::new(6);
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        let (mut out, mut scratch) = (NetOut::new(), plan.make_scratch());
+        let mut timings = Vec::new();
+        plan.run_timed(&img, &mut out, &mut scratch, &mut timings).expect("run");
+        assert_eq!(timings.len(), plan.num_layers());
+        assert_eq!(timings[0].name, "input_quant");
+    }
+
+    #[test]
+    fn domain_handoff_is_checked_at_build() {
+        use crate::conv::conv2d::ConvKind;
+        // A BNN config whose input quantizer produces *ternary*
+        // activations: rejected at layer 1 (the binary conv), at build.
+        let cfg = NetConfig {
+            input: (8, 8, 1),
+            layers: vec![
+                crate::nn::builder::LayerSpec::InputQuant { ternary: true, delta: 0.4 },
+                crate::nn::builder::LayerSpec::Conv {
+                    kind: ConvKind::Bnn,
+                    c_out: 4,
+                    hk: 3,
+                    wk: 3,
+                    stride: 1,
+                    pad: 1,
+                    ternary_out: false,
+                },
+            ],
+            delta: 0.4,
+        };
+        let (input, layers) = build_layers(&cfg, 3);
+        assert_eq!(
+            NetPlan::build(input, layers, NetPlanConfig::default()).err(),
+            Some(NetError::DomainMismatch { layer: 1, expected: "binary", got: "ternary" })
+        );
+    }
+}

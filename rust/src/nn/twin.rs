@@ -185,6 +185,32 @@ impl F32Twin {
     }
 }
 
+/// Top-1 agreement between a built [`crate::nn::plan::NetPlan`] and the
+/// f32 twin over a probe set — the zero-alloc form of [`agreement`] for
+/// the QNN side: one plan scratch + output is shared across all probes,
+/// and a mis-shaped probe surfaces as a typed
+/// [`crate::nn::plan::NetError`] instead of a panic. An empty probe set
+/// is vacuous agreement (1.0).
+pub fn plan_agreement(
+    plan: &crate::nn::plan::NetPlan,
+    twin: &F32Twin,
+    probes: &[Tensor3<f32>],
+) -> Result<f64, crate::nn::plan::NetError> {
+    if probes.is_empty() {
+        return Ok(1.0);
+    }
+    let mut scratch = plan.make_scratch();
+    let mut out = crate::nn::plan::NetOut::new();
+    let mut same = 0usize;
+    for img in probes {
+        plan.run(img, &mut out, &mut scratch)?;
+        if out.predicted() == twin.predict(img) {
+            same += 1;
+        }
+    }
+    Ok(same as f64 / probes.len() as f64)
+}
+
 /// Top-1 agreement between two classifiers over a probe set.
 pub fn agreement(
     qnn_predict: impl Fn(&Tensor3<f32>) -> usize,
@@ -230,6 +256,24 @@ mod tests {
         assert_eq!(self_agree, 1.0);
         let cross = agreement(|i| qnn.predict(i), |i| twin.predict(i), &probes);
         assert!((0.0..=1.0).contains(&cross));
+    }
+
+    /// `plan_agreement` equals the closure-based metric over the same
+    /// probes, and self-agreement through the plan is exact.
+    #[test]
+    fn plan_agreement_matches_closure_form() {
+        use crate::nn::builder::plan_from_config;
+        use crate::nn::plan::NetPlanConfig;
+        let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 16, 16, 1, 10);
+        let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
+        let qnn = build_from_config(&cfg, 0xCAFE);
+        let twin = build_f32_twin(&cfg, 0xCAFE);
+        let mut rng = Rng::new(4);
+        let probes: Vec<Tensor3<f32>> = (0..10).map(|_| Tensor3::random(16, 16, 1, &mut rng)).collect();
+        let via_plan = plan_agreement(&plan, &twin, &probes).expect("probes match plan input");
+        let via_closures = agreement(|i| qnn.predict(i), |i| twin.predict(i), &probes);
+        assert!((via_plan - via_closures).abs() < 1e-12);
+        assert_eq!(plan_agreement(&plan, &twin, &[]).expect("vacuous"), 1.0);
     }
 
     #[test]

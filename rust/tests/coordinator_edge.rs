@@ -1,28 +1,42 @@
-//! Edge-case tests for the batching coordinator and the native engine:
+//! Edge-case tests for the batching coordinator and the replica pool:
 //! degenerate batch sizes, shutdown with an empty or partially drained
-//! queue, dropped reply channels, and thread-count invariance of the
-//! engine's results.
+//! queue, dropped reply channels, replica-count invariance of the served
+//! logits, and graceful (typed, non-panicking) submission to a server
+//! whose worker has died.
 
 use std::time::Duration;
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
-use tbgemm::gemm::native::Threading;
-use tbgemm::nn::{build_from_config, NetConfig};
+use tbgemm::coordinator::{
+    BatcherConfig, InferenceEngine, InferenceServer, NativeEngine, ServerClosed,
+};
+use tbgemm::gemm::Threading;
+use tbgemm::nn::{plan_from_config, NetConfig, NetPlanConfig};
 use tbgemm::util::Rng;
 
-fn server(max_batch: usize, threading: Threading) -> InferenceServer {
-    let net = build_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 21);
-    let engine = Box::new(NativeEngine::new(net, "edge").with_threading(threading));
-    InferenceServer::start(engine, BatcherConfig { max_batch, max_wait: Duration::from_millis(1) }, 64)
+fn server(max_batch: usize, threading: Threading, replicas: usize) -> InferenceServer {
+    let plan = plan_from_config(
+        &NetConfig::tiny_tnn(8, 8, 1, 3),
+        21,
+        NetPlanConfig::default().with_threading(threading),
+    )
+    .expect("plan");
+    let engine = Box::new(NativeEngine::new(plan, "edge"));
+    InferenceServer::start(
+        engine,
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+        64,
+        replicas,
+    )
 }
 
 /// `max_batch = 1` degenerates to strict one-request batches: every
 /// response reports batch_size 1 and every request is answered.
 #[test]
 fn max_batch_one_serves_singletons() {
-    let srv = server(1, Threading::Single);
+    let srv = server(1, Threading::Single, 1);
     let mut rng = Rng::new(31);
-    let pending: Vec<_> = (0..12).map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng))).collect();
+    let pending: Vec<_> =
+        (0..12).map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up")).collect();
     for rx in pending {
         let resp = rx.recv().expect("response");
         assert_eq!(resp.batch_size, 1);
@@ -37,26 +51,32 @@ fn max_batch_one_serves_singletons() {
 /// cleanly (the worker is blocked on the empty channel at that moment).
 #[test]
 fn shutdown_on_empty_channel_is_clean() {
-    let srv = server(4, Threading::Single);
+    let srv = server(4, Threading::Single, 2);
     let m = srv.shutdown();
     assert_eq!(m.requests, 0);
     assert_eq!(m.batches, 0);
 }
 
 /// Shutdown races a filling batch: requests submitted immediately before
-/// shutdown are all drained and answered, none dropped — the batcher's
-/// channel close lands mid-batch-collection.
+/// shutdown are all drained and answered across the replica pool, none
+/// dropped — the batcher's channel close lands mid-batch-collection.
 #[test]
 fn shutdown_mid_batch_drains_pending_requests() {
-    for n in [1usize, 3, 7] {
-        let srv = server(8, Threading::Single);
-        let mut rng = Rng::new(32);
-        let pending: Vec<_> = (0..n).map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng))).collect();
-        let m = srv.shutdown(); // joins the worker: everything drains first
-        assert_eq!(m.requests, n as u64, "n={n}");
-        for rx in pending {
-            let resp = rx.recv().expect("drained response");
-            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+    for replicas in [1usize, 4] {
+        for n in [1usize, 3, 7] {
+            let srv = server(8, Threading::Single, replicas);
+            let mut rng = Rng::new(32);
+            let pending: Vec<_> = (0..n)
+                .map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up"))
+                .collect();
+            let m = srv.shutdown(); // joins the worker: everything drains first
+            assert_eq!(m.requests, n as u64, "replicas={replicas} n={n}");
+            assert_eq!(m.replica_requests.iter().sum::<u64>(), n as u64, "replicas={replicas} n={n}");
+            for rx in pending {
+                let resp = rx.recv().expect("drained response");
+                assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+                assert_eq!(resp.logits.len(), 3);
+            }
         }
     }
 }
@@ -65,10 +85,10 @@ fn shutdown_mid_batch_drains_pending_requests() {
 /// affect other requests in the same batch.
 #[test]
 fn dropped_reply_receiver_does_not_stall_worker() {
-    let srv = server(4, Threading::Single);
+    let srv = server(4, Threading::Single, 2);
     let mut rng = Rng::new(33);
-    drop(srv.submit(Tensor3::random(8, 8, 1, &mut rng))); // abandoned
-    let resp = srv.infer(Tensor3::random(8, 8, 1, &mut rng));
+    drop(srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up")); // abandoned
+    let resp = srv.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
     assert_eq!(resp.logits.len(), 3);
     let m = srv.shutdown();
     assert_eq!(m.requests, 2);
@@ -81,14 +101,82 @@ fn dropped_reply_receiver_does_not_stall_worker() {
 fn engine_logits_identical_across_thread_counts() {
     let mut rng = Rng::new(34);
     let images: Vec<_> = (0..6).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
-    let single = server(4, Threading::Fixed(1));
-    let auto = server(4, Threading::Auto);
+    let single = server(4, Threading::Fixed(1), 1);
+    let auto = server(4, Threading::Auto, 1);
     for img in &images {
-        let a = single.infer(img.clone());
-        let b = auto.infer(img.clone());
+        let a = single.infer(img.clone()).expect("server up");
+        let b = auto.infer(img.clone()).expect("server up");
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.predicted, b.predicted);
     }
     single.shutdown();
     auto.shutdown();
+}
+
+/// The replica-pool acceptance test: serving the same request stream
+/// with `replicas = 1` and `replicas = 4` yields bit-identical logits
+/// per request id, and the pool's metrics account for every request.
+#[test]
+fn replica_pool_logits_bit_identical_to_single() {
+    let mut rng = Rng::new(35);
+    let images: Vec<_> = (0..24).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+    let mut per_count: Vec<Vec<Vec<f32>>> = Vec::new();
+    for replicas in [1usize, 4] {
+        let srv = server(8, Threading::Single, replicas);
+        let pending: Vec<_> =
+            images.iter().map(|img| srv.submit(img.clone()).expect("server up")).collect();
+        let mut responses: Vec<_> = pending.into_iter().map(|rx| rx.recv().expect("response")).collect();
+        responses.sort_by_key(|r| r.id);
+        per_count.push(responses.into_iter().map(|r| r.logits).collect());
+        let m = srv.shutdown();
+        assert_eq!(m.requests, images.len() as u64);
+        assert_eq!(m.replica_requests.len(), replicas);
+        assert_eq!(m.replica_requests.iter().sum::<u64>(), images.len() as u64);
+    }
+    assert_eq!(per_count[0], per_count[1], "replicas=4 logits differ from replicas=1");
+}
+
+/// An engine that dies mid-serve must not take the caller down:
+/// `submit` / `infer` return `ServerClosed` (typed, no panic) once the
+/// worker is gone, and `shutdown` still joins cleanly.
+#[test]
+fn dead_worker_surfaces_as_server_closed() {
+    struct PanickingEngine;
+    impl InferenceEngine for PanickingEngine {
+        fn infer_batch(&mut self, _images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
+            panic!("engine crashed (test)");
+        }
+        fn input_dims(&self) -> (usize, usize, usize) {
+            (8, 8, 1)
+        }
+        fn name(&self) -> String {
+            "panicking".into()
+        }
+        fn replicate(&self) -> Box<dyn InferenceEngine> {
+            Box::new(PanickingEngine)
+        }
+    }
+
+    let srv = InferenceServer::start(
+        Box::new(PanickingEngine),
+        BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+        64,
+        1,
+    );
+    let mut rng = Rng::new(36);
+    // The first request kills the worker; its reply channel is dropped,
+    // so `infer` reports ServerClosed rather than hanging or panicking.
+    assert_eq!(srv.infer(Tensor3::random(8, 8, 1, &mut rng)), Err(ServerClosed));
+    // Once the worker is gone the queue disconnects; within a bounded
+    // number of attempts `submit` itself returns ServerClosed.
+    let mut saw_closed = false;
+    for _ in 0..100 {
+        if srv.submit(Tensor3::random(8, 8, 1, &mut rng)).is_err() {
+            saw_closed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(saw_closed, "submit never reported ServerClosed after worker death");
+    srv.shutdown(); // joins the panicked worker without propagating
 }

@@ -98,12 +98,19 @@ fn tnn_plan_matches_reference() {
     check_shrink(cfg(0x20, 24), "tnn plan vs oracle", shape, |m, n, k, rng| {
         let th = threads(rng);
         let kp = k_panel(rng, k);
+        // Randomize the register tile like the BNN case: Auto, the
+        // widened 2×4 Wide tile, or the seed Rowdot baseline.
+        let tile = [Tile::Auto, Tile::Wide, Tile::Auto, Tile::Rowdot][rng.below(4)];
         let a = MatI8::random_ternary(m, k, rng);
         let b = MatI8::random_ternary(k, n, rng);
         let want = reference::gemm_i8(&a, &b);
-        let plan = native_plan(Kind::Tnn, Weights::I8(&b), th, kp, Tile::Auto);
+        let plan = native_plan(Kind::Tnn, Weights::I8(&b), th, kp, tile);
         let out = run(&plan, Lhs::I8(&a));
-        assert_eq!(out.as_i32().expect("i32 out").data, want.data, "m={m} n={n} k={k} th={th:?} kp={kp:?}");
+        assert_eq!(
+            out.as_i32().expect("i32 out").data,
+            want.data,
+            "m={m} n={n} k={k} th={th:?} kp={kp:?} tile={tile:?}"
+        );
     });
 }
 

@@ -70,25 +70,28 @@ fn all_three_network_kinds_are_live() {
 }
 
 /// Coordinator end-to-end: responses match direct engine outputs
-/// (the batcher must not permute or corrupt request/response pairing).
+/// (the batcher and the replica pool must not permute or corrupt
+/// request/response pairing).
 #[test]
 fn coordinator_matches_direct_inference() {
     let cfg = NetConfig::tiny_tnn(8, 8, 1, 4);
     let direct = build_from_config(&cfg, 77);
-    let served = build_from_config(&cfg, 77);
+    let served = build_from_config(&cfg, 77).into_plan();
     let server = InferenceServer::start(
         Box::new(NativeEngine::new(served, "it")),
         BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
         32,
+        2,
     );
     let mut rng = Rng::new(0x4444);
     let images: Vec<Tensor3<f32>> = (0..16).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
-    let pending: Vec<_> = images.iter().map(|img| server.submit(img.clone())).collect();
+    let pending: Vec<_> = images.iter().map(|img| server.submit(img.clone()).expect("server up")).collect();
     for (img, rx) in images.iter().zip(pending) {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.logits, direct.logits(img), "batched result differs from direct");
     }
-    server.shutdown();
+    let m = server.shutdown();
+    assert_eq!(m.replica_requests.iter().sum::<u64>(), images.len() as u64);
 }
 
 /// The cost model over real traces predicts the paper's qualitative

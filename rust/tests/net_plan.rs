@@ -1,0 +1,223 @@
+//! Contract tests for the network-level plan/execute API
+//! (`tbgemm::nn::NetPlan`), mirroring `tests/plan_api.rs` one boundary
+//! up: typed `NetError` pinning (every variant constructible from safe
+//! inputs, nothing panics), pack-once / run-many pointer stability on
+//! both ping-pong activation arenas, and whole-network backend
+//! differentials (Native ≡ Reference ≡ Emulated logits, bit-exact).
+
+use tbgemm::conv::conv2d::{ConvKind, ConvParams, LowBitConv};
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::gemm::{Backend, GemmError, Threading};
+use tbgemm::nn::builder::{build_layers, plan_from_config, LayerSpec};
+use tbgemm::nn::{
+    Activation, InputQuant, Layer, NetConfig, NetError, NetOut, NetPlan, NetPlanConfig, QConv2d,
+};
+use tbgemm::util::mat::MatI8;
+use tbgemm::util::Rng;
+
+fn tnn_conv_layer(rng: &mut Rng, c_in: usize, c_out: usize) -> Layer {
+    let p = ConvParams { hk: 3, wk: 3, stride: 1, pad: 1 };
+    let w = MatI8::random_ternary(p.depth(c_in), c_out, rng);
+    Layer::QConv(QConv2d {
+        conv: LowBitConv::new(ConvKind::Tnn, p, c_in, &w),
+        scale: vec![0.1; c_out],
+        bias: vec![0.0; c_out],
+        act: Activation::Ternary { delta: 0.3 },
+    })
+}
+
+// ---- typed NetError pinning --------------------------------------------
+
+/// Every `NetError` variant is constructible from safe inputs, and none
+/// of the paths panic (the `plan_api`-style pinning test the replica
+/// pool and serving path build on).
+#[test]
+fn net_error_variants_are_typed_and_pinned() {
+    let mut rng = Rng::new(0xA0);
+
+    // UnsupportedChain: empty network.
+    assert_eq!(
+        NetPlan::build((8, 8, 1), Vec::new(), NetPlanConfig::default()).err(),
+        Some(NetError::UnsupportedChain { layer: 0, reason: "network has no layers" })
+    );
+
+    // DomainMismatch: a quantized conv directly on the f32 input.
+    let layers = vec![tnn_conv_layer(&mut rng, 1, 4)];
+    match NetPlan::build((8, 8, 1), layers, NetPlanConfig::default()) {
+        Err(NetError::DomainMismatch { layer: 0, expected, got }) => {
+            assert_eq!((expected, got), ("ternary", "f32"));
+        }
+        other => panic!("expected DomainMismatch, got {:?}", other.err()),
+    }
+
+    // UnsupportedChain: conv channel count breaks mid-chain.
+    let layers = vec![
+        Layer::InputQuant(InputQuant { act: Activation::Ternary { delta: 0.4 } }),
+        tnn_conv_layer(&mut rng, 2, 4), // input has 1 channel, conv expects 2
+    ];
+    match NetPlan::build((8, 8, 1), layers, NetPlanConfig::default()) {
+        Err(NetError::UnsupportedChain { layer: 1, reason }) => {
+            assert!(reason.contains("channel"), "reason: {reason}");
+        }
+        other => panic!("expected UnsupportedChain, got {:?}", other.err()),
+    }
+
+    // InputMismatch: a run-time image of the wrong shape.
+    let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+    let plan = plan_from_config(&cfg, 1, NetPlanConfig::default()).expect("plan");
+    let (mut out, mut scratch) = (NetOut::new(), plan.make_scratch());
+    let wrong = Tensor3::random(8, 7, 1, &mut rng);
+    assert_eq!(
+        plan.run(&wrong, &mut out, &mut scratch),
+        Err(NetError::InputMismatch { expected: (8, 8, 1), got: (8, 7, 1) })
+    );
+
+    // OutputMismatch: run_batch with mismatched output slots.
+    let images: Vec<_> = (0..3).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+    let mut outs = vec![NetOut::new(); 2];
+    assert_eq!(
+        plan.run_batch(&images, &mut outs, &mut scratch),
+        Err(NetError::OutputMismatch { expected: 3, got: 2 })
+    );
+
+    // Every variant renders a non-empty, layer-bearing message.
+    for e in [
+        NetError::InputMismatch { expected: (8, 8, 1), got: (1, 1, 1) },
+        NetError::DomainMismatch { layer: 3, expected: "binary", got: "ternary" },
+        NetError::UnsupportedChain { layer: 2, reason: "test" },
+        NetError::OutputMismatch { expected: 4, got: 2 },
+        NetError::Gemm { layer: 1, error: GemmError::EmptyDim { dim: "m" } },
+    ] {
+        assert!(!e.to_string().is_empty());
+    }
+    assert!(NetError::DomainMismatch { layer: 3, expected: "binary", got: "ternary" }
+        .to_string()
+        .contains("layer 3"));
+}
+
+// ---- pack once / run many: ping-pong arena pointer stability -----------
+
+/// After a warm-up run, `run_batch` performs zero heap allocation:
+/// every buffer of **both** ping-pong arenas (plus the conv accumulator)
+/// keeps its pointer across ≥ 3 batches, and the logits match one-shot
+/// fresh-scratch runs bit-for-bit.
+#[test]
+fn run_batch_is_zero_alloc_across_batches() {
+    for kind in [ConvKind::Tnn, ConvKind::Tbn, ConvKind::Bnn] {
+        let cfg = NetConfig::mobile_cnn(kind, 16, 16, 1, 10);
+        let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
+        let mut rng = Rng::new(0xA1);
+        let batches: Vec<Vec<Tensor3<f32>>> = (0..3)
+            .map(|_| (0..4).map(|_| Tensor3::random(16, 16, 1, &mut rng)).collect())
+            .collect();
+        let mut scratch = plan.make_scratch();
+        let mut outs = vec![NetOut::new(); 4];
+
+        // Warm-up batch, then record every arena pointer.
+        plan.run_batch(&batches[0], &mut outs, &mut scratch).expect("warm-up batch");
+        let ptrs = [
+            scratch.arenas[0].q.data.as_ptr() as usize,
+            scratch.arenas[0].f.data.as_ptr() as usize,
+            scratch.arenas[1].q.data.as_ptr() as usize,
+            scratch.arenas[1].f.data.as_ptr() as usize,
+            scratch.conv_acc.data.as_ptr() as usize,
+        ];
+        let out_ptrs: Vec<usize> = outs.iter().map(|o| o.logits.as_ptr() as usize).collect();
+
+        for (b, batch) in batches.iter().enumerate() {
+            plan.run_batch(batch, &mut outs, &mut scratch).expect("steady-state batch");
+            let now = [
+                scratch.arenas[0].q.data.as_ptr() as usize,
+                scratch.arenas[0].f.data.as_ptr() as usize,
+                scratch.arenas[1].q.data.as_ptr() as usize,
+                scratch.arenas[1].f.data.as_ptr() as usize,
+                scratch.conv_acc.data.as_ptr() as usize,
+            ];
+            assert_eq!(now, ptrs, "{kind:?} batch {b}: a ping-pong arena reallocated");
+            let out_now: Vec<usize> = outs.iter().map(|o| o.logits.as_ptr() as usize).collect();
+            assert_eq!(out_now, out_ptrs, "{kind:?} batch {b}: an output buffer reallocated");
+            // Bit-identical to one-shot runs with fresh scratch.
+            for (img, out) in batch.iter().zip(&outs) {
+                let mut fresh = plan.make_scratch();
+                let mut one = NetOut::new();
+                plan.run(img, &mut one, &mut fresh).expect("fresh run");
+                assert_eq!(out.logits, one.logits, "{kind:?} batch {b}");
+            }
+        }
+    }
+}
+
+// ---- whole-network backend differential --------------------------------
+
+/// The same seeded network produces bit-identical logits on all three
+/// GEMM backends: the conv/dense GEMMs are exact integer products on
+/// every backend and the f32 epilogues run in the same order, so the
+/// network boundary inherits the GEMM boundary's differential property.
+#[test]
+fn backends_agree_on_whole_network_logits() {
+    for kind in [ConvKind::Tnn, ConvKind::Tbn, ConvKind::Bnn] {
+        let cfg = NetConfig::tiny_tnn(12, 12, 1, 4);
+        // tiny_tnn is TNN-only; use mobile_cnn for per-kind coverage.
+        let cfg = if kind == ConvKind::Tnn { cfg } else { NetConfig::mobile_cnn(kind, 12, 12, 1, 4) };
+        let mut rng = Rng::new(0xA2);
+        let images: Vec<_> = (0..3).map(|_| Tensor3::random(12, 12, 1, &mut rng)).collect();
+        let mut per_backend: Vec<Vec<Vec<f32>>> = Vec::new();
+        for backend in Backend::ALL {
+            let plan = plan_from_config(&cfg, 0xBEEF, NetPlanConfig::default().with_backend(backend))
+                .expect("plan");
+            assert_eq!(plan.config().backend, backend);
+            let mut scratch = plan.make_scratch();
+            let mut out = NetOut::new();
+            let logits: Vec<Vec<f32>> = images
+                .iter()
+                .map(|img| {
+                    plan.run(img, &mut out, &mut scratch).expect("run");
+                    out.logits.clone()
+                })
+                .collect();
+            per_backend.push(logits);
+        }
+        assert_eq!(per_backend[0], per_backend[1], "{kind:?}: reference vs emulated");
+        assert_eq!(per_backend[1], per_backend[2], "{kind:?}: emulated vs native");
+    }
+}
+
+/// Per-GEMM row-band threading never changes logits through the network
+/// plan (composes with the coordinator's replica splitting).
+#[test]
+fn threading_is_logit_invariant_through_plan() {
+    let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 16, 16, 1, 10);
+    let single = plan_from_config(&cfg, 7, NetPlanConfig::default()).expect("plan");
+    let threaded =
+        plan_from_config(&cfg, 7, NetPlanConfig::default().with_threading(Threading::Fixed(4)))
+            .expect("plan");
+    let mut rng = Rng::new(0xA3);
+    let (mut s1, mut s2) = (single.make_scratch(), threaded.make_scratch());
+    let (mut o1, mut o2) = (NetOut::new(), NetOut::new());
+    for _ in 0..4 {
+        let img = Tensor3::random(16, 16, 1, &mut rng);
+        single.run(&img, &mut o1, &mut s1).expect("run");
+        threaded.run(&img, &mut o2, &mut s2).expect("run");
+        assert_eq!(o1.logits, o2.logits);
+    }
+}
+
+/// `build_layers` + `NetPlan::build` equals `plan_from_config` (the two
+/// construction paths share one realization).
+#[test]
+fn build_layers_and_from_config_agree() {
+    let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+    let (input, layers) = build_layers(&cfg, 21);
+    let a = NetPlan::build(input, layers, NetPlanConfig::default()).expect("plan");
+    let b = plan_from_config(&cfg, 21, NetPlanConfig::default()).expect("plan");
+    let mut rng = Rng::new(0xA4);
+    let img = Tensor3::random(8, 8, 1, &mut rng);
+    let (mut sa, mut sb) = (a.make_scratch(), b.make_scratch());
+    let (mut oa, mut ob) = (NetOut::new(), NetOut::new());
+    a.run(&img, &mut oa, &mut sa).expect("run");
+    b.run(&img, &mut ob, &mut sb).expect("run");
+    assert_eq!(oa.logits, ob.logits);
+    // LayerSpec sanity: the declarative description matches the chain.
+    assert_eq!(cfg.layers.len(), a.num_layers());
+    assert!(matches!(cfg.layers[0], LayerSpec::InputQuant { .. }));
+}

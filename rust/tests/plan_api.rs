@@ -194,56 +194,63 @@ fn plan_reuse_is_zero_alloc_at_steady_state() {
     }
 }
 
-// ---- the widened 4×4 BNN tile ------------------------------------------
+// ---- the widened tiles (BNN 4×4, TNN 2×4) ------------------------------
 
 /// `Tile::Wide` is bit-identical to `Tile::Auto` (and the oracle) on
 /// column counts exercising every 4/2/1-column remainder, with and
-/// without threading, and falls back to the spill kernel on deep K.
+/// without threading, for both widened kinds (BNN 4×4, TNN 2×4), and
+/// falls back to the spill kernel on deep K.
 #[test]
 fn wide_tile_matches_auto_and_oracle() {
     let mut rng = Rng::new(0xE45);
-    for &(m, n, k) in &[
-        (4usize, 4usize, 64usize),
-        (5, 1, 65),
-        (6, 2, 127),
-        (7, 3, 128),
-        (9, 5, 130),
-        (11, 6, 191),
-        (13, 7, 257),
-        (3, 9, 64),
-    ] {
-        let a = MatI8::random_binary(m, k, &mut rng);
-        let b = MatI8::random_binary(k, n, &mut rng);
-        let want = reference::gemm_i8(&a, &b);
-        for th in [Threading::Single, Threading::Fixed(3)] {
-            for tile in [Tile::Auto, Tile::Wide] {
-                let plan = GemmPlan::new(
-                    GemmConfig::native(Kind::Bnn).with_threading(th).with_tile(tile),
-                    Weights::I8(&b),
-                )
-                .expect("plan");
-                let mut out = GemmOut::new_i32();
-                let mut scratch = GemmScratch::new();
-                plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
-                assert_eq!(
-                    out.as_i32().expect("i32 out").data,
-                    want.data,
-                    "m={m} n={n} k={k} th={th:?} tile={tile:?}"
-                );
+    for kind in [Kind::Bnn, Kind::Tnn] {
+        for &(m, n, k) in &[
+            (4usize, 4usize, 64usize),
+            (5, 1, 65),
+            (6, 2, 127),
+            (7, 3, 128),
+            (9, 5, 130),
+            (11, 6, 191),
+            (13, 7, 257),
+            (3, 9, 64),
+        ] {
+            let (a, b) = match kind {
+                Kind::Tnn => (MatI8::random_ternary(m, k, &mut rng), MatI8::random_ternary(k, n, &mut rng)),
+                _ => (MatI8::random_binary(m, k, &mut rng), MatI8::random_binary(k, n, &mut rng)),
+            };
+            let want = reference::gemm_i8(&a, &b);
+            for th in [Threading::Single, Threading::Fixed(3)] {
+                for tile in [Tile::Auto, Tile::Wide] {
+                    let plan = GemmPlan::new(
+                        GemmConfig::native(kind).with_threading(th).with_tile(tile),
+                        Weights::I8(&b),
+                    )
+                    .expect("plan");
+                    let mut out = GemmOut::new_i32();
+                    let mut scratch = GemmScratch::new();
+                    plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
+                    assert_eq!(
+                        out.as_i32().expect("i32 out").data,
+                        want.data,
+                        "{kind:?} m={m} n={n} k={k} th={th:?} tile={tile:?}"
+                    );
+                }
             }
         }
     }
-    // Deep K (> 32767): Wide falls back to the K-paneled 4×2 kernel and
-    // stays exact.
+    // Deep K (> 32767): Wide falls back to the K-paneled spill kernels
+    // and stays exact (all-ones inputs: every output equals K exactly).
     let k = 32_768;
-    let a = MatI8::from_fn(2, k, |_, _| 1);
-    let b = MatI8::from_fn(k, 5, |_, _| 1);
-    let plan = GemmPlan::new(GemmConfig::native(Kind::Bnn).with_tile(Tile::Wide), Weights::I8(&b))
-        .expect("plan");
-    let mut out = GemmOut::new_i32();
-    let mut scratch = GemmScratch::new();
-    plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
-    assert!(out.as_i32().expect("i32 out").data.iter().all(|&v| v == k as i32));
+    for kind in [Kind::Bnn, Kind::Tnn] {
+        let a = MatI8::from_fn(2, k, |_, _| 1);
+        let b = MatI8::from_fn(k, 5, |_, _| 1);
+        let plan = GemmPlan::new(GemmConfig::native(kind).with_tile(Tile::Wide), Weights::I8(&b))
+            .expect("plan");
+        let mut out = GemmOut::new_i32();
+        let mut scratch = GemmScratch::new();
+        plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("run");
+        assert!(out.as_i32().expect("i32 out").data.iter().all(|&v| v == k as i32), "{kind:?}");
+    }
 }
 
 /// `Tile::Rowdot` (the seed baseline) agrees with the tiled default
