@@ -153,6 +153,30 @@ fn main() {
         report(label, "tiled_mt", t, t_rd, cores);
     }
 
+    // --- aarch64 only: explicit NEON vcnt rungs -------------------------
+    // On aarch64 the tiled plans above already dispatch to the NEON
+    // intrinsics (`gemm/native/simd_popcnt/neon.rs`); these rungs
+    // re-time BNN/TNN under names that exist only on aarch64, so an ARM
+    // run's records are self-describing when laid next to x86 runs for
+    // the Table III comparison. Note baselines are per-host artifacts:
+    // the committed baseline gates the x86 CI job and must be seeded on
+    // an x86 host (the shared rung names carry no arch key) — an ARM
+    // host's BENCH_gemm.json is measurement material, not CI baseline
+    // material. See tools/bench_gate.py and README "ARM / NEON backend".
+    if cfg!(target_arch = "aarch64") {
+        println!("\nNEON vcnt rungs at {m}×{n}×{k}:");
+        let neon_rungs: [(&'static str, &'static str, Kind, &MatI8, &MatI8); 2] =
+            [("BNN", "bnn_neon", Kind::Bnn, &ab, &bb), ("TNN", "tnn_neon", Kind::Tnn, &at, &bt3)];
+        for (label, variant, kind, a, b) in neon_rungs {
+            let plan = lowbit_plan(kind, b, Threading::Single, KPanel::Auto, Tile::Auto);
+            let t = bench_loop(0.4, 50, || {
+                plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+            })
+            .mean;
+            report(label, variant, t, t, 1);
+        }
+    }
+
     // --- deep-K ladder: rowdot vs tiled vs K-paneled vs tiled_mt --------
     // The K-panel level caps in-panel accumulation at the 16-bit-safe
     // bound (32767); at K = 32768 `Auto` splits into two panels, below it

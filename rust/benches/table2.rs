@@ -2,7 +2,12 @@
 //! instruction counts from the emulated microkernels and prints the table
 //! (plus per-mnemonic breakdowns). Deterministic — no timing involved.
 //!
-//! Run: `cargo bench --bench table2_counts`
+//! The count *assertions* that used to live here are promoted to a real
+//! pinned test (`tests/table2_counts.rs`, run on every `cargo test` and
+//! on the aarch64/QEMU CI lane); this target is the human-readable
+//! renderer.
+//!
+//! Run: `cargo bench --bench table2`
 
 use tbgemm::costmodel::table2;
 
@@ -16,10 +21,5 @@ fn main() {
             println!("    {m:<12} {n}");
         }
     }
-    // Sanity gates (the bench fails loudly if a refactor changes counts):
-    let bnn = rows.iter().find(|r| r.kind == tbgemm::gemm::Kind::Bnn).unwrap();
-    assert_eq!((bnn.com, bnn.ld, bnn.mov), (32, 2, 8), "BNN must match the paper exactly");
-    let f32r = rows.iter().find(|r| r.kind == tbgemm::gemm::Kind::F32).unwrap();
-    assert_eq!((f32r.com, f32r.ld, f32r.mov), (24, 5, 0), "F32 must match the paper exactly");
-    println!("\ntable2_counts OK");
+    println!("\ntable2 OK");
 }

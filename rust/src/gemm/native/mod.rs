@@ -77,10 +77,17 @@
 //!    loads-per-operation reduction the paper's 16×8 NEON microkernel
 //!    achieves with value broadcasting (§III-B).
 //!
-//! Below the tiles, the **vectorized inner dots** ([`simd_popcnt`]): the
-//! per-tile word loop is an AVX2 `vpshufb` nibble-LUT popcount (Mula's
-//! method) where available, with scalar `count_ones` fallback and
-//! differential tests between the two everywhere.
+//! Below the tiles, the **vectorized inner dots** ([`simd_popcnt`]): on
+//! aarch64 the per-tile word loop is real NEON — `veorq`/`vandq`/`vbicq`
+//! products, `vcntq_u8` per-byte popcount, `vpadalq_u8` 16-bit
+//! in-register accumulation, the paper's actual instruction diet — and
+//! on x86-64 it is an AVX2 `vpshufb` nibble-LUT popcount (Mula's
+//! method), with scalar `count_ones` fallback elsewhere or under
+//! `TBGEMM_FORCE_SCALAR=1` (dispatch order documented in
+//! [`simd_popcnt`]). Differential tests pin every arm to the scalar
+//! path, and CI's cross-ISA lane runs the full suite under
+//! `qemu-aarch64` so the NEON arm is continuously proven bit-identical
+//! to the `Reference` and `Emulated` backends.
 //!
 //! The seed's one-output-at-a-time kernels survive as
 //! `kernels::*_gemm_rowdot`; `benches/gemm_micro` tracks the tiled and

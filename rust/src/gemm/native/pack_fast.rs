@@ -7,31 +7,35 @@
 //! pack 32 values per instruction pair with SSE2/AVX2 compare+movemask
 //! (with a branchless scalar fallback), bringing packing back to the
 //! small fraction of runtime it occupies in the paper.
+//!
+//! The wrappers here share [`super::simd_popcnt`]'s `simd_dispatch!`
+//! preamble (forced scalar → best native SIMD arm → scalar), in its
+//! no-NEON form: the movemask trick has no single-instruction NEON
+//! equivalent, and on aarch64 the branchless scalar loop is already a
+//! small fraction of kernel time. The `TBGEMM_FORCE_SCALAR=1` override
+//! applies to these wrappers too, so the scalar CI lane covers packing
+//! as well as the popcount loops.
+
+use crate::gemm::native::simd_popcnt::{force_scalar, simd_dispatch};
 
 /// Pack one row of binary values (`±1`, encoding `1→0, −1→1`) into bit
 /// words (LSB-first). `out` must hold `ceil(row.len()/64)` words and is
 /// fully overwritten.
 pub fn pack_binary_row(row: &[i8], out: &mut [u64]) {
     debug_assert!(out.len() >= row.len().div_ceil(64));
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::pack_binary_row(row, out) };
-        }
-    }
-    scalar_pack_binary_row(row, out)
+    simd_dispatch!(
+        avx2: avx2::pack_binary_row(row, out),
+        scalar: scalar_pack_binary_row(row, out),
+    )
 }
 
 /// Pack one row of ternary values into its two planes.
 pub fn pack_ternary_row(row: &[i8], plus: &mut [u64], minus: &mut [u64]) {
     debug_assert!(plus.len() >= row.len().div_ceil(64));
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::pack_ternary_row(row, plus, minus) };
-        }
-    }
-    scalar_pack_ternary_row(row, plus, minus)
+    simd_dispatch!(
+        avx2: avx2::pack_ternary_row(row, plus, minus),
+        scalar: scalar_pack_ternary_row(row, plus, minus),
+    )
 }
 
 pub fn scalar_pack_binary_row(row: &[i8], out: &mut [u64]) {

@@ -1,30 +1,132 @@
-//! Vectorized popcount inner loops for the low-bit kernels (x86-64 AVX2).
+//! Vectorized popcount inner loops for the low-bit kernels.
 //!
 //! The paper's microkernels lean on NEON `CNT` — a per-byte vector
-//! popcount. x86 AVX2 has no vector popcount instruction, which is the
-//! main structural difference between this host and the paper's
-//! Cortex-A73: the scalar `POPCNT` path retires 64 bits per instruction
-//! on a single port, while the f32 baseline enjoys dual-port 256-bit
-//! FMAs. These routines close most of that gap with the classic
-//! `vpshufb` nibble-LUT popcount + `vpsadbw` horizontal accumulation
-//! (Mula's method), processing 256 bits of product per ~6 instructions.
+//! popcount. Two real SIMD arms implement that idea here:
 //!
-//! All entry points are safe wrappers that dispatch on runtime CPU
-//! feature detection and fall back to the scalar `count_ones` loops on
-//! other architectures. Every routine is differentially tested against
-//! the scalar implementation.
+//! * **aarch64 NEON** (the `neon` submodule) — the paper's actual ISA:
+//!   `veorq` / `vandq` / `vbicq` / `vorrq` product words, `vcntq_u8` per-byte
+//!   counts, `vpadalq_u8` pairwise accumulation into 16-bit lanes (the
+//!   paper's in-register accumulation discipline, Table II), spilled
+//!   into 32-bit lanes well before the 16-bit bound.
+//! * **x86-64 AVX2** (the `avx2` submodule) — AVX2 has no vector popcount
+//!   instruction, which is the main structural difference between an x86
+//!   host and the paper's Cortex-A73. The classic `vpshufb` nibble-LUT
+//!   popcount + `vpsadbw` horizontal accumulation (Mula's method) closes
+//!   most of that gap, processing 256 bits of product per ~6
+//!   instructions.
+//!
+//! # Dispatch order
+//!
+//! Every public wrapper in this module selects an implementation the
+//! same way, in this order:
+//!
+//! 1. `TBGEMM_FORCE_SCALAR=1` (any non-empty value other than `0`; read
+//!    once per process) forces the scalar fallback everywhere. CI uses
+//!    this to exercise the scalar paths on hosts whose best SIMD arm
+//!    would otherwise shadow them.
+//! 2. On aarch64 the NEON arm runs unconditionally — NEON is a baseline
+//!    aarch64 feature, so no runtime detection is needed.
+//! 3. On x86-64 the AVX2 arm runs when runtime feature detection finds
+//!    AVX2.
+//! 4. Otherwise the scalar `count_ones` loops run.
+//!
+//! Every routine is differentially tested against the scalar
+//! implementation on the host ISA, and the cross-ISA CI lane
+//! additionally runs the full differential suite under `qemu-aarch64`,
+//! proving the NEON arm bit-identical to the `Reference` and `Emulated`
+//! backends on every push (see `tests/isa_parity.rs` and
+//! `.github/workflows/ci.yml`).
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::OnceLock;
+
+/// Words per u16 accumulation block of the NEON kernels: one
+/// `vpadalq_u8` adds at most 2·8 = 16 per u16 lane, so a block of 2048
+/// 16-byte steps (2 words each) reaches at most 32768 < `u16::MAX`
+/// before spilling into the u32 accumulators. Defined here — outside
+/// the cfg'd `neon` submodule — so the spill-boundary differential test
+/// stays tied to the real constant on every host.
+#[cfg_attr(not(target_arch = "aarch64"), allow(dead_code))]
+pub(crate) const NEON_SPILL_WORDS: usize = 2 * 2048;
+
+/// True when `TBGEMM_FORCE_SCALAR` requests the scalar fallbacks (step 1
+/// of the dispatch order in the module docs). Read once per process so
+/// the hot wrappers pay one cached load, not an environment lookup.
+pub(crate) fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| matches!(std::env::var("TBGEMM_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0"))
+}
+
+/// The A64 SIMD mnemonics the `neon` kernels compile to, per kernel
+/// family — the shared vocabulary `tests/isa_parity.rs` pins against the
+/// emulated microkernels' traced instruction streams (mnemonics
+/// collapsed by [`crate::simd::trace::family`]). Declared
+/// unconditionally so the parity test also runs on non-ARM hosts.
+pub mod isa {
+    /// Binary dots/tiles: `vld1q_u8`→LD1, `vdupq_n_*(0)`→MOVI,
+    /// `veorq_u8`→EOR, `vcntq_u8`→CNT, `vpadalq_u8`/`vpadalq_u16`→UADALP,
+    /// `vaddvq_u32`→ADDV.
+    pub const BNN: &[&str] = &["LD1", "MOVI", "EOR", "CNT", "UADALP", "ADDV"];
+    /// Ternary dots/tiles add the eq. (7) plane products: `vandq_u8`→AND,
+    /// `vorrq_u8`→ORR.
+    pub const TNN: &[&str] = &["LD1", "MOVI", "AND", "ORR", "CNT", "UADALP", "ADDV"];
+    /// Ternary×binary replaces one AND pair with `vbicq_u8`→BIC
+    /// (`a & !t`, the binary column used as a selector).
+    pub const TBN: &[&str] = &["LD1", "MOVI", "AND", "BIC", "ORR", "CNT", "UADALP", "ADDV"];
+    /// The product-forming logic family — the compute core shared with
+    /// the emulated microkernels, independent of accumulation shape.
+    pub const LOGIC: &[&str] = &["EOR", "AND", "ORR", "ORN", "BIC", "MVN"];
+}
+
+/// The one arm-selection preamble shared by every dispatch wrapper in
+/// the native path (the popcount wrappers below and the packing
+/// wrappers in [`super::pack_fast`]), so the documented dispatch order
+/// is structurally identical across entry points — a wrapper cannot
+/// forget the forced-scalar lane or reorder the arms: forced scalar →
+/// NEON (aarch64) → AVX2 (x86-64) → scalar. The no-`neon:` form is for
+/// wrappers without a NEON arm (packing), which fall through to scalar
+/// on aarch64.
+macro_rules! simd_dispatch {
+    (neon: $neon:expr, avx2: $avx2:expr, scalar: $scalar:expr $(,)?) => {{
+        if !force_scalar() {
+            #[cfg(target_arch = "aarch64")]
+            {
+                return unsafe { $neon };
+            }
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    return unsafe { $avx2 };
+                }
+            }
+        }
+        $scalar
+    }};
+    (avx2: $avx2:expr, scalar: $scalar:expr $(,)?) => {{
+        if !force_scalar() {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    return unsafe { $avx2 };
+                }
+            }
+        }
+        $scalar
+    }};
+}
+pub(crate) use simd_dispatch;
 
 /// Binary row dot: Σ popcount(a ⊕ b).
 #[inline]
 pub fn xor_popcnt(a: &[u64], b: &[u64]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::xor_popcnt(a, b) };
-        }
-    }
-    scalar_xor_popcnt(a, b)
+    simd_dispatch!(
+        neon: neon::xor_popcnt(a, b),
+        avx2: avx2::xor_popcnt(a, b),
+        scalar: scalar_xor_popcnt(a, b),
+    )
 }
 
 /// Two-column binary row dot: (Σ popcount(a ⊕ b0), Σ popcount(a ⊕ b1)).
@@ -33,26 +135,22 @@ pub fn xor_popcnt(a: &[u64], b: &[u64]) -> u32 {
 #[inline]
 pub fn xor_popcnt2(a: &[u64], b0: &[u64], b1: &[u64]) -> (u32, u32) {
     debug_assert!(a.len() == b0.len() && a.len() == b1.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::xor_popcnt2(a, b0, b1) };
-        }
-    }
-    (scalar_xor_popcnt(a, b0), scalar_xor_popcnt(a, b1))
+    simd_dispatch!(
+        neon: neon::xor_popcnt2(a, b0, b1),
+        avx2: avx2::xor_popcnt2(a, b0, b1),
+        scalar: (scalar_xor_popcnt(a, b0), scalar_xor_popcnt(a, b1)),
+    )
 }
 
 /// Ternary row dot: (Σ popcount((a⁺∧b⁺)∨(a⁻∧b⁻)), Σ popcount((a⁺∧b⁻)∨(a⁻∧b⁺))).
 #[inline]
 pub fn tnn_popcnt(ap: &[u64], am: &[u64], bp: &[u64], bm: &[u64]) -> (u32, u32) {
     debug_assert!(ap.len() == am.len() && am.len() == bp.len() && bp.len() == bm.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::tnn_popcnt(ap, am, bp, bm) };
-        }
-    }
-    scalar_tnn_popcnt(ap, am, bp, bm)
+    simd_dispatch!(
+        neon: neon::tnn_popcnt(ap, am, bp, bm),
+        avx2: avx2::tnn_popcnt(ap, am, bp, bm),
+        scalar: scalar_tnn_popcnt(ap, am, bp, bm),
+    )
 }
 
 /// Ternary×binary row dot with bit-row `t` (1 encodes −1):
@@ -60,13 +158,11 @@ pub fn tnn_popcnt(ap: &[u64], am: &[u64], bp: &[u64], bm: &[u64]) -> (u32, u32) 
 #[inline]
 pub fn tbn_popcnt(ap: &[u64], am: &[u64], t: &[u64]) -> (u32, u32) {
     debug_assert!(ap.len() == am.len() && am.len() == t.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::tbn_popcnt(ap, am, t) };
-        }
-    }
-    scalar_tbn_popcnt(ap, am, t)
+    simd_dispatch!(
+        neon: neon::tbn_popcnt(ap, am, t),
+        avx2: avx2::tbn_popcnt(ap, am, t),
+        scalar: scalar_tbn_popcnt(ap, am, t),
+    )
 }
 
 // ---- register-tile primitives -----------------------------------------
@@ -82,13 +178,11 @@ pub fn tbn_popcnt(ap: &[u64], am: &[u64], t: &[u64]) -> (u32, u32) {
 #[inline]
 pub fn xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
     debug_assert!(a.iter().all(|r| r.len() == b0.len()) && b0.len() == b1.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::xor_popcnt_4x2(a, b0, b1) };
-        }
-    }
-    scalar_xor_popcnt_4x2(a, b0, b1)
+    simd_dispatch!(
+        neon: neon::xor_popcnt_4x2(a, b0, b1),
+        avx2: avx2::xor_popcnt_4x2(a, b0, b1),
+        scalar: scalar_xor_popcnt_4x2(a, b0, b1),
+    )
 }
 
 /// 4×4 binary tile: `s[r][c] = Σ popcount(a[r] ⊕ b[c])`. The widened
@@ -97,13 +191,11 @@ pub fn xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
 #[inline]
 pub fn xor_popcnt_4x4(a: [&[u64]; 4], b: [&[u64]; 4]) -> [[u32; 4]; 4] {
     debug_assert!(a.iter().all(|r| r.len() == b[0].len()) && b.iter().all(|r| r.len() == b[0].len()));
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::xor_popcnt_4x4(a, b) };
-        }
-    }
-    scalar_xor_popcnt_4x4(a, b)
+    simd_dispatch!(
+        neon: neon::xor_popcnt_4x4(a, b),
+        avx2: avx2::xor_popcnt_4x4(a, b),
+        scalar: scalar_xor_popcnt_4x4(a, b),
+    )
 }
 
 /// 2×2 ternary tile: `s[r][c] = (z⁺, z⁻)` plane popcounts of row `r`
@@ -119,13 +211,11 @@ pub fn tnn_popcnt_2x2(
     bm1: &[u64],
 ) -> [[(u32, u32); 2]; 2] {
     debug_assert!(ap[0].len() == bp0.len() && bp0.len() == bp1.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1) };
-        }
-    }
-    scalar_tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1)
+    simd_dispatch!(
+        neon: neon::tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1),
+        avx2: avx2::tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1),
+        scalar: scalar_tnn_popcnt_2x2(ap, am, bp0, bm0, bp1, bm1),
+    )
 }
 
 /// 2×4 ternary tile: `s[r][c] = (z⁺, z⁻)` plane popcounts of row `r`
@@ -141,26 +231,22 @@ pub fn tnn_popcnt_2x4(
     bm: [&[u64]; 4],
 ) -> [[(u32, u32); 4]; 2] {
     debug_assert!(ap[0].len() == bp[0].len() && bp.iter().all(|c| c.len() == bp[0].len()));
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::tnn_popcnt_2x4(ap, am, bp, bm) };
-        }
-    }
-    scalar_tnn_popcnt_2x4(ap, am, bp, bm)
+    simd_dispatch!(
+        neon: neon::tnn_popcnt_2x4(ap, am, bp, bm),
+        avx2: avx2::tnn_popcnt_2x4(ap, am, bp, bm),
+        scalar: scalar_tnn_popcnt_2x4(ap, am, bp, bm),
+    )
 }
 
 /// 2×2 ternary×binary tile (bit-columns `t0`, `t1`; 1 encodes −1).
 #[inline]
 pub fn tbn_popcnt_2x2(ap: [&[u64]; 2], am: [&[u64]; 2], t0: &[u64], t1: &[u64]) -> [[(u32, u32); 2]; 2] {
     debug_assert!(ap[0].len() == t0.len() && t0.len() == t1.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return unsafe { avx2::tbn_popcnt_2x2(ap, am, t0, t1) };
-        }
-    }
-    scalar_tbn_popcnt_2x2(ap, am, t0, t1)
+    simd_dispatch!(
+        neon: neon::tbn_popcnt_2x2(ap, am, t0, t1),
+        avx2: avx2::tbn_popcnt_2x2(ap, am, t0, t1),
+        scalar: scalar_tbn_popcnt_2x2(ap, am, t0, t1),
+    )
 }
 
 // ---- scalar reference paths (and non-x86 fallback) --------------------
@@ -629,6 +715,51 @@ mod tests {
             let a = random_words(&mut rng, n);
             let b = random_words(&mut rng, n);
             assert_eq!(xor_popcnt(&a, &b), scalar_xor_popcnt(&a, &b), "n={n}");
+        }
+    }
+
+    /// The NEON arm spills its u16 `vpadalq_u8` accumulators into u32
+    /// lanes every [`NEON_SPILL_WORDS`] words; straddle that boundary
+    /// for **all nine** entry points so every kernel's block-reset and
+    /// cross-block `vpadalq_u16` accumulation is differentially tested
+    /// (the 0..=67 sweeps never reach it, and the deepest K-panel in
+    /// the test suite is 512 words). `+2` enters a second, short block;
+    /// `2·SPILL+1` runs two full blocks plus the odd-word tail.
+    /// Worst-case density (all bits set) doubles as an in-lane
+    /// saturation check on the binary dot.
+    #[test]
+    fn spill_boundary_matches_scalar_all_kernels() {
+        let mut rng = Rng::new(0xAC4);
+        for n in [NEON_SPILL_WORDS - 1, NEON_SPILL_WORDS, NEON_SPILL_WORDS + 2, 2 * NEON_SPILL_WORDS + 1] {
+            let a: Vec<Vec<u64>> = (0..4).map(|_| random_words(&mut rng, n)).collect();
+            let b: Vec<Vec<u64>> = (0..4).map(|_| random_words(&mut rng, n)).collect();
+            let ar = [&a[0][..], &a[1][..], &a[2][..], &a[3][..]];
+            let br = [&b[0][..], &b[1][..], &b[2][..], &b[3][..]];
+            assert_eq!(xor_popcnt(&a[0], &b[0]), scalar_xor_popcnt(&a[0], &b[0]), "n={n}");
+            let s2 = xor_popcnt2(&a[0], &b[0], &b[1]);
+            assert_eq!(s2, (scalar_xor_popcnt(&a[0], &b[0]), scalar_xor_popcnt(&a[0], &b[1])), "n={n}");
+            assert_eq!(xor_popcnt_4x2(ar, &b[0], &b[1]), scalar_xor_popcnt_4x2(ar, &b[0], &b[1]), "n={n}");
+            assert_eq!(xor_popcnt_4x4(ar, br), scalar_xor_popcnt_4x4(ar, br), "n={n}");
+            let (ap0, am0) = random_planes(&mut rng, n);
+            let (ap1, am1) = random_planes(&mut rng, n);
+            let (bp0, bm0) = random_planes(&mut rng, n);
+            let (bp1, bm1) = random_planes(&mut rng, n);
+            assert_eq!(tnn_popcnt(&ap0, &am0, &bp0, &bm0), scalar_tnn_popcnt(&ap0, &am0, &bp0, &bm0), "n={n}");
+            assert_eq!(tbn_popcnt(&ap0, &am0, &b[0]), scalar_tbn_popcnt(&ap0, &am0, &b[0]), "n={n}");
+            let apr = [&ap0[..], &ap1[..]];
+            let amr = [&am0[..], &am1[..]];
+            assert_eq!(
+                tnn_popcnt_2x2(apr, amr, &bp0, &bm0, &bp1, &bm1),
+                scalar_tnn_popcnt_2x2(apr, amr, &bp0, &bm0, &bp1, &bm1),
+                "n={n}"
+            );
+            let bpr = [&bp0[..], &bp1[..], &bm0[..], &bm1[..]];
+            let bmr = [&bm0[..], &bm1[..], &bp0[..], &bp1[..]];
+            assert_eq!(tnn_popcnt_2x4(apr, amr, bpr, bmr), scalar_tnn_popcnt_2x4(apr, amr, bpr, bmr), "n={n}");
+            assert_eq!(tbn_popcnt_2x2(apr, amr, &b[0], &b[1]), scalar_tbn_popcnt_2x2(apr, amr, &b[0], &b[1]), "n={n}");
+            let ones = vec![u64::MAX; n];
+            let zeros = vec![0u64; n];
+            assert_eq!(xor_popcnt(&ones, &zeros), 64 * n as u32, "dense n={n}");
         }
     }
 

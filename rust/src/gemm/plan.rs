@@ -64,7 +64,10 @@ pub enum Backend {
     /// Instruction-exact emulated NEON microkernels (Table II substrate).
     Emulated,
     /// Blocked, register-tiled, multithreaded native path (Table III
-    /// substrate; the production hot path).
+    /// substrate; the production hot path). Its inner loops are real
+    /// NEON `vcnt` kernels on aarch64 and AVX2 nibble-LUT popcounts on
+    /// x86-64, with scalar fallback — see
+    /// [`crate::gemm::native::simd_popcnt`] for the dispatch order.
     Native,
 }
 

@@ -17,6 +17,17 @@ pub enum InsnClass {
     St,
 }
 
+/// Collapse a traced mnemonic to its base A64 family: drop the
+/// arrangement suffix (`"LD1.16B"` → `"LD1"`, `"ADD.8H"` → `"ADD"`) and
+/// a trailing high-half `2` (`"SADDW2"` → `"SADDW"`, `"UMLAL2"` →
+/// `"UMLAL"`). `tests/isa_parity.rs` compares traces against the native
+/// NEON intrinsics path at this granularity — the intrinsics make no
+/// low/high-half or arrangement distinction visible.
+pub fn family(mnemonic: &str) -> &str {
+    let base = mnemonic.split('.').next().unwrap_or(mnemonic);
+    base.strip_suffix('2').unwrap_or(base)
+}
+
 /// Aggregated instruction counts, by class and by mnemonic.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
@@ -68,6 +79,17 @@ impl Trace {
         self.total() as f64 / (m * n * k) as f64
     }
 
+    /// Per-family instruction counts: [`family`] collapses arrangement
+    /// and high-half variants, so e.g. `SADDW` + `SADDW2` report as one
+    /// `SADDW` entry and `LD1.16B` + `LD1.8B` as one `LD1` entry.
+    pub fn families(&self) -> BTreeMap<&'static str, u64> {
+        let mut out = BTreeMap::new();
+        for (m, n) in &self.by_mnemonic {
+            *out.entry(family(m)).or_insert(0) += n;
+        }
+        out
+    }
+
     /// Difference of two traces (e.g. two iterations minus one iteration,
     /// to isolate steady-state per-iteration cost).
     pub fn delta(&self, earlier: &Trace) -> Trace {
@@ -115,6 +137,31 @@ mod tests {
         // BNN microkernel: 42 instructions / (16*8*8) = 0.041
         let ins = t.ins_metric(16, 8, 8);
         assert!((ins - 0.041_015_625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn family_collapses_variants() {
+        assert_eq!(family("LD1.16B"), "LD1");
+        assert_eq!(family("LD1.8B"), "LD1");
+        assert_eq!(family("SADDW2"), "SADDW");
+        assert_eq!(family("UMLAL2.16B"), "UMLAL");
+        assert_eq!(family("ADD.8H"), "ADD");
+        assert_eq!(family("CNT"), "CNT");
+    }
+
+    #[test]
+    fn families_merges_counts() {
+        let mut t = Trace::new();
+        t.hit(InsnClass::Com, "SADDW");
+        t.hit(InsnClass::Com, "SADDW2");
+        t.hit(InsnClass::Ld, "LD1.16B");
+        t.hit(InsnClass::Ld, "LD1.8B");
+        t.hit(InsnClass::Com, "CNT");
+        let f = t.families();
+        assert_eq!(f["SADDW"], 2);
+        assert_eq!(f["LD1"], 2);
+        assert_eq!(f["CNT"], 1);
+        assert_eq!(f.len(), 3);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 #!/usr/bin/env python3
-"""Compare a fresh gemm_micro run against the committed baseline.
+"""Compare fresh bench records against committed baselines.
 
-`cargo bench --bench gemm_micro` (run from `rust/`) writes
-`rust/BENCH_gemm.json`: a JSON array of records
+Two modes, selected by --serve:
+
+GEMM mode (default). `cargo bench --bench gemm_micro` (run from `rust/`)
+writes `rust/BENCH_gemm.json`: a JSON array of records
 `{kind, variant, m, n, k, ns_per_iter, gops}`. This gate compares that
 fresh run against the committed `rust/BENCH_gemm.baseline.json` keyed by
 `(kind, variant, m, n, k)` and fails (exit 1) when any record regresses
@@ -11,45 +13,58 @@ baseline gops / 1.6 — generous, because CI machines are noisy and
 shared; the gate exists to catch order-of-magnitude regressions like a
 dead dispatch or a lost SIMD path, not single-digit percent drift).
 
-Seeding / refreshing the baseline (run on the reference host):
+Serve mode (--serve). `cargo run --release -- serve ...` writes
+`rust/BENCH_serve.json`: a single JSON object
+`{requests, max_batch, replicas, throughput_rps, p50_latency_us,
+p95_latency_us, p99_latency_us, ...}`. The gate compares it against the
+committed `rust/BENCH_serve.baseline.json` when the
+(requests, max_batch, replicas) configuration matches: throughput may
+not drop below baseline/tolerance, and p50/p99 latency may not exceed
+baseline*tolerance.
+
+Seeding / refreshing the baselines (run on the reference host):
 
     cd rust && cargo bench --bench gemm_micro
     cp BENCH_gemm.json BENCH_gemm.baseline.json
-    git add BENCH_gemm.baseline.json
+    cargo run --release -- serve --requests 64 --replicas 2
+    cp BENCH_serve.json BENCH_serve.baseline.json
+    git add BENCH_gemm.baseline.json BENCH_serve.baseline.json
 
-An empty baseline array (the committed placeholder until a reference
-host measures one) makes the gate print the fresh table and exit 0.
+An empty baseline (`[]` for GEMM, `{}` for serve — the committed
+placeholders until a reference host measures one) makes the gate print
+the fresh record(s) and exit 0.
 
 Usage:
     python3 tools/bench_gate.py [--fresh rust/BENCH_gemm.json]
         [--baseline rust/BENCH_gemm.baseline.json] [--tolerance 1.6]
+    python3 tools/bench_gate.py --serve [--fresh rust/BENCH_serve.json]
+        [--baseline rust/BENCH_serve.baseline.json] [--tolerance 1.6]
 """
 
 import argparse
 import json
 import sys
 
+SERVE_LATENCY_FIELDS = ("p50_latency_us", "p99_latency_us")
+
 
 def key(rec):
     return (rec["kind"], rec["variant"], rec["m"], rec["n"], rec["k"])
 
 
-def load(path):
+def load_json(path):
     with open(path, "r", encoding="utf-8") as f:
-        data = json.load(f)
+        return json.load(f)
+
+
+def load(path):
+    data = load_json(path)
     if not isinstance(data, list):
         raise SystemExit(f"{path}: expected a JSON array of records")
     return {key(r): r for r in data}
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--fresh", default="rust/BENCH_gemm.json")
-    ap.add_argument("--baseline", default="rust/BENCH_gemm.baseline.json")
-    ap.add_argument("--tolerance", type=float, default=1.6,
-                    help="max allowed slowdown factor vs baseline (default 1.6)")
-    args = ap.parse_args()
-
+def gate_gemm(args):
     try:
         fresh = load(args.fresh)
     except FileNotFoundError:
@@ -82,7 +97,8 @@ def main():
     print(f"bench_gate: {len(baseline)} baseline records, {len(fresh)} fresh, "
           f"{improved} improved, {len(regressions)} regressed (tolerance {args.tolerance}x)")
     for k in missing:
-        print(f"  WARNING: baseline record {k} missing from fresh run (renamed variant?)")
+        print(f"  WARNING: baseline record {k} missing from fresh run (renamed variant? "
+              f"arch-gated rung like bnn_neon/tnn_neon on a different host?)")
     new_keys = sorted(set(fresh) - set(baseline))
     for k in new_keys:
         print(f"  note: new record {k} not in baseline yet")
@@ -93,6 +109,77 @@ def main():
         return 1
     print("bench_gate OK")
     return 0
+
+
+def serve_key(rec):
+    return (rec["requests"], rec["max_batch"], rec["replicas"])
+
+
+def gate_serve(args):
+    try:
+        fresh = load_json(args.fresh)
+    except FileNotFoundError:
+        raise SystemExit(f"fresh serve record not found: {args.fresh} "
+                         f"(run `cargo run --release -- serve ...` from rust/ first)")
+    if not isinstance(fresh, dict) or not fresh:
+        raise SystemExit(f"{args.fresh}: expected a non-empty JSON object (a BENCH_serve.json record)")
+    try:
+        baseline = load_json(args.baseline)
+    except FileNotFoundError:
+        print(f"bench_gate: no serving baseline at {args.baseline}; nothing to gate against.")
+        return 0
+    if not isinstance(baseline, dict):
+        raise SystemExit(f"{args.baseline}: expected a JSON object")
+    if not baseline:
+        print(f"bench_gate: serving baseline {args.baseline} is empty (placeholder); gate skipped.")
+        print("Seed it on the reference host:")
+        print("    cd rust && cargo run --release -- serve --requests 64 --replicas 2 "
+              "&& cp BENCH_serve.json BENCH_serve.baseline.json")
+        return 0
+    if serve_key(baseline) != serve_key(fresh):
+        print(f"bench_gate: serve config changed (baseline {serve_key(baseline)} vs fresh "
+              f"{serve_key(fresh)}); re-seed the baseline. Gate skipped.")
+        return 0
+
+    regressions = []
+    bt, ft = baseline["throughput_rps"], fresh["throughput_rps"]
+    thr_ratio = bt / ft if ft > 0 else float("inf")
+    if thr_ratio > args.tolerance:
+        regressions.append(f"throughput_rps: baseline {bt:.1f} -> fresh {ft:.1f} ({thr_ratio:.2f}x slower)")
+    for field in SERVE_LATENCY_FIELDS:
+        bl, fl = baseline[field], fresh[field]
+        ratio = fl / bl if bl > 0 else 0.0
+        if ratio > args.tolerance:
+            regressions.append(f"{field}: baseline {bl} -> fresh {fl} ({ratio:.2f}x higher)")
+
+    print(f"bench_gate (serve): config {serve_key(fresh)}, throughput {ft:.1f} rps vs baseline {bt:.1f}, "
+          f"tolerance {args.tolerance}x")
+    if regressions:
+        print("SERVING REGRESSIONS:")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print("bench_gate OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default=None)
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--serve", action="store_true",
+                    help="gate BENCH_serve.json (throughput + p50/p99) instead of BENCH_gemm.json")
+    ap.add_argument("--tolerance", type=float, default=1.6,
+                    help="max allowed slowdown factor vs baseline (default 1.6)")
+    args = ap.parse_args()
+
+    if args.serve:
+        args.fresh = args.fresh or "rust/BENCH_serve.json"
+        args.baseline = args.baseline or "rust/BENCH_serve.baseline.json"
+        return gate_serve(args)
+    args.fresh = args.fresh or "rust/BENCH_gemm.json"
+    args.baseline = args.baseline or "rust/BENCH_gemm.baseline.json"
+    return gate_gemm(args)
 
 
 if __name__ == "__main__":
