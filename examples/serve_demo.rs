@@ -9,7 +9,7 @@
 
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine, ServerConfig};
 use tbgemm::nn::builder::{plan_from_config, NetConfig};
 use tbgemm::nn::NetPlanConfig;
 use tbgemm::runtime::XlaRuntime;
@@ -21,11 +21,12 @@ fn main() {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
     println!("starting coordinator over a TNN mobile CNN plan ({} params), 2 replicas", cfg.param_count());
     let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("valid config");
-    let server = InferenceServer::start(
+    let server = InferenceServer::with_config(
         Box::new(NativeEngine::new(plan, "tnn-mobile")),
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
-        256,
-        2,
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) })
+            .with_replicas(2)
+            .with_depths(256, 256),
     );
 
     let requests = 512usize;
@@ -36,7 +37,7 @@ fn main() {
         .collect();
     let mut class_hist = [0usize; 10];
     for rx in pending {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").completed().expect("served, not shed");
         class_hist[resp.predicted] += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
@@ -44,7 +45,12 @@ fn main() {
     println!("served {requests} requests in {:.2} s → {:.1} req/s", dt, requests as f64 / dt);
     println!(
         "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs p99={}µs max={}µs",
-        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.max_latency_us
+        m.batches,
+        m.mean_batch_size,
+        m.p50_latency_us.unwrap_or(0),
+        m.p95_latency_us.unwrap_or(0),
+        m.p99_latency_us.unwrap_or(0),
+        m.max_latency_us
     );
     println!("per-replica requests: {:?}", m.replica_requests);
     println!("prediction histogram: {class_hist:?}");

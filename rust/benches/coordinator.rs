@@ -8,7 +8,7 @@
 use std::time::Duration;
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine, ServerConfig};
 use tbgemm::nn::builder::{plan_from_config, NetConfig};
 use tbgemm::nn::{NetOut, NetPlanConfig};
 use tbgemm::util::Rng;
@@ -20,11 +20,12 @@ fn serve(
 ) -> (f64, tbgemm::coordinator::MetricsSnapshot) {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
     let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
-    let server = InferenceServer::start(
+    let server = InferenceServer::with_config(
         Box::new(NativeEngine::new(plan, "bench")),
-        BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-        256,
-        replicas,
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(1) })
+            .with_replicas(replicas)
+            .with_depths(256, 256),
     );
     let t0 = std::time::Instant::now();
     let pending: Vec<_> = requests.iter().map(|img| server.submit(img.clone()).expect("server up")).collect();
@@ -61,7 +62,7 @@ fn main() {
             dt,
             requests as f64 / dt,
             m.mean_batch_size,
-            m.p95_latency_us
+            m.p95_latency_us.unwrap_or(0)
         );
         if max_batch == 8 {
             batch8_time = Some(dt);
@@ -79,8 +80,8 @@ fn main() {
             "  replicas={replicas}: {:.3} s ({:.1} img/s), p50 {} µs, p99 {} µs, loads {:?}",
             dt,
             requests as f64 / dt,
-            m.p50_latency_us,
-            m.p99_latency_us,
+            m.p50_latency_us.unwrap_or(0),
+            m.p99_latency_us.unwrap_or(0),
             m.replica_requests
         );
     }

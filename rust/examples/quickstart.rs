@@ -18,7 +18,7 @@
 
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine, ServerConfig};
 use tbgemm::gemm::{Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
 use tbgemm::nn::builder::{plan_from_config, NetConfig};
 use tbgemm::nn::{NetOut, NetPlanConfig};
@@ -100,16 +100,16 @@ fn main() {
     // 3. Serve: the same plan behind the batching coordinator, batches
     //    split across 2 engine replicas sharing the packed weights.
     let served = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default()).expect("plan");
-    let server = InferenceServer::start(
+    let server = InferenceServer::with_config(
         Box::new(NativeEngine::new(served, "quickstart")),
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
-        64,
-        2,
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) })
+            .with_replicas(2),
     );
     let pending: Vec<_> =
         images.iter().map(|img| server.submit(img.clone()).expect("server up")).collect();
     for (img, rx) in images.iter().zip(pending) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").completed().expect("served, not shed");
         // Served logits are bit-identical to the local plan runs.
         plan.run(img, &mut out, &mut scratch).expect("run");
         assert_eq!(resp.logits, out.logits);

@@ -1,13 +1,37 @@
-//! Dynamic batching policy.
+//! Dynamic batching policy over the server's two-lane bounded queue.
 //!
-//! The batcher only *groups* requests; how a batch is then executed is
-//! the worker's business — since the replica-pool redesign it is split
+//! [`LaneQueue`] is the serving layer's admission boundary: two bounded
+//! FIFO lanes ([`Lane::Interactive`] always drained ahead of
+//! [`Lane::Batch`]), a rolling per-request service-time estimate (EWMA,
+//! fed by the worker after every executed batch) that turns queue depth
+//! into an estimated wait, and a [`ShedPolicy`] for what happens when a
+//! lane is full. `push` never blocks: a request that cannot meet its
+//! deadline or the configured latency budget — or that finds its lane
+//! full — is rejected with
+//! [`SubmitError::Overloaded`](crate::coordinator::server::SubmitError)
+//! instead of queueing doomed work, and [`LaneQueue::next_batch`] drops
+//! already-expired requests at dequeue (answering
+//! [`Response::DeadlineExceeded`]) rather than wasting engine time on
+//! them.
+//!
+//! The batch-collection window is anchored to the *arrival* of the
+//! first request in the batch (`submitted + max_wait`), not to the
+//! moment the worker happened to dequeue it, so `max_wait` is an actual
+//! bound on the latency the batcher itself adds — a request that
+//! already waited out its window behind a slow batch is served
+//! immediately with whatever else is queued.
+//!
+//! How a batch is then executed is the worker's business — it is split
 //! into contiguous per-replica chunks by
 //! [`crate::coordinator::engine::EnginePool::infer_batch`], so a larger
 //! `max_batch` directly widens the batch-level parallelism available to
 //! the pool.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{Request, Response, SubmitError};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batching configuration.
@@ -15,7 +39,8 @@ use std::time::{Duration, Instant};
 pub struct BatcherConfig {
     /// Largest batch the worker executes at once.
     pub max_batch: usize,
-    /// Longest the batcher waits after the first request of a batch.
+    /// Longest a batch is held open after its first request *arrived*
+    /// (an upper bound on the latency batching itself adds).
     pub max_wait: Duration,
 }
 
@@ -25,75 +50,437 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Drain one batch from `rx` under the policy: block for the first item,
-/// then collect until `max_batch` items or `max_wait` elapsed. Returns
-/// `None` when the channel is closed and empty (shutdown).
-pub fn next_batch<T>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    let deadline = Instant::now() + cfg.max_wait;
-    while batch.len() < cfg.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// Priority lane of a request. Interactive work is always dequeued
+/// before batch-lane work, and only the interactive lane is gated by
+/// the server's latency budget at admission.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-sensitive traffic: drained first, admission-checked
+    /// against the configured latency budget.
+    #[default]
+    Interactive = 0,
+    /// Throughput traffic: served when the interactive lane is empty,
+    /// bounded only by its queue depth (and per-request deadlines).
+    Batch = 1,
+}
+
+/// What to do when a lane's bounded queue is full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject the incoming request with `Overloaded` (the caller can
+    /// retry with backoff; nothing already queued is disturbed).
+    #[default]
+    RejectNewest,
+    /// On *batch-lane* overflow, evict the oldest queued batch-lane
+    /// request (it is answered with [`Response::Shed`]) and admit the
+    /// newer one. Interactive-lane overflow still rejects the newcomer:
+    /// evicting batch work cannot create interactive-lane capacity.
+    EvictOldestBatch,
+}
+
+/// Admission knobs, copied out of the public
+/// [`ServerConfig`](crate::coordinator::server::ServerConfig).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct QueuePolicy {
+    pub interactive_depth: usize,
+    pub batch_depth: usize,
+    pub latency_budget: Option<Duration>,
+    pub shed_policy: ShedPolicy,
+}
+
+struct Inner {
+    /// Indexed by `Lane as usize`.
+    lanes: [VecDeque<Request>; 2],
+    closed: bool,
+    /// Set by a draining close: once past it, the remaining backlog is
+    /// shed instead of served.
+    drain_deadline: Option<Instant>,
+}
+
+/// The bounded two-lane submission queue shared by the server handle
+/// (producer side: `push`) and the worker (consumer side: `next_batch`).
+pub(crate) struct LaneQueue {
+    policy: QueuePolicy,
+    /// Rolling per-request service-time estimate, µs (0 = no data yet,
+    /// which admits everything — cold starts are permissive).
+    ewma_us: AtomicU64,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl LaneQueue {
+    pub(crate) fn new(policy: QueuePolicy) -> Self {
+        LaneQueue {
+            policy,
+            ewma_us: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                lanes: [VecDeque::new(), VecDeque::new()],
+                closed: false,
+                drain_deadline: None,
+            }),
+            cv: Condvar::new(),
         }
     }
-    Some(batch)
+
+    /// Admit or reject `req`. Never blocks: estimated-wait admission
+    /// first (deadline / latency budget), then the lane depth bound
+    /// under the shed policy.
+    pub(crate) fn push(&self, req: Request, metrics: &Metrics) -> Result<(), SubmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(SubmitError::Closed);
+        }
+        let lane = req.lane;
+        // Work ahead of this request: the interactive lane always
+        // drains first, so batch-lane requests queue behind both.
+        let ahead = inner.lanes[Lane::Interactive as usize].len()
+            + if lane == Lane::Batch { inner.lanes[Lane::Batch as usize].len() } else { 0 };
+        let est_us = self.ewma_us.load(Ordering::Relaxed).saturating_mul(ahead as u64 + 1);
+        let est = Duration::from_micros(est_us);
+        let now = Instant::now();
+        let misses_deadline = req.deadline.is_some_and(|d| now + est > d);
+        let over_budget =
+            lane == Lane::Interactive && self.policy.latency_budget.is_some_and(|b| est > b);
+        if misses_deadline || over_budget {
+            metrics.record_rejected();
+            return Err(SubmitError::Overloaded { estimated_wait_us: est_us, queued: ahead });
+        }
+        let depth = match lane {
+            Lane::Interactive => self.policy.interactive_depth,
+            Lane::Batch => self.policy.batch_depth,
+        };
+        if inner.lanes[lane as usize].len() >= depth.max(1) {
+            let mut admitted_by_eviction = false;
+            if self.policy.shed_policy == ShedPolicy::EvictOldestBatch && lane == Lane::Batch {
+                if let Some(victim) = inner.lanes[Lane::Batch as usize].pop_front() {
+                    shed_one(victim, now, metrics);
+                    admitted_by_eviction = true;
+                }
+            }
+            if !admitted_by_eviction {
+                metrics.record_rejected();
+                return Err(SubmitError::Overloaded { estimated_wait_us: est_us, queued: ahead });
+            }
+        }
+        inner.lanes[lane as usize].push_back(req);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Drain one batch: block for the first live request, then collect
+    /// until `max_batch` items or the first request's arrival-anchored
+    /// window (`submitted + max_wait`) closes. Expired requests are
+    /// answered `DeadlineExceeded` and skipped at every pop. Returns
+    /// `None` when the queue is closed and drained — or, past a drain
+    /// deadline, after shedding the remaining backlog.
+    pub(crate) fn next_batch(&self, cfg: &BatcherConfig, metrics: &Metrics) -> Option<Vec<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        let first = loop {
+            let now = Instant::now();
+            if inner.closed && inner.drain_deadline.is_some_and(|d| now >= d) {
+                shed_all(&mut inner, metrics);
+                return None;
+            }
+            match pop_live(&mut inner, now, metrics) {
+                Some(req) => break req,
+                None if inner.closed => return None,
+                None => inner = self.cv.wait(inner).unwrap(),
+            }
+        };
+        let window_end = first.submitted + cfg.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < cfg.max_batch.max(1) {
+            let now = Instant::now();
+            if let Some(req) = pop_live(&mut inner, now, metrics) {
+                batch.push(req);
+                continue;
+            }
+            if inner.closed || now >= window_end {
+                break;
+            }
+            inner = self.cv.wait_timeout(inner, window_end - now).unwrap().0;
+        }
+        Some(batch)
+    }
+
+    /// Stop accepting submissions. `drain: None` keeps serving until
+    /// the backlog is empty; `Some(d)` serves for at most `d` longer,
+    /// then the worker sheds whatever is still queued.
+    pub(crate) fn close(&self, drain: Option<Duration>) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.closed {
+            inner.closed = true;
+            inner.drain_deadline = drain.map(|d| Instant::now() + d);
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Close and immediately shed the whole backlog (the dead-worker
+    /// path: nobody will ever serve these, so answer them now).
+    pub(crate) fn close_and_shed(&self, metrics: &Metrics) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        shed_all(&mut inner, metrics);
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Fold one measured per-request service time (µs) into the rolling
+    /// estimate (EWMA, α = 1/4; single writer: the worker).
+    pub(crate) fn update_service_rate(&self, sample_us: u64) {
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { sample_us } else { (old * 3 + sample_us) / 4 };
+        // Never fall back to the "no data" 0 once anything was measured.
+        self.ewma_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// The current per-request service-time estimate, µs (0 until the
+    /// first batch completes).
+    pub(crate) fn service_estimate_us(&self) -> u64 {
+        self.ewma_us.load(Ordering::Relaxed)
+    }
+}
+
+/// Pop the next *live* request, interactive lane first. Requests whose
+/// deadline already passed are answered `DeadlineExceeded` and skipped
+/// — the engine never runs work nobody is waiting for.
+fn pop_live(inner: &mut Inner, now: Instant, metrics: &Metrics) -> Option<Request> {
+    for lane in [Lane::Interactive, Lane::Batch] {
+        while let Some(req) = inner.lanes[lane as usize].pop_front() {
+            let waited_us = now.saturating_duration_since(req.submitted).as_micros() as u64;
+            if req.deadline.is_some_and(|d| d <= now) {
+                metrics.record_expired();
+                let id = req.id;
+                req.finish(Response::DeadlineExceeded { id, waited_us });
+                continue;
+            }
+            metrics.record_queue_wait(waited_us);
+            return Some(req);
+        }
+    }
+    None
+}
+
+fn shed_one(req: Request, now: Instant, metrics: &Metrics) {
+    let waited_us = now.saturating_duration_since(req.submitted).as_micros() as u64;
+    metrics.record_shed();
+    let id = req.id;
+    req.finish(Response::Shed { id, waited_us });
+}
+
+fn shed_all(inner: &mut Inner, metrics: &Metrics) {
+    let now = Instant::now();
+    for lane in [Lane::Interactive, Lane::Batch] {
+        while let Some(req) = inner.lanes[lane as usize].pop_front() {
+            shed_one(req, now, metrics);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::conv::tensor::Tensor3;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn policy() -> QueuePolicy {
+        QueuePolicy {
+            interactive_depth: 64,
+            batch_depth: 64,
+            latency_budget: None,
+            shed_policy: ShedPolicy::RejectNewest,
+        }
+    }
+
+    fn req(id: u64, lane: Lane, deadline: Option<Instant>) -> (Request, Receiver<Response>) {
+        let (reply, rx) = channel();
+        let r = Request {
+            id,
+            image: Tensor3::zeros(1, 1, 1),
+            submitted: Instant::now(),
+            deadline,
+            lane,
+            reply,
+        };
+        (r, rx)
+    }
+
+    fn push_ok(q: &LaneQueue, m: &Metrics, id: u64, lane: Lane) -> Receiver<Response> {
+        let (r, rx) = req(id, lane, None);
+        q.push(r, m).expect("admitted");
+        rx
+    }
 
     #[test]
-    fn drains_up_to_max_batch() {
-        let (tx, rx) = channel();
+    fn drains_up_to_max_batch_in_fifo_order() {
+        let (q, m) = (LaneQueue::new(policy()), Metrics::new());
         for i in 0..10 {
-            tx.send(i).unwrap();
+            push_ok(&q, &m, i, Lane::Interactive);
         }
         let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) };
-        let b = next_batch(&rx, &cfg).unwrap();
-        assert_eq!(b, vec![0, 1, 2, 3]);
-        let b2 = next_batch(&rx, &cfg).unwrap();
-        assert_eq!(b2, vec![4, 5, 6, 7]);
+        let ids = |b: Vec<Request>| b.into_iter().map(|r| r.id).collect::<Vec<_>>();
+        assert_eq!(ids(q.next_batch(&cfg, &m).unwrap()), vec![0, 1, 2, 3]);
+        assert_eq!(ids(q.next_batch(&cfg, &m).unwrap()), vec![4, 5, 6, 7]);
+    }
+
+    /// The collection window is anchored to the first request's
+    /// *arrival*: a request that already out-waited `max_wait` in the
+    /// queue is served immediately instead of being held another full
+    /// window (the old per-`recv_timeout` drift).
+    #[test]
+    fn window_is_anchored_to_first_arrival() {
+        let (q, m) = (LaneQueue::new(policy()), Metrics::new());
+        let (mut r, _rx) = req(0, Lane::Interactive, None);
+        r.submitted = Instant::now()
+            .checked_sub(Duration::from_millis(500))
+            .expect("monotonic clock far enough from boot");
+        q.push(r, &m).expect("admitted");
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(200) };
+        let t0 = Instant::now();
+        let b = q.next_batch(&cfg, &m).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "stale first request must not re-open the batch window"
+        );
     }
 
     #[test]
-    fn returns_partial_batch_on_timeout() {
-        let (tx, rx) = channel();
-        tx.send(1).unwrap();
+    fn interactive_lane_is_drained_before_batch_lane() {
+        let (q, m) = (LaneQueue::new(policy()), Metrics::new());
+        for i in 0..3 {
+            push_ok(&q, &m, i, Lane::Batch);
+        }
+        for i in 10..12 {
+            push_ok(&q, &m, i, Lane::Interactive);
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let b = q.next_batch(&cfg, &m).unwrap();
+        let ids: Vec<u64> = b.into_iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 11, 0, 1], "interactive first, then batch lane, FIFO within each");
+    }
+
+    #[test]
+    fn expired_requests_are_answered_and_skipped_at_dequeue() {
+        let (q, m) = (LaneQueue::new(policy()), Metrics::new());
+        let (dead, dead_rx) = req(1, Lane::Interactive, Some(Instant::now()));
+        q.push(dead, &m).expect("cold estimate admits everything");
+        let live_rx = push_ok(&q, &m, 2, Lane::Interactive);
+        std::thread::sleep(Duration::from_millis(2)); // let the deadline pass
         let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) };
-        let b = next_batch(&rx, &cfg).unwrap();
-        assert_eq!(b, vec![1]);
+        let b = q.next_batch(&cfg, &m).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id, 2);
+        match dead_rx.recv().expect("expired request still gets an answer") {
+            Response::DeadlineExceeded { id: 1, .. } => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(m.snapshot().expired, 1);
+        drop(live_rx);
     }
 
     #[test]
-    fn returns_none_on_shutdown() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        let cfg = BatcherConfig::default();
-        assert!(next_batch(&rx, &cfg).is_none());
+    fn full_lane_rejects_newest_by_default() {
+        let mut p = policy();
+        p.interactive_depth = 2;
+        let (q, m) = (LaneQueue::new(p), Metrics::new());
+        let _a = push_ok(&q, &m, 0, Lane::Interactive);
+        let _b = push_ok(&q, &m, 1, Lane::Interactive);
+        let (r, _rx) = req(2, Lane::Interactive, None);
+        match q.push(r, &m) {
+            Err(SubmitError::Overloaded { queued, .. }) => assert_eq!(queued, 2),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(m.snapshot().rejected, 1);
     }
 
     #[test]
-    fn preserves_fifo_order() {
-        let (tx, rx) = channel();
-        for i in 0..20 {
-            tx.send(i).unwrap();
+    fn evict_oldest_batch_policy_sheds_the_oldest_queued_batch_request() {
+        let mut p = policy();
+        p.batch_depth = 2;
+        p.interactive_depth = 2;
+        p.shed_policy = ShedPolicy::EvictOldestBatch;
+        let (q, m) = (LaneQueue::new(p), Metrics::new());
+        let victim_rx = push_ok(&q, &m, 0, Lane::Batch);
+        let _keep = push_ok(&q, &m, 1, Lane::Batch);
+        let _newest = push_ok(&q, &m, 2, Lane::Batch); // evicts id 0
+        match victim_rx.recv().expect("evicted request still gets an answer") {
+            Response::Shed { id: 0, .. } => {}
+            other => panic!("expected Shed, got {other:?}"),
         }
-        drop(tx);
-        let cfg = BatcherConfig { max_batch: 7, max_wait: Duration::from_millis(1) };
-        let mut seen = Vec::new();
-        while let Some(b) = next_batch(&rx, &cfg) {
-            assert!(b.len() <= 7);
-            seen.extend(b);
+        assert_eq!(m.snapshot().shed, 1);
+        // Interactive overflow still rejects the newcomer: evicting
+        // batch work cannot create interactive capacity.
+        let _i0 = push_ok(&q, &m, 10, Lane::Interactive);
+        let _i1 = push_ok(&q, &m, 11, Lane::Interactive);
+        let (r, _rx) = req(12, Lane::Interactive, None);
+        assert!(matches!(q.push(r, &m), Err(SubmitError::Overloaded { .. })));
+    }
+
+    /// Once the service-rate estimate warms up, admission rejects
+    /// requests whose estimated wait misses their deadline or the
+    /// configured interactive latency budget.
+    #[test]
+    fn admission_estimates_wait_from_the_service_rate() {
+        let mut p = policy();
+        p.latency_budget = Some(Duration::from_millis(30));
+        let (q, m) = (LaneQueue::new(p), Metrics::new());
+        q.update_service_rate(10_000); // 10 ms per request
+        assert_eq!(q.service_estimate_us(), 10_000);
+        for i in 0..5 {
+            let (r, _rx) = req(i, Lane::Batch, None);
+            q.push(r, &m).expect("batch lane ignores the latency budget");
         }
-        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+        // Interactive: 0 interactive ahead → est 10 ms ≤ 30 ms budget.
+        let _ok = push_ok(&q, &m, 10, Lane::Interactive);
+        let _ok2 = push_ok(&q, &m, 11, Lane::Interactive);
+        // Third interactive: est (2+1)·10 ms = 30 ms, still ≤ budget;
+        // fourth: 40 ms > budget → rejected.
+        let _ok3 = push_ok(&q, &m, 12, Lane::Interactive);
+        let (r, _rx) = req(13, Lane::Interactive, None);
+        match q.push(r, &m) {
+            Err(SubmitError::Overloaded { estimated_wait_us, .. }) => {
+                assert!(estimated_wait_us > 30_000)
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // A deadline the estimate already misses is rejected on any lane
+        // (3 interactive + 5 batch ahead → est 90 ms > 20 ms deadline).
+        let (r, _rx) = req(14, Lane::Batch, Some(Instant::now() + Duration::from_millis(20)));
+        assert!(matches!(q.push(r, &m), Err(SubmitError::Overloaded { .. })));
+        assert_eq!(m.snapshot().rejected, 2);
+    }
+
+    #[test]
+    fn close_serves_backlog_then_returns_none() {
+        let (q, m) = (LaneQueue::new(policy()), Metrics::new());
+        let _a = push_ok(&q, &m, 0, Lane::Interactive);
+        let _b = push_ok(&q, &m, 1, Lane::Interactive);
+        q.close(None);
+        let (r, _rx) = req(2, Lane::Interactive, None);
+        assert_eq!(q.push(r, &m), Err(SubmitError::Closed));
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) };
+        assert_eq!(q.next_batch(&cfg, &m).unwrap().len(), 2);
+        assert!(q.next_batch(&cfg, &m).is_none());
+    }
+
+    #[test]
+    fn drain_deadline_sheds_the_backlog() {
+        let (q, m) = (LaneQueue::new(policy()), Metrics::new());
+        let rxs: Vec<Receiver<Response>> =
+            (0..3).map(|i| push_ok(&q, &m, i, Lane::Interactive)).collect();
+        q.close(Some(Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(1)); // deadline passes
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) };
+        assert!(q.next_batch(&cfg, &m).is_none());
+        for rx in rxs {
+            match rx.recv().expect("shed requests still get an answer") {
+                Response::Shed { .. } => {}
+                other => panic!("expected Shed, got {other:?}"),
+            }
+        }
+        assert_eq!(m.snapshot().shed, 3);
     }
 }

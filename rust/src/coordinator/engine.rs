@@ -83,6 +83,42 @@ impl InferenceEngine for NativeEngine {
     }
 }
 
+/// Wraps any engine with an injected per-image delay. This is the
+/// slow-engine fixture behind the overload tests and
+/// `repro bench-serve --delay-us`: it makes service time deterministic
+/// and large relative to queueing, so saturation can be driven on
+/// purpose with tiny request counts. Replicas each wrap a replica of
+/// the inner engine (same shared packed plan, same delay).
+pub struct DelayEngine {
+    inner: Box<dyn InferenceEngine>,
+    per_image: std::time::Duration,
+}
+
+impl DelayEngine {
+    pub fn new(inner: Box<dyn InferenceEngine>, per_image: std::time::Duration) -> Self {
+        DelayEngine { inner, per_image }
+    }
+}
+
+impl InferenceEngine for DelayEngine {
+    fn infer_batch(&mut self, images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
+        std::thread::sleep(self.per_image.saturating_mul(images.len() as u32));
+        self.inner.infer_batch(images)
+    }
+
+    fn input_dims(&self) -> (usize, usize, usize) {
+        self.inner.input_dims()
+    }
+
+    fn name(&self) -> String {
+        format!("{}+delay", self.inner.name())
+    }
+
+    fn replicate(&self) -> Box<dyn InferenceEngine> {
+        Box::new(DelayEngine { inner: self.inner.replicate(), per_image: self.per_image })
+    }
+}
+
 /// A pool of engine replicas serving one model: replica 0 is the engine
 /// the pool was built from, the rest are [`InferenceEngine::replicate`]
 /// clones sharing its packed weights. [`EnginePool::infer_batch`] splits

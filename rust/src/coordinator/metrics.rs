@@ -1,10 +1,86 @@
-//! Serving metrics: request counts, latency quantiles, batch-size
-//! histogram, and per-replica load counters.
+//! Serving metrics: request counts, latency and queue-wait quantiles,
+//! batch-size histogram, per-lane and per-replica load counters, and
+//! the overload counters (rejected / shed / expired).
+//!
+//! Latency and queue wait are recorded into a bounded log-linear
+//! histogram ([`Hist`]): exact below 16 µs, then 8 sub-buckets per
+//! power of two (≤ 12.5 % quantile error), with the exact maximum
+//! tracked on the side. Memory is a fixed few KiB however long the
+//! server runs — the previous unbounded `Vec<u64>` of latencies grew
+//! without limit under sustained traffic, which is exactly the regime
+//! the overload work targets. Quantiles are `Option<u64>`: `None` on an
+//! empty histogram instead of an interpolated garbage value.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
-/// Shared metrics accumulator (worker writes, callers snapshot).
+/// 16 exact buckets + 8 sub-buckets for each power of two from 2^4 up
+/// through 2^63.
+const HIST_BUCKETS: usize = 16 + 60 * 8;
+
+/// Bounded log-linear histogram of u64 samples (µs in this module).
+#[derive(Clone)]
+struct Hist {
+    counts: Vec<u64>,
+    total: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: vec![0; HIST_BUCKETS], total: 0, max: 0 }
+    }
+}
+
+impl Hist {
+    fn bucket(v: u64) -> usize {
+        if v < 16 {
+            return v as usize;
+        }
+        let top = 63 - v.leading_zeros() as usize; // ≥ 4
+        let sub = ((v >> (top - 3)) - 8) as usize; // 0..8
+        16 + (top - 4) * 8 + sub
+    }
+
+    /// Largest value that maps to bucket `i` (computed in u128: the top
+    /// bucket's bound would overflow u64).
+    fn bucket_upper(i: usize) -> u64 {
+        if i < 16 {
+            return i as u64;
+        }
+        let top = (i - 16) / 8 + 4;
+        let sub = ((i - 16) % 8) as u128;
+        let upper = ((9 + sub) << (top - 3)) - 1;
+        upper.min(u64::MAX as u128) as u64
+    }
+
+    fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.max = self.max.max(v);
+    }
+
+    /// Nearest-rank quantile, `None` when empty. The bucket upper bound
+    /// is clamped to the exact observed max, so `quantile(1.0)` — and
+    /// any quantile landing in the last occupied bucket — is exact.
+    fn quantile(&self, p: f64) -> Option<u64> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((self.total - 1) as f64 * p) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Some(Self::bucket_upper(i).min(self.max));
+            }
+        }
+        Some(self.max)
+    }
+}
+
+/// Shared metrics accumulator (worker and admission path write, callers
+/// snapshot).
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -15,25 +91,49 @@ struct Inner {
     requests: u64,
     batches: u64,
     batch_size_sum: u64,
-    latencies_us: Vec<u64>,
+    latency: Hist,
+    queue_wait: Hist,
     batch_size_hist: BTreeMap<usize, u64>,
     replica_requests: Vec<u64>,
+    lane_requests: [u64; 2],
+    rejected: u64,
+    shed: u64,
+    expired: u64,
 }
 
-/// A point-in-time copy of the metrics.
+/// A point-in-time copy of the metrics. Quantiles are `None` until at
+/// least one sample exists.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
+    /// Requests actually served (completions only).
     pub requests: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
-    pub p50_latency_us: u64,
-    pub p95_latency_us: u64,
-    pub p99_latency_us: u64,
+    pub p50_latency_us: Option<u64>,
+    pub p95_latency_us: Option<u64>,
+    pub p99_latency_us: Option<u64>,
     pub max_latency_us: u64,
+    /// Time served requests spent queued before reaching the engine
+    /// (the quantity the admission estimate predicts).
+    pub queue_wait_p50_us: Option<u64>,
+    pub queue_wait_p99_us: Option<u64>,
+    pub queue_wait_max_us: u64,
     /// Executed-batch-size histogram: `(batch_size, batches)` ascending.
     pub batch_size_hist: Vec<(usize, u64)>,
     /// Requests served by each engine replica (index = replica id).
     pub replica_requests: Vec<u64>,
+    /// Served requests per lane: `[interactive, batch]`.
+    pub lane_requests: [u64; 2],
+    /// Submissions refused at admission (`SubmitError::Overloaded`).
+    pub rejected: u64,
+    /// Accepted requests dropped by load shedding (eviction, bounded
+    /// drain, dead worker).
+    pub shed: u64,
+    /// Accepted requests whose deadline passed in the queue.
+    pub expired: u64,
+    /// Rolling per-request service-time estimate feeding admission, µs
+    /// (0 until the first batch executes; filled in by the server).
+    pub service_estimate_us: u64,
 }
 
 impl Metrics {
@@ -42,13 +142,16 @@ impl Metrics {
     }
 
     /// Record one executed batch: the end-to-end latency of each of its
-    /// requests (µs) and how many of them each replica served.
-    pub fn record_batch(&self, latencies_us: &[u64], replica_loads: &[usize]) {
+    /// requests (µs), how many of them each replica served, and how
+    /// many came from each lane.
+    pub fn record_batch(&self, latencies_us: &[u64], replica_loads: &[usize], lane_counts: [u64; 2]) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.requests += latencies_us.len() as u64;
         m.batch_size_sum += latencies_us.len() as u64;
-        m.latencies_us.extend_from_slice(latencies_us);
+        for &l in latencies_us {
+            m.latency.record(l);
+        }
         *m.batch_size_hist.entry(latencies_us.len()).or_insert(0) += 1;
         if m.replica_requests.len() < replica_loads.len() {
             m.replica_requests.resize(replica_loads.len(), 0);
@@ -56,29 +159,49 @@ impl Metrics {
         for (i, &load) in replica_loads.iter().enumerate() {
             m.replica_requests[i] += load as u64;
         }
+        m.lane_requests[0] += lane_counts[0];
+        m.lane_requests[1] += lane_counts[1];
+    }
+
+    /// Queue wait of a request popped live for execution, µs. Expired
+    /// and shed requests are counted separately, not here: the wait
+    /// histogram describes served traffic.
+    pub fn record_queue_wait(&self, wait_us: u64) {
+        self.inner.lock().unwrap().queue_wait.record(wait_us);
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        let mut lat = m.latencies_us.clone();
-        lat.sort_unstable();
-        let q = |p: f64| -> u64 {
-            if lat.is_empty() {
-                0
-            } else {
-                lat[((lat.len() - 1) as f64 * p) as usize]
-            }
-        };
         MetricsSnapshot {
             requests: m.requests,
             batches: m.batches,
             mean_batch_size: if m.batches > 0 { m.batch_size_sum as f64 / m.batches as f64 } else { 0.0 },
-            p50_latency_us: q(0.5),
-            p95_latency_us: q(0.95),
-            p99_latency_us: q(0.99),
-            max_latency_us: lat.last().copied().unwrap_or(0),
+            p50_latency_us: m.latency.quantile(0.5),
+            p95_latency_us: m.latency.quantile(0.95),
+            p99_latency_us: m.latency.quantile(0.99),
+            max_latency_us: m.latency.max,
+            queue_wait_p50_us: m.queue_wait.quantile(0.5),
+            queue_wait_p99_us: m.queue_wait.quantile(0.99),
+            queue_wait_max_us: m.queue_wait.max,
             batch_size_hist: m.batch_size_hist.iter().map(|(&s, &n)| (s, n)).collect(),
             replica_requests: m.replica_requests.clone(),
+            lane_requests: m.lane_requests,
+            rejected: m.rejected,
+            shed: m.shed,
+            expired: m.expired,
+            service_estimate_us: 0,
         }
     }
 }
@@ -90,23 +213,26 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_batch(&[100, 200, 300], &[2, 1]);
-        m.record_batch(&[400], &[1, 0]);
+        m.record_batch(&[100, 200, 300], &[2, 1], [3, 0]);
+        m.record_batch(&[400], &[1, 0], [0, 1]);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
         assert_eq!(s.max_latency_us, 400);
-        assert!(s.p50_latency_us >= 100 && s.p50_latency_us <= 300);
-        assert!(s.p95_latency_us <= s.p99_latency_us && s.p99_latency_us <= s.max_latency_us);
+        let p50 = s.p50_latency_us.unwrap();
+        assert!((100..=300).contains(&p50) || p50 <= 300 + 300 / 8, "p50 {} within bucket error", p50);
+        assert!(s.p95_latency_us.unwrap() <= s.p99_latency_us.unwrap());
+        assert!(s.p99_latency_us.unwrap() <= s.max_latency_us);
+        assert_eq!(s.lane_requests, [3, 1]);
     }
 
     #[test]
     fn batch_size_histogram_counts_batches() {
         let m = Metrics::new();
-        m.record_batch(&[1, 2, 3], &[3]);
-        m.record_batch(&[4, 5, 6], &[3]);
-        m.record_batch(&[7], &[1]);
+        m.record_batch(&[1, 2, 3], &[3], [3, 0]);
+        m.record_batch(&[4, 5, 6], &[3], [3, 0]);
+        m.record_batch(&[7], &[1], [1, 0]);
         let s = m.snapshot();
         assert_eq!(s.batch_size_hist, vec![(1, 1), (3, 2)]);
     }
@@ -114,22 +240,91 @@ mod tests {
     #[test]
     fn replica_counters_accumulate_per_index() {
         let m = Metrics::new();
-        m.record_batch(&[10, 20, 30, 40], &[2, 2]);
-        m.record_batch(&[50, 60, 70], &[2, 1]);
+        m.record_batch(&[10, 20, 30, 40], &[2, 2], [4, 0]);
+        m.record_batch(&[50, 60, 70], &[2, 1], [3, 0]);
         // A later batch may report more replicas (pool resized counters).
-        m.record_batch(&[80], &[0, 0, 1]);
+        m.record_batch(&[80], &[0, 0, 1], [1, 0]);
         let s = m.snapshot();
         assert_eq!(s.replica_requests, vec![4, 3, 1]);
         assert_eq!(s.replica_requests.iter().sum::<u64>(), s.requests);
     }
 
+    /// The empty-histogram satellite: no samples → quantiles are `None`,
+    /// never an interpolated garbage value.
     #[test]
-    fn empty_snapshot_is_zeroed() {
+    fn empty_snapshot_has_no_quantiles() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
-        assert_eq!(s.p95_latency_us, 0);
-        assert_eq!(s.p99_latency_us, 0);
+        assert_eq!(s.p50_latency_us, None);
+        assert_eq!(s.p95_latency_us, None);
+        assert_eq!(s.p99_latency_us, None);
+        assert_eq!(s.queue_wait_p50_us, None);
+        assert_eq!(s.queue_wait_p99_us, None);
+        assert_eq!(s.max_latency_us, 0);
         assert!(s.batch_size_hist.is_empty());
         assert!(s.replica_requests.is_empty());
+        assert_eq!((s.rejected, s.shed, s.expired), (0, 0, 0));
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let m = Metrics::new();
+        m.record_batch(&[12_345], &[1], [1, 0]);
+        let s = m.snapshot();
+        // One sample: every quantile is that sample (clamped to max).
+        assert_eq!(s.p50_latency_us, Some(12_345));
+        assert_eq!(s.p99_latency_us, Some(12_345));
+        assert_eq!(s.max_latency_us, 12_345);
+    }
+
+    #[test]
+    fn hist_is_exact_below_16() {
+        let mut h = Hist::default();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), Some(0));
+        assert_eq!(h.quantile(1.0), Some(15));
+        // rank = 15*0.5 = 7 → 8th sample (0-indexed 7) = 7.
+        assert_eq!(h.quantile(0.5), Some(7));
+    }
+
+    #[test]
+    fn hist_bucket_error_is_bounded() {
+        let mut h = Hist::default();
+        for &v in &[1_000u64, 10_000, 100_000, 1_000_000] {
+            h.record(v);
+            // The bucket upper bound overestimates by at most 12.5 %.
+            let q = Hist { counts: h.counts.clone(), total: h.total, max: u64::MAX }
+                .quantile(1.0)
+                .unwrap();
+            assert!(q >= v && (q - v) as f64 <= v as f64 * 0.125 + 1.0, "v={v} q={q}");
+        }
+    }
+
+    #[test]
+    fn hist_handles_extreme_values_without_overflow() {
+        let mut h = Hist::default();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        assert_eq!(h.quantile(1.0), Some(u64::MAX));
+        assert_eq!(h.quantile(0.0), Some(u64::MAX)); // clamped to exact max
+    }
+
+    #[test]
+    fn queue_wait_and_overload_counters() {
+        let m = Metrics::new();
+        m.record_queue_wait(500);
+        m.record_queue_wait(1_500);
+        m.record_rejected();
+        m.record_rejected();
+        m.record_shed();
+        m.record_expired();
+        let s = m.snapshot();
+        assert!(s.queue_wait_p50_us.is_some());
+        assert_eq!(s.queue_wait_max_us, 1_500);
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.expired, 1);
     }
 }

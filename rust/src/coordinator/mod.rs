@@ -3,25 +3,42 @@
 //!
 //! The paper motivates its kernels with "recognition on mobile devices";
 //! this module is the deployment harness around them: requests enter a
-//! bounded queue, a dynamic batcher groups them (up to `max_batch`,
-//! waiting at most `max_wait` after the first request), a worker thread
-//! splits each batch across the [`engine::EnginePool`]'s replicas —
-//! thin [`crate::nn::NetPlan`] + scratch holders sharing one set of
-//! packed weights — and latency / throughput / per-replica metrics are
-//! recorded. Replica-level batch parallelism composes with the per-GEMM
-//! row-band [`crate::gemm::Threading`] inside each plan.
+//! bounded two-lane queue ([`batcher::Lane::Interactive`] drained ahead
+//! of [`batcher::Lane::Batch`]) guarded by deadline-aware admission
+//! control, a dynamic batcher groups them (up to `max_batch`, waiting
+//! at most `max_wait` after the first request *arrived*), a worker
+//! thread splits each batch across the [`engine::EnginePool`]'s
+//! replicas — thin [`crate::nn::NetPlan`] + scratch holders sharing one
+//! set of packed weights — and latency / queue-wait / throughput /
+//! per-lane / per-replica metrics are recorded. Replica-level batch
+//! parallelism composes with the per-GEMM row-band
+//! [`crate::gemm::Threading`] inside each plan.
 //!
-//! Everything is std-only (threads + channels): the build environment has
-//! no async runtime, and a CPU inference server at this scale is
-//! well-served by one worker thread fanning out to scoped replica
-//! threads.
+//! Overload is a typed, first-class outcome, not an emergent stall:
+//! `submit` never blocks — admission rejects with
+//! [`server::SubmitError::Overloaded`] when a lane is full or the
+//! estimated wait misses the deadline / latency budget, queued requests
+//! whose deadline passes are answered
+//! [`server::Response::DeadlineExceeded`] at dequeue, and the
+//! [`batcher::ShedPolicy`] + bounded-drain
+//! [`server::InferenceServer::shutdown_within`] decide what gets shed
+//! under pressure. `repro bench-serve` measures the resulting
+//! saturation curve as `BENCH_overload.json`.
+//!
+//! Everything is std-only (threads + channels + Condvar): the build
+//! environment has no async runtime, and a CPU inference server at this
+//! scale is well-served by one worker thread fanning out to scoped
+//! replica threads.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::BatcherConfig;
-pub use engine::{EnginePool, InferenceEngine, NativeEngine};
+pub use batcher::{BatcherConfig, Lane, ShedPolicy};
+pub use engine::{DelayEngine, EnginePool, InferenceEngine, NativeEngine};
 pub use metrics::MetricsSnapshot;
-pub use server::{InferenceServer, Request, Response, ServerClosed};
+pub use server::{
+    Completion, InferenceServer, Request, Response, ServerClosed, ServerConfig, SubmitError,
+    SubmitOptions,
+};

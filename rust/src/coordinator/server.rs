@@ -1,44 +1,138 @@
-//! The inference server: bounded submission queue → dynamic batcher →
-//! worker thread → replica pool → per-request response channels.
+//! The inference server: bounded two-lane submission queue → dynamic
+//! batcher → worker thread → replica pool → per-request response
+//! channels.
 //!
 //! The worker owns an [`EnginePool`]: each dynamic batch is split into
-//! contiguous per-replica chunks executed on scoped threads (batch-level
-//! parallelism), composing with the per-GEMM row-band threading inside
-//! each replica's plan. Submission is fully typed: [`InferenceServer::submit`]
-//! returns [`ServerClosed`] instead of panicking when the worker has
-//! stopped (shutdown or a died engine), and shutdown drains every
-//! pending request before joining.
+//! contiguous per-replica chunks executed on scoped threads
+//! (batch-level parallelism), composing with the per-GEMM row-band
+//! threading inside each replica's plan.
+//!
+//! Submission never blocks and is fully typed. Every request enters a
+//! priority lane ([`Lane::Interactive`] by default) and may carry a
+//! deadline; [`InferenceServer::submit`] rejects with
+//! [`SubmitError::Overloaded`] when the lane is full or when the
+//! queue's estimated wait — queue depth × a rolling per-request
+//! service-time estimate — would miss the deadline or the configured
+//! interactive latency budget. Requests whose deadline passes while
+//! queued are answered [`Response::DeadlineExceeded`] at dequeue
+//! instead of wasting engine time, and the [`ShedPolicy`] decides
+//! whether a full batch lane rejects newcomers or evicts its oldest
+//! entry ([`Response::Shed`]). [`InferenceServer::shutdown`] drains
+//! every pending request before joining;
+//! [`InferenceServer::shutdown_within`] bounds the drain and sheds
+//! whatever is still queued past the deadline.
 
 use crate::conv::tensor::Tensor3;
-use crate::coordinator::batcher::{next_batch, BatcherConfig};
+use crate::coordinator::batcher::{BatcherConfig, Lane, LaneQueue, QueuePolicy, ShedPolicy};
 use crate::coordinator::engine::{EnginePool, InferenceEngine};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// A classification request.
+/// A classification request (internal queue entry; constructed by
+/// [`InferenceServer::submit`]).
 pub struct Request {
-    pub id: u64,
-    pub image: Tensor3<f32>,
-    submitted: Instant,
-    reply: Sender<Response>,
+    pub(crate) id: u64,
+    pub(crate) image: Tensor3<f32>,
+    pub(crate) submitted: Instant,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) lane: Lane,
+    pub(crate) reply: Sender<Response>,
 }
 
-/// A classification response.
+impl Request {
+    /// Answer this request. The caller may have dropped its receiver
+    /// (gave up waiting); that is not an error.
+    pub(crate) fn finish(self, resp: Response) {
+        let _ = self.reply.send(resp);
+    }
+}
+
+/// A successfully served request.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Response {
+pub struct Completion {
     pub id: u64,
     pub logits: Vec<f32>,
     pub predicted: usize,
+    /// End-to-end latency (submit → response), µs.
     pub latency_us: u64,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
 }
 
+/// The answer to a submitted request. Under overload not every accepted
+/// request completes: it may expire in the queue or be shed by policy —
+/// but every accepted request gets exactly one `Response`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Served: logits and latency.
+    Completed(Completion),
+    /// The request's deadline passed while it waited in the queue; the
+    /// engine never ran it.
+    DeadlineExceeded { id: u64, waited_us: u64 },
+    /// Dropped by load shedding ([`ShedPolicy::EvictOldestBatch`]
+    /// eviction, a bounded-drain shutdown, or a dead worker's backlog).
+    Shed { id: u64, waited_us: u64 },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Completed(c) => c.id,
+            Response::DeadlineExceeded { id, .. } | Response::Shed { id, .. } => *id,
+        }
+    }
+
+    /// The completion, if this request was actually served.
+    pub fn completed(self) -> Option<Completion> {
+        match self {
+            Response::Completed(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// Why a submission was refused. `submit` never blocks: under pressure
+/// it answers immediately with `Overloaded` so the caller can back off,
+/// downgrade to [`Lane::Batch`], or shed upstream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control refused the request: the lane is full, or the
+    /// estimated queue wait misses the request's deadline / the
+    /// configured interactive latency budget.
+    Overloaded {
+        /// Estimated wait before this request would reach the engine,
+        /// µs (queue depth × rolling per-request service time).
+        estimated_wait_us: u64,
+        /// Requests that were ahead of it in the queue.
+        queued: usize,
+    },
+    /// The server is shut down or its worker died; no response will
+    /// ever be produced.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { estimated_wait_us, queued } => write!(
+                f,
+                "server overloaded: estimated wait {estimated_wait_us} µs behind {queued} queued requests"
+            ),
+            SubmitError::Closed => write!(f, "inference server is closed (worker stopped)"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// The server's queue is closed: the worker has shut down or died (e.g.
 /// an engine panic), so no further responses will ever be produced.
+///
+/// Legacy error type of the pre-`ServerConfig` API; current signatures
+/// report [`SubmitError::Closed`] instead.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServerClosed;
 
@@ -50,104 +144,264 @@ impl std::fmt::Display for ServerClosed {
 
 impl std::error::Error for ServerClosed {}
 
+/// Server configuration: batching, replication, and overload behavior.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    /// Engine replicas in the pool (clamped to ≥ 1).
+    pub replicas: usize,
+    /// Bound on queued interactive-lane requests.
+    pub interactive_depth: usize,
+    /// Bound on queued batch-lane requests.
+    pub batch_depth: usize,
+    /// Interactive-lane SLO: reject at admission when the estimated
+    /// queue wait exceeds it. `None` disables the budget check (depth
+    /// bounds and per-request deadlines still apply).
+    pub latency_budget: Option<Duration>,
+    pub shed_policy: ShedPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            replicas: 1,
+            interactive_depth: 64,
+            batch_depth: 256,
+            latency_budget: None,
+            shed_policy: ShedPolicy::default(),
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn with_batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.batcher = batcher;
+        self
+    }
+
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    pub fn with_depths(mut self, interactive: usize, batch: usize) -> Self {
+        self.interactive_depth = interactive;
+        self.batch_depth = batch;
+        self
+    }
+
+    pub fn with_latency_budget(mut self, budget: Duration) -> Self {
+        self.latency_budget = Some(budget);
+        self
+    }
+
+    pub fn with_shed_policy(mut self, policy: ShedPolicy) -> Self {
+        self.shed_policy = policy;
+        self
+    }
+}
+
+/// Per-submission options: priority lane and optional deadline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    pub lane: Lane,
+    /// Absolute deadline; admission rejects the request when the
+    /// estimated wait already misses it, and the batcher drops it with
+    /// [`Response::DeadlineExceeded`] if it expires while queued.
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitOptions {
+    /// Throughput traffic: [`Lane::Batch`], no deadline.
+    pub fn batch() -> Self {
+        SubmitOptions { lane: Lane::Batch, deadline: None }
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Deadline `d` from now.
+    pub fn deadline_in(self, d: Duration) -> Self {
+        self.with_deadline(Instant::now() + d)
+    }
+}
+
 /// A running inference server (one worker thread over a replica pool).
 pub struct InferenceServer {
-    tx: Option<SyncSender<Request>>,
+    queue: Arc<LaneQueue>,
     worker: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
 impl InferenceServer {
-    /// Start the server over `replicas` copies of `engine` (clamped to
-    /// ≥ 1; replicas share the engine's packed plan via
-    /// [`InferenceEngine::replicate`]). `queue_depth` bounds the
-    /// submission queue (backpressure: submit blocks when full).
+    /// Start the server over `cfg.replicas` copies of `engine`
+    /// (replicas share the engine's packed plan via
+    /// [`InferenceEngine::replicate`]).
+    pub fn with_config(engine: Box<dyn InferenceEngine>, cfg: ServerConfig) -> Self {
+        let pool = EnginePool::new(engine, cfg.replicas);
+        let queue = Arc::new(LaneQueue::new(QueuePolicy {
+            interactive_depth: cfg.interactive_depth,
+            batch_depth: cfg.batch_depth,
+            latency_budget: cfg.latency_budget,
+            shed_policy: cfg.shed_policy,
+        }));
+        let metrics = Arc::new(Metrics::new());
+        let worker_queue = Arc::clone(&queue);
+        let worker_metrics = Arc::clone(&metrics);
+        let batcher = cfg.batcher;
+        let worker = std::thread::Builder::new()
+            .name("tbgemm-worker".into())
+            .spawn(move || worker_loop(worker_queue, pool, batcher, worker_metrics))
+            .expect("spawning worker");
+        InferenceServer { queue, worker: Some(worker), metrics, next_id: 0.into() }
+    }
+
+    /// Legacy constructor. `queue_depth` becomes both lane depths; the
+    /// other overload knobs take their defaults. Note the semantics
+    /// change that came with admission control: a full queue now
+    /// *rejects* (`SubmitError::Overloaded`) instead of blocking the
+    /// submitter.
+    #[deprecated(since = "0.6.0", note = "use InferenceServer::with_config(engine, ServerConfig)")]
     pub fn start(
         engine: Box<dyn InferenceEngine>,
         cfg: BatcherConfig,
         queue_depth: usize,
         replicas: usize,
     ) -> Self {
-        let pool = EnginePool::new(engine, replicas);
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(queue_depth);
-        let metrics = Arc::new(Metrics::new());
-        let worker_metrics = Arc::clone(&metrics);
-        let worker = std::thread::Builder::new()
-            .name("tbgemm-worker".into())
-            .spawn(move || worker_loop(rx, pool, cfg, worker_metrics))
-            .expect("spawning worker");
-        InferenceServer { tx: Some(tx), worker: Some(worker), metrics, next_id: 0.into() }
+        InferenceServer::with_config(
+            engine,
+            ServerConfig::default()
+                .with_batcher(cfg)
+                .with_replicas(replicas)
+                .with_depths(queue_depth, queue_depth),
+        )
     }
 
-    /// Submit an image; returns the receiver for its response, or
-    /// [`ServerClosed`] when the worker is gone (never panics). Blocks
-    /// while the queue is full (backpressure).
-    pub fn submit(&self, image: Tensor3<f32>) -> Result<Receiver<Response>, ServerClosed> {
+    /// Submit an image on the interactive lane with no deadline.
+    /// Returns the receiver for its response. Never blocks: under
+    /// pressure it returns [`SubmitError::Overloaded`] immediately.
+    pub fn submit(&self, image: Tensor3<f32>) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_with(image, SubmitOptions::default())
+    }
+
+    /// Submit with an explicit lane and/or deadline.
+    pub fn submit_with(
+        &self,
+        image: Tensor3<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Receiver<Response>, SubmitError> {
         let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = Request { id, image, submitted: Instant::now(), reply };
-        match self.tx.as_ref() {
-            Some(tx) => tx.send(req).map_err(|_| ServerClosed)?,
-            None => return Err(ServerClosed),
-        }
+        let req = Request {
+            id,
+            image,
+            submitted: Instant::now(),
+            deadline: opts.deadline,
+            lane: opts.lane,
+            reply,
+        };
+        self.queue.push(req, &self.metrics)?;
         Ok(rx)
     }
 
-    /// Submit and wait for the response. [`ServerClosed`] also covers a
-    /// worker that died after accepting the request (dropped reply).
-    pub fn infer(&self, image: Tensor3<f32>) -> Result<Response, ServerClosed> {
-        self.submit(image)?.recv().map_err(|_| ServerClosed)
+    /// Submit and wait for the response. [`SubmitError::Closed`] also
+    /// covers a worker that died after accepting the request (dropped
+    /// reply channel).
+    pub fn infer(&self, image: Tensor3<f32>) -> Result<Response, SubmitError> {
+        self.submit(image)?.recv().map_err(|_| SubmitError::Closed)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.enriched_snapshot()
+    }
+
+    fn enriched_snapshot(&self) -> MetricsSnapshot {
+        let mut s = self.metrics.snapshot();
+        s.service_estimate_us = self.queue.service_estimate_us();
+        s
     }
 
     /// Drain and stop the worker: the queue closes, the worker serves
     /// every already-submitted request (mid-batch shutdown included),
     /// then exits and is joined.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.tx.take(); // close the channel; worker drains and exits
+        self.queue.close(None);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        self.metrics.snapshot()
+        self.enriched_snapshot()
+    }
+
+    /// Bounded-drain shutdown: in-flight and already-dequeued work is
+    /// flushed, but once `drain` has elapsed the remaining backlog is
+    /// shed ([`Response::Shed`]) instead of served.
+    pub fn shutdown_within(mut self, drain: Duration) -> MetricsSnapshot {
+        self.queue.close(Some(drain));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.enriched_snapshot()
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        self.tx.take();
+        self.queue.close(None);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(rx: Receiver<Request>, mut pool: EnginePool, cfg: BatcherConfig, metrics: Arc<Metrics>) {
-    while let Some(batch) = next_batch(&rx, &cfg) {
+/// Closes the queue when the worker exits — including by panic (a died
+/// engine), so queued requests are shed with an answer and later
+/// submissions get `SubmitError::Closed` instead of queueing forever.
+struct CloseOnExit {
+    queue: Arc<LaneQueue>,
+    metrics: Arc<Metrics>,
+}
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        self.queue.close_and_shed(&self.metrics);
+    }
+}
+
+fn worker_loop(queue: Arc<LaneQueue>, mut pool: EnginePool, cfg: BatcherConfig, metrics: Arc<Metrics>) {
+    let _guard = CloseOnExit { queue: Arc::clone(&queue), metrics: Arc::clone(&metrics) };
+    while let Some(batch) = queue.next_batch(&cfg, &metrics) {
         let images: Vec<Tensor3<f32>> = batch.iter().map(|r| r.image.clone()).collect();
+        let exec_start = Instant::now();
         let (outputs, replica_loads) = pool.infer_batch(&images);
+        let exec_us = exec_start.elapsed().as_micros() as u64;
+        // Feed the admission estimator: amortized per-request service
+        // time of this batch (len ≥ 1 by construction).
+        queue.update_service_rate(exec_us / batch.len() as u64);
         let mut latencies = Vec::with_capacity(batch.len());
+        let mut lane_counts = [0u64; 2];
         let bsize = batch.len();
         // The pool keeps `outputs` aligned with `images` even when a
         // replica dies (its chunk degrades to empty logits), so this zip
         // never mispairs; a panic on the single-replica inline path
-        // kills the worker instead, surfacing as `ServerClosed`.
+        // kills the worker instead, surfacing as `SubmitError::Closed`.
         for (req, logits) in batch.into_iter().zip(outputs) {
             let latency_us = req.submitted.elapsed().as_micros() as u64;
             latencies.push(latency_us);
+            lane_counts[req.lane as usize] += 1;
             let predicted = logits
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
-            // Receiver may have been dropped (caller gave up): ignore.
-            let _ = req.reply.send(Response { id: req.id, logits, predicted, latency_us, batch_size: bsize });
+            let id = req.id;
+            req.finish(Response::Completed(Completion { id, logits, predicted, latency_us, batch_size: bsize }));
         }
-        metrics.record_batch(&latencies, &replica_loads);
+        metrics.record_batch(&latencies, &replica_loads, lane_counts);
     }
 }
 
@@ -159,29 +413,34 @@ mod tests {
     use crate::nn::NetPlanConfig;
     use crate::util::proptest::{check, Config};
     use crate::util::Rng;
-    use std::time::Duration;
 
     fn tiny_server(max_batch: usize, replicas: usize) -> InferenceServer {
         let plan =
             plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 11, NetPlanConfig::default()).expect("plan");
         let engine = Box::new(NativeEngine::new(plan, "test"));
-        InferenceServer::start(
+        InferenceServer::with_config(
             engine,
-            BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-            64,
-            replicas,
+            ServerConfig::default()
+                .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(1) })
+                .with_replicas(replicas)
+                .with_depths(64, 64),
         )
+    }
+
+    fn complete(resp: Response) -> Completion {
+        resp.completed().expect("request should have been served")
     }
 
     #[test]
     fn single_request_roundtrip() {
         let server = tiny_server(4, 1);
         let mut rng = Rng::new(1);
-        let resp = server.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+        let resp = complete(server.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up"));
         assert_eq!(resp.logits.len(), 3);
         assert!(resp.predicted < 3);
         let m = server.shutdown();
         assert_eq!(m.requests, 1);
+        assert!(m.service_estimate_us > 0, "worker must feed the admission estimator");
     }
 
     /// Property: every submitted request receives exactly one response
@@ -198,7 +457,8 @@ mod tests {
                 let img = Tensor3::random(8, 8, 1, rng);
                 pending.push(server.submit(img).expect("server up"));
             }
-            let mut ids: Vec<u64> = pending.iter().map(|rx| rx.recv().expect("response").id).collect();
+            let mut ids: Vec<u64> =
+                pending.iter().map(|rx| rx.recv().expect("response").id()).collect();
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), n, "each id exactly once");
@@ -221,13 +481,14 @@ mod tests {
                 pending.push(server.submit(Tensor3::random(8, 8, 1, rng)).expect("server up"));
             }
             for rx in pending {
-                let resp = rx.recv().unwrap();
+                let resp = complete(rx.recv().unwrap());
                 assert!(resp.batch_size <= max_batch, "batch {} > {}", resp.batch_size, max_batch);
             }
             let m = server.shutdown();
             assert_eq!(m.requests, n as u64);
             assert!(m.mean_batch_size <= max_batch as f64 + 1e-9);
             assert_eq!(m.batch_size_hist.iter().map(|&(s, c)| s as u64 * c).sum::<u64>(), n as u64);
+            assert_eq!(m.lane_requests, [n as u64, 0], "default submissions are interactive-lane");
         });
     }
 
@@ -236,8 +497,8 @@ mod tests {
         let server = tiny_server(4, 2);
         let mut rng = Rng::new(5);
         let img = Tensor3::random(8, 8, 1, &mut rng);
-        let a = server.infer(img.clone()).expect("server up");
-        let b = server.infer(img).expect("server up");
+        let a = complete(server.infer(img.clone()).expect("server up"));
+        let b = complete(server.infer(img).expect("server up"));
         assert_eq!(a.logits, b.logits);
     }
 
@@ -251,7 +512,44 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.requests, 5);
         assert!(m.max_latency_us > 0);
-        assert!(m.p50_latency_us <= m.p95_latency_us);
-        assert!(m.p95_latency_us <= m.p99_latency_us);
+        let (p50, p95, p99) = (
+            m.p50_latency_us.expect("5 samples"),
+            m.p95_latency_us.expect("5 samples"),
+            m.p99_latency_us.expect("5 samples"),
+        );
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 <= m.max_latency_us);
+        assert!(m.queue_wait_p50_us.expect("served requests record queue wait") <= m.queue_wait_max_us);
+    }
+
+    #[test]
+    fn batch_lane_submissions_are_counted_per_lane() {
+        let server = tiny_server(4, 1);
+        let mut rng = Rng::new(7);
+        let rx_batch = server
+            .submit_with(Tensor3::random(8, 8, 1, &mut rng), SubmitOptions::batch())
+            .expect("server up");
+        let rx_inter = server.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+        complete(rx_batch.recv().unwrap());
+        complete(rx_inter.recv().unwrap());
+        let m = server.shutdown();
+        assert_eq!(m.lane_requests, [1, 1]);
+    }
+
+    /// A generous deadline is met; responses still complete normally.
+    #[test]
+    fn generous_deadline_completes() {
+        let server = tiny_server(4, 1);
+        let mut rng = Rng::new(8);
+        let rx = server
+            .submit_with(
+                Tensor3::random(8, 8, 1, &mut rng),
+                SubmitOptions::default().deadline_in(Duration::from_secs(10)),
+            )
+            .expect("server up");
+        complete(rx.recv().unwrap());
+        let m = server.shutdown();
+        assert_eq!(m.expired, 0);
+        assert_eq!(m.rejected, 0);
     }
 }

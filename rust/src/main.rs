@@ -16,12 +16,19 @@
 //! * `serve`    — start the batching coordinator over a replica pool
 //!                (`--replicas N`) and run a load test; emits the
 //!                machine-readable `BENCH_serve.json`.
+//! * `bench-serve` — open-loop overload benchmark: Poisson arrivals at
+//!                `--rps` for `--duration` seconds (`--ramp` sweeps a
+//!                multiplier grid to expose the throughput/p99 knee);
+//!                emits `BENCH_overload.json`.
 //! * `xla <artifact>` — load an AOT artifact and execute it.
 
 use tbgemm::bench::{grid, predicted, ratio};
 use tbgemm::conv::conv2d::ConvKind;
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::coordinator::{
+    BatcherConfig, DelayEngine, InferenceEngine, InferenceServer, NativeEngine, Response,
+    ServerConfig, SubmitError,
+};
 use tbgemm::costmodel::table2;
 use tbgemm::gemm::encode;
 use tbgemm::gemm::Kind;
@@ -64,6 +71,16 @@ fn main() {
             parse_threading(opt("--threads").as_deref()),
             opt("--replicas").and_then(|s| s.parse().ok()).unwrap_or(1),
         ),
+        "bench-serve" => cmd_bench_serve(BenchServeOpts {
+            rps: opt("--rps").and_then(|s| s.parse().ok()).unwrap_or(100.0),
+            duration_s: opt("--duration").and_then(|s| s.parse().ok()).unwrap_or(2.0),
+            ramp: flag("--ramp"),
+            batch: opt("--batch").and_then(|s| s.parse().ok()).unwrap_or(8),
+            threading: parse_threading(opt("--threads").as_deref()),
+            replicas: opt("--replicas").and_then(|s| s.parse().ok()).unwrap_or(1),
+            budget_ms: opt("--budget-ms").and_then(|s| s.parse().ok()),
+            delay_us: opt("--delay-us").and_then(|s| s.parse().ok()).unwrap_or(0),
+        }),
         #[cfg(feature = "xla")]
         "xla" => cmd_xla(args.get(1).map(String::as_str).unwrap_or("artifacts/model.hlo.txt")),
         #[cfg(not(feature = "xla"))]
@@ -77,10 +94,16 @@ fn main() {
         }
         _ => {
             println!("repro — 'Fast matrix multiplication for binary and ternary CNNs' reproduction");
-            println!("usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|xla> [flags]");
+            println!(
+                "usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|bench-serve|xla> [flags]"
+            );
             println!("  table3 flags: --predicted --smoke --reps N --inner N");
             println!("  infer flags:  --kind tnn|tbn|bnn --images N");
             println!("  serve flags:  --requests N --batch N --threads auto|N --replicas N");
+            println!(
+                "  bench-serve flags: --rps N --duration S --ramp --batch N --threads auto|N \
+                 --replicas N --budget-ms N --delay-us N"
+            );
         }
     }
 }
@@ -248,34 +271,64 @@ fn cmd_infer(kind: String, images: usize) {
     println!("class histogram: {hist:?}");
 }
 
-fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading, replicas: usize) {
+/// Build the serving model (the TNN mobile CNN every serving command
+/// uses), optionally wrapped in a [`DelayEngine`] to make service time
+/// deterministic for overload experiments.
+fn serving_engine(threading: tbgemm::gemm::Threading, delay_us: u64) -> Box<dyn InferenceEngine> {
     let cfg = NetConfig::mobile_cnn(ConvKind::Tnn, 28, 28, 1, 10);
     let plan = plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default().with_threading(threading))
         .expect("valid built-in config");
-    let server = InferenceServer::start(
-        Box::new(NativeEngine::new(plan, "tnn-mobile")),
-        BatcherConfig { max_batch: batch, ..Default::default() },
-        128,
-        replicas,
+    let engine: Box<dyn InferenceEngine> = Box::new(NativeEngine::new(plan, "tnn-mobile"));
+    if delay_us > 0 {
+        Box::new(DelayEngine::new(engine, std::time::Duration::from_micros(delay_us)))
+    } else {
+        engine
+    }
+}
+
+fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading, replicas: usize) {
+    let server = InferenceServer::with_config(
+        serving_engine(threading, 0),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: batch, ..Default::default() })
+            .with_replicas(replicas)
+            .with_depths(128, 128),
     );
     println!(
         "serving {requests} requests (max_batch={batch}, replicas={replicas}, gemm threading {threading:?})..."
     );
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
-    let pending: Vec<_> = (0..requests)
-        .map(|_| server.submit(Tensor3::random(28, 28, 1, &mut rng)).expect("server up"))
-        .collect();
+    // Closed-loop with a generously deep queue: ride out transient
+    // Overloaded rejections (admission never blocks) with a short nap.
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let img = Tensor3::random(28, 28, 1, &mut rng);
+        loop {
+            match server.submit(img.clone()) {
+                Ok(rx) => break pending.push(rx),
+                Err(SubmitError::Overloaded { .. }) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200))
+                }
+                Err(SubmitError::Closed) => panic!("server closed mid-benchmark"),
+            }
+        }
+    }
     for rx in pending {
         rx.recv().expect("response");
     }
     let dt = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
     let throughput = requests as f64 / dt;
+    let (p50, p95, p99) = (
+        m.p50_latency_us.unwrap_or(0),
+        m.p95_latency_us.unwrap_or(0),
+        m.p99_latency_us.unwrap_or(0),
+    );
     println!("throughput: {throughput:.1} req/s");
     println!(
         "batches: {} (mean size {:.2}); latency p50={}µs p95={}µs p99={}µs max={}µs",
-        m.batches, m.mean_batch_size, m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.max_latency_us
+        m.batches, m.mean_batch_size, p50, p95, p99, m.max_latency_us
     );
     println!("per-replica requests: {:?}", m.replica_requests);
     // Machine-readable record for the serving bench gate (the serving
@@ -284,12 +337,9 @@ fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading, 
     let reps: Vec<String> = m.replica_requests.iter().map(|r| r.to_string()).collect();
     let json = format!(
         "{{\"requests\":{requests},\"max_batch\":{batch},\"replicas\":{replicas},\
-\"throughput_rps\":{throughput:.1},\"p50_latency_us\":{},\"p95_latency_us\":{},\
-\"p99_latency_us\":{},\"max_latency_us\":{},\"mean_batch_size\":{:.3},\
+\"throughput_rps\":{throughput:.1},\"p50_latency_us\":{p50},\"p95_latency_us\":{p95},\
+\"p99_latency_us\":{p99},\"max_latency_us\":{},\"mean_batch_size\":{:.3},\
 \"batch_size_hist\":[{}],\"replica_requests\":[{}]}}\n",
-        m.p50_latency_us,
-        m.p95_latency_us,
-        m.p99_latency_us,
         m.max_latency_us,
         m.mean_batch_size,
         hist.join(","),
@@ -298,6 +348,161 @@ fn cmd_serve(requests: usize, batch: usize, threading: tbgemm::gemm::Threading, 
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("failed to write BENCH_serve.json: {e}"),
+    }
+}
+
+struct BenchServeOpts {
+    rps: f64,
+    duration_s: f64,
+    ramp: bool,
+    batch: usize,
+    threading: tbgemm::gemm::Threading,
+    replicas: usize,
+    budget_ms: Option<u64>,
+    delay_us: u64,
+}
+
+/// One measured point of the saturation curve.
+struct OverloadPoint {
+    rps: f64,
+    offered: u64,
+    completed: u64,
+    rejected: u64,
+    expired: u64,
+    shed: u64,
+    throughput_rps: f64,
+    p50_latency_us: u64,
+    p99_latency_us: u64,
+    max_latency_us: u64,
+}
+
+/// Nearest-rank percentile over an already-sorted sample (client-side
+/// exact, unlike the server's bounded histogram).
+fn pctl(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        0
+    } else {
+        sorted[((sorted.len() - 1) as f64 * p) as usize]
+    }
+}
+
+/// Drive one open-loop point: Poisson arrivals at `rps` against a fresh
+/// server for `duration_s` seconds, then drain and classify every
+/// accepted request's outcome.
+fn drive_open_loop(opts: &BenchServeOpts, rps: f64, rng: &mut Rng) -> OverloadPoint {
+    let mut cfg = ServerConfig::default()
+        .with_batcher(BatcherConfig { max_batch: opts.batch, ..Default::default() })
+        .with_replicas(opts.replicas);
+    if let Some(ms) = opts.budget_ms {
+        cfg = cfg.with_latency_budget(std::time::Duration::from_millis(ms));
+    }
+    let server = InferenceServer::with_config(serving_engine(opts.threading, opts.delay_us), cfg);
+    let images: Vec<_> = (0..16).map(|_| Tensor3::random(28, 28, 1, rng)).collect();
+    let t0 = std::time::Instant::now();
+    let end = t0 + std::time::Duration::from_secs_f64(opts.duration_s);
+    let mut next = t0;
+    let (mut offered, mut rejected) = (0u64, 0u64);
+    let mut pending = Vec::new();
+    while std::time::Instant::now() < end {
+        let now = std::time::Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        let img = images[offered as usize % images.len()].clone();
+        offered += 1;
+        match server.submit(img) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::Overloaded { .. }) => rejected += 1,
+            Err(SubmitError::Closed) => break,
+        }
+        // Exponential inter-arrival gap (open loop: `next` advances on
+        // the schedule regardless of how the submission fared).
+        let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        next += std::time::Duration::from_secs_f64(-(1.0 - u).ln() / rps);
+    }
+    let m = server.shutdown(); // full drain: the queue is depth-bounded
+    let wall = t0.elapsed().as_secs_f64();
+    let (mut expired, mut shed) = (0u64, 0u64);
+    let mut latencies = Vec::with_capacity(pending.len());
+    for rx in pending {
+        match rx.recv() {
+            Ok(Response::Completed(c)) => latencies.push(c.latency_us),
+            Ok(Response::DeadlineExceeded { .. }) => expired += 1,
+            Ok(Response::Shed { .. }) | Err(_) => shed += 1,
+        }
+    }
+    latencies.sort_unstable();
+    debug_assert_eq!(m.requests, latencies.len() as u64);
+    OverloadPoint {
+        rps,
+        offered,
+        completed: latencies.len() as u64,
+        rejected,
+        expired,
+        shed,
+        throughput_rps: latencies.len() as f64 / wall,
+        p50_latency_us: pctl(&latencies, 0.5),
+        p99_latency_us: pctl(&latencies, 0.99),
+        max_latency_us: latencies.last().copied().unwrap_or(0),
+    }
+}
+
+fn cmd_bench_serve(opts: BenchServeOpts) {
+    let multipliers: &[f64] = if opts.ramp { &[0.25, 0.5, 0.75, 1.0, 1.5, 2.0] } else { &[1.0] };
+    println!(
+        "overload bench: base {} rps × {:?}, {}s per point (batch={}, replicas={}, budget={:?} ms, \
+         injected delay {} µs/img)",
+        opts.rps, multipliers, opts.duration_s, opts.batch, opts.replicas, opts.budget_ms, opts.delay_us
+    );
+    let mut rng = Rng::new(0x0BE5);
+    let mut points = Vec::new();
+    for &mult in multipliers {
+        let rps = opts.rps * mult;
+        let p = drive_open_loop(&opts, rps, &mut rng);
+        println!(
+            "  rps {:>8.1}: offered {:>6}, completed {:>6}, rejected {:>5}, expired {:>4}, shed {:>4} \
+             | {:>8.1} rps served, p50 {:>7} µs, p99 {:>7} µs",
+            p.rps, p.offered, p.completed, p.rejected, p.expired, p.shed, p.throughput_rps,
+            p.p50_latency_us, p.p99_latency_us
+        );
+        points.push(p);
+    }
+    if let Some(knee) =
+        points.iter().max_by(|a, b| a.throughput_rps.partial_cmp(&b.throughput_rps).unwrap())
+    {
+        println!(
+            "knee: {:.1} rps served at offered {:.1} rps (p99 {} µs); beyond it admission sheds load \
+             instead of growing the queue",
+            knee.throughput_rps, knee.rps, knee.p99_latency_us
+        );
+    }
+    let body: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"rps\":{:.1},\"offered\":{},\"completed\":{},\"rejected\":{},\"expired\":{},\
+\"shed\":{},\"throughput_rps\":{:.1},\"p50_latency_us\":{},\"p99_latency_us\":{},\
+\"max_latency_us\":{}}}",
+                p.rps, p.offered, p.completed, p.rejected, p.expired, p.shed, p.throughput_rps,
+                p.p50_latency_us, p.p99_latency_us, p.max_latency_us
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"base_rps\":{:.1},\"duration_s\":{:.1},\"max_batch\":{},\"replicas\":{},\"ramp\":{},\
+\"budget_ms\":{},\"delay_us\":{},\"points\":[{}]}}\n",
+        opts.rps,
+        opts.duration_s,
+        opts.batch,
+        opts.replicas,
+        opts.ramp,
+        opts.budget_ms.map_or_else(|| "null".to_string(), |v| v.to_string()),
+        opts.delay_us,
+        body.join(","),
+    );
+    match std::fs::write("BENCH_overload.json", &json) {
+        Ok(()) => println!("wrote BENCH_overload.json"),
+        Err(e) => eprintln!("failed to write BENCH_overload.json: {e}"),
     }
 }
 

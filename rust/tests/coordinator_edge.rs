@@ -1,13 +1,19 @@
 //! Edge-case tests for the batching coordinator and the replica pool:
 //! degenerate batch sizes, shutdown with an empty or partially drained
 //! queue, dropped reply channels, replica-count invariance of the served
-//! logits, and graceful (typed, non-panicking) submission to a server
-//! whose worker has died.
+//! logits, graceful (typed, non-panicking) submission to a server whose
+//! worker has died — and the overload contract, driven past saturation
+//! on purpose with a slow-engine (injected-delay) fixture: `Overloaded`
+//! rejection at a full queue, `DeadlineExceeded` for stale requests,
+//! priority-lane ordering under pressure, policy-driven shedding,
+//! bounded-drain shutdown, and bit-identical logits for every *accepted*
+//! request while shedding.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use tbgemm::conv::tensor::Tensor3;
 use tbgemm::coordinator::{
-    BatcherConfig, InferenceEngine, InferenceServer, NativeEngine, ServerClosed,
+    BatcherConfig, DelayEngine, InferenceEngine, InferenceServer, NativeEngine, Response,
+    ServerConfig, ShedPolicy, SubmitError, SubmitOptions,
 };
 use tbgemm::gemm::Threading;
 use tbgemm::nn::{plan_from_config, NetConfig, NetPlanConfig};
@@ -21,12 +27,23 @@ fn server(max_batch: usize, threading: Threading, replicas: usize) -> InferenceS
     )
     .expect("plan");
     let engine = Box::new(NativeEngine::new(plan, "edge"));
-    InferenceServer::start(
+    InferenceServer::with_config(
         engine,
-        BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-        64,
-        replicas,
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(1) })
+            .with_replicas(replicas)
+            .with_depths(64, 64),
     )
+}
+
+/// The overload fixture: the tiny TNN plan wrapped in a [`DelayEngine`]
+/// so service time is dominated by a deterministic injected delay —
+/// saturation can then be driven with tiny request counts.
+fn slow_server(per_image: Duration, cfg: ServerConfig) -> InferenceServer {
+    let plan = plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 21, NetPlanConfig::default())
+        .expect("plan");
+    let engine = DelayEngine::new(Box::new(NativeEngine::new(plan, "slow")), per_image);
+    InferenceServer::with_config(Box::new(engine), cfg)
 }
 
 /// `max_batch = 1` degenerates to strict one-request batches: every
@@ -38,7 +55,7 @@ fn max_batch_one_serves_singletons() {
     let pending: Vec<_> =
         (0..12).map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up")).collect();
     for rx in pending {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").completed().expect("served");
         assert_eq!(resp.batch_size, 1);
         assert_eq!(resp.logits.len(), 3);
     }
@@ -47,8 +64,8 @@ fn max_batch_one_serves_singletons() {
     assert!((m.mean_batch_size - 1.0).abs() < 1e-9);
 }
 
-/// Shutting down a server whose channel never saw a request exits
-/// cleanly (the worker is blocked on the empty channel at that moment).
+/// Shutting down a server whose queue never saw a request exits cleanly
+/// (the worker is blocked on the empty queue's condvar at that moment).
 #[test]
 fn shutdown_on_empty_channel_is_clean() {
     let srv = server(4, Threading::Single, 2);
@@ -59,7 +76,7 @@ fn shutdown_on_empty_channel_is_clean() {
 
 /// Shutdown races a filling batch: requests submitted immediately before
 /// shutdown are all drained and answered across the replica pool, none
-/// dropped — the batcher's channel close lands mid-batch-collection.
+/// dropped — the queue close lands mid-batch-collection.
 #[test]
 fn shutdown_mid_batch_drains_pending_requests() {
     for replicas in [1usize, 4] {
@@ -73,7 +90,7 @@ fn shutdown_mid_batch_drains_pending_requests() {
             assert_eq!(m.requests, n as u64, "replicas={replicas} n={n}");
             assert_eq!(m.replica_requests.iter().sum::<u64>(), n as u64, "replicas={replicas} n={n}");
             for rx in pending {
-                let resp = rx.recv().expect("drained response");
+                let resp = rx.recv().expect("drained response").completed().expect("served");
                 assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
                 assert_eq!(resp.logits.len(), 3);
             }
@@ -89,7 +106,7 @@ fn dropped_reply_receiver_does_not_stall_worker() {
     let mut rng = Rng::new(33);
     drop(srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up")); // abandoned
     let resp = srv.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
-    assert_eq!(resp.logits.len(), 3);
+    assert_eq!(resp.completed().expect("served").logits.len(), 3);
     let m = srv.shutdown();
     assert_eq!(m.requests, 2);
 }
@@ -104,8 +121,8 @@ fn engine_logits_identical_across_thread_counts() {
     let single = server(4, Threading::Fixed(1), 1);
     let auto = server(4, Threading::Auto, 1);
     for img in &images {
-        let a = single.infer(img.clone()).expect("server up");
-        let b = auto.infer(img.clone()).expect("server up");
+        let a = single.infer(img.clone()).expect("server up").completed().expect("served");
+        let b = auto.infer(img.clone()).expect("server up").completed().expect("served");
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.predicted, b.predicted);
     }
@@ -125,7 +142,10 @@ fn replica_pool_logits_bit_identical_to_single() {
         let srv = server(8, Threading::Single, replicas);
         let pending: Vec<_> =
             images.iter().map(|img| srv.submit(img.clone()).expect("server up")).collect();
-        let mut responses: Vec<_> = pending.into_iter().map(|rx| rx.recv().expect("response")).collect();
+        let mut responses: Vec<_> = pending
+            .into_iter()
+            .map(|rx| rx.recv().expect("response").completed().expect("served"))
+            .collect();
         responses.sort_by_key(|r| r.id);
         per_count.push(responses.into_iter().map(|r| r.logits).collect());
         let m = srv.shutdown();
@@ -137,10 +157,10 @@ fn replica_pool_logits_bit_identical_to_single() {
 }
 
 /// An engine that dies mid-serve must not take the caller down:
-/// `submit` / `infer` return `ServerClosed` (typed, no panic) once the
-/// worker is gone, and `shutdown` still joins cleanly.
+/// `submit` / `infer` return `SubmitError::Closed` (typed, no panic)
+/// once the worker is gone, and `shutdown` still joins cleanly.
 #[test]
-fn dead_worker_surfaces_as_server_closed() {
+fn dead_worker_surfaces_as_closed() {
     struct PanickingEngine;
     impl InferenceEngine for PanickingEngine {
         fn infer_batch(&mut self, _images: &[Tensor3<f32>]) -> Vec<Vec<f32>> {
@@ -157,26 +177,323 @@ fn dead_worker_surfaces_as_server_closed() {
         }
     }
 
-    let srv = InferenceServer::start(
+    let srv = InferenceServer::with_config(
         Box::new(PanickingEngine),
-        BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-        64,
-        1,
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) }),
     );
     let mut rng = Rng::new(36);
-    // The first request kills the worker; its reply channel is dropped,
-    // so `infer` reports ServerClosed rather than hanging or panicking.
-    assert_eq!(srv.infer(Tensor3::random(8, 8, 1, &mut rng)), Err(ServerClosed));
-    // Once the worker is gone the queue disconnects; within a bounded
-    // number of attempts `submit` itself returns ServerClosed.
+    // The first request kills the worker; its reply channel is dropped
+    // during the unwind, so `infer` reports Closed rather than hanging
+    // or panicking.
+    assert_eq!(srv.infer(Tensor3::random(8, 8, 1, &mut rng)), Err(SubmitError::Closed));
+    // The worker's exit guard closes the queue; within a bounded number
+    // of attempts `submit` itself returns Closed.
     let mut saw_closed = false;
     for _ in 0..100 {
-        if srv.submit(Tensor3::random(8, 8, 1, &mut rng)).is_err() {
-            saw_closed = true;
-            break;
+        match srv.submit(Tensor3::random(8, 8, 1, &mut rng)) {
+            Err(SubmitError::Closed) => {
+                saw_closed = true;
+                break;
+            }
+            Err(SubmitError::Overloaded { .. }) | Ok(_) => {
+                std::thread::sleep(Duration::from_millis(2))
+            }
         }
-        std::thread::sleep(Duration::from_millis(2));
     }
-    assert!(saw_closed, "submit never reported ServerClosed after worker death");
+    assert!(saw_closed, "submit never reported Closed after worker death");
     srv.shutdown(); // joins the panicked worker without propagating
+}
+
+/// The acceptance-criteria test: a burst at far above capacity. `submit`
+/// never blocks, no worker panics, admission rejects the overflow with
+/// typed `Overloaded`, every *accepted* interactive request completes
+/// within the latency the bounded queue implies (well under the
+/// configured budget), and the snapshot accounts for accepted + rejected
+/// exactly.
+#[test]
+fn overload_rejects_and_bounds_accepted_latency() {
+    let budget = Duration::from_millis(100);
+    let srv = slow_server(
+        Duration::from_millis(4),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+            .with_depths(8, 8)
+            .with_latency_budget(budget),
+    );
+    let mut rng = Rng::new(40);
+    let burst = 64usize;
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..burst {
+        match srv.submit(Tensor3::random(8, 8, 1, &mut rng)) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::Overloaded { .. }) => rejected += 1,
+            Err(SubmitError::Closed) => panic!("worker must survive overload"),
+        }
+    }
+    let submit_elapsed = t0.elapsed();
+    assert!(
+        submit_elapsed < Duration::from_millis(500),
+        "submit must not block under overload (burst took {submit_elapsed:?})"
+    );
+    assert!(rejected > 0, "a 64-burst into a depth-8 queue at 4 ms/request must shed");
+    assert!(!pending.is_empty(), "some requests must be admitted");
+    let mut max_latency = Duration::ZERO;
+    for rx in pending {
+        let c = rx.recv().expect("accepted requests are answered").completed().expect("served");
+        max_latency = max_latency.max(Duration::from_micros(c.latency_us));
+    }
+    assert!(
+        max_latency < budget,
+        "accepted-request p99 (max {max_latency:?}) must stay within the {budget:?} budget"
+    );
+    let m = srv.shutdown();
+    assert_eq!(m.rejected, rejected, "snapshot must report every admission rejection");
+    assert_eq!(m.requests + m.rejected, burst as u64);
+    assert_eq!(m.expired, 0);
+}
+
+/// Once the service-rate estimate is warm, the latency budget rejects at
+/// *admission* — with the measured estimated wait in the error — not
+/// after the request has already queued past its SLO.
+#[test]
+fn latency_budget_admission_rejects_when_estimate_exceeds_it() {
+    let srv = slow_server(
+        Duration::from_millis(10),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+            .with_latency_budget(Duration::from_millis(25)),
+    );
+    let mut rng = Rng::new(41);
+    // Warm the estimator: one served request measures ~10 ms.
+    srv.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up").completed().expect("served");
+    let m = srv.metrics();
+    assert!(m.service_estimate_us >= 10_000, "estimate {} µs too low", m.service_estimate_us);
+    // Rapid-fire: the queue builds, the estimated wait crosses 25 ms
+    // after ~2 queued requests, and admission starts rejecting.
+    let mut overloaded = None;
+    let mut pending = Vec::new();
+    for _ in 0..16 {
+        match srv.submit(Tensor3::random(8, 8, 1, &mut rng)) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::Overloaded { estimated_wait_us, queued }) => {
+                overloaded = Some((estimated_wait_us, queued));
+                break;
+            }
+            Err(SubmitError::Closed) => panic!("worker must survive"),
+        }
+    }
+    let (est, queued) = overloaded.expect("budget must reject before 16 × 10 ms queue up");
+    assert!(est > 25_000, "rejection must carry the over-budget estimate (got {est} µs)");
+    assert!(queued >= 1);
+    srv.shutdown();
+}
+
+/// A request whose deadline passes while it waits behind a slow batch is
+/// answered `DeadlineExceeded` at dequeue — the engine never runs it.
+#[test]
+fn stale_requests_are_dropped_at_dequeue() {
+    let srv = slow_server(
+        Duration::from_millis(40),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) }),
+    );
+    let mut rng = Rng::new(42);
+    let blocker = srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+    std::thread::sleep(Duration::from_millis(2)); // worker is now mid-blocker
+    let doomed = srv
+        .submit_with(
+            Tensor3::random(8, 8, 1, &mut rng),
+            SubmitOptions::default().deadline_in(Duration::from_millis(5)),
+        )
+        .expect("cold estimate admits; expiry happens in-queue");
+    match doomed.recv().expect("expired request still gets an answer") {
+        Response::DeadlineExceeded { waited_us, .. } => {
+            assert!(waited_us >= 5_000, "waited {waited_us} µs < its 5 ms deadline")
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    blocker.recv().expect("blocker served").completed().expect("served");
+    let m = srv.shutdown();
+    assert_eq!(m.expired, 1);
+    assert_eq!(m.requests, 1, "the engine must never run the expired request");
+}
+
+/// Under pressure the interactive lane is served strictly before queued
+/// batch-lane work, even when the batch-lane requests arrived first.
+#[test]
+fn interactive_lane_is_served_before_batch_lane() {
+    let srv = slow_server(
+        Duration::from_millis(10),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) }),
+    );
+    let mut rng = Rng::new(43);
+    let blocker = srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+    std::thread::sleep(Duration::from_millis(3)); // blocker is in-flight
+    let batch_rx: Vec<_> = (0..4)
+        .map(|_| {
+            srv.submit_with(Tensor3::random(8, 8, 1, &mut rng), SubmitOptions::batch())
+                .expect("server up")
+        })
+        .collect();
+    let inter_rx: Vec<_> = (0..4)
+        .map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up"))
+        .collect();
+    blocker.recv().expect("served").completed().expect("served");
+    // All interactive completions strictly precede all batch-lane
+    // completions; with near-identical submit times that ordering is
+    // visible as latency: every batch-lane latency exceeds every
+    // interactive latency.
+    let max_inter = inter_rx
+        .into_iter()
+        .map(|rx| rx.recv().expect("served").completed().expect("served").latency_us)
+        .max()
+        .unwrap();
+    let min_batch = batch_rx
+        .into_iter()
+        .map(|rx| rx.recv().expect("served").completed().expect("served").latency_us)
+        .min()
+        .unwrap();
+    assert!(
+        min_batch > max_inter,
+        "batch lane (min {min_batch} µs) must wait behind interactive (max {max_inter} µs)"
+    );
+    let m = srv.shutdown();
+    assert_eq!(m.lane_requests, [5, 4]);
+}
+
+/// `EvictOldestBatch`: a full batch lane admits new batch work by
+/// shedding its oldest queued entry, which is answered `Shed`.
+#[test]
+fn evict_oldest_batch_policy_sheds_queued_batch_work() {
+    let srv = slow_server(
+        Duration::from_millis(30),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+            .with_depths(8, 2)
+            .with_shed_policy(ShedPolicy::EvictOldestBatch),
+    );
+    let mut rng = Rng::new(44);
+    let blocker = srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+    std::thread::sleep(Duration::from_millis(2)); // blocker in-flight, queue empty
+    let rxs: Vec<_> = (0..3)
+        .map(|_| {
+            srv.submit_with(Tensor3::random(8, 8, 1, &mut rng), SubmitOptions::batch())
+                .expect("eviction admits the newcomer")
+        })
+        .collect();
+    let mut outcomes: Vec<_> = rxs.into_iter().map(|rx| rx.recv().expect("answered")).collect();
+    match outcomes.remove(0) {
+        Response::Shed { .. } => {}
+        other => panic!("oldest queued batch request must be evicted, got {other:?}"),
+    }
+    for o in outcomes {
+        o.completed().expect("the two admitted batch requests are served");
+    }
+    blocker.recv().expect("served").completed().expect("served");
+    let m = srv.shutdown();
+    assert_eq!(m.shed, 1);
+    assert_eq!(m.requests, 3);
+}
+
+/// Bounded-drain shutdown: in-flight work is flushed, the backlog past
+/// the drain deadline is shed with an answer — shutdown cannot hang
+/// behind a deep queue.
+#[test]
+fn shutdown_within_serves_inflight_and_sheds_backlog() {
+    let srv = slow_server(
+        Duration::from_millis(30),
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) }),
+    );
+    let mut rng = Rng::new(45);
+    let blocker = srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+    std::thread::sleep(Duration::from_millis(2)); // blocker dequeued, in-flight
+    let backlog: Vec<_> = (0..5)
+        .map(|_| srv.submit(Tensor3::random(8, 8, 1, &mut rng)).expect("server up"))
+        .collect();
+    let t0 = Instant::now();
+    let m = srv.shutdown_within(Duration::from_millis(1));
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "bounded drain must not serve the whole 5 × 30 ms backlog"
+    );
+    blocker.recv().expect("in-flight work is flushed").completed().expect("served");
+    for rx in backlog {
+        match rx.recv().expect("backlog still gets answers") {
+            Response::Shed { .. } => {}
+            other => panic!("expected Shed, got {other:?}"),
+        }
+    }
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.shed, 5);
+}
+
+/// Shedding never corrupts what *is* served: at 1 and at 4 replicas,
+/// every accepted request's logits are bit-identical to a direct local
+/// plan run of the same image, even while the queue is rejecting a
+/// large fraction of the burst.
+#[test]
+fn accepted_logits_bit_identical_under_shedding() {
+    let plan = plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 21, NetPlanConfig::default())
+        .expect("plan");
+    let mut scratch = plan.make_scratch();
+    let mut out = tbgemm::nn::NetOut::new();
+    let mut rng = Rng::new(46);
+    let images: Vec<_> = (0..32).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+    let want: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| {
+            plan.run(img, &mut out, &mut scratch).expect("run");
+            out.logits.clone()
+        })
+        .collect();
+    for replicas in [1usize, 4] {
+        let srv = slow_server(
+            Duration::from_millis(2),
+            ServerConfig::default()
+                .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) })
+                .with_replicas(replicas)
+                .with_depths(4, 4),
+        );
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        for (i, img) in images.iter().enumerate() {
+            match srv.submit(img.clone()) {
+                Ok(rx) => accepted.push((i, rx)),
+                Err(SubmitError::Overloaded { .. }) => rejected += 1,
+                Err(SubmitError::Closed) => panic!("worker must survive overload"),
+            }
+        }
+        assert!(rejected > 0, "replicas={replicas}: a 32-burst into depth 4 must shed");
+        for (i, rx) in accepted {
+            let c = rx.recv().expect("answered").completed().expect("accepted requests are served");
+            assert_eq!(c.logits, want[i], "replicas={replicas} image {i}: served logits differ");
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.requests + m.rejected, images.len() as u64, "replicas={replicas}");
+    }
+}
+
+/// The deprecated positional-args constructor still serves (one release
+/// of migration room for external callers).
+#[test]
+#[allow(deprecated)]
+fn legacy_start_signature_still_serves() {
+    let plan = plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 21, NetPlanConfig::default())
+        .expect("plan");
+    let srv = InferenceServer::start(
+        Box::new(NativeEngine::new(plan, "legacy")),
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        64,
+        2,
+    );
+    let mut rng = Rng::new(47);
+    let resp = srv.infer(Tensor3::random(8, 8, 1, &mut rng)).expect("server up");
+    assert_eq!(resp.completed().expect("served").logits.len(), 3);
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 1);
 }

@@ -6,7 +6,7 @@
 use tbgemm::bench::{grid, predicted, ratio};
 use tbgemm::conv::conv2d::{direct_conv_i8, ConvKind, ConvParams, LowBitConv};
 use tbgemm::conv::tensor::Tensor3;
-use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine};
+use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine, ServerConfig};
 use tbgemm::gemm::reference::gemm_i8;
 use tbgemm::gemm::{Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
 use tbgemm::nn::builder::{build_from_config, NetConfig};
@@ -77,17 +77,18 @@ fn coordinator_matches_direct_inference() {
     let cfg = NetConfig::tiny_tnn(8, 8, 1, 4);
     let direct = build_from_config(&cfg, 77);
     let served = build_from_config(&cfg, 77).into_plan();
-    let server = InferenceServer::start(
+    let server = InferenceServer::with_config(
         Box::new(NativeEngine::new(served, "it")),
-        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-        32,
-        2,
+        ServerConfig::default()
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+            .with_replicas(2)
+            .with_depths(32, 32),
     );
     let mut rng = Rng::new(0x4444);
     let images: Vec<Tensor3<f32>> = (0..16).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
     let pending: Vec<_> = images.iter().map(|img| server.submit(img.clone()).expect("server up")).collect();
     for (img, rx) in images.iter().zip(pending) {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().completed().expect("served, not shed");
         assert_eq!(resp.logits, direct.logits(img), "batched result differs from direct");
     }
     let m = server.shutdown();

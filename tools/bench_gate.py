@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Compare fresh bench records against committed baselines.
 
-Two modes, selected by --serve:
+Three modes, selected by --serve / --overload:
 
 GEMM mode (default). `cargo bench --bench gemm_micro` (run from `rust/`)
 writes `rust/BENCH_gemm.json`: a JSON array of records
@@ -22,23 +22,41 @@ committed `rust/BENCH_serve.baseline.json` when the
 not drop below baseline/tolerance, and p50/p99 latency may not exceed
 baseline*tolerance.
 
+Overload mode (--overload). `cargo run --release -- bench-serve ...`
+writes `rust/BENCH_overload.json`: one object
+`{base_rps, duration_s, max_batch, replicas, ramp, budget_ms, delay_us,
+points: [{rps, offered, completed, rejected, expired, shed,
+throughput_rps, p50_latency_us, p99_latency_us, max_latency_us}, ...]}`
+— the measured saturation curve. When the run configuration matches the
+committed `rust/BENCH_overload.baseline.json`, the gate compares
+per-point: served throughput may not drop below baseline/tolerance at
+any offered rate, accepted-request p99 may not exceed
+baseline*tolerance at offered rates up to the baseline's knee (past the
+knee the server is intentionally shedding, so p99 there reflects shed
+policy rather than service health), and the curve's knee (peak served
+throughput) may not sink below baseline_knee/tolerance.
+
 Seeding / refreshing the baselines (run on the reference host):
 
     cd rust && cargo bench --bench gemm_micro
     cp BENCH_gemm.json BENCH_gemm.baseline.json
     cargo run --release -- serve --requests 64 --replicas 2
     cp BENCH_serve.json BENCH_serve.baseline.json
-    git add BENCH_gemm.baseline.json BENCH_serve.baseline.json
+    cargo run --release -- bench-serve --rps 200 --duration 2 --ramp
+    cp BENCH_overload.json BENCH_overload.baseline.json
+    git add BENCH_gemm.baseline.json BENCH_serve.baseline.json BENCH_overload.baseline.json
 
-An empty baseline (`[]` for GEMM, `{}` for serve — the committed
-placeholders until a reference host measures one) makes the gate print
-the fresh record(s) and exit 0.
+An empty baseline (`[]` for GEMM, `{}` for serve/overload — the
+committed placeholders until a reference host measures one) makes the
+gate print the fresh record(s) and exit 0.
 
 Usage:
     python3 tools/bench_gate.py [--fresh rust/BENCH_gemm.json]
         [--baseline rust/BENCH_gemm.baseline.json] [--tolerance 1.6]
     python3 tools/bench_gate.py --serve [--fresh rust/BENCH_serve.json]
         [--baseline rust/BENCH_serve.baseline.json] [--tolerance 1.6]
+    python3 tools/bench_gate.py --overload [--fresh rust/BENCH_overload.json]
+        [--baseline rust/BENCH_overload.baseline.json] [--tolerance 1.6]
 """
 
 import argparse
@@ -163,16 +181,99 @@ def gate_serve(args):
     return 0
 
 
+def overload_key(rec):
+    return (rec["base_rps"], rec["duration_s"], rec["max_batch"], rec["replicas"],
+            rec["ramp"], rec["budget_ms"], rec["delay_us"])
+
+
+def knee(rec):
+    """The saturation knee: the point serving peak throughput."""
+    return max(rec["points"], key=lambda p: p["throughput_rps"])
+
+
+def gate_overload(args):
+    try:
+        fresh = load_json(args.fresh)
+    except FileNotFoundError:
+        raise SystemExit(f"fresh overload record not found: {args.fresh} "
+                         f"(run `cargo run --release -- bench-serve ...` from rust/ first)")
+    if not isinstance(fresh, dict) or not fresh.get("points"):
+        raise SystemExit(f"{args.fresh}: expected a BENCH_overload.json record with points")
+    try:
+        baseline = load_json(args.baseline)
+    except FileNotFoundError:
+        print(f"bench_gate: no overload baseline at {args.baseline}; nothing to gate against.")
+        return 0
+    if not isinstance(baseline, dict):
+        raise SystemExit(f"{args.baseline}: expected a JSON object")
+    if not baseline:
+        print(f"bench_gate: overload baseline {args.baseline} is empty (placeholder); gate skipped.")
+        print("Seed it on the reference host:")
+        print("    cd rust && cargo run --release -- bench-serve --rps 200 --duration 2 --ramp "
+              "&& cp BENCH_overload.json BENCH_overload.baseline.json")
+        return 0
+    if overload_key(baseline) != overload_key(fresh):
+        print(f"bench_gate: overload config changed (baseline {overload_key(baseline)} vs fresh "
+              f"{overload_key(fresh)}); re-seed the baseline. Gate skipped.")
+        return 0
+
+    fresh_by_rps = {p["rps"]: p for p in fresh["points"]}
+    base_knee, fresh_knee = knee(baseline), knee(fresh)
+    regressions = []
+    for bp in baseline["points"]:
+        fp = fresh_by_rps.get(bp["rps"])
+        if fp is None:
+            print(f"  WARNING: baseline point rps={bp['rps']} missing from fresh run")
+            continue
+        bt, ft = bp["throughput_rps"], fp["throughput_rps"]
+        ratio = bt / ft if ft > 0 else float("inf")
+        if ratio > args.tolerance:
+            regressions.append(f"throughput@rps={bp['rps']}: baseline {bt:.1f} -> fresh {ft:.1f} "
+                               f"({ratio:.2f}x slower)")
+        # p99 is a service-health signal only up to the baseline's knee;
+        # past it, latency reflects intentional shedding under overload.
+        if bp["rps"] <= base_knee["rps"] and bp["p99_latency_us"] > 0:
+            lratio = fp["p99_latency_us"] / bp["p99_latency_us"]
+            if lratio > args.tolerance:
+                regressions.append(f"p99@rps={bp['rps']}: baseline {bp['p99_latency_us']} µs -> "
+                                   f"fresh {fp['p99_latency_us']} µs ({lratio:.2f}x higher)")
+    knee_ratio = base_knee["throughput_rps"] / fresh_knee["throughput_rps"] \
+        if fresh_knee["throughput_rps"] > 0 else float("inf")
+    if knee_ratio > args.tolerance:
+        regressions.append(f"knee throughput: baseline {base_knee['throughput_rps']:.1f} -> "
+                           f"fresh {fresh_knee['throughput_rps']:.1f} ({knee_ratio:.2f}x slower)")
+
+    print(f"bench_gate (overload): config {overload_key(fresh)}, {len(fresh['points'])} points, "
+          f"knee {fresh_knee['throughput_rps']:.1f} rps served vs baseline "
+          f"{base_knee['throughput_rps']:.1f}, tolerance {args.tolerance}x")
+    if regressions:
+        print("OVERLOAD REGRESSIONS:")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print("bench_gate OK")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fresh", default=None)
     ap.add_argument("--baseline", default=None)
     ap.add_argument("--serve", action="store_true",
                     help="gate BENCH_serve.json (throughput + p50/p99) instead of BENCH_gemm.json")
+    ap.add_argument("--overload", action="store_true",
+                    help="gate BENCH_overload.json (saturation curve: per-point throughput, "
+                         "pre-knee p99, knee throughput)")
     ap.add_argument("--tolerance", type=float, default=1.6,
                     help="max allowed slowdown factor vs baseline (default 1.6)")
     args = ap.parse_args()
 
+    if args.serve and args.overload:
+        raise SystemExit("--serve and --overload are mutually exclusive")
+    if args.overload:
+        args.fresh = args.fresh or "rust/BENCH_overload.json"
+        args.baseline = args.baseline or "rust/BENCH_overload.baseline.json"
+        return gate_overload(args)
     if args.serve:
         args.fresh = args.fresh or "rust/BENCH_serve.json"
         args.baseline = args.baseline or "rust/BENCH_serve.baseline.json"
