@@ -239,6 +239,40 @@ fn main() {
         }
     }
 
+    // --- dispatch-overhead rung: small shape, Fixed(4) ------------------
+    // Table III's real TNN/TBN/BNN layers are small-matrix shapes where
+    // per-call thread spawn/join used to dominate; with the persistent
+    // worker pool the "small_pool4" vs "small_single" gap is the gated,
+    // machine-readable dispatch-overhead number (pool dispatch cost per
+    // call, not spawn cost). Fixed(4) genuinely splits 32 rows into four
+    // 8-row bands.
+    {
+        let (m, n, k) = (32usize, 32usize, 256usize);
+        println!("\ndispatch-overhead rung at {m}×{n}×{k} (pool-backed Fixed(4) vs single):");
+        let mut rng = Rng::new(0x5A11);
+        let a = MatI8::random_binary(m, k, &mut rng);
+        let b = MatI8::random_binary(k, n, &mut rng);
+        let single = lowbit_plan(Kind::Bnn, &b, Threading::Single, KPanel::Auto, Tile::Auto);
+        let t1 = bench_loop(0.2, 400, || {
+            single.run(Lhs::I8(&a), &mut out, &mut scratch).expect("gemm");
+        })
+        .mean;
+        let pooled = lowbit_plan(Kind::Bnn, &b, Threading::Fixed(4), KPanel::Auto, Tile::Auto);
+        let t4 = bench_loop(0.2, 400, || {
+            pooled.run(Lhs::I8(&a), &mut out, &mut scratch).expect("gemm");
+        })
+        .mean;
+        println!(
+            "  BNN  small_single ( 1 thr) {:>9.3} µs\n  BNN  small_pool4  ( 4 thr) {:>9.3} µs   {:>5.2}× vs single",
+            t1 * 1e6,
+            t4 * 1e6,
+            t1 / t4
+        );
+        for (variant, t) in [("small_single", t1), ("small_pool4", t4)] {
+            records.push(Record { kind: "BNN", variant, m, n, k, ns_per_iter: t * 1e9 });
+        }
+    }
+
     // --- packing-vs-kernel split for TNN --------------------------------
     // The plan packs A per run (Algorithm 2); splitting run time into
     // pack + kernel shows how much of the multiplication the request-path

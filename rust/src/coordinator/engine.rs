@@ -122,11 +122,14 @@ impl InferenceEngine for DelayEngine {
 /// A pool of engine replicas serving one model: replica 0 is the engine
 /// the pool was built from, the rest are [`InferenceEngine::replicate`]
 /// clones sharing its packed weights. [`EnginePool::infer_batch`] splits
-/// each dynamic batch into contiguous per-replica chunks and runs them
-/// on scoped threads — **batch-level** parallelism composing with the
-/// per-GEMM row-band [`crate::gemm::Threading`] inside each replica.
-/// Chunking preserves request order and every image is computed by the
-/// same plan, so logits are bit-identical for any replica count.
+/// each dynamic batch into contiguous per-replica chunks and dispatches
+/// them to the process-wide worker pool ([`crate::util::pool`]) —
+/// **batch-level** parallelism drawing from the same core budget as the
+/// per-GEMM row-band [`crate::gemm::Threading`] inside each replica
+/// (replica-chunk tasks fan their GEMM bands into the same pool; nested
+/// dispatch is deadlock-free because waiting scopes execute queued
+/// tasks). Chunking preserves request order and every image is computed
+/// by the same plan, so logits are bit-identical for any replica count.
 pub struct EnginePool {
     engines: Vec<Box<dyn InferenceEngine>>,
 }
@@ -158,8 +161,8 @@ impl EnginePool {
     /// Run a batch split across the replicas. Returns the outputs in
     /// request order plus the per-replica request counts (for
     /// [`crate::coordinator::metrics::Metrics`]). A single chunk runs
-    /// inline on replica 0 — no thread is spawned for work one engine
-    /// would serve anyway.
+    /// inline on replica 0 — no pool dispatch for work one engine would
+    /// serve anyway.
     pub fn infer_batch(&mut self, images: &[Tensor3<f32>]) -> (Vec<Vec<f32>>, Vec<usize>) {
         let replicas = self.engines.len();
         let mut loads = vec![0usize; replicas];
@@ -172,24 +175,31 @@ impl EnginePool {
             return (self.engines[0].infer_batch(images), loads);
         }
         let chunk_sizes: Vec<usize> = images.chunks(chunk_len).map(|c| c.len()).collect();
-        let chunk_results: Vec<Vec<Vec<f32>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = images
-                .chunks(chunk_len)
-                .zip(self.engines.iter_mut())
-                .map(|(chunk, engine)| scope.spawn(move || engine.infer_batch(chunk)))
-                .collect();
-            // A panicked replica contributes a chunk of *empty* logits of
-            // its full assigned length, so downstream request/response
-            // pairing stays aligned: only that replica's callers see
-            // empty logits, never another request's results.
-            handles
-                .into_iter()
-                .enumerate()
-                .map(|(i, h)| h.join().unwrap_or_else(|_| vec![Vec::new(); chunk_sizes[i]]))
-                .collect()
-        });
+        let mut results: Vec<Option<Vec<Vec<f32>>>> = vec![None; chunk_sizes.len()];
+        let tasks: Vec<crate::util::pool::ScopedTask<'_>> = images
+            .chunks(chunk_len)
+            .zip(self.engines.iter_mut())
+            .zip(results.iter_mut())
+            .map(|((chunk, engine), slot)| {
+                Box::new(move || {
+                    // A panicked replica contributes a chunk of *empty*
+                    // logits of its full assigned length, so downstream
+                    // request/response pairing stays aligned: only that
+                    // replica's callers see empty logits, never another
+                    // request's results. Catching here (not in the pool
+                    // scope) keeps the degradation per-chunk instead of
+                    // taking down the whole batch.
+                    let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        engine.infer_batch(chunk)
+                    }));
+                    *slot = Some(got.unwrap_or_else(|_| vec![Vec::new(); chunk.len()]));
+                }) as crate::util::pool::ScopedTask<'_>
+            })
+            .collect();
+        crate::util::pool::global().run_scoped(tasks);
         let mut outputs = Vec::with_capacity(images.len());
-        for (i, chunk) in chunk_results.into_iter().enumerate() {
+        for (i, slot) in results.into_iter().enumerate() {
+            let chunk = slot.unwrap_or_else(|| vec![Vec::new(); chunk_sizes[i]]);
             loads[i] = chunk.len();
             outputs.extend(chunk);
         }

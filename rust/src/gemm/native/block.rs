@@ -7,15 +7,17 @@
 //! * [`n_panel`] — the B-panel width (in B rows) sized so one panel of
 //!   packed B words fits in L1, so the panel stays hot across the whole
 //!   A-row loop of a band.
-//! * [`Threading`] — how many worker threads a multiplication may use.
-//!   Plumbed through [`crate::conv::conv2d::LowBitConv`],
+//! * [`Threading`] — the per-call parallelism cap of a multiplication,
+//!   resolved against the persistent worker pool. Plumbed through
+//!   [`crate::conv::conv2d::LowBitConv`],
 //!   [`crate::conv::stripe::StripeConv`] and the coordinator's
 //!   [`crate::coordinator::engine::NativeEngine`].
-//! * [`parallel_row_bands`] — scoped-thread row-panel parallelism
-//!   (std-only, no thread pool): C is split into disjoint contiguous row
-//!   bands, one worker per band. Rows of C are independent in every
-//!   algorithm here, so this needs no synchronization beyond the scope
-//!   join, and results are bit-identical to the single-threaded kernels.
+//! * [`parallel_row_bands`] — row-panel parallelism on the process-wide
+//!   pool ([`crate::util::pool`]): C is split into disjoint contiguous
+//!   row bands, one pool task per band. Rows of C are independent in
+//!   every algorithm here, and the band split is a pure function of the
+//!   cap and the shape (never of scheduling), so results are
+//!   bit-identical to the single-threaded kernels at any worker count.
 
 use crate::gemm::native::bits::{BitRows, PlaneRows};
 use crate::gemm::native::kernels;
@@ -108,19 +110,25 @@ impl KPanel {
     }
 }
 
-/// Minimum C rows worth one worker thread: below this the spawn/join
+/// Minimum C rows worth one worker: below this the pool-dispatch
 /// overhead outweighs the kernel work.
 const MIN_ROWS_PER_THREAD: usize = 8;
 
-/// Threading configuration for a native multiplication.
+/// Threading configuration for a native multiplication: a **per-call
+/// parallelism cap** resolved against the persistent worker pool
+/// ([`crate::util::pool`]), not a spawn count.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Threading {
-    /// One thread (the default; bit-identical to the plain kernels).
+    /// One thread (the default; runs inline, bit-identical to the plain
+    /// kernels).
     #[default]
     Single,
-    /// Exactly `n` worker threads (clamped to ≥ 1 and to the row count).
+    /// At most `n` concurrent bands (clamped to ≥ 1 and to the row count).
     Fixed(usize),
-    /// One thread per available core (`std::thread::available_parallelism`).
+    /// The whole pool: [`crate::util::pool::default_workers`] — resolved
+    /// **once** per process (`TBGEMM_POOL_THREADS` override, else
+    /// `std::thread::available_parallelism`), never a syscall on the
+    /// GEMM hot path.
     Auto,
 }
 
@@ -130,7 +138,7 @@ impl Threading {
         let want = match self {
             Threading::Single => 1,
             Threading::Fixed(n) => n.max(1),
-            Threading::Auto => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            Threading::Auto => crate::util::pool::default_workers(),
         };
         want.min(rows.div_ceil(MIN_ROWS_PER_THREAD).max(1))
     }
@@ -138,7 +146,11 @@ impl Threading {
 
 /// Split `data` (a `rows × cols` row-major output) into `threads`
 /// contiguous row bands and run `f(row0, band_rows, band)` on each, in
-/// parallel on scoped threads. With `threads <= 1` runs inline.
+/// parallel on the process-wide worker pool. With `threads <= 1` runs
+/// inline on the caller (the `Single` / `TBGEMM_FORCE_SCALAR`-friendly
+/// path — no pool interaction at all). The band split depends only on
+/// `threads` and the shape, so results are bit-identical however the
+/// pool schedules the bands.
 pub fn parallel_row_bands<T, F>(data: &mut [T], cols: usize, rows: usize, threads: usize, f: F)
 where
     T: Send,
@@ -150,14 +162,17 @@ where
         return;
     }
     let band_rows = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let f = &f;
-        for (b, band) in data.chunks_mut(band_rows * cols).enumerate() {
+    let f = &f;
+    let tasks: Vec<crate::util::pool::ScopedTask<'_>> = data
+        .chunks_mut(band_rows * cols)
+        .enumerate()
+        .map(|(b, band)| {
             let row0 = b * band_rows;
             let rows_here = band.len() / cols;
-            scope.spawn(move || f(row0, rows_here, band));
-        }
-    });
+            Box::new(move || f(row0, rows_here, band)) as crate::util::pool::ScopedTask<'_>
+        })
+        .collect();
+    crate::util::pool::global().run_scoped(tasks);
 }
 
 // ---- threaded, K-paneled drivers ---------------------------------------
@@ -387,6 +402,18 @@ mod tests {
         assert_eq!(Threading::Fixed(64).worker_count(16), 2);
         assert_eq!(Threading::Fixed(3).worker_count(0), 1);
         assert!(Threading::Auto.worker_count(1_000_000) >= 1);
+    }
+
+    /// Satellite pin: `Auto` resolves to the pool's cached size — one
+    /// process-wide resolution (no per-call `available_parallelism`
+    /// syscall), stable across calls, still clamped by the row count.
+    #[test]
+    fn auto_equals_cached_pool_resolution() {
+        let cached = crate::util::pool::default_workers();
+        for _ in 0..4 {
+            assert_eq!(Threading::Auto.worker_count(1 << 20), cached);
+        }
+        assert_eq!(Threading::Auto.worker_count(8), 1);
     }
 
     #[test]

@@ -371,24 +371,29 @@ struct OverloadPoint {
     expired: u64,
     shed: u64,
     throughput_rps: f64,
+    drain_s: f64,
     p50_latency_us: u64,
     p99_latency_us: u64,
     max_latency_us: u64,
 }
 
 /// Nearest-rank percentile over an already-sorted sample (client-side
-/// exact, unlike the server's bounded histogram).
+/// exact, unlike the server's bounded histogram): the ⌈p·N⌉-th smallest
+/// sample (1-based), clamped to the sample range. 0 on an empty sample.
 fn pctl(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
-        0
-    } else {
-        sorted[((sorted.len() - 1) as f64 * p) as usize]
+        return 0;
     }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
 /// Drive one open-loop point: Poisson arrivals at `rps` against a fresh
 /// server for `duration_s` seconds, then drain and classify every
-/// accepted request's outcome.
+/// accepted request's outcome. Served throughput is measured over the
+/// offer window only; the shutdown drain is timed separately
+/// (`drain_s`), so throughput near and past the knee is not understated
+/// by the drain tail.
 fn drive_open_loop(opts: &BenchServeOpts, rps: f64, rng: &mut Rng) -> OverloadPoint {
     let mut cfg = ServerConfig::default()
         .with_batcher(BatcherConfig { max_batch: opts.batch, ..Default::default() })
@@ -403,7 +408,11 @@ fn drive_open_loop(opts: &BenchServeOpts, rps: f64, rng: &mut Rng) -> OverloadPo
     let mut next = t0;
     let (mut offered, mut rejected) = (0u64, 0u64);
     let mut pending = Vec::new();
-    while std::time::Instant::now() < end {
+    // Offer exactly the arrivals scheduled inside [t0, end): once `next`
+    // crosses `end` the window is closed and nothing more is submitted —
+    // the sleep target is always `next < end`, so it never sleeps past
+    // the window and then offers a request outside it.
+    while next < end {
         let now = std::time::Instant::now();
         if now < next {
             std::thread::sleep(next - now);
@@ -420,8 +429,12 @@ fn drive_open_loop(opts: &BenchServeOpts, rps: f64, rng: &mut Rng) -> OverloadPo
         let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
         next += std::time::Duration::from_secs_f64(-(1.0 - u).ln() / rps);
     }
-    let m = server.shutdown(); // full drain: the queue is depth-bounded
+    // Serve window closes here; the drain is its own measurement, not
+    // part of the throughput denominator.
     let wall = t0.elapsed().as_secs_f64();
+    let drain_t0 = std::time::Instant::now();
+    let m = server.shutdown(); // full drain: the queue is depth-bounded
+    let drain_s = drain_t0.elapsed().as_secs_f64();
     let (mut expired, mut shed) = (0u64, 0u64);
     let mut latencies = Vec::with_capacity(pending.len());
     for rx in pending {
@@ -441,6 +454,7 @@ fn drive_open_loop(opts: &BenchServeOpts, rps: f64, rng: &mut Rng) -> OverloadPo
         expired,
         shed,
         throughput_rps: latencies.len() as f64 / wall,
+        drain_s,
         p50_latency_us: pctl(&latencies, 0.5),
         p99_latency_us: pctl(&latencies, 0.99),
         max_latency_us: latencies.last().copied().unwrap_or(0),
@@ -461,9 +475,9 @@ fn cmd_bench_serve(opts: BenchServeOpts) {
         let p = drive_open_loop(&opts, rps, &mut rng);
         println!(
             "  rps {:>8.1}: offered {:>6}, completed {:>6}, rejected {:>5}, expired {:>4}, shed {:>4} \
-             | {:>8.1} rps served, p50 {:>7} µs, p99 {:>7} µs",
+             | {:>8.1} rps served, drain {:>6.3} s, p50 {:>7} µs, p99 {:>7} µs",
             p.rps, p.offered, p.completed, p.rejected, p.expired, p.shed, p.throughput_rps,
-            p.p50_latency_us, p.p99_latency_us
+            p.drain_s, p.p50_latency_us, p.p99_latency_us
         );
         points.push(p);
     }
@@ -481,10 +495,10 @@ fn cmd_bench_serve(opts: BenchServeOpts) {
         .map(|p| {
             format!(
                 "{{\"rps\":{:.1},\"offered\":{},\"completed\":{},\"rejected\":{},\"expired\":{},\
-\"shed\":{},\"throughput_rps\":{:.1},\"p50_latency_us\":{},\"p99_latency_us\":{},\
-\"max_latency_us\":{}}}",
+\"shed\":{},\"throughput_rps\":{:.1},\"drain_s\":{:.3},\"p50_latency_us\":{},\
+\"p99_latency_us\":{},\"max_latency_us\":{}}}",
                 p.rps, p.offered, p.completed, p.rejected, p.expired, p.shed, p.throughput_rps,
-                p.p50_latency_us, p.p99_latency_us, p.max_latency_us
+                p.drain_s, p.p50_latency_us, p.p99_latency_us, p.max_latency_us
             )
         })
         .collect();
@@ -567,5 +581,33 @@ fn cmd_xla(path: &str) {
             eprintln!("load failed: {e:#} (run `make artifacts` first)");
             std::process::exit(1);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::pctl;
+
+    /// Satellite pin: true nearest-rank — the ⌈p·N⌉-th smallest sample —
+    /// including the 100-sample case and a case where the old
+    /// `floor((N−1)·p)` indexing genuinely differed.
+    #[test]
+    fn pctl_is_true_nearest_rank() {
+        // 100 samples 1..=100: p99 is the 99th smallest (⌈0.99·100⌉ = 99),
+        // p50 the 50th, p100 the maximum.
+        let hundred: Vec<u64> = (1..=100).collect();
+        assert_eq!(pctl(&hundred, 0.99), 99);
+        assert_eq!(pctl(&hundred, 0.5), 50);
+        assert_eq!(pctl(&hundred, 1.0), 100);
+        // 10 samples 1..=10: ⌈0.99·10⌉ = 10 → the maximum. The floored
+        // `(N−1)·p` indexing returned sorted[8] = 9 here — biased low.
+        let ten: Vec<u64> = (1..=10).collect();
+        assert_eq!(pctl(&ten, 0.99), 10);
+        assert_eq!(pctl(&ten, 0.9), 9);
+        assert_eq!(pctl(&ten, 0.91), 10);
+        // Degenerate samples and the p→0 clamp to the minimum.
+        assert_eq!(pctl(&[], 0.99), 0);
+        assert_eq!(pctl(&[7], 0.5), 7);
+        assert_eq!(pctl(&ten, 0.0), 1);
     }
 }

@@ -1,11 +1,14 @@
 //! Small self-contained utilities: deterministic PRNG, dense matrices,
-//! timing helpers and a light property-testing harness.
+//! timing helpers, a light property-testing harness, and the
+//! process-wide persistent worker pool ([`pool`]) every parallel code
+//! path dispatches through.
 //!
 //! The build environment is fully offline, so this crate cannot depend on
 //! `rand`, `criterion` or `proptest`; these modules provide the small
 //! subset of their functionality the rest of the crate needs.
 
 pub mod mat;
+pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod timer;

@@ -1,0 +1,420 @@
+//! The process-wide persistent worker pool behind every parallel code
+//! path in the crate: GEMM row bands
+//! ([`crate::gemm::native::block::parallel_row_bands`]) and the replica
+//! chunks of [`crate::coordinator::engine::EnginePool`] both dispatch
+//! through [`global`], so they draw from **one shared core budget**
+//! instead of spawning fresh scoped `std::thread`s per call and
+//! oversubscribing each other.
+//!
+//! Design (rten's process-global pool is the exemplar):
+//!
+//! * A fixed set of long-lived workers, sized **once** per process by
+//!   [`default_workers`] — the `TBGEMM_POOL_THREADS` env override, else
+//!   `std::thread::available_parallelism`. [`crate::gemm::Threading`]
+//!   stays a *per-call parallelism cap* resolved against this size.
+//! * Per-worker run queues with work stealing: a worker pops its own
+//!   queue front and steals from the back of its siblings' queues;
+//!   submission round-robins across queues.
+//! * A scoped execution API, [`WorkerPool::run_scoped`]: borrowing
+//!   closures run on the pool and the call does not return until every
+//!   task has completed — the same structured-concurrency contract as
+//!   `std::thread::scope`, without the per-call spawn/join cost.
+//! * **Waiting callers participate**: while a scope waits for its latch
+//!   it executes queued pool tasks. That makes nested dispatch (a
+//!   replica-chunk task fanning its GEMMs' row bands into the same
+//!   pool) deadlock-free even when every worker is itself blocked in an
+//!   inner scope — some participant always runs the queued leaves.
+//! * Panic semantics match `std::thread::scope`: every task signals its
+//!   latch even on unwind, the first panic payload is captured, and the
+//!   scope re-raises it *after* all tasks finish (so no task can still
+//!   borrow the caller's data when the scope returns).
+//!
+//! Scheduling never affects results: band/chunk splits are pure
+//! functions of the caller's `Threading` cap and problem shape, and
+//! tasks write disjoint output regions — so results stay bit-identical
+//! at any worker count, the invariant the differential suites pin.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A borrowing task submitted to [`WorkerPool::run_scoped`]. The scope
+/// guarantees completion before it returns, which is what makes the
+/// non-`'static` borrow sound.
+pub type ScopedTask<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// An erased, queued task (lifetime already promoted by the scope).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Worker-pool size, resolved **once** per process: `TBGEMM_POOL_THREADS`
+/// (parsed, clamped to ≥ 1) if set, else `available_parallelism`. This is
+/// also what [`crate::gemm::Threading::Auto`] resolves to, so "Auto"
+/// means "use the whole pool" — and costs no syscall on the GEMM hot
+/// path.
+pub fn default_workers() -> usize {
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        std::env::var("TBGEMM_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// The process-global pool (built on first use, sized by
+/// [`default_workers`], lives for the process). All production dispatch
+/// goes through this; [`WorkerPool::new`] exists for tests that need a
+/// private pool with a chosen size.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+/// Everything a worker shares with the pool handle: the run queues (one
+/// per worker, all under one mutex — tasks here are coarse row bands and
+/// replica chunks, so queue-lock cost is noise next to kernel work) and
+/// the condvar workers sleep on.
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+struct PoolState {
+    /// One run queue per worker; `queues[i]` is worker `i`'s own queue.
+    queues: Vec<VecDeque<Task>>,
+    /// Round-robin submission cursor.
+    next: usize,
+    shutdown: bool,
+}
+
+impl PoolState {
+    /// Steal one task for worker `me`: own queue front first, then the
+    /// back of each sibling queue.
+    fn take_for(&mut self, me: usize) -> Option<Task> {
+        if let Some(t) = self.queues[me].pop_front() {
+            return Some(t);
+        }
+        let n = self.queues.len();
+        for off in 1..n {
+            if let Some(t) = self.queues[(me + off) % n].pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Pop any queued task (used by waiting scope callers, which have no
+    /// queue of their own).
+    fn take_any(&mut self) -> Option<Task> {
+        self.queues.iter_mut().find_map(|q| q.pop_front())
+    }
+}
+
+/// Completion latch of one scope: remaining-task count plus the first
+/// captured panic payload.
+struct Latch {
+    state: Mutex<(usize, Option<Box<dyn Any + Send>>)>,
+    done_cv: Condvar,
+}
+
+impl Latch {
+    fn new(tasks: usize) -> Self {
+        Latch { state: Mutex::new((tasks, None)), done_cv: Condvar::new() }
+    }
+
+    /// Signal one task finished; always called, panic or not.
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if st.1.is_none() {
+            st.1 = panic;
+        }
+        if st.0 == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    /// Block until every task has signalled.
+    fn wait_done(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.done_cv.wait(st).unwrap();
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.state.lock().unwrap().1.take()
+    }
+}
+
+/// A fixed set of long-lived worker threads with per-worker run queues
+/// and work stealing. Production code uses the one [`global`] pool; own
+/// instances are for tests.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool of `workers` threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                queues: (0..workers).map(|_| VecDeque::new()).collect(),
+                next: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tbgemm-pool-{i}"))
+                    .spawn(move || worker_loop(&shared, i))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run borrowing tasks on the pool and return once **all** of them
+    /// have completed — the `std::thread::scope` contract on long-lived
+    /// threads. A single task runs inline on the caller. If any task
+    /// panics, the first payload is re-raised here after every task has
+    /// finished (no task may outlive the call: they borrow `'env`).
+    ///
+    /// The caller participates while waiting: it executes queued pool
+    /// tasks instead of blocking, so nested `run_scoped` calls from
+    /// inside pool tasks cannot deadlock the fixed-size pool.
+    pub fn run_scoped<'env>(&self, tasks: Vec<ScopedTask<'env>>) {
+        match tasks.len() {
+            0 => return,
+            1 => return tasks.into_iter().next().unwrap()(),
+            _ => {}
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for task in tasks {
+                // SAFETY: promoting `'env` to `'static` is sound because
+                // this function does not return until the latch reports
+                // every task complete (the wrapper below signals even on
+                // unwind), so no task outlives the borrows it captures.
+                let task: Task = unsafe {
+                    std::mem::transmute::<ScopedTask<'env>, ScopedTask<'static>>(task)
+                };
+                let latch = Arc::clone(&latch);
+                let wrapped: Task = Box::new(move || {
+                    let panic = catch_unwind(AssertUnwindSafe(task)).err();
+                    latch.complete(panic);
+                });
+                let q = st.next % self.workers;
+                st.next = st.next.wrapping_add(1);
+                st.queues[q].push_back(wrapped);
+            }
+            self.shared.work_cv.notify_all();
+        }
+        // Work-stealing join: run queued tasks (this scope's or anyone
+        // else's) until our latch closes; only block when no task is
+        // queued anywhere — then every remaining task of ours is already
+        // executing on some thread and will signal the latch.
+        while !latch.is_done() {
+            let task = self.shared.state.lock().unwrap().take_any();
+            match task {
+                Some(task) => task(),
+                None => latch.wait_done(),
+            }
+        }
+        if let Some(payload) = latch.take_panic() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, me: usize) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.take_for(me) {
+                    break Some(t);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        match task {
+            Some(task) => task(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn default_workers_is_cached_and_positive() {
+        let first = default_workers();
+        assert!(first >= 1);
+        for _ in 0..3 {
+            assert_eq!(default_workers(), first);
+        }
+        assert_eq!(global().workers(), first);
+    }
+
+    #[test]
+    fn runs_every_task_with_more_tasks_than_workers() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let tasks: Vec<ScopedTask<'_>> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(ran.load(Ordering::SeqCst), 64);
+    }
+
+    /// The scoped contract: tasks may borrow the caller's stack mutably
+    /// (disjoint regions) and every write is visible when `run_scoped`
+    /// returns.
+    #[test]
+    fn scoped_tasks_write_borrowed_bands() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0usize; 61];
+        let tasks: Vec<ScopedTask<'_>> = data
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(i, band)| {
+                Box::new(move || {
+                    for x in band.iter_mut() {
+                        *x = i + 1;
+                    }
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        for (j, &x) in data.iter().enumerate() {
+            assert_eq!(x, j / 7 + 1, "element {j}");
+        }
+    }
+
+    /// Nested dispatch from inside pool tasks must not deadlock, even on
+    /// a pool smaller than the outer fan-out: waiting scopes execute
+    /// queued tasks themselves.
+    #[test]
+    fn nested_scopes_do_not_deadlock_a_tiny_pool() {
+        let pool = WorkerPool::new(1);
+        let ran = AtomicUsize::new(0);
+        let outer: Vec<ScopedTask<'_>> = (0..4)
+            .map(|_| {
+                let (pool, ran) = (&pool, &ran);
+                Box::new(move || {
+                    let inner: Vec<ScopedTask<'_>> = (0..4)
+                        .map(|_| {
+                            Box::new(|| {
+                                ran.fetch_add(1, Ordering::SeqCst);
+                            }) as ScopedTask<'_>
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run_scoped(outer);
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+    }
+
+    /// A panicking task is re-raised by the scope — after the healthy
+    /// tasks finished (their side effects are all visible).
+    #[test]
+    fn panic_propagates_after_all_tasks_complete() {
+        let pool = WorkerPool::new(2);
+        let healthy = AtomicUsize::new(0);
+        let mut tasks: Vec<ScopedTask<'_>> = (0..8)
+            .map(|_| {
+                let healthy = &healthy;
+                Box::new(move || {
+                    healthy.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        tasks.push(Box::new(|| panic!("task panic (test)")));
+        let result = catch_unwind(AssertUnwindSafe(|| pool.run_scoped(tasks)));
+        assert!(result.is_err(), "scope must re-raise the task panic");
+        assert_eq!(healthy.load(Ordering::SeqCst), 8);
+        // The pool survives a panicked scope and keeps serving.
+        let again = AtomicUsize::new(0);
+        let tasks: Vec<ScopedTask<'_>> = (0..4)
+            .map(|_| {
+                let again = &again;
+                Box::new(move || {
+                    again.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(again.load(Ordering::SeqCst), 4);
+    }
+
+    /// Concurrent scopes from many threads share one pool without
+    /// cross-talk: every scope sees exactly its own writes.
+    #[test]
+    fn concurrent_scopes_share_one_pool() {
+        let pool = WorkerPool::new(2);
+        std::thread::scope(|s| {
+            for seed in 0..6usize {
+                let pool = &pool;
+                s.spawn(move || {
+                    for round in 0..8usize {
+                        let mut data = vec![0usize; 24];
+                        let tasks: Vec<ScopedTask<'_>> = data
+                            .chunks_mut(6)
+                            .map(|band| {
+                                Box::new(move || {
+                                    for x in band.iter_mut() {
+                                        *x = seed * 100 + round;
+                                    }
+                                }) as ScopedTask<'_>
+                            })
+                            .collect();
+                        pool.run_scoped(tasks);
+                        assert!(data.iter().all(|&x| x == seed * 100 + round));
+                    }
+                });
+            }
+        });
+    }
+}

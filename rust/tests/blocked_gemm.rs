@@ -142,3 +142,47 @@ fn u8_and_u4_all_backends_match_oracle() {
         });
     }
 }
+
+/// Worker-pool stress: many caller threads hammer multithreaded
+/// `GemmPlan::run`s through the one process-wide pool **concurrently**
+/// (shared plans, per-caller scratch — exactly the serving stack's
+/// shape), asserting every run bit-identical to the single-threaded
+/// oracle. Contention for pool workers must never change a result or
+/// deadlock the fixed-size pool.
+#[test]
+fn concurrent_plans_share_the_pool_bit_identically() {
+    let mut rng = Rng::new(0x9001);
+    let (m, n, k) = (33usize, 19usize, 257usize);
+    let ab = MatI8::random_binary(m, k, &mut rng);
+    let bb = MatI8::random_binary(k, n, &mut rng);
+    let at = MatI8::random_ternary(m, k, &mut rng);
+    let bt = MatI8::random_ternary(k, n, &mut rng);
+    let cases: [(Kind, &MatI8, &MatI8); 3] =
+        [(Kind::Bnn, &ab, &bb), (Kind::Tnn, &at, &bt), (Kind::Tbn, &at, &bb)];
+    for (kind, a, b) in cases {
+        let want = reference::gemm_i8(a, b);
+        // One shared plan per thread-count config, run from 8 threads at
+        // once: caps resolve per call against the pool, never per caller.
+        for threads in [2usize, 4, 8] {
+            let cfg = GemmConfig::native(kind).with_threading(Threading::Fixed(threads));
+            let plan = GemmPlan::new(cfg, Weights::I8(b)).expect("plan");
+            std::thread::scope(|s| {
+                for _ in 0..8 {
+                    let (plan, want) = (&plan, &want);
+                    s.spawn(move || {
+                        let mut out = GemmOut::new_i32();
+                        let mut scratch = GemmScratch::new();
+                        for rep in 0..12 {
+                            plan.run(Lhs::I8(a), &mut out, &mut scratch).expect("plan run");
+                            let got = out.as_i32().expect("i32 out");
+                            assert_eq!(
+                                got.data, want.data,
+                                "{kind:?} t={threads} rep={rep}: pooled run diverged"
+                            );
+                        }
+                    });
+                }
+            });
+        }
+    }
+}

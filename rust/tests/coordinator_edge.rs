@@ -15,8 +15,11 @@ use tbgemm::coordinator::{
     BatcherConfig, DelayEngine, InferenceEngine, InferenceServer, NativeEngine, Response,
     ServerConfig, ShedPolicy, SubmitError, SubmitOptions,
 };
-use tbgemm::gemm::Threading;
+use tbgemm::gemm::{
+    reference, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Threading, Weights,
+};
 use tbgemm::nn::{plan_from_config, NetConfig, NetPlanConfig};
+use tbgemm::util::mat::MatI8;
 use tbgemm::util::Rng;
 
 fn server(max_batch: usize, threading: Threading, replicas: usize) -> InferenceServer {
@@ -496,4 +499,74 @@ fn legacy_start_signature_still_serves() {
     assert_eq!(resp.completed().expect("served").logits.len(), 3);
     let m = srv.shutdown();
     assert_eq!(m.requests, 1);
+}
+
+/// Worker-pool contention stress (satellite of the pool PR): the server
+/// executes replica-chunked, row-band-threaded batches through the one
+/// process-wide pool **while** foreground threads run their own
+/// multithreaded `GemmPlan`s through the same pool. Both sides must stay
+/// bit-identical to their single-threaded references — contention for
+/// the shared workers can reorder scheduling but never results — and
+/// nothing may deadlock even when replica-chunk tasks fan nested GEMM
+/// band tasks into the already-busy pool.
+#[test]
+fn server_and_gemm_plans_share_the_pool_bit_identically() {
+    // Single-threaded reference logits from a local plan run.
+    let plan = plan_from_config(&NetConfig::tiny_tnn(8, 8, 1, 3), 21, NetPlanConfig::default())
+        .expect("plan");
+    let mut scratch = plan.make_scratch();
+    let mut out = tbgemm::nn::NetOut::new();
+    let mut rng = Rng::new(48);
+    let images: Vec<_> = (0..24).map(|_| Tensor3::random(8, 8, 1, &mut rng)).collect();
+    let want_logits: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| {
+            plan.run(img, &mut out, &mut scratch).expect("run");
+            out.logits.clone()
+        })
+        .collect();
+    // Single-threaded reference for the contending raw GEMM.
+    let (m, n, k) = (33usize, 19usize, 257usize);
+    let at = MatI8::random_ternary(m, k, &mut rng);
+    let bt = MatI8::random_ternary(k, n, &mut rng);
+    let want_gemm = reference::gemm_i8(&at, &bt);
+    let gemm_plan = GemmPlan::new(
+        GemmConfig::native(Kind::Tnn).with_threading(Threading::Fixed(4)),
+        Weights::I8(&bt),
+    )
+    .expect("plan");
+
+    // 4 replicas + per-GEMM Fixed(2): chunk tasks and nested band tasks
+    // both land in the pool, concurrently with the foreground plans.
+    let srv = server(8, Threading::Fixed(2), 4);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let (gemm_plan, want_gemm, at) = (&gemm_plan, &want_gemm, &at);
+            s.spawn(move || {
+                let mut out = GemmOut::new_i32();
+                let mut scratch = GemmScratch::new();
+                for rep in 0..24 {
+                    gemm_plan.run(Lhs::I8(at), &mut out, &mut scratch).expect("plan run");
+                    assert_eq!(
+                        out.as_i32().expect("i32 out").data,
+                        want_gemm.data,
+                        "rep={rep}: contended GEMM diverged"
+                    );
+                }
+            });
+        }
+        for round in 0..4 {
+            let pending: Vec<_> =
+                images.iter().map(|img| srv.submit(img.clone()).expect("server up")).collect();
+            for (i, rx) in pending.into_iter().enumerate() {
+                let c = rx.recv().expect("response").completed().expect("served");
+                assert_eq!(
+                    c.logits, want_logits[i],
+                    "round={round} image {i}: served logits diverged under pool contention"
+                );
+            }
+        }
+    });
+    let m = srv.shutdown();
+    assert_eq!(m.requests, 4 * images.len() as u64);
 }
