@@ -26,12 +26,18 @@
 //! [`crate::coordinator::engine::EnginePool::infer_batch`], so a larger
 //! `max_batch` directly widens the batch-level parallelism available to
 //! the pool.
+//!
+//! Synchronization goes through [`crate::util::sync`], the std/loom
+//! seam: the CI loom lane model-checks the producer/consumer handoff,
+//! the close-and-shed race against a concurrent `push`, and the bounded
+//! admission invariant under exhaustive preemption-bounded
+//! interleavings (the `loom_tests` module below).
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{Request, Response, SubmitError};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{self, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batching configuration.
@@ -199,7 +205,7 @@ impl LaneQueue {
             if inner.closed || now >= window_end {
                 break;
             }
-            inner = self.cv.wait_timeout(inner, window_end - now).unwrap().0;
+            inner = sync::wait_timeout(&self.cv, inner, window_end - now);
         }
         Some(batch)
     }
@@ -279,7 +285,7 @@ fn shed_all(inner: &mut Inner, metrics: &Metrics) {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(feature = "loom")))]
 mod tests {
     use super::*;
     use crate::conv::tensor::Tensor3;
@@ -482,5 +488,132 @@ mod tests {
             }
         }
         assert_eq!(m.snapshot().shed, 3);
+    }
+}
+
+/// Exhaustive-interleaving models of the queue's producer/consumer
+/// protocol, run by the CI loom lane (`cargo test --features loom --lib
+/// -- loom_`). The batch window is always zero-width here so the
+/// loom-degraded `wait_timeout` (a plain `wait`, see
+/// [`crate::util::sync::wait_timeout`]) is never the only wake-up on
+/// any modeled path.
+#[cfg(all(test, feature = "loom"))]
+mod loom_tests {
+    use super::*;
+    use crate::conv::tensor::Tensor3;
+    use crate::util::sync::Arc;
+    use loom::model::Builder;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn model(f: impl Fn() + Sync + Send + 'static) {
+        let mut b = Builder::new();
+        b.preemption_bound = Some(2);
+        b.check(f);
+    }
+
+    fn policy() -> QueuePolicy {
+        QueuePolicy {
+            interactive_depth: 64,
+            batch_depth: 64,
+            latency_budget: None,
+            shed_policy: ShedPolicy::RejectNewest,
+        }
+    }
+
+    fn req(id: u64, lane: Lane) -> (Request, Receiver<Response>) {
+        let (reply, rx) = channel();
+        let r = Request {
+            id,
+            image: Tensor3::zeros(1, 1, 1),
+            submitted: Instant::now(),
+            deadline: None,
+            lane,
+            reply,
+        };
+        (r, rx)
+    }
+
+    /// A zero-width batch window: `next_batch` never parks in the
+    /// timeout wait, so every modeled blocking edge is a `wait` with a
+    /// matching `notify` (push or close).
+    fn cfg() -> BatcherConfig {
+        BatcherConfig { max_batch: 1, max_wait: Duration::ZERO }
+    }
+
+    /// Producer pushes one request and closes; the consumer, on every
+    /// interleaving (including parking in `cv.wait` before the push),
+    /// drains exactly that one request and then sees `None`.
+    #[test]
+    fn loom_push_vs_drain_handoff() {
+        model(|| {
+            let q = Arc::new(LaneQueue::new(policy()));
+            let m = Arc::new(Metrics::new());
+            let (r, rx) = req(1, Lane::Interactive);
+            let (qp, mp) = (Arc::clone(&q), Arc::clone(&m));
+            let producer = loom::thread::spawn(move || {
+                qp.push(r, &mp).expect("open queue with cold estimate admits");
+                qp.close(None);
+            });
+            let mut got = 0;
+            while let Some(batch) = q.next_batch(&cfg(), &m) {
+                got += batch.len();
+            }
+            assert_eq!(got, 1, "the handoff neither loses nor duplicates the request");
+            producer.join().unwrap();
+            drop(rx);
+        });
+    }
+
+    /// `close_and_shed` racing a concurrent `push`: on every
+    /// interleaving the request gets exactly one coherent outcome —
+    /// admitted-then-shed (a `Shed` answer) or rejected at the closed
+    /// gate (`Err(Closed)`, reply channel dropped unanswered) — and the
+    /// worker-side `next_batch` never serves it.
+    #[test]
+    fn loom_close_and_shed_races_push() {
+        model(|| {
+            let q = Arc::new(LaneQueue::new(policy()));
+            let m = Arc::new(Metrics::new());
+            let (r, rx) = req(7, Lane::Batch);
+            let (qp, mp) = (Arc::clone(&q), Arc::clone(&m));
+            let pusher = loom::thread::spawn(move || qp.push(r, &mp).is_ok());
+            q.close_and_shed(&m);
+            let pushed = pusher.join().unwrap();
+            assert!(q.next_batch(&cfg(), &m).is_none(), "a shed-closed queue serves nothing");
+            match rx.try_recv() {
+                Ok(Response::Shed { id: 7, .. }) => assert!(pushed, "a Shed answer implies the push won"),
+                Err(_) => assert!(!pushed, "no answer implies the push lost to the close"),
+                Ok(other) => panic!("request must be shed or rejected, got {other:?}"),
+            }
+        });
+    }
+
+    /// Bounded admission under racing producers: with depth 1, exactly
+    /// one of two concurrent pushes is admitted on every interleaving,
+    /// and the queue then drains exactly one request.
+    #[test]
+    fn loom_bounded_lane_admits_exactly_depth() {
+        model(|| {
+            let mut p = policy();
+            p.interactive_depth = 1;
+            let q = Arc::new(LaneQueue::new(p));
+            let m = Arc::new(Metrics::new());
+            let mut rxs = Vec::new();
+            let handles: Vec<_> = (0..2u64)
+                .map(|id| {
+                    let (r, rx) = req(id, Lane::Interactive);
+                    rxs.push(rx);
+                    let (qp, mp) = (Arc::clone(&q), Arc::clone(&m));
+                    loom::thread::spawn(move || qp.push(r, &mp).is_ok())
+                })
+                .collect();
+            let admitted = handles.into_iter().map(|h| h.join().unwrap()).filter(|&ok| ok).count();
+            assert_eq!(admitted, 1, "a depth-1 lane admits exactly one of two racing pushes");
+            q.close(None);
+            let batch = q.next_batch(&cfg(), &m).expect("the one admitted request drains");
+            assert_eq!(batch.len(), 1);
+            assert!(q.next_batch(&cfg(), &m).is_none(), "closed and drained");
+            drop(rxs);
+        });
     }
 }

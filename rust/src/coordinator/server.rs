@@ -253,6 +253,11 @@ impl InferenceServer {
         let worker_queue = Arc::clone(&queue);
         let worker_metrics = Arc::clone(&metrics);
         let batcher = cfg.batcher;
+        // A dedicated long-lived thread, deliberately *not* a pool task
+        // (structural-lint `thread-spawn` allowlist): pool tasks must
+        // complete for their scope to return, while this loop runs for
+        // the server's whole lifetime — parking it in the pool would
+        // permanently eat a worker from the shared compute budget.
         let worker = std::thread::Builder::new()
             .name("tbgemm-worker".into())
             .spawn(move || worker_loop(worker_queue, pool, batcher, worker_metrics))

@@ -77,66 +77,86 @@ mod avx2 {
     /// encoding in one instruction.
     #[inline]
     unsafe fn sign_mask32(p: *const i8) -> u32 {
-        let v = _mm256_loadu_si256(p as *const __m256i);
-        _mm256_movemask_epi8(v) as u32
+        // SAFETY: the caller guarantees AVX2 and 32 readable bytes at `p`;
+        // `_mm256_loadu_si256` imposes no alignment requirement.
+        unsafe {
+            let v = _mm256_loadu_si256(p as *const __m256i);
+            _mm256_movemask_epi8(v) as u32
+        }
     }
 
     /// movemask of (v > 0) for 32 i8 values.
     #[inline]
     unsafe fn pos_mask32(p: *const i8) -> u32 {
-        let v = _mm256_loadu_si256(p as *const __m256i);
-        let gt = _mm256_cmpgt_epi8(v, _mm256_setzero_si256());
-        _mm256_movemask_epi8(gt) as u32
+        // SAFETY: the caller guarantees AVX2 and 32 readable bytes at `p`;
+        // `_mm256_loadu_si256` imposes no alignment requirement.
+        unsafe {
+            let v = _mm256_loadu_si256(p as *const __m256i);
+            let gt = _mm256_cmpgt_epi8(v, _mm256_setzero_si256());
+            _mm256_movemask_epi8(gt) as u32
+        }
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn pack_binary_row(row: &[i8], out: &mut [u64]) {
-        let n = row.len();
-        let words = n.div_ceil(64);
-        let mut w = 0;
-        while (w + 1) * 64 <= n {
-            let base = row.as_ptr().add(w * 64);
-            out[w] = sign_mask32(base) as u64 | ((sign_mask32(base.add(32)) as u64) << 32);
-            w += 1;
-        }
-        if w < words {
-            let mut bits = 0u64;
-            for (i, &v) in row[w * 64..].iter().enumerate() {
-                bits |= (((v as u8) >> 7) as u64) << i;
+        // SAFETY: the dispatch preamble runtime-detected AVX2 before calling
+        // in. The mask helpers read 32 bytes at `base` and `base + 32`,
+        // in bounds because the loop guard holds `(w + 1) * 64 <= n`; all
+        // output writes are bounds-checked slice indexing.
+        unsafe {
+            let n = row.len();
+            let words = n.div_ceil(64);
+            let mut w = 0;
+            while (w + 1) * 64 <= n {
+                let base = row.as_ptr().add(w * 64);
+                out[w] = sign_mask32(base) as u64 | ((sign_mask32(base.add(32)) as u64) << 32);
+                w += 1;
             }
-            out[w] = bits;
-            w += 1;
-        }
-        for o in out.iter_mut().skip(w) {
-            *o = 0;
+            if w < words {
+                let mut bits = 0u64;
+                for (i, &v) in row[w * 64..].iter().enumerate() {
+                    bits |= (((v as u8) >> 7) as u64) << i;
+                }
+                out[w] = bits;
+                w += 1;
+            }
+            for o in out.iter_mut().skip(w) {
+                *o = 0;
+            }
         }
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn pack_ternary_row(row: &[i8], plus: &mut [u64], minus: &mut [u64]) {
-        let n = row.len();
-        let words = n.div_ceil(64);
-        let mut w = 0;
-        while (w + 1) * 64 <= n {
-            let base = row.as_ptr().add(w * 64);
-            plus[w] = pos_mask32(base) as u64 | ((pos_mask32(base.add(32)) as u64) << 32);
-            minus[w] = sign_mask32(base) as u64 | ((sign_mask32(base.add(32)) as u64) << 32);
-            w += 1;
-        }
-        if w < words {
-            let mut p = 0u64;
-            let mut m = 0u64;
-            for (i, &v) in row[w * 64..].iter().enumerate() {
-                p |= ((v > 0) as u64) << i;
-                m |= (((v as u8) >> 7) as u64) << i;
+        // SAFETY: the dispatch preamble runtime-detected AVX2 before calling
+        // in. The mask helpers read 32 bytes at `base` and `base + 32`,
+        // in bounds because the loop guard holds `(w + 1) * 64 <= n`; all
+        // output writes are bounds-checked slice indexing.
+        unsafe {
+            let n = row.len();
+            let words = n.div_ceil(64);
+            let mut w = 0;
+            while (w + 1) * 64 <= n {
+                let base = row.as_ptr().add(w * 64);
+                plus[w] = pos_mask32(base) as u64 | ((pos_mask32(base.add(32)) as u64) << 32);
+                minus[w] = sign_mask32(base) as u64 | ((sign_mask32(base.add(32)) as u64) << 32);
+                w += 1;
             }
-            plus[w] = p;
-            minus[w] = m;
-            w += 1;
-        }
-        for i in w..plus.len() {
-            plus[i] = 0;
-            minus[i] = 0;
+            if w < words {
+                let mut p = 0u64;
+                let mut m = 0u64;
+                for (i, &v) in row[w * 64..].iter().enumerate() {
+                    p |= ((v > 0) as u64) << i;
+                    m |= (((v as u8) >> 7) as u64) << i;
+                }
+                plus[w] = p;
+                minus[w] = m;
+                w += 1;
+            }
+            for i in w..plus.len() {
+                plus[i] = 0;
+                minus[i] = 0;
+            }
         }
     }
 }
@@ -146,12 +166,24 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    /// Differential: vectorized ≡ scalar on every length 0..=200
+    /// Upper bound of the length sweeps: natively 200 covers the main
+    /// loop, the 64-boundary and every tail size; under Miri 70 keeps
+    /// one full 64-element word plus every tail size while bounding the
+    /// interpreter's wall-clock.
+    fn sweep_max() -> usize {
+        if cfg!(miri) {
+            70
+        } else {
+            200
+        }
+    }
+
+    /// Differential: vectorized ≡ scalar on every length in the sweep
     /// (covers main loop, 64-boundary, and all tail sizes).
     #[test]
     fn binary_pack_matches_scalar() {
         let mut rng = Rng::new(0xFA0);
-        for n in 0usize..=200 {
+        for n in 0usize..=sweep_max() {
             let row: Vec<i8> = (0..n).map(|_| rng.binary()).collect();
             let words = n.div_ceil(64).max(1);
             let a_init = 0xAAu64.wrapping_mul(0x0101_0101_0101_0101);
@@ -166,7 +198,7 @@ mod tests {
     #[test]
     fn ternary_pack_matches_scalar() {
         let mut rng = Rng::new(0xFA1);
-        for n in 0usize..=200 {
+        for n in 0usize..=sweep_max() {
             let row: Vec<i8> = (0..n).map(|_| rng.ternary()).collect();
             let words = n.div_ceil(64).max(1);
             let (mut p1, mut m1) = (vec![1u64; words], vec![2u64; words]);

@@ -36,208 +36,260 @@ use std::arch::aarch64::*;
 use super::NEON_SPILL_WORDS as SPILL_WORDS;
 
 /// Unaligned 128-bit load of words `s[i..i + 2]` as sixteen bytes.
+///
+/// # Safety
+/// `i + 2 <= s.len()` must hold — the callers iterate `i < pairs` with
+/// `pairs = s.len() & !1`, which guarantees it.
 #[inline]
 unsafe fn loadu(s: &[u64], i: usize) -> uint8x16_t {
-    vld1q_u8(s.as_ptr().add(i) as *const u8)
+    // SAFETY: the caller guarantees `i + 2 <= s.len()`, so the sixteen
+    // bytes at `s[i..i + 2]` are in bounds; `vld1q_u8` imposes no
+    // alignment requirement beyond `u8`.
+    unsafe { vld1q_u8(s.as_ptr().add(i) as *const u8) }
 }
 
 /// z⁺/z⁻ plane products of eq. (7):
-/// `((x⁺∧y⁺)∨(x⁻∧y⁻), (x⁺∧y⁻)∨(x⁻∧y⁺))`.
+/// `((x⁺∧y⁺)∨(x⁻∧y⁻), (x⁺∧y⁻)∨(x⁻∧y⁺))`. Safe: on aarch64 the
+/// register-only NEON value intrinsics are safe functions (the baseline
+/// feature is statically available; no memory is touched).
 #[inline]
-unsafe fn tnn_products(xp: uint8x16_t, xm: uint8x16_t, yp: uint8x16_t, ym: uint8x16_t) -> (uint8x16_t, uint8x16_t) {
+fn tnn_products(xp: uint8x16_t, xm: uint8x16_t, yp: uint8x16_t, ym: uint8x16_t) -> (uint8x16_t, uint8x16_t) {
     let zp = vorrq_u8(vandq_u8(xp, yp), vandq_u8(xm, ym));
     let zm = vorrq_u8(vandq_u8(xp, ym), vandq_u8(xm, yp));
     (zp, zm)
 }
 
 /// Ternary×binary products with bit-column `t` (1 encodes −1):
-/// `((x⁺∧¬t)∨(x⁻∧t), (x⁺∧t)∨(x⁻∧¬t))`.
+/// `((x⁺∧¬t)∨(x⁻∧t), (x⁺∧t)∨(x⁻∧¬t))`. Safe for the same reason as
+/// [`tnn_products`].
 #[inline]
-unsafe fn tbn_products(xp: uint8x16_t, xm: uint8x16_t, t: uint8x16_t) -> (uint8x16_t, uint8x16_t) {
+fn tbn_products(xp: uint8x16_t, xm: uint8x16_t, t: uint8x16_t) -> (uint8x16_t, uint8x16_t) {
     let zp = vorrq_u8(vbicq_u8(xp, t), vandq_u8(xm, t));
     let zm = vorrq_u8(vandq_u8(xp, t), vbicq_u8(xm, t));
     (zp, zm)
 }
 
 pub unsafe fn xor_popcnt(a: &[u64], b: &[u64]) -> u32 {
-    let n = a.len();
-    let pairs = n & !1;
-    let mut total = vdupq_n_u32(0);
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut acc = vdupq_n_u16(0);
-        while i < end {
-            let x = veorq_u8(loadu(a, i), loadu(b, i));
-            acc = vpadalq_u8(acc, vcntq_u8(x));
-            i += 2;
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = a.len();
+        let pairs = n & !1;
+        let mut total = vdupq_n_u32(0);
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut acc = vdupq_n_u16(0);
+            while i < end {
+                let x = veorq_u8(loadu(a, i), loadu(b, i));
+                acc = vpadalq_u8(acc, vcntq_u8(x));
+                i += 2;
+            }
+            total = vpadalq_u16(total, acc);
         }
-        total = vpadalq_u16(total, acc);
+        let mut s = vaddvq_u32(total);
+        if n > pairs {
+            s += (a[pairs] ^ b[pairs]).count_ones();
+        }
+        s
     }
-    let mut s = vaddvq_u32(total);
-    if n > pairs {
-        s += (a[pairs] ^ b[pairs]).count_ones();
-    }
-    s
 }
 
 pub unsafe fn xor_popcnt2(a: &[u64], b0: &[u64], b1: &[u64]) -> (u32, u32) {
-    let n = a.len();
-    let pairs = n & !1;
-    let mut t0 = vdupq_n_u32(0);
-    let mut t1 = vdupq_n_u32(0);
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut acc0 = vdupq_n_u16(0);
-        let mut acc1 = vdupq_n_u16(0);
-        while i < end {
-            let av = loadu(a, i);
-            acc0 = vpadalq_u8(acc0, vcntq_u8(veorq_u8(av, loadu(b0, i))));
-            acc1 = vpadalq_u8(acc1, vcntq_u8(veorq_u8(av, loadu(b1, i))));
-            i += 2;
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = a.len();
+        let pairs = n & !1;
+        let mut t0 = vdupq_n_u32(0);
+        let mut t1 = vdupq_n_u32(0);
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut acc0 = vdupq_n_u16(0);
+            let mut acc1 = vdupq_n_u16(0);
+            while i < end {
+                let av = loadu(a, i);
+                acc0 = vpadalq_u8(acc0, vcntq_u8(veorq_u8(av, loadu(b0, i))));
+                acc1 = vpadalq_u8(acc1, vcntq_u8(veorq_u8(av, loadu(b1, i))));
+                i += 2;
+            }
+            t0 = vpadalq_u16(t0, acc0);
+            t1 = vpadalq_u16(t1, acc1);
         }
-        t0 = vpadalq_u16(t0, acc0);
-        t1 = vpadalq_u16(t1, acc1);
+        let mut s0 = vaddvq_u32(t0);
+        let mut s1 = vaddvq_u32(t1);
+        if n > pairs {
+            s0 += (a[pairs] ^ b0[pairs]).count_ones();
+            s1 += (a[pairs] ^ b1[pairs]).count_ones();
+        }
+        (s0, s1)
     }
-    let mut s0 = vaddvq_u32(t0);
-    let mut s1 = vaddvq_u32(t1);
-    if n > pairs {
-        s0 += (a[pairs] ^ b0[pairs]).count_ones();
-        s1 += (a[pairs] ^ b1[pairs]).count_ones();
-    }
-    (s0, s1)
 }
 
 pub unsafe fn tnn_popcnt(ap: &[u64], am: &[u64], bp: &[u64], bm: &[u64]) -> (u32, u32) {
-    let n = ap.len();
-    let pairs = n & !1;
-    let mut tp = vdupq_n_u32(0);
-    let mut tm = vdupq_n_u32(0);
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut accp = vdupq_n_u16(0);
-        let mut accm = vdupq_n_u16(0);
-        while i < end {
-            let (zp, zm) = tnn_products(loadu(ap, i), loadu(am, i), loadu(bp, i), loadu(bm, i));
-            accp = vpadalq_u8(accp, vcntq_u8(zp));
-            accm = vpadalq_u8(accm, vcntq_u8(zm));
-            i += 2;
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = ap.len();
+        let pairs = n & !1;
+        let mut tp = vdupq_n_u32(0);
+        let mut tm = vdupq_n_u32(0);
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut accp = vdupq_n_u16(0);
+            let mut accm = vdupq_n_u16(0);
+            while i < end {
+                let (zp, zm) = tnn_products(loadu(ap, i), loadu(am, i), loadu(bp, i), loadu(bm, i));
+                accp = vpadalq_u8(accp, vcntq_u8(zp));
+                accm = vpadalq_u8(accm, vcntq_u8(zm));
+                i += 2;
+            }
+            tp = vpadalq_u16(tp, accp);
+            tm = vpadalq_u16(tm, accm);
         }
-        tp = vpadalq_u16(tp, accp);
-        tm = vpadalq_u16(tm, accm);
+        let mut p = vaddvq_u32(tp);
+        let mut m = vaddvq_u32(tm);
+        if n > pairs {
+            let w = pairs;
+            p += ((ap[w] & bp[w]) | (am[w] & bm[w])).count_ones();
+            m += ((ap[w] & bm[w]) | (am[w] & bp[w])).count_ones();
+        }
+        (p, m)
     }
-    let mut p = vaddvq_u32(tp);
-    let mut m = vaddvq_u32(tm);
-    if n > pairs {
-        let w = pairs;
-        p += ((ap[w] & bp[w]) | (am[w] & bm[w])).count_ones();
-        m += ((ap[w] & bm[w]) | (am[w] & bp[w])).count_ones();
-    }
-    (p, m)
 }
 
 pub unsafe fn tbn_popcnt(ap: &[u64], am: &[u64], t: &[u64]) -> (u32, u32) {
-    let n = ap.len();
-    let pairs = n & !1;
-    let mut tp = vdupq_n_u32(0);
-    let mut tm = vdupq_n_u32(0);
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut accp = vdupq_n_u16(0);
-        let mut accm = vdupq_n_u16(0);
-        while i < end {
-            let (zp, zm) = tbn_products(loadu(ap, i), loadu(am, i), loadu(t, i));
-            accp = vpadalq_u8(accp, vcntq_u8(zp));
-            accm = vpadalq_u8(accm, vcntq_u8(zm));
-            i += 2;
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = ap.len();
+        let pairs = n & !1;
+        let mut tp = vdupq_n_u32(0);
+        let mut tm = vdupq_n_u32(0);
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut accp = vdupq_n_u16(0);
+            let mut accm = vdupq_n_u16(0);
+            while i < end {
+                let (zp, zm) = tbn_products(loadu(ap, i), loadu(am, i), loadu(t, i));
+                accp = vpadalq_u8(accp, vcntq_u8(zp));
+                accm = vpadalq_u8(accm, vcntq_u8(zm));
+                i += 2;
+            }
+            tp = vpadalq_u16(tp, accp);
+            tm = vpadalq_u16(tm, accm);
         }
-        tp = vpadalq_u16(tp, accp);
-        tm = vpadalq_u16(tm, accm);
+        let mut p = vaddvq_u32(tp);
+        let mut m = vaddvq_u32(tm);
+        if n > pairs {
+            let w = pairs;
+            p += ((ap[w] & !t[w]) | (am[w] & t[w])).count_ones();
+            m += ((ap[w] & t[w]) | (am[w] & !t[w])).count_ones();
+        }
+        (p, m)
     }
-    let mut p = vaddvq_u32(tp);
-    let mut m = vaddvq_u32(tm);
-    if n > pairs {
-        let w = pairs;
-        p += ((ap[w] & !t[w]) | (am[w] & t[w])).count_ones();
-        m += ((ap[w] & t[w]) | (am[w] & !t[w])).count_ones();
-    }
-    (p, m)
 }
 
 pub unsafe fn xor_popcnt_4x2(a: [&[u64]; 4], b0: &[u64], b1: &[u64]) -> [[u32; 2]; 4] {
-    let n = b0.len();
-    let pairs = n & !1;
-    let mut total = [[vdupq_n_u32(0); 2]; 4];
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut acc = [[vdupq_n_u16(0); 2]; 4];
-        while i < end {
-            let bv0 = loadu(b0, i);
-            let bv1 = loadu(b1, i);
-            for r in 0..4 {
-                let av = loadu(a[r], i);
-                acc[r][0] = vpadalq_u8(acc[r][0], vcntq_u8(veorq_u8(av, bv0)));
-                acc[r][1] = vpadalq_u8(acc[r][1], vcntq_u8(veorq_u8(av, bv1)));
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = b0.len();
+        let pairs = n & !1;
+        let mut total = [[vdupq_n_u32(0); 2]; 4];
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut acc = [[vdupq_n_u16(0); 2]; 4];
+            while i < end {
+                let bv0 = loadu(b0, i);
+                let bv1 = loadu(b1, i);
+                for r in 0..4 {
+                    let av = loadu(a[r], i);
+                    acc[r][0] = vpadalq_u8(acc[r][0], vcntq_u8(veorq_u8(av, bv0)));
+                    acc[r][1] = vpadalq_u8(acc[r][1], vcntq_u8(veorq_u8(av, bv1)));
+                }
+                i += 2;
             }
-            i += 2;
+            for r in 0..4 {
+                for c in 0..2 {
+                    total[r][c] = vpadalq_u16(total[r][c], acc[r][c]);
+                }
+            }
         }
+        let mut s = [[0u32; 2]; 4];
         for r in 0..4 {
             for c in 0..2 {
-                total[r][c] = vpadalq_u16(total[r][c], acc[r][c]);
+                s[r][c] = vaddvq_u32(total[r][c]);
+            }
+            for t in pairs..n {
+                s[r][0] += (a[r][t] ^ b0[t]).count_ones();
+                s[r][1] += (a[r][t] ^ b1[t]).count_ones();
             }
         }
+        s
     }
-    let mut s = [[0u32; 2]; 4];
-    for r in 0..4 {
-        for c in 0..2 {
-            s[r][c] = vaddvq_u32(total[r][c]);
-        }
-        for t in pairs..n {
-            s[r][0] += (a[r][t] ^ b0[t]).count_ones();
-            s[r][1] += (a[r][t] ^ b1[t]).count_ones();
-        }
-    }
-    s
 }
 
 pub unsafe fn xor_popcnt_4x4(a: [&[u64]; 4], b: [&[u64]; 4]) -> [[u32; 4]; 4] {
-    let n = b[0].len();
-    let pairs = n & !1;
-    let mut total = [[vdupq_n_u32(0); 4]; 4];
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut acc = [[vdupq_n_u16(0); 4]; 4];
-        while i < end {
-            let bv = [loadu(b[0], i), loadu(b[1], i), loadu(b[2], i), loadu(b[3], i)];
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = b[0].len();
+        let pairs = n & !1;
+        let mut total = [[vdupq_n_u32(0); 4]; 4];
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut acc = [[vdupq_n_u16(0); 4]; 4];
+            while i < end {
+                let bv = [loadu(b[0], i), loadu(b[1], i), loadu(b[2], i), loadu(b[3], i)];
+                for r in 0..4 {
+                    let av = loadu(a[r], i);
+                    for c in 0..4 {
+                        acc[r][c] = vpadalq_u8(acc[r][c], vcntq_u8(veorq_u8(av, bv[c])));
+                    }
+                }
+                i += 2;
+            }
             for r in 0..4 {
-                let av = loadu(a[r], i);
                 for c in 0..4 {
-                    acc[r][c] = vpadalq_u8(acc[r][c], vcntq_u8(veorq_u8(av, bv[c])));
+                    total[r][c] = vpadalq_u16(total[r][c], acc[r][c]);
                 }
             }
-            i += 2;
         }
+        let mut s = [[0u32; 4]; 4];
         for r in 0..4 {
             for c in 0..4 {
-                total[r][c] = vpadalq_u16(total[r][c], acc[r][c]);
+                s[r][c] = vaddvq_u32(total[r][c]);
+                for t in pairs..n {
+                    s[r][c] += (a[r][t] ^ b[c][t]).count_ones();
+                }
             }
         }
+        s
     }
-    let mut s = [[0u32; 4]; 4];
-    for r in 0..4 {
-        for c in 0..4 {
-            s[r][c] = vaddvq_u32(total[r][c]);
-            for t in pairs..n {
-                s[r][c] += (a[r][t] ^ b[c][t]).count_ones();
-            }
-        }
-    }
-    s
 }
 
 pub unsafe fn tnn_popcnt_2x2(
@@ -248,49 +300,56 @@ pub unsafe fn tnn_popcnt_2x2(
     bp1: &[u64],
     bm1: &[u64],
 ) -> [[(u32, u32); 2]; 2] {
-    let n = bp0.len();
-    let pairs = n & !1;
-    let mut tp = [[vdupq_n_u32(0); 2]; 2];
-    let mut tm = [[vdupq_n_u32(0); 2]; 2];
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut accp = [[vdupq_n_u16(0); 2]; 2];
-        let mut accm = [[vdupq_n_u16(0); 2]; 2];
-        while i < end {
-            let yp = [loadu(bp0, i), loadu(bp1, i)];
-            let ym = [loadu(bm0, i), loadu(bm1, i)];
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = bp0.len();
+        let pairs = n & !1;
+        let mut tp = [[vdupq_n_u32(0); 2]; 2];
+        let mut tm = [[vdupq_n_u32(0); 2]; 2];
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut accp = [[vdupq_n_u16(0); 2]; 2];
+            let mut accm = [[vdupq_n_u16(0); 2]; 2];
+            while i < end {
+                let yp = [loadu(bp0, i), loadu(bp1, i)];
+                let ym = [loadu(bm0, i), loadu(bm1, i)];
+                for r in 0..2 {
+                    let xp = loadu(ap[r], i);
+                    let xm = loadu(am[r], i);
+                    for c in 0..2 {
+                        let (zp, zm) = tnn_products(xp, xm, yp[c], ym[c]);
+                        accp[r][c] = vpadalq_u8(accp[r][c], vcntq_u8(zp));
+                        accm[r][c] = vpadalq_u8(accm[r][c], vcntq_u8(zm));
+                    }
+                }
+                i += 2;
+            }
             for r in 0..2 {
-                let xp = loadu(ap[r], i);
-                let xm = loadu(am[r], i);
                 for c in 0..2 {
-                    let (zp, zm) = tnn_products(xp, xm, yp[c], ym[c]);
-                    accp[r][c] = vpadalq_u8(accp[r][c], vcntq_u8(zp));
-                    accm[r][c] = vpadalq_u8(accm[r][c], vcntq_u8(zm));
+                    tp[r][c] = vpadalq_u16(tp[r][c], accp[r][c]);
+                    tm[r][c] = vpadalq_u16(tm[r][c], accm[r][c]);
                 }
             }
-            i += 2;
         }
+        let mut s = [[(0u32, 0u32); 2]; 2];
+        let cols = [(bp0, bm0), (bp1, bm1)];
         for r in 0..2 {
-            for c in 0..2 {
-                tp[r][c] = vpadalq_u16(tp[r][c], accp[r][c]);
-                tm[r][c] = vpadalq_u16(tm[r][c], accm[r][c]);
+            for (c, &(bp, bm)) in cols.iter().enumerate() {
+                let (mut p, mut m) = (vaddvq_u32(tp[r][c]), vaddvq_u32(tm[r][c]));
+                for t in pairs..n {
+                    p += ((ap[r][t] & bp[t]) | (am[r][t] & bm[t])).count_ones();
+                    m += ((ap[r][t] & bm[t]) | (am[r][t] & bp[t])).count_ones();
+                }
+                s[r][c] = (p, m);
             }
         }
+        s
     }
-    let mut s = [[(0u32, 0u32); 2]; 2];
-    let cols = [(bp0, bm0), (bp1, bm1)];
-    for r in 0..2 {
-        for (c, &(bp, bm)) in cols.iter().enumerate() {
-            let (mut p, mut m) = (vaddvq_u32(tp[r][c]), vaddvq_u32(tm[r][c]));
-            for t in pairs..n {
-                p += ((ap[r][t] & bp[t]) | (am[r][t] & bm[t])).count_ones();
-                m += ((ap[r][t] & bm[t]) | (am[r][t] & bp[t])).count_ones();
-            }
-            s[r][c] = (p, m);
-        }
-    }
-    s
 }
 
 pub unsafe fn tnn_popcnt_2x4(
@@ -299,91 +358,105 @@ pub unsafe fn tnn_popcnt_2x4(
     bp: [&[u64]; 4],
     bm: [&[u64]; 4],
 ) -> [[(u32, u32); 4]; 2] {
-    let n = bp[0].len();
-    let pairs = n & !1;
-    let mut tp = [[vdupq_n_u32(0); 4]; 2];
-    let mut tm = [[vdupq_n_u32(0); 4]; 2];
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut accp = [[vdupq_n_u16(0); 4]; 2];
-        let mut accm = [[vdupq_n_u16(0); 4]; 2];
-        while i < end {
-            let yp = [loadu(bp[0], i), loadu(bp[1], i), loadu(bp[2], i), loadu(bp[3], i)];
-            let ym = [loadu(bm[0], i), loadu(bm[1], i), loadu(bm[2], i), loadu(bm[3], i)];
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = bp[0].len();
+        let pairs = n & !1;
+        let mut tp = [[vdupq_n_u32(0); 4]; 2];
+        let mut tm = [[vdupq_n_u32(0); 4]; 2];
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut accp = [[vdupq_n_u16(0); 4]; 2];
+            let mut accm = [[vdupq_n_u16(0); 4]; 2];
+            while i < end {
+                let yp = [loadu(bp[0], i), loadu(bp[1], i), loadu(bp[2], i), loadu(bp[3], i)];
+                let ym = [loadu(bm[0], i), loadu(bm[1], i), loadu(bm[2], i), loadu(bm[3], i)];
+                for r in 0..2 {
+                    let xp = loadu(ap[r], i);
+                    let xm = loadu(am[r], i);
+                    for c in 0..4 {
+                        let (zp, zm) = tnn_products(xp, xm, yp[c], ym[c]);
+                        accp[r][c] = vpadalq_u8(accp[r][c], vcntq_u8(zp));
+                        accm[r][c] = vpadalq_u8(accm[r][c], vcntq_u8(zm));
+                    }
+                }
+                i += 2;
+            }
             for r in 0..2 {
-                let xp = loadu(ap[r], i);
-                let xm = loadu(am[r], i);
                 for c in 0..4 {
-                    let (zp, zm) = tnn_products(xp, xm, yp[c], ym[c]);
-                    accp[r][c] = vpadalq_u8(accp[r][c], vcntq_u8(zp));
-                    accm[r][c] = vpadalq_u8(accm[r][c], vcntq_u8(zm));
+                    tp[r][c] = vpadalq_u16(tp[r][c], accp[r][c]);
+                    tm[r][c] = vpadalq_u16(tm[r][c], accm[r][c]);
                 }
             }
-            i += 2;
         }
+        let mut s = [[(0u32, 0u32); 4]; 2];
         for r in 0..2 {
             for c in 0..4 {
-                tp[r][c] = vpadalq_u16(tp[r][c], accp[r][c]);
-                tm[r][c] = vpadalq_u16(tm[r][c], accm[r][c]);
+                let (mut p, mut m) = (vaddvq_u32(tp[r][c]), vaddvq_u32(tm[r][c]));
+                for t in pairs..n {
+                    p += ((ap[r][t] & bp[c][t]) | (am[r][t] & bm[c][t])).count_ones();
+                    m += ((ap[r][t] & bm[c][t]) | (am[r][t] & bp[c][t])).count_ones();
+                }
+                s[r][c] = (p, m);
             }
         }
+        s
     }
-    let mut s = [[(0u32, 0u32); 4]; 2];
-    for r in 0..2 {
-        for c in 0..4 {
-            let (mut p, mut m) = (vaddvq_u32(tp[r][c]), vaddvq_u32(tm[r][c]));
-            for t in pairs..n {
-                p += ((ap[r][t] & bp[c][t]) | (am[r][t] & bm[c][t])).count_ones();
-                m += ((ap[r][t] & bm[c][t]) | (am[r][t] & bp[c][t])).count_ones();
-            }
-            s[r][c] = (p, m);
-        }
-    }
-    s
 }
 
 pub unsafe fn tbn_popcnt_2x2(ap: [&[u64]; 2], am: [&[u64]; 2], t0: &[u64], t1: &[u64]) -> [[(u32, u32); 2]; 2] {
-    let n = t0.len();
-    let pairs = n & !1;
-    let mut tp = [[vdupq_n_u32(0); 2]; 2];
-    let mut tm = [[vdupq_n_u32(0); 2]; 2];
-    let mut i = 0;
-    while i < pairs {
-        let end = usize::min(i + SPILL_WORDS, pairs);
-        let mut accp = [[vdupq_n_u16(0); 2]; 2];
-        let mut accm = [[vdupq_n_u16(0); 2]; 2];
-        while i < end {
-            let tv = [loadu(t0, i), loadu(t1, i)];
+    // SAFETY: the wrapper debug-asserts that all slices share length
+    // `n`, so every `loadu` — reading words `i..i + 2` only while
+    // `i < pairs` with `pairs = n & !1` — is in bounds for each slice,
+    // and the scalar tail index `pairs` is below `n`. NEON itself is a
+    // baseline aarch64 feature (no runtime detection required).
+    unsafe {
+        let n = t0.len();
+        let pairs = n & !1;
+        let mut tp = [[vdupq_n_u32(0); 2]; 2];
+        let mut tm = [[vdupq_n_u32(0); 2]; 2];
+        let mut i = 0;
+        while i < pairs {
+            let end = usize::min(i + SPILL_WORDS, pairs);
+            let mut accp = [[vdupq_n_u16(0); 2]; 2];
+            let mut accm = [[vdupq_n_u16(0); 2]; 2];
+            while i < end {
+                let tv = [loadu(t0, i), loadu(t1, i)];
+                for r in 0..2 {
+                    let xp = loadu(ap[r], i);
+                    let xm = loadu(am[r], i);
+                    for c in 0..2 {
+                        let (zp, zm) = tbn_products(xp, xm, tv[c]);
+                        accp[r][c] = vpadalq_u8(accp[r][c], vcntq_u8(zp));
+                        accm[r][c] = vpadalq_u8(accm[r][c], vcntq_u8(zm));
+                    }
+                }
+                i += 2;
+            }
             for r in 0..2 {
-                let xp = loadu(ap[r], i);
-                let xm = loadu(am[r], i);
                 for c in 0..2 {
-                    let (zp, zm) = tbn_products(xp, xm, tv[c]);
-                    accp[r][c] = vpadalq_u8(accp[r][c], vcntq_u8(zp));
-                    accm[r][c] = vpadalq_u8(accm[r][c], vcntq_u8(zm));
+                    tp[r][c] = vpadalq_u16(tp[r][c], accp[r][c]);
+                    tm[r][c] = vpadalq_u16(tm[r][c], accm[r][c]);
                 }
             }
-            i += 2;
         }
+        let mut s = [[(0u32, 0u32); 2]; 2];
+        let cols = [t0, t1];
         for r in 0..2 {
-            for c in 0..2 {
-                tp[r][c] = vpadalq_u16(tp[r][c], accp[r][c]);
-                tm[r][c] = vpadalq_u16(tm[r][c], accm[r][c]);
+            for (c, &tw) in cols.iter().enumerate() {
+                let (mut p, mut m) = (vaddvq_u32(tp[r][c]), vaddvq_u32(tm[r][c]));
+                for w in pairs..n {
+                    p += ((ap[r][w] & !tw[w]) | (am[r][w] & tw[w])).count_ones();
+                    m += ((ap[r][w] & tw[w]) | (am[r][w] & !tw[w])).count_ones();
+                }
+                s[r][c] = (p, m);
             }
         }
+        s
     }
-    let mut s = [[(0u32, 0u32); 2]; 2];
-    let cols = [t0, t1];
-    for r in 0..2 {
-        for (c, &tw) in cols.iter().enumerate() {
-            let (mut p, mut m) = (vaddvq_u32(tp[r][c]), vaddvq_u32(tm[r][c]));
-            for w in pairs..n {
-                p += ((ap[r][w] & !tw[w]) | (am[r][w] & tw[w])).count_ones();
-                m += ((ap[r][w] & tw[w]) | (am[r][w] & !tw[w])).count_ones();
-            }
-            s[r][c] = (p, m);
-        }
-    }
-    s
 }

@@ -55,6 +55,13 @@
 // driver signatures carry the full blocking configuration, and scratch
 // arenas expose `new()` constructors alongside `Default`.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments, clippy::new_without_default)]
+// The static half of the crate's unsafe-code policy (the dynamic half
+// is the Miri/TSan/loom CI lanes): every unsafe operation inside an
+// `unsafe fn` must sit in an explicit inner `unsafe {}` block, and
+// every `unsafe {}` block must be justified by a `// SAFETY:` comment
+// (also enforced textually by tools/structural_lint.py, rule `safety`).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod bench;
 pub mod conv;

@@ -1,0 +1,74 @@
+//! Central, read-once access to every `TBGEMM_*` environment knob.
+//!
+//! All environment configuration flows through this module. The
+//! structural lint (`tools/structural_lint.py`, rule `env-var`) rejects
+//! `env::var` anywhere else under `src/`, so the complete knob set is
+//! auditable right here and a misspelled variable name in some far-away
+//! module cannot silently no-op. Each accessor parses its variable
+//! **once per process** into a `OnceLock` — hot callers (the SIMD
+//! dispatch preamble, the pool sizing path) pay a cached load, never an
+//! environment lookup — and returns a typed value instead of a string.
+//!
+//! The knobs:
+//!
+//! * `TBGEMM_POOL_THREADS` — worker-pool size override ([`pool_threads`]).
+//! * `TBGEMM_FORCE_SCALAR` — force the scalar SIMD fallbacks
+//!   ([`force_scalar`]); the CI scalar lane sets this.
+//! * `TBGEMM_PROP_SEED` — property-suite base seed ([`prop_seed`]); the
+//!   CI property lane pins a second seed with it.
+
+use std::sync::OnceLock;
+
+/// `TBGEMM_POOL_THREADS`: requested worker-pool size, parsed and
+/// clamped to ≥ 1. `None` when unset or unparseable — the pool then
+/// falls back to `available_parallelism`
+/// (see [`crate::util::pool::default_workers`]).
+pub fn pool_threads() -> Option<usize> {
+    static VALUE: OnceLock<Option<usize>> = OnceLock::new();
+    *VALUE.get_or_init(|| {
+        std::env::var("TBGEMM_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+}
+
+/// `TBGEMM_FORCE_SCALAR`: true for any non-empty value other than `0`.
+/// Forces every `simd_dispatch!` wrapper down its scalar arm (step 1 of
+/// the documented dispatch order), which is how CI exercises the scalar
+/// fallbacks on hosts whose best SIMD arm would otherwise shadow them.
+pub fn force_scalar() -> bool {
+    static VALUE: OnceLock<bool> = OnceLock::new();
+    *VALUE.get_or_init(|| matches!(std::env::var("TBGEMM_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0"))
+}
+
+/// `TBGEMM_PROP_SEED`: base seed for the property-testing suites.
+/// `None` when unset or unparseable — the suites then use their
+/// built-in default seed, keeping every run replayable either way.
+pub fn prop_seed() -> Option<u64> {
+    static VALUE: OnceLock<Option<u64>> = OnceLock::new();
+    *VALUE.get_or_init(|| std::env::var("TBGEMM_PROP_SEED").ok().and_then(|s| s.trim().parse::<u64>().ok()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The accessors are cached: repeated calls agree with themselves
+    /// (and with each other) regardless of later environment mutation.
+    /// We deliberately do **not** set variables here — these are
+    /// process-wide caches, and writing the environment from a threaded
+    /// test harness would race other tests reading it.
+    #[test]
+    fn accessors_are_stable_across_calls() {
+        let (p0, f0, s0) = (pool_threads(), force_scalar(), prop_seed());
+        for _ in 0..3 {
+            assert_eq!(pool_threads(), p0);
+            assert_eq!(force_scalar(), f0);
+            assert_eq!(prop_seed(), s0);
+        }
+        if let Some(n) = p0 {
+            assert!(n >= 1, "pool_threads is clamped to >= 1");
+        }
+    }
+}

@@ -1,16 +1,20 @@
 //! Small self-contained utilities: deterministic PRNG, dense matrices,
-//! timing helpers, a light property-testing harness, and the
-//! process-wide persistent worker pool ([`pool`]) every parallel code
-//! path dispatches through.
+//! timing helpers, a light property-testing harness, the process-wide
+//! persistent worker pool ([`pool`]) every parallel code path
+//! dispatches through, the std/loom synchronization seam ([`sync`])
+//! that pool is model-checked through, and the central `TBGEMM_*`
+//! environment-knob registry ([`env`]).
 //!
 //! The build environment is fully offline, so this crate cannot depend on
 //! `rand`, `criterion` or `proptest`; these modules provide the small
 //! subset of their functionality the rest of the crate needs.
 
+pub mod env;
 pub mod mat;
 pub mod pool;
 pub mod prng;
 pub mod proptest;
+pub mod sync;
 pub mod timer;
 
 pub use mat::MatI8;

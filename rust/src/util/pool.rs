@@ -9,7 +9,8 @@
 //! Design (rten's process-global pool is the exemplar):
 //!
 //! * A fixed set of long-lived workers, sized **once** per process by
-//!   [`default_workers`] — the `TBGEMM_POOL_THREADS` env override, else
+//!   [`default_workers`] — the `TBGEMM_POOL_THREADS` env override (read
+//!   through [`crate::util::env`]), else
 //!   `std::thread::available_parallelism`. [`crate::gemm::Threading`]
 //!   stays a *per-call parallelism cap* resolved against this size.
 //! * Per-worker run queues with work stealing: a worker pops its own
@@ -33,12 +34,20 @@
 //! functions of the caller's `Threading` cap and problem shape, and
 //! tasks write disjoint output regions — so results stay bit-identical
 //! at any worker count, the invariant the differential suites pin.
+//!
+//! All synchronization goes through [`crate::util::sync`], the
+//! std/loom seam: `cargo test --features loom --lib -- loom_` runs the
+//! `loom_tests` module below, which model-checks the latch count-down
+//! and panic-payload handoff, own-queue-pop vs sibling-steal races,
+//! nested dispatch on a one-worker pool, and panic-during-steal under
+//! every preemption-bounded interleaving — not just the ones a stress
+//! test happens to hit.
 
+use crate::util::sync::{self, Arc, Condvar, Mutex};
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use std::sync::OnceLock;
 
 /// A borrowing task submitted to [`WorkerPool::run_scoped`]. The scope
 /// guarantees completion before it returns, which is what makes the
@@ -48,18 +57,15 @@ pub type ScopedTask<'env> = Box<dyn FnOnce() + Send + 'env>;
 /// An erased, queued task (lifetime already promoted by the scope).
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
-/// Worker-pool size, resolved **once** per process: `TBGEMM_POOL_THREADS`
-/// (parsed, clamped to ≥ 1) if set, else `available_parallelism`. This is
-/// also what [`crate::gemm::Threading::Auto`] resolves to, so "Auto"
-/// means "use the whole pool" — and costs no syscall on the GEMM hot
-/// path.
+/// Worker-pool size, resolved **once** per process:
+/// [`crate::util::env::pool_threads`] (`TBGEMM_POOL_THREADS`, parsed and
+/// clamped to ≥ 1) if set, else `available_parallelism`. This is also
+/// what [`crate::gemm::Threading::Auto`] resolves to, so "Auto" means
+/// "use the whole pool" — and costs no syscall on the GEMM hot path.
 pub fn default_workers() -> usize {
     static WORKERS: OnceLock<usize> = OnceLock::new();
     *WORKERS.get_or_init(|| {
-        std::env::var("TBGEMM_POOL_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&n| n >= 1)
+        crate::util::env::pool_threads()
             .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
     })
 }
@@ -125,7 +131,9 @@ impl Latch {
         Latch { state: Mutex::new((tasks, None)), done_cv: Condvar::new() }
     }
 
-    /// Signal one task finished; always called, panic or not.
+    /// Signal one task finished; always called, panic or not. Only the
+    /// **first** panic payload is kept (matching `std::thread::scope`,
+    /// which re-raises the panic of the first thread that panicked).
     fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
         let mut st = self.state.lock().unwrap();
         st.0 -= 1;
@@ -159,7 +167,7 @@ impl Latch {
 /// instances are for tests.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Vec<sync::thread::JoinHandle<()>>,
     workers: usize,
 }
 
@@ -178,10 +186,7 @@ impl WorkerPool {
         let handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("tbgemm-pool-{i}"))
-                    .spawn(move || worker_loop(&shared, i))
-                    .expect("spawn pool worker")
+                sync::spawn_named(format!("tbgemm-pool-{i}"), move || worker_loop(&shared, i))
             })
             .collect();
         WorkerPool { shared, handles, workers }
@@ -211,13 +216,24 @@ impl WorkerPool {
         {
             let mut st = self.shared.state.lock().unwrap();
             for task in tasks {
-                // SAFETY: promoting `'env` to `'static` is sound because
-                // this function does not return until the latch reports
-                // every task complete (the wrapper below signals even on
-                // unwind), so no task outlives the borrows it captures.
-                let task: Task = unsafe {
-                    std::mem::transmute::<ScopedTask<'env>, ScopedTask<'static>>(task)
-                };
+                // SAFETY: the `'env` lifetime is erased to `'static` so
+                // the closure can sit in the pool's queues, which
+                // outlive this stack frame. That is sound because this
+                // function re-bounds the erased lifetime: it does not
+                // return until the latch has counted down to zero, the
+                // latch is decremented exactly once per task by the
+                // wrapper below, and that decrement happens only
+                // *after* the task body has finished or unwound
+                // (`catch_unwind` turns an unwind into a normal return
+                // ahead of `latch.complete`). Queued-but-unrun tasks
+                // cannot be dropped out from under the scope either:
+                // workers and participating callers only ever
+                // pop-and-run, and `Drop` joins every worker — which
+                // drains the queues — before the queues are freed. So
+                // every task, and every `'env` borrow it captures, is
+                // dead before `run_scoped` returns, and the promoted
+                // closure never actually outlives `'env`.
+                let task: Task = unsafe { std::mem::transmute::<ScopedTask<'env>, ScopedTask<'static>>(task) };
                 let latch = Arc::clone(&latch);
                 let wrapped: Task = Box::new(move || {
                     let panic = catch_unwind(AssertUnwindSafe(task)).err();
@@ -277,7 +293,7 @@ fn worker_loop(shared: &Shared, me: usize) {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(feature = "loom")))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -390,15 +406,17 @@ mod tests {
     }
 
     /// Concurrent scopes from many threads share one pool without
-    /// cross-talk: every scope sees exactly its own writes.
+    /// cross-talk: every scope sees exactly its own writes. (Shrunk
+    /// under Miri: the interpreter runs real threads, slowly.)
     #[test]
     fn concurrent_scopes_share_one_pool() {
         let pool = WorkerPool::new(2);
+        let (spawners, rounds) = if cfg!(miri) { (3usize, 2usize) } else { (6, 8) };
         std::thread::scope(|s| {
-            for seed in 0..6usize {
+            for seed in 0..spawners {
                 let pool = &pool;
                 s.spawn(move || {
-                    for round in 0..8usize {
+                    for round in 0..rounds {
                         let mut data = vec![0usize; 24];
                         let tasks: Vec<ScopedTask<'_>> = data
                             .chunks_mut(6)
@@ -415,6 +433,175 @@ mod tests {
                     }
                 });
             }
+        });
+    }
+}
+
+/// Exhaustive-interleaving models of the pool's unsafe core, run by the
+/// CI loom lane (`cargo test --features loom --lib -- loom_`). Every
+/// test body executes under `loom::model`, which explores all
+/// preemption-bounded thread interleavings of the loom-backed
+/// primitives in [`crate::util::sync`] — so these assertions hold on
+/// *every* schedule, not just the ones a stress run happens to produce.
+#[cfg(all(test, feature = "loom"))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+    use loom::model::Builder;
+
+    /// Model with a preemption bound of 2: loom's own guidance for
+    /// keeping state-space exploration tractable while still catching
+    /// essentially all realistic bugs; it also bounds the CI lane's
+    /// wall-clock.
+    fn model(f: impl Fn() + Sync + Send + 'static) {
+        let mut b = Builder::new();
+        b.preemption_bound = Some(2);
+        b.check(f);
+    }
+
+    /// Suppress per-iteration panic output: these models panic inside
+    /// tasks on purpose, thousands of interleavings per test.
+    fn silence_panics() {
+        std::panic::set_hook(Box::new(|_| {}));
+    }
+
+    /// Latch count-down handoff: two completers signal concurrently, a
+    /// waiter blocks until both have; no payload is fabricated.
+    #[test]
+    fn loom_latch_countdown_handoff() {
+        model(|| {
+            let latch = Arc::new(Latch::new(2));
+            let a = Arc::clone(&latch);
+            let b = Arc::clone(&latch);
+            let t1 = loom::thread::spawn(move || a.complete(None));
+            let t2 = loom::thread::spawn(move || b.complete(None));
+            latch.wait_done();
+            assert!(latch.is_done());
+            assert!(latch.take_panic().is_none());
+            t1.join().unwrap();
+            t2.join().unwrap();
+        });
+    }
+
+    /// First-payload-wins, deterministically: the payload stored first
+    /// survives a concurrent second `complete(Some(..))`, and a `None`
+    /// completion never erases a stored payload.
+    #[test]
+    fn loom_latch_first_payload_wins() {
+        model(|| {
+            let latch = Arc::new(Latch::new(3));
+            latch.complete(Some(Box::new("first")));
+            let a = Arc::clone(&latch);
+            let b = Arc::clone(&latch);
+            let t1 = loom::thread::spawn(move || a.complete(Some(Box::new("second"))));
+            let t2 = loom::thread::spawn(move || b.complete(None));
+            latch.wait_done();
+            t1.join().unwrap();
+            t2.join().unwrap();
+            let payload = latch.take_panic().expect("a payload was stored");
+            assert_eq!(*payload.downcast_ref::<&str>().expect("str payload"), "first");
+            assert!(latch.take_panic().is_none(), "take_panic consumes the payload");
+        });
+    }
+
+    /// Scoped dispatch under every interleaving of two workers plus the
+    /// participating caller: three tasks land in two run queues
+    /// (round-robin), so every schedule mixes own-queue pops with
+    /// sibling steals and caller participation — and each disjoint
+    /// borrowed write must still be visible when `run_scoped` returns.
+    #[test]
+    fn loom_own_pop_vs_sibling_steal() {
+        model(|| {
+            let pool = WorkerPool::new(2);
+            let mut data = [0usize; 3];
+            let tasks: Vec<ScopedTask<'_>> = data
+                .chunks_mut(1)
+                .enumerate()
+                .map(|(i, band)| Box::new(move || band[0] = i + 1) as ScopedTask<'_>)
+                .collect();
+            pool.run_scoped(tasks);
+            assert_eq!(data, [1, 2, 3]);
+        });
+    }
+
+    /// Nested dispatch on a one-worker pool: the outer scope's waiting
+    /// caller and the single worker must between them run both outer
+    /// tasks and all inner tasks without deadlock, on every schedule.
+    #[test]
+    fn loom_nested_dispatch_single_worker() {
+        model(|| {
+            let pool = WorkerPool::new(1);
+            let ran = AtomicUsize::new(0);
+            let outer: Vec<ScopedTask<'_>> = (0..2)
+                .map(|_| {
+                    let (pool, ran) = (&pool, &ran);
+                    Box::new(move || {
+                        let inner: Vec<ScopedTask<'_>> = (0..2)
+                            .map(|_| {
+                                Box::new(|| {
+                                    ran.fetch_add(1, Ordering::SeqCst);
+                                }) as ScopedTask<'_>
+                            })
+                            .collect();
+                        pool.run_scoped(inner);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run_scoped(outer);
+            assert_eq!(ran.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    /// A task panics while its siblings are being popped/stolen by the
+    /// other worker and the caller: on every interleaving the panic is
+    /// re-raised only after both healthy tasks ran, and their writes
+    /// are visible despite the unwind.
+    #[test]
+    fn loom_panic_during_sibling_steal() {
+        silence_panics();
+        model(|| {
+            let pool = WorkerPool::new(2);
+            let ran = AtomicUsize::new(0);
+            let mut tasks: Vec<ScopedTask<'_>> = (0..2)
+                .map(|_| {
+                    let ran = &ran;
+                    Box::new(move || {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            tasks.push(Box::new(|| panic!("loom task panic")));
+            let result = catch_unwind(AssertUnwindSafe(|| pool.run_scoped(tasks)));
+            let payload = result.expect_err("scope must re-raise the task panic");
+            assert_eq!(*payload.downcast_ref::<&str>().expect("str payload"), "loom task panic");
+            assert_eq!(ran.load(Ordering::SeqCst), 2, "healthy siblings completed before the re-raise");
+        });
+    }
+
+    /// Two tasks panic concurrently: exactly one payload (one of the
+    /// two) is re-raised, and the pool keeps serving scopes afterwards.
+    #[test]
+    fn loom_two_panics_single_payload_pool_survives() {
+        silence_panics();
+        model(|| {
+            let pool = WorkerPool::new(1);
+            let tasks: Vec<ScopedTask<'_>> =
+                vec![Box::new(|| panic!("first panic")), Box::new(|| panic!("second panic"))];
+            let payload = catch_unwind(AssertUnwindSafe(|| pool.run_scoped(tasks)))
+                .expect_err("scope must re-raise one panic");
+            let msg = *payload.downcast_ref::<&str>().expect("str payload");
+            assert!(msg == "first panic" || msg == "second panic", "payload is one of the two: {msg}");
+            let ran = AtomicUsize::new(0);
+            let tasks: Vec<ScopedTask<'_>> = (0..2)
+                .map(|_| {
+                    let ran = &ran;
+                    Box::new(move || {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+            assert_eq!(ran.load(Ordering::SeqCst), 2, "pool serves scopes after a panicked scope");
         });
     }
 }

@@ -1,0 +1,76 @@
+//! The one seam between the crate's concurrency core and its
+//! synchronization primitives: `std::sync` in normal builds,
+//! `loom::sync` under `--features loom`.
+//!
+//! [`crate::util::pool`] and [`crate::coordinator::batcher`] import
+//! `Arc`/`Mutex`/`Condvar`/atomics from here instead of `std::sync`, so
+//! the **same** production code that runs in release builds is what the
+//! loom lane model-checks under exhaustive preemption-bounded
+//! interleavings (`cargo test --features loom --lib -- loom_` in CI,
+//! after `tools/enable_loom.py` splices the dependency into the
+//! otherwise offline-only manifest).
+//!
+//! Two operations need real shims rather than re-exports:
+//!
+//! * [`spawn_named`] — loom's `thread::spawn` takes no builder, so the
+//!   thread name is carried only in std builds. Thread spawning lives
+//!   here and in [`crate::util::pool`] alone; the structural lint
+//!   (rule `thread-spawn`) keeps it that way.
+//! * [`wait_timeout`] — loom's `Condvar::wait_timeout` does not model a
+//!   clock, so under loom it degrades to a plain `wait`. Loom models
+//!   must therefore never rely on a timeout for progress (the batcher
+//!   loom tests use zero-width batch windows so the timeout path is
+//!   never their only wake-up).
+
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(feature = "loom")]
+pub use loom::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+
+/// Thread handles from the active runtime.
+pub mod thread {
+    #[cfg(not(feature = "loom"))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(feature = "loom")]
+    pub use loom::thread::JoinHandle;
+}
+
+/// Spawn a named thread on the active runtime. Loom has no thread
+/// names, so the name is dropped there; in std builds it shows up in
+/// panic messages and debuggers (`tbgemm-pool-0`, …).
+#[cfg(not(feature = "loom"))]
+pub fn spawn_named<F>(name: String, f: F) -> thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new().name(name).spawn(f).expect("spawn named thread")
+}
+
+/// Spawn a named thread on the active runtime (loom build: the name is
+/// dropped, loom threads are anonymous model threads).
+#[cfg(feature = "loom")]
+pub fn spawn_named<F>(name: String, f: F) -> thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    let _ = name;
+    loom::thread::spawn(f)
+}
+
+/// Condvar wait bounded by `dur`. Under loom this is a plain `wait` —
+/// loom has no virtual clock — so callers must guarantee a matching
+/// `notify` exists on every modeled path and treat the timeout purely
+/// as a liveness bound, never as the sole wake-up mechanism.
+#[cfg(not(feature = "loom"))]
+pub fn wait_timeout<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>, dur: std::time::Duration) -> MutexGuard<'a, T> {
+    cv.wait_timeout(guard, dur).expect("queue mutex poisoned").0
+}
+
+/// Condvar wait bounded by `dur` (loom build: degrades to `wait`).
+#[cfg(feature = "loom")]
+pub fn wait_timeout<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>, dur: std::time::Duration) -> MutexGuard<'a, T> {
+    let _ = dur;
+    cv.wait(guard).expect("queue mutex poisoned")
+}

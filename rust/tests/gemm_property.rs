@@ -25,9 +25,10 @@ use tbgemm::util::proptest::{check_shrink, gemm_shape, Config};
 use tbgemm::util::Rng;
 
 /// Per-test config: base seed from `TBGEMM_PROP_SEED` when set (CI pins
-/// it), with a per-test offset so the six suites draw distinct cases.
+/// it; parsed once via the central env registry), with a per-test offset
+/// so the six suites draw distinct cases.
 fn cfg(offset: u64, cases: usize) -> Config {
-    let base = std::env::var("TBGEMM_PROP_SEED").ok().and_then(|v| v.parse::<u64>().ok()).unwrap_or(0x00C0_FFEE);
+    let base = tbgemm::util::env::prop_seed().unwrap_or(0x00C0_FFEE);
     Config { cases, base_seed: base.wrapping_add(offset) }
 }
 

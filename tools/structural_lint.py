@@ -1,0 +1,247 @@
+#!/usr/bin/env python3
+"""Structural invariant lint for the Rust crate (`rust/src/**/*.rs`).
+
+The crate's concurrency and unsafe-code story rests on a handful of
+*structural* invariants that the compiler cannot enforce and that code
+review has to re-check on every PR. This lint makes them mechanical.
+Four rules, each scanned over non-test code only (everything from the
+first top-level `#[cfg(test)]` / `#[cfg(all(test, ...))]` line to end of
+file is skipped — test modules sit last by crate convention):
+
+  thread-spawn  `thread::spawn` / `thread::scope` / `thread::Builder`
+                may appear only in util/pool.rs and util/sync.rs (the
+                pool and its std/loom seam). Every other module must
+                parallelize through the pool so that the loom/TSan/Miri
+                lanes, which model and instrument the pool, cover all
+                threading in the crate. Allowlisted: coordinator/server.rs
+                (the one accept-loop thread predating the rule; its spawn
+                is documented at the site).
+
+  env-var       `env::var` may appear only in util/env.rs, the central
+                `TBGEMM_*` registry. Scattered reads defeat the
+                read-once OnceLock caching and make the knob surface
+                undiscoverable.
+
+  safety        Every `unsafe {` block must carry a `// SAFETY:` comment
+                in the contiguous comment/attribute block above it. (The companion
+                compiler-side half of this rule is
+                `#![deny(unsafe_op_in_unsafe_fn)]` +
+                `#![deny(clippy::undocumented_unsafe_blocks)]` in
+                src/lib.rs; this textual check also covers cfg'd-out
+                ISA arms that the host clippy pass never expands.)
+
+  unwrap        `.unwrap()` / `.expect(` are banned in non-test library
+                code, except (a) lock/wait/join poisoning — propagating
+                a poisoned mutex is strictly worse than the panic that
+                poisoned it, and (b) an explicit per-file allowlist
+                below, each entry with its justification.
+
+Output: `path:line: [rule] message` per violation, exit 1 if any.
+Run `--self-test` to verify the lint still catches a seeded violation of
+every rule (CI runs the self-test before the real scan, so a regression
+in this script cannot silently disable a rule).
+"""
+
+import re
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "rust" / "src"
+
+# ---- rule tables -------------------------------------------------------
+
+# thread-spawn: files allowed to touch std/loom threads at all.
+THREAD_ALLOWED = {
+    "util/pool.rs",  # the worker pool itself
+    "util/sync.rs",  # the std/loom spawn seam the pool goes through
+}
+# Pre-existing, documented exceptions (reviewed spawns outside the pool).
+THREAD_ALLOWLIST = {
+    "coordinator/server.rs": "dedicated accept-loop thread; serves the listener, documented at the site",
+}
+
+# env-var: the central registry.
+ENV_ALLOWED = {"util/env.rs"}
+
+# unwrap: per-file allowlist with justifications, printed on violation
+# elsewhere so the error message teaches the policy.
+UNWRAP_ALLOWLIST = {
+    "bench/grid.rs": "bench-only table formatting; panicking on a malformed row is the desired behavior",
+    "bench/ratio.rs": "bench-only harness; measurement cannot proceed past a malformed configuration",
+    "coordinator/server.rs": "listener setup; the server cannot start without a bound socket",
+    "main.rs": "CLI entry point; argument/IO failures should abort with a message",
+    "nn/twin.rs": "construction-time shape invariant established by the same function",
+    "util/pool.rs": "single-task fast path pops the task it just pushed",
+    "util/timer.rs": "monotonic clock arithmetic on durations the same fn produced",
+    "util/sync.rs": "thread spawn failure is unrecoverable at pool construction",
+}
+# Lines where unwrap/expect handles lock poisoning or thread join — the
+# crate-wide convention (see util/pool.rs module docs) is to propagate
+# the originating panic, not to stack a second error path on top.
+UNWRAP_LINE_EXEMPT = re.compile(r"\.lock\(\)|\.wait\(|wait_timeout|\.join\(")
+
+TEST_GATE = re.compile(r"^\s*#\[cfg\((all\()?test\b")
+RE_THREAD = re.compile(r"\bthread::(spawn|scope|Builder)\b")
+RE_ENV = re.compile(r"\benv::var\b")
+RE_UNSAFE_BLOCK = re.compile(r"\bunsafe\s*\{")
+RE_UNSAFE_ALLOW = re.compile(r"#\[allow\(clippy::undocumented_unsafe_blocks\)\]")
+RE_UNWRAP = re.compile(r"\.unwrap\(\)|\.expect\(")
+# A SAFETY justification must sit in the contiguous comment/attribute
+# block directly above the unsafe block (or on the block's own line);
+# `MAX_LOOKBACK` only bounds the upward walk against pathological files.
+MAX_LOOKBACK = 40
+COMMENT_OR_ATTR = re.compile(r"^\s*(//|#\[|#!\[|$)")
+
+
+def strip_comment(line: str) -> str:
+    """Drop a trailing // comment (good enough: the crate has no string
+    literals containing `//` on lines these rules match)."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def non_test_lines(text: str):
+    """Yield (1-based line number, raw line) up to the first top-level
+    test gate; test modules sit at the bottom of every file."""
+    for i, line in enumerate(text.split("\n"), start=1):
+        if TEST_GATE.match(line):
+            return
+        yield i, line
+
+
+def lint_file(path: Path, rel: str):
+    text = path.read_text()
+    lines = list(non_test_lines(text))
+    violations = []
+
+    for i, raw in lines:
+        line = strip_comment(raw)
+
+        if RE_THREAD.search(line) and rel not in THREAD_ALLOWED:
+            if rel in THREAD_ALLOWLIST:
+                pass  # reviewed exception
+            else:
+                violations.append(
+                    (i, "thread-spawn", "direct thread creation outside util/pool.rs — parallelize through the pool "
+                                        "so the loom/TSan/Miri lanes cover it")
+                )
+
+        if RE_ENV.search(line) and rel not in ENV_ALLOWED:
+            violations.append(
+                (i, "env-var", "environment read outside util/env.rs — add a cached accessor to the central registry")
+            )
+
+        if RE_UNWRAP.search(line) and rel not in UNWRAP_ALLOWLIST and not UNWRAP_LINE_EXEMPT.search(line):
+            hints = "; ".join(f"{k}: {v}" for k, v in sorted(UNWRAP_ALLOWLIST.items()))
+            violations.append(
+                (i, "unwrap", "unwrap/expect in non-test library code — return an error, or handle lock poisoning via "
+                              f"the lock()/wait()/join() exemption (allowlisted files: {hints})")
+            )
+
+    # safety: every unsafe block needs a SAFETY comment either on its
+    # own line or in the contiguous comment/attribute block above it.
+    # Scanned over raw lines because the justification *is* a comment.
+    raw_by_no = dict(lines)
+    for i, raw in lines:
+        code = strip_comment(raw)
+        if not RE_UNSAFE_BLOCK.search(code):
+            continue
+        window = [raw]
+        j = i - 1
+        while j >= 1 and i - j <= MAX_LOOKBACK:
+            above = raw_by_no.get(j, "")
+            if not COMMENT_OR_ATTR.match(above):
+                break
+            window.append(above)
+            j -= 1
+        if not any("SAFETY:" in w for w in window):
+            violations.append(
+                (i, "safety", "unsafe block without a `// SAFETY:` comment in the contiguous "
+                              "comment block above it")
+            )
+
+    return violations
+
+
+def run_scan(src: Path):
+    count = 0
+    for path in sorted(src.rglob("*.rs")):
+        rel = path.relative_to(src).as_posix()
+        for line_no, rule, msg in lint_file(path, rel):
+            print(f"{path.relative_to(REPO)}:{line_no}: [{rule}] {msg}")
+            count += 1
+    return count
+
+
+# ---- self-test ---------------------------------------------------------
+
+SEEDED = {
+    "thread-spawn": 'fn bad() { std::thread::spawn(|| {}); }\n',
+    "env-var": 'fn bad() -> bool { std::env::var("TBGEMM_X").is_ok() }\n',
+    "safety": 'fn bad(p: *const u8) -> u8 { unsafe { *p } }\n',
+    "unwrap": 'fn bad(s: &str) -> i32 { s.parse().unwrap() }\n',
+}
+
+CLEAN = """\
+//! Self-test fixture: every rule satisfied.
+fn spawn_free() {}
+// SAFETY: reads a valid reference reborrowed as a raw pointer.
+fn fine(x: &u8) -> u8 {
+    let p = x as *const u8;
+    // SAFETY: `p` was just created from a live shared reference.
+    unsafe { *p }
+}
+fn poisoning(m: &std::sync::Mutex<i32>) -> i32 {
+    *m.lock().unwrap()
+}
+#[cfg(test)]
+mod tests {
+    fn tests_may_unwrap(s: &str) -> i32 {
+        s.parse().unwrap()
+    }
+}
+"""
+
+
+def self_test() -> int:
+    failures = []
+    with tempfile.TemporaryDirectory() as td:
+        tree = Path(td)
+        # Each seeded violation must be caught...
+        for rule, code in SEEDED.items():
+            f = tree / f"seed_{rule.replace('-', '_')}.rs"
+            f.write_text(code)
+            got = lint_file(f, f.name)
+            if not any(r == rule for _, r, _ in got):
+                failures.append(f"rule `{rule}` missed its seeded violation")
+            f.unlink()
+        # ...and the clean fixture must pass every rule.
+        f = tree / "clean.rs"
+        f.write_text(CLEAN)
+        got = lint_file(f, f.name)
+        if got:
+            failures.append(f"clean fixture flagged: {got}")
+
+    if failures:
+        for msg in failures:
+            print(f"self-test FAILED: {msg}", file=sys.stderr)
+        return 1
+    print(f"self-test OK: {len(SEEDED)} seeded violations caught, clean fixture passes")
+    return 0
+
+
+def main() -> int:
+    if "--self-test" in sys.argv[1:]:
+        return self_test()
+    count = run_scan(SRC)
+    if count:
+        print(f"\nstructural lint: {count} violation(s)", file=sys.stderr)
+        return 1
+    print("structural lint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
