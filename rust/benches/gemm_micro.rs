@@ -151,6 +151,18 @@ fn main() {
         })
         .mean;
         report(label, "tiled_mt", t, t_rd, cores);
+        // Autotuned rung: whatever `tune::resolve` picks for this shape
+        // (the tuning file when TBGEMM_TUNE_FILE is set, the cost model
+        // otherwise). Laid next to the hand-picked rungs above, this is
+        // the tuner-regression signal: "tuned" should track the best of
+        // them.
+        let tuned = GemmPlan::new(GemmConfig::tuned(kind), Weights::I8(b)).expect("bench plan");
+        let t = bench_loop(0.4, 50, || {
+            tuned.run(Lhs::I8(a), &mut out, &mut scratch).expect("gemm");
+        })
+        .mean;
+        let resolved = tbgemm::tune::resolve(kind, (m, n, k));
+        report(label, "tuned", t, t_rd, resolved.threading.worker_count(m));
     }
 
     // --- aarch64 only: explicit NEON vcnt rungs -------------------------

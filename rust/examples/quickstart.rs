@@ -13,6 +13,13 @@
 //! check backend agreement end-to-end, and serve the same plan through
 //! the batching coordinator's replica pool.
 //!
+//! Part 3 — the **autotuned path** (`tbgemm::tune`): rank the legal
+//! execution configs for a shape with the cost model, refine the top of
+//! the ranking with real timed runs, persist the winner to a tuning
+//! file, and run `GemmConfig::tuned` / `NetPlanConfig::with_tuning`
+//! plans that resolve their knobs from it — bit-identical results,
+//! measured config.
+//!
 //! This example lives inside the `rust/` cargo package and is compiled
 //! and executed by CI (`cargo run --release --example quickstart`).
 
@@ -22,6 +29,7 @@ use tbgemm::coordinator::{BatcherConfig, InferenceServer, NativeEngine, ServerCo
 use tbgemm::gemm::{Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
 use tbgemm::nn::builder::{plan_from_config, NetConfig};
 use tbgemm::nn::{NetOut, NetPlanConfig};
+use tbgemm::tune::{self, measure};
 use tbgemm::util::mat::MatI8;
 use tbgemm::util::Rng;
 use std::time::Duration;
@@ -122,8 +130,50 @@ fn main() {
         metrics.replica_requests
     );
 
+    // ---- part 3: the autotuned path ----------------------------------
+    // Rank the legal execution configs for the part-1 TNN shape with the
+    // cost model, refine the top of the ranking with real timed runs,
+    // persist the winner, and point this process at the file — exactly
+    // what `repro tune` does for the whole bench sweep.
+    let shape = (m, n, k);
+    let workers = tbgemm::util::pool::default_workers();
+    let cands = tune::candidates(Kind::Tnn, shape, workers);
+    let ranked = tune::rank_predicted(Kind::Tnn, shape, &cands);
+    let top: Vec<_> = ranked.iter().map(|(c, _)| *c).collect();
+    let timed = measure::refine(Kind::Tnn, shape, &top, measure::Budget::fast(), 7).expect("refine");
+    let (winner, ns) = timed[0];
+    let mut store = tune::TuningStore::empty();
+    store.record(Kind::Tnn, shape, winner, ns, ranked[0].1.total());
+    let path = std::env::temp_dir().join("tbgemm_quickstart_tune.json");
+    store.save(&path).expect("write tuning file");
+    // Must happen before the first tuned resolution — the process loads
+    // the store exactly once.
+    std::env::set_var("TBGEMM_TUNE_FILE", &path);
+    println!("tuned TNN {shape:?}: {} ({ns:.0} ns/run) → {}", winner.label(), path.display());
+
+    // A tuned plan resolves its knobs from that file at run time and
+    // stays bit-identical to the reference oracle.
+    let tuned = GemmPlan::new(GemmConfig::tuned(Kind::Tnn), Weights::I8(&b)).expect("plan");
+    let tuned_oracle = GemmPlan::new(GemmConfig::reference(Kind::Tnn), Weights::I8(&b)).expect("plan");
+    let (mut got, mut want) = (GemmOut::new_i32(), GemmOut::new_i32());
+    let mut gemm_scratch = GemmScratch::new();
+    tuned.run(Lhs::I8(&a), &mut got, &mut gemm_scratch).expect("run");
+    tuned_oracle.run(Lhs::I8(&a), &mut want, &mut gemm_scratch).expect("run");
+    assert_eq!(got.as_i32().expect("i32 out").data, want.as_i32().expect("i32 out").data);
+    println!("GemmConfig::tuned(TNN) ≡ reference ✓");
+
+    // The same toggle one boundary up: every GEMM layer of the network
+    // resolves its config through the tuner, logits unchanged.
+    let tuned_net =
+        plan_from_config(&cfg, 0xCAFE, NetPlanConfig::default().with_tuning(true)).expect("plan");
+    let mut tuned_scratch = tuned_net.make_scratch();
+    tuned_net.run(&images[0], &mut out, &mut tuned_scratch).expect("run");
+    assert_eq!(out.logits, oracle_out.logits);
+    println!("NetPlan with_tuning(true) ≡ reference logits ✓");
+
     println!("\nBoth plan/execute boundaries verified. Next steps:");
     println!("  repro table2                      # regenerate the paper's Table II");
     println!("  repro table3 --smoke              # a quick Table III run");
+    println!("  repro tune --fast                 # autotune + persist kernel selection");
     println!("  repro serve --requests 256 --replicas 4");
 }

@@ -8,19 +8,9 @@
 
 use crate::bench::grid::GridPoint;
 use crate::bench::grid::GridTimes;
+use crate::costmodel::predict::epilogue_cost;
 use crate::costmodel::table2::{generate, Table2Row};
 use crate::costmodel::CostModel;
-use crate::gemm::Kind;
-
-/// Per-kind epilogue cost (cycles per output element) fed to the model:
-/// the quantized kinds pay the eq. (3) zero-point compensation.
-fn epilogue_cost(model: &CostModel, kind: Kind) -> f64 {
-    match kind {
-        Kind::U8 | Kind::U4 => model.epilogue_u8,
-        Kind::Bnn | Kind::DaBnn => 1.0, // k − 2s fixup
-        _ => 0.5,
-    }
-}
 
 /// Predict grid "times" (cycles, consistent across kinds so ratios are
 /// meaningful) for every algorithm.
@@ -46,6 +36,7 @@ mod tests {
     use super::*;
     use crate::bench::grid::paper_grid;
     use crate::bench::ratio::ratio_matrix;
+    use crate::gemm::Kind;
 
     #[test]
     fn predicted_ordering_matches_paper() {

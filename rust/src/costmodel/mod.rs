@@ -24,6 +24,7 @@
 //! * Loads go through the separate load/store pipe and overlap with
 //!   compute: per iteration, `cycles = max(compute, loads)`.
 
+pub mod predict;
 pub mod table2;
 
 use crate::simd::trace::Trace;

@@ -1,0 +1,304 @@
+//! The reusable cost-predictor core of the autotuner: per-kind
+//! steady-state microkernel traces (measured once, cached) and
+//! [`predict`] — predicted Cortex-A73 cycles for a full `(M, N, K)`
+//! multiplication under a concrete [`GemmConfig`].
+//!
+//! This is the refactored heart of what `costmodel/table2.rs` used to do
+//! only for rendering: [`crate::costmodel::table2`] now renders the
+//! paper-comparison table *from this module's traces*, while
+//! [`crate::tune`] ranks candidate execution configs with [`predict`]
+//! and [`crate::bench::predicted`] reconstructs the paper's Table III
+//! ratios from the same numbers — one measurement, three consumers.
+//!
+//! The per-iteration model is [`CostModel`] (see the module docs there);
+//! this module extends it with the *execution-config* terms the render
+//! path never needed:
+//!
+//! * **tile** — the row-dot baseline pays a load/reuse penalty over the
+//!   register-tiled default; the widened BNN 4×4 / TNN 2×4 tiles
+//!   amortize loads across columns (shallow-K only, mirroring the
+//!   kernel dispatch's fallback).
+//! * **k_panel** — panels beyond the first pay a spill pass (read + add
+//!   + write of the 32-bit partials) per output element.
+//! * **threading** — the kernel term divides across the resolved worker
+//!   count; A-packing and the epilogue stay serial, and each dispatched
+//!   band pays a fixed pool-dispatch overhead.
+
+use crate::costmodel::CostModel;
+use crate::gemm::micro;
+use crate::gemm::pack;
+use crate::gemm::plan::{GemmConfig, Tile};
+use crate::gemm::{safe_k, KPanel, Kind};
+use crate::simd::reg::Neon;
+use crate::simd::trace::Trace;
+use crate::util::mat::{MatF32, MatI8, MatU8};
+use crate::util::Rng;
+use std::sync::OnceLock;
+
+/// Row-dot kernels recompute column loads per output instead of reusing
+/// a register tile; calibrated against the `rowdot` vs `tiled` rungs of
+/// `benches/gemm_micro.rs`.
+const ROWDOT_KERNEL_FACTOR: f64 = 1.7;
+/// The widened tiles feed each loaded word to 4 columns instead of 2.
+const WIDE_KERNEL_FACTOR: f64 = 0.9;
+/// Fixed pool-dispatch cost per worker per multiplication (the
+/// `small_pool4` vs `small_single` gap, in cycles).
+const DISPATCH_CYCLES_PER_WORKER: f64 = 4000.0;
+/// One spill pass (read + widening add + write of a 32-bit partial) per
+/// output element per K panel beyond the first.
+const SPILL_CYCLES_PER_OUTPUT: f64 = 2.0;
+
+/// The paper's Table II reference values `(COM, LD, MOV, INS)`.
+pub fn paper_reference(kind: Kind) -> (u64, u64, u64, f64) {
+    match kind {
+        Kind::F32 => (24, 5, 0, 0.302),
+        Kind::U8 => (48, 5, 5, 0.302),
+        Kind::U4 => (48, 5, 16, 0.180),
+        Kind::Tnn => (96, 3, 64, 0.159),
+        Kind::Tbn => (96, 3, 56, 0.151),
+        Kind::Bnn => (32, 2, 8, 0.041),
+        Kind::DaBnn => (156, 12, 36, 0.033),
+    }
+}
+
+/// Measure the steady-state per-iteration trace of `kind`'s emulated
+/// microkernel (two iterations minus one, isolating loop-body cost from
+/// hoisted constants). Deterministic: fixed seed, fixed shapes.
+fn measure_steady_state(kind: Kind) -> Trace {
+    let mut rng = Rng::new(0x7AB1E2);
+    let (m, _n, kstep) = kind.micro_shape();
+    let k1 = kstep;
+    let k2 = 2 * kstep;
+    let run = |k: usize| -> Trace {
+        let mut cpu = Neon::new();
+        match kind {
+            Kind::Bnn => {
+                let a = MatI8::random_binary(m, k, &mut rng.clone());
+                let b = MatI8::random_binary(k, 8, &mut rng.clone());
+                let pa = pack::pack_a_bnn(&a, 0, k);
+                let pb = pack::pack_b_bnn(&b, 0, k);
+                micro::bnn_microkernel(&mut cpu, &pa, &pb, k / 8);
+            }
+            Kind::Tnn => {
+                let a = MatI8::random_ternary(m, k, &mut rng.clone());
+                let b = MatI8::random_ternary(k, 8, &mut rng.clone());
+                let pa = pack::pack_a_tnn(&a, 0, k);
+                let pb = pack::pack_b_tnn(&b, 0, k);
+                micro::tnn_microkernel(&mut cpu, &pa, &pb, k / 8);
+            }
+            Kind::Tbn => {
+                let a = MatI8::random_ternary(m, k, &mut rng.clone());
+                let b = MatI8::random_binary(k, 8, &mut rng.clone());
+                let pa = pack::pack_a_tnn(&a, 0, k);
+                let pb = pack::pack_b_bnn(&b, 0, k);
+                micro::tbn_microkernel(&mut cpu, &pa, &pb, k / 8);
+            }
+            Kind::F32 => {
+                let a = MatF32::random(m, k, &mut rng.clone());
+                let b = MatF32::random(k, 8, &mut rng.clone());
+                let pa = pack::pack_a_f32(&a, 0, k);
+                let pb = pack::pack_b_f32(&b, 0, k);
+                micro::f32_microkernel(&mut cpu, &pa, &pb, k);
+            }
+            Kind::U8 => {
+                let a = MatU8::random(m, k, &mut rng.clone());
+                let b = MatU8::random(k, 8, &mut rng.clone());
+                let pa = pack::pack_a_u8(&a, 0, k);
+                let pb = pack::pack_b_u8(&b, 0, k);
+                micro::u8_microkernel(&mut cpu, &pa, &pb, k / 2);
+            }
+            Kind::U4 => {
+                let a = MatU8::random_below(m, k, 15, &mut rng.clone());
+                let b = MatU8::random_below(k, 8, 15, &mut rng.clone());
+                let pa = pack::pack_a_u4(&a, 0, k);
+                let pb = pack::pack_b_u4(&b, 0, k);
+                micro::u4_microkernel(&mut cpu, &pa, &pb, k / 2);
+            }
+            Kind::DaBnn => {
+                let a = MatI8::random_binary(m, k, &mut rng.clone());
+                let b = MatI8::random_binary(k, 6, &mut rng.clone());
+                let pa = pack::pack_a_dabnn(&a, 0, k);
+                let pb = pack::pack_b_dabnn(&b, 0, k);
+                micro::dabnn_microkernel(&mut cpu, &pa, &pb, k / 128);
+            }
+        }
+        cpu.trace
+    };
+    let t1 = run(k1);
+    let t2 = run(k2);
+    t2.delta(&t1)
+}
+
+/// All seven steady-state traces, measured once per process. The
+/// emulated microkernels are deterministic, so caching is observationally
+/// identical to remeasuring — just ~1000× cheaper for the tuner, which
+/// calls [`predict`] per candidate per shape.
+fn traces() -> &'static [(Kind, Trace)] {
+    static TRACES: OnceLock<Vec<(Kind, Trace)>> = OnceLock::new();
+    TRACES.get_or_init(|| Kind::ALL.iter().map(|&k| (k, measure_steady_state(k))).collect())
+}
+
+/// The cached steady-state trace for `kind`.
+pub fn kind_trace(kind: Kind) -> &'static Trace {
+    let all = traces();
+    match all.iter().find(|(k, _)| *k == kind) {
+        Some((_, t)) => t,
+        // Kind::ALL enumerates every variant, so the lookup always
+        // succeeds; fall back to the first entry to stay total.
+        None => &all[0].1,
+    }
+}
+
+/// Per-kind epilogue cost (cycles per output element) fed to the model:
+/// the quantized kinds pay the eq. (3) zero-point compensation, the
+/// binary kinds the `k − 2s` fixup.
+pub fn epilogue_cost(model: &CostModel, kind: Kind) -> f64 {
+    match kind {
+        Kind::U8 | Kind::U4 => model.epilogue_u8,
+        Kind::Bnn | Kind::DaBnn => 1.0,
+        _ => 0.5,
+    }
+}
+
+/// Predicted cost of one `(M, N, K)` multiplication, broken into the
+/// terms the execution config moves. Compare candidates by [`total`]
+/// (f64 — use `total().total_cmp(..)` for ordering).
+///
+/// [`total`]: Cost::total
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cost {
+    /// Microkernel cycles, already divided across the resolved workers.
+    pub kernel: f64,
+    /// Per-multiplication A-packing (serial, on the caller).
+    pub packing: f64,
+    /// Per-output epilogue (zero-point compensation / fixup).
+    pub epilogue: f64,
+    /// Inter-panel 32-bit spill passes beyond the first panel.
+    pub spill: f64,
+    /// Fixed pool-dispatch overhead for the resolved worker count.
+    pub dispatch: f64,
+}
+
+impl Cost {
+    /// Total predicted cycles.
+    pub fn total(&self) -> f64 {
+        self.kernel + self.packing + self.epilogue + self.spill + self.dispatch
+    }
+}
+
+/// The tile the native dispatch would actually execute for this config:
+/// row-dot exists for the three paper kinds, the widened tiles for
+/// shallow-K BNN/TNN; everything else falls back to the default tile.
+/// `Tile::Tuned` is a *resolution request*, not a kernel — model it as
+/// the default.
+fn effective_tile(kind: Kind, k: usize, tile: Tile) -> Tile {
+    match (kind, tile) {
+        (Kind::Bnn | Kind::Tnn | Kind::Tbn, Tile::Rowdot) => Tile::Rowdot,
+        (Kind::Bnn | Kind::Tnn, Tile::Wide) if k <= safe_k(kind) => Tile::Wide,
+        _ => Tile::Auto,
+    }
+}
+
+/// Number of K panels the depth blocking resolves to (mirrors
+/// `KPanel::{words,elems}` at the granularity the cost model needs).
+fn panel_count(kind: Kind, k: usize, k_panel: KPanel) -> usize {
+    let bound = safe_k(kind);
+    match k_panel {
+        KPanel::Auto => k.div_ceil(bound.max(1)).max(1),
+        KPanel::Depth(d) if d >= k && k <= bound => 1,
+        KPanel::Depth(d) => k.div_ceil(d.clamp(1, bound)).max(1),
+    }
+}
+
+/// Predicted cycles for multiplying an `M×K` LHS by the packed `K×N`
+/// weights of `kind` under `config` (native-path model; the backend
+/// field of `config` is ignored). Deterministic for a fixed process
+/// environment — candidate rankings built on it are reproducible.
+pub fn predict(kind: Kind, shape: (usize, usize, usize), config: &GemmConfig) -> Cost {
+    let model = CostModel::cortex_a73();
+    let trace = kind_trace(kind);
+    let (m, n, k) = shape;
+    let (mk, nk, kk) = kind.micro_shape();
+    let tiles_m = m.div_ceil(mk).max(1);
+    let tiles_n = n.div_ceil(nk).max(1);
+    let iters = k.div_ceil(kk).max(1);
+    let mut kernel = model.cycles_per_iteration(trace) * (tiles_m * tiles_n * iters) as f64;
+    let tile = effective_tile(kind, k, config.tile);
+    match tile {
+        Tile::Rowdot => kernel *= ROWDOT_KERNEL_FACTOR,
+        Tile::Wide => kernel *= WIDE_KERNEL_FACTOR,
+        _ => {}
+    }
+    // U4 is single-threaded by construction and row-dot ignores the
+    // threading cap — mirror the dispatch.
+    let workers = if kind == Kind::U4 || tile == Tile::Rowdot { 1 } else { config.threading.worker_count(m) };
+    let dispatch = if workers > 1 { DISPATCH_CYCLES_PER_WORKER * workers as f64 } else { 0.0 };
+    kernel /= workers as f64;
+    let panels = panel_count(kind, k, config.k_panel);
+    let spill = SPILL_CYCLES_PER_OUTPUT * (panels - 1) as f64 * (m * n) as f64;
+    let packing = model.pack_per_elem * (tiles_m * mk) as f64 * k as f64;
+    let epilogue = epilogue_cost(&model, kind) * (m * n) as f64;
+    Cost { kernel, packing, epilogue, spill, dispatch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Threading;
+
+    #[test]
+    fn traces_cover_all_kinds_and_are_cached() {
+        for kind in Kind::ALL {
+            let t1 = kind_trace(kind);
+            let t2 = kind_trace(kind);
+            assert!(std::ptr::eq(t1, t2), "{kind:?} trace must be cached");
+            assert!(t1.com > 0, "{kind:?} trace must be non-empty");
+        }
+    }
+
+    #[test]
+    fn predict_is_deterministic_and_positive() {
+        let cfg = GemmConfig::native(Kind::Tnn);
+        let a = predict(Kind::Tnn, (120, 48, 256), &cfg);
+        let b = predict(Kind::Tnn, (120, 48, 256), &cfg);
+        assert_eq!(a, b);
+        assert!(a.total() > 0.0);
+    }
+
+    #[test]
+    fn threading_cuts_the_kernel_term_but_adds_dispatch() {
+        let single = predict(Kind::Bnn, (256, 256, 2048), &GemmConfig::native(Kind::Bnn));
+        let four = predict(
+            Kind::Bnn,
+            (256, 256, 2048),
+            &GemmConfig::native(Kind::Bnn).with_threading(Threading::Fixed(4)),
+        );
+        assert!(four.kernel < single.kernel / 3.0);
+        assert!(four.dispatch > 0.0 && single.dispatch == 0.0);
+    }
+
+    #[test]
+    fn rowdot_is_never_predicted_faster_than_tiled() {
+        for kind in [Kind::Bnn, Kind::Tnn, Kind::Tbn] {
+            let tiled = predict(kind, (128, 128, 1024), &GemmConfig::native(kind));
+            let rowdot = predict(kind, (128, 128, 1024), &GemmConfig::native(kind).with_tile(Tile::Rowdot));
+            assert!(rowdot.total() > tiled.total(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn forced_panels_cost_spill() {
+        let auto = predict(Kind::Bnn, (128, 128, 8192), &GemmConfig::native(Kind::Bnn));
+        let forced =
+            predict(Kind::Bnn, (128, 128, 8192), &GemmConfig::native(Kind::Bnn).with_k_panel(KPanel::Depth(1024)));
+        assert_eq!(auto.spill, 0.0, "8192 fits one 16-bit-safe panel");
+        assert!(forced.spill > 0.0);
+    }
+
+    #[test]
+    fn deep_k_splits_panels_automatically() {
+        // Past the 16-bit bound Auto must split — and the model must see it.
+        let deep = predict(Kind::Bnn, (64, 64, 40000), &GemmConfig::native(Kind::Bnn));
+        assert!(deep.spill > 0.0);
+    }
+}

@@ -1,15 +1,17 @@
-//! Regeneration of the paper's Table II: execute one steady-state
-//! iteration of every emulated microkernel, count instructions by class,
-//! and derive INS and k_max. The paper's reported values are carried
-//! alongside for comparison (`repro table2` prints both).
+//! Regeneration of the paper's Table II from the shared predictor core
+//! ([`crate::costmodel::predict`]): the steady-state traces are measured
+//! (and cached) there — this module only derives the per-row INS/k_max
+//! columns and renders ours-vs-paper text for `repro table2`. The
+//! autotuner ([`crate::tune`]) ranks execution configs from the same
+//! traces, so the table and the scheduler can never drift apart.
 
-use crate::gemm::micro;
-use crate::gemm::pack;
+use crate::costmodel::predict;
 use crate::gemm::Kind;
-use crate::simd::reg::Neon;
 use crate::simd::trace::Trace;
-use crate::util::mat::{MatF32, MatI8, MatU8};
-use crate::util::Rng;
+
+// Kept at this path for existing consumers (`tests/table2_counts.rs`,
+// `bench/predicted.rs`); the values now live beside the predictor.
+pub use crate::costmodel::predict::paper_reference;
 
 /// One row of the regenerated Table II.
 #[derive(Clone, Debug)]
@@ -27,85 +29,14 @@ pub struct Table2Row {
     pub trace: Trace,
 }
 
-/// The paper's Table II reference values.
-pub fn paper_reference(kind: Kind) -> (u64, u64, u64, f64) {
-    match kind {
-        Kind::F32 => (24, 5, 0, 0.302),
-        Kind::U8 => (48, 5, 5, 0.302),
-        Kind::U4 => (48, 5, 16, 0.180),
-        Kind::Tnn => (96, 3, 64, 0.159),
-        Kind::Tbn => (96, 3, 56, 0.151),
-        Kind::Bnn => (32, 2, 8, 0.041),
-        Kind::DaBnn => (156, 12, 36, 0.033),
-    }
-}
-
 /// Measure the steady-state per-iteration trace of `kind`'s microkernel
 /// (two iterations minus one, isolating loop-body cost from hoisted
-/// constants).
+/// constants). The measurement itself lives in
+/// [`predict::kind_trace`] and is cached per process; the emulated
+/// microkernels are deterministic, so this returns the same trace a
+/// fresh measurement would.
 pub fn steady_state_trace(kind: Kind) -> Trace {
-    let mut rng = Rng::new(0x7AB1E2);
-    let (m, _n, kstep) = kind.micro_shape();
-    let k1 = kstep;
-    let k2 = 2 * kstep;
-    let run = |k: usize| -> Trace {
-        let mut cpu = Neon::new();
-        match kind {
-            Kind::Bnn => {
-                let a = MatI8::random_binary(m, k, &mut rng.clone());
-                let b = MatI8::random_binary(k, 8, &mut rng.clone());
-                let pa = pack::pack_a_bnn(&a, 0, k);
-                let pb = pack::pack_b_bnn(&b, 0, k);
-                micro::bnn_microkernel(&mut cpu, &pa, &pb, k / 8);
-            }
-            Kind::Tnn => {
-                let a = MatI8::random_ternary(m, k, &mut rng.clone());
-                let b = MatI8::random_ternary(k, 8, &mut rng.clone());
-                let pa = pack::pack_a_tnn(&a, 0, k);
-                let pb = pack::pack_b_tnn(&b, 0, k);
-                micro::tnn_microkernel(&mut cpu, &pa, &pb, k / 8);
-            }
-            Kind::Tbn => {
-                let a = MatI8::random_ternary(m, k, &mut rng.clone());
-                let b = MatI8::random_binary(k, 8, &mut rng.clone());
-                let pa = pack::pack_a_tnn(&a, 0, k);
-                let pb = pack::pack_b_bnn(&b, 0, k);
-                micro::tbn_microkernel(&mut cpu, &pa, &pb, k / 8);
-            }
-            Kind::F32 => {
-                let a = MatF32::random(m, k, &mut rng.clone());
-                let b = MatF32::random(k, 8, &mut rng.clone());
-                let pa = pack::pack_a_f32(&a, 0, k);
-                let pb = pack::pack_b_f32(&b, 0, k);
-                micro::f32_microkernel(&mut cpu, &pa, &pb, k);
-            }
-            Kind::U8 => {
-                let a = MatU8::random(m, k, &mut rng.clone());
-                let b = MatU8::random(k, 8, &mut rng.clone());
-                let pa = pack::pack_a_u8(&a, 0, k);
-                let pb = pack::pack_b_u8(&b, 0, k);
-                micro::u8_microkernel(&mut cpu, &pa, &pb, k / 2);
-            }
-            Kind::U4 => {
-                let a = MatU8::random_below(m, k, 15, &mut rng.clone());
-                let b = MatU8::random_below(k, 8, 15, &mut rng.clone());
-                let pa = pack::pack_a_u4(&a, 0, k);
-                let pb = pack::pack_b_u4(&b, 0, k);
-                micro::u4_microkernel(&mut cpu, &pa, &pb, k / 2);
-            }
-            Kind::DaBnn => {
-                let a = MatI8::random_binary(m, k, &mut rng.clone());
-                let b = MatI8::random_binary(k, 6, &mut rng.clone());
-                let pa = pack::pack_a_dabnn(&a, 0, k);
-                let pb = pack::pack_b_dabnn(&b, 0, k);
-                micro::dabnn_microkernel(&mut cpu, &pa, &pb, k / 128);
-            }
-        }
-        cpu.trace
-    };
-    let t1 = run(k1);
-    let t2 = run(k2);
-    t2.delta(&t1)
+    predict::kind_trace(kind).clone()
 }
 
 /// Regenerate all rows of Table II.

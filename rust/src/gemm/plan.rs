@@ -93,6 +93,12 @@ pub enum Tile {
     /// plane pair feeds 4 columns). Shallow-K only; deep-K products and
     /// the other kinds fall back to [`Tile::Auto`].
     Wide,
+    /// Autotuned: [`GemmPlan::run`] resolves the full execution config
+    /// (tile, K panels, threading cap) per `(kind, M, N, K)` through
+    /// [`crate::tune::resolve`] — the persisted tuning store when
+    /// `TBGEMM_TUNE_FILE` names one, the cost-model ranking otherwise.
+    /// Native backend only; the other backends treat it as [`Tile::Auto`].
+    Tuned,
 }
 
 /// Everything that selects *how* a plan multiplies. Packing depends only
@@ -138,6 +144,13 @@ impl GemmConfig {
     /// Shorthand for [`Backend::Reference`].
     pub fn reference(kind: Kind) -> Self {
         Self::new(kind, Backend::Reference)
+    }
+
+    /// An autotuned native config: every run resolves tile / K panels /
+    /// threading per shape via [`crate::tune::resolve`] (see
+    /// [`Tile::Tuned`]).
+    pub fn tuned(kind: Kind) -> Self {
+        Self::native(kind).with_tile(Tile::Tuned)
     }
 
     pub fn with_threading(mut self, threading: Threading) -> Self {
@@ -566,51 +579,54 @@ impl GemmPlan {
                 c.data.resize(m * self.n, 0.0);
             }
         }
+        // `Tile::Tuned` is a resolution request, not a kernel: look up
+        // the full execution config for this shape (tuning store, then
+        // cost-model ranking) and run that. `NetPlan::build` resolves at
+        // build time instead, where the per-layer shapes are static.
+        let (tile, threading, k_panel) = if self.config.tile == Tile::Tuned && self.config.backend == Backend::Native
+        {
+            let choice = crate::tune::resolve(kind, (m, self.n, self.k));
+            (choice.tile, choice.threading, choice.k_panel)
+        } else {
+            (self.config.tile, self.config.threading, self.config.k_panel)
+        };
         match (&self.packed, lhs, &mut *out) {
             // ---- native backend --------------------------------------
             (Packed::Bits(bt), Lhs::I8(a), GemmOut::I32(c)) if kind == Kind::Bnn => {
                 debug_assert!(a.is_binary());
                 scratch.bits.repack_binary(a);
-                match self.config.tile {
+                match tile {
                     Tile::Rowdot => bnn_gemm_rowdot(&scratch.bits, bt, c),
-                    Tile::Wide => {
-                        bnn_gemm_wide_mt(&scratch.bits, bt, c, self.config.threading, self.config.k_panel)
-                    }
-                    Tile::Auto => {
-                        bnn_gemm_kp_mt(&scratch.bits, bt, c, self.config.threading, self.config.k_panel)
-                    }
+                    Tile::Wide => bnn_gemm_wide_mt(&scratch.bits, bt, c, threading, k_panel),
+                    _ => bnn_gemm_kp_mt(&scratch.bits, bt, c, threading, k_panel),
                 }
             }
             (Packed::Planes(bt), Lhs::I8(a), GemmOut::I32(c)) => {
                 debug_assert!(a.is_ternary());
                 scratch.planes.repack_ternary(a);
-                match self.config.tile {
+                match tile {
                     Tile::Rowdot => tnn_gemm_rowdot(&scratch.planes, bt, c),
-                    Tile::Wide => {
-                        tnn_gemm_wide_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel)
-                    }
-                    Tile::Auto => {
-                        tnn_gemm_kp_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel)
-                    }
+                    Tile::Wide => tnn_gemm_wide_mt(&scratch.planes, bt, c, threading, k_panel),
+                    _ => tnn_gemm_kp_mt(&scratch.planes, bt, c, threading, k_panel),
                 }
             }
             (Packed::Bits(bt), Lhs::I8(a), GemmOut::I32(c)) => {
                 // Tbn: ternary activations against binary bit-columns.
                 debug_assert!(a.is_ternary());
                 scratch.planes.repack_ternary(a);
-                match self.config.tile {
+                match tile {
                     Tile::Rowdot => tbn_gemm_rowdot(&scratch.planes, bt, c),
-                    _ => tbn_gemm_kp_mt(&scratch.planes, bt, c, self.config.threading, self.config.k_panel),
+                    _ => tbn_gemm_kp_mt(&scratch.planes, bt, c, threading, k_panel),
                 }
             }
             (Packed::Bits(bt), Lhs::I8(a), GemmOut::F32(c)) => {
                 // DaBnn (the only f32-output bit kind).
                 debug_assert!(a.is_binary());
                 scratch.bits.repack_binary(a);
-                dabnn_gemm_kp_mt(&scratch.bits, bt, c, self.config.threading, self.config.k_panel);
+                dabnn_gemm_kp_mt(&scratch.bits, bt, c, threading, k_panel);
             }
             (Packed::PanelsF32(panels), Lhs::F32(a), GemmOut::F32(c)) => {
-                f32_gemm_kp_mt(a, panels, self.n, c, self.config.threading, self.config.k_panel);
+                f32_gemm_kp_mt(a, panels, self.n, c, threading, k_panel);
             }
             (Packed::PanelsU8 { panels, col_sums, za, zb }, Lhs::U8(a), GemmOut::I32(c)) => {
                 if kind == Kind::U4 {
@@ -620,17 +636,7 @@ impl GemmPlan {
                     debug_assert!(a.data.iter().all(|&v| v < 16));
                     u4_gemm(a, panels, self.n, *za, *zb, col_sums, c);
                 } else {
-                    u8_gemm_kp_mt(
-                        a,
-                        panels,
-                        self.n,
-                        *za,
-                        *zb,
-                        col_sums,
-                        c,
-                        self.config.threading,
-                        self.config.k_panel,
-                    );
+                    u8_gemm_kp_mt(a, panels, self.n, *za, *zb, col_sums, c, threading, k_panel);
                 }
             }
             // ---- emulated backend ------------------------------------

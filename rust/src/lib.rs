@@ -76,4 +76,5 @@ pub mod quant;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod simd;
+pub mod tune;
 pub mod util;

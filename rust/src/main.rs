@@ -20,6 +20,10 @@
 //!                `--rps` for `--duration` seconds (`--ramp` sweeps a
 //!                multiplier grid to expose the throughput/p99 knee);
 //!                emits `BENCH_overload.json`.
+//! * `tune`     — autotune the native GEMM configs over the bench shapes
+//!                and persist the winners (`--fast` for the CI-sized
+//!                budget, `--out PATH` to pick the file; defaults to
+//!                `TBGEMM_TUNE_FILE` or `tbgemm_tune.json`).
 //! * `xla <artifact>` — load an AOT artifact and execute it.
 
 use tbgemm::bench::{grid, predicted, ratio};
@@ -38,6 +42,7 @@ use tbgemm::quant::overflow;
 #[cfg(feature = "xla")]
 use tbgemm::runtime::XlaRuntime;
 use tbgemm::simd::reg::Neon;
+use tbgemm::tune::{self, measure};
 use tbgemm::util::Rng;
 
 fn main() {
@@ -81,6 +86,7 @@ fn main() {
             budget_ms: opt("--budget-ms").and_then(|s| s.parse().ok()),
             delay_us: opt("--delay-us").and_then(|s| s.parse().ok()).unwrap_or(0),
         }),
+        "tune" => cmd_tune(flag("--fast"), opt("--out")),
         #[cfg(feature = "xla")]
         "xla" => cmd_xla(args.get(1).map(String::as_str).unwrap_or("artifacts/model.hlo.txt")),
         #[cfg(not(feature = "xla"))]
@@ -95,9 +101,11 @@ fn main() {
         _ => {
             println!("repro — 'Fast matrix multiplication for binary and ternary CNNs' reproduction");
             println!(
-                "usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|bench-serve|xla> [flags]"
+                "usage: repro <table1|table2|table3|headline|limits|explain|infer|serve|bench-serve|tune|xla> \
+                 [flags]"
             );
             println!("  table3 flags: --predicted --smoke --reps N --inner N");
+            println!("  tune flags:   --fast --out PATH");
             println!("  infer flags:  --kind tnn|tbn|bnn --images N");
             println!("  serve flags:  --requests N --batch N --threads auto|N --replicas N");
             println!(
@@ -134,6 +142,87 @@ fn cmd_table1() {
 fn cmd_table2() {
     let rows = table2::generate();
     print!("{}", table2::render(&rows));
+}
+
+/// The (kind, shape) points `repro tune` sweeps: every kind at the small
+/// bench shape, plus the deep/threaded shapes where the config choice
+/// actually matters. `--fast` keeps only the small shapes so the CI
+/// smoke finishes in seconds.
+fn tune_sweep(fast: bool) -> Vec<(Kind, (usize, usize, usize))> {
+    let mut points: Vec<(Kind, (usize, usize, usize))> =
+        Kind::ALL.iter().map(|&k| (k, (120, 48, 256))).collect();
+    points.push((Kind::Bnn, (32, 32, 256)));
+    if !fast {
+        for kind in [Kind::Bnn, Kind::Tnn, Kind::Tbn] {
+            points.push((kind, (256, 256, 2048)));
+        }
+        for kind in [Kind::Bnn, Kind::Tnn] {
+            points.push((kind, (128, 128, 8192)));
+            points.push((kind, (128, 128, 32768)));
+        }
+    }
+    points
+}
+
+/// `repro tune [--fast] [--out PATH]` — rank every legal candidate with
+/// the cost model, time the top of the ranking through real plan runs,
+/// record each point's measured winner, write the tuning file, and prove
+/// it round-trips through the loader this host will use.
+fn cmd_tune(fast: bool, out: Option<String>) {
+    let budget = if fast { measure::Budget::fast() } else { measure::Budget::full() };
+    let workers = tbgemm::util::pool::default_workers();
+    let points = tune_sweep(fast);
+    println!(
+        "autotuning {} (kind, shape) points on host {} (top-{} candidates, ≤{} iters or {:.0} ms each)...",
+        points.len(),
+        tune::store::host_fingerprint(),
+        budget.top_k,
+        budget.max_iters,
+        budget.min_time_s * 1e3,
+    );
+    let mut store = tune::TuningStore::empty();
+    for (kind, shape) in points {
+        let cands = tune::candidates(kind, shape, workers);
+        let ranked = tune::rank_predicted(kind, shape, &cands);
+        let top: Vec<tune::Choice> = ranked.iter().map(|(c, _)| *c).collect();
+        let timed = match measure::refine(kind, shape, &top, budget, 0x7AB1E5) {
+            Ok(timed) => timed,
+            Err(e) => {
+                eprintln!("  {} {shape:?}: skipped ({e})", kind.label());
+                continue;
+            }
+        };
+        // `candidates` never returns an empty set, so refine timed ≥ 1.
+        let (winner, ns) = timed[0];
+        let predicted =
+            ranked.iter().find(|(c, _)| *c == winner).map(|(_, cost)| cost.total()).unwrap_or(0.0);
+        println!(
+            "  {:<6} {:>5}x{:<5}x{:<6} -> {:<24} {:>12.0} ns/run  ({} of {} candidates timed)",
+            kind.label(),
+            shape.0,
+            shape.1,
+            shape.2,
+            winner.label(),
+            ns,
+            timed.len(),
+            cands.len(),
+        );
+        store.record(kind, shape, winner, ns, predicted);
+    }
+    let path =
+        out.or_else(tbgemm::util::env::tune_file).unwrap_or_else(|| "tbgemm_tune.json".into());
+    match store.save(&path) {
+        Ok(()) => println!("wrote {path} ({} entries)", store.entries.len()),
+        Err(e) => {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+    // Acceptance check: the file we just wrote must load cleanly through
+    // the exact (parse + version + host) path `resolve` will use.
+    let reloaded = tune::TuningStore::load(&path).expect("the tuning file just written must load");
+    assert_eq!(reloaded, store, "tuning file must round-trip losslessly");
+    println!("round-trip OK: {path} loads on this host; export TBGEMM_TUNE_FILE={path} to use it");
 }
 
 fn cmd_table3(use_predicted: bool, smoke: bool, reps: usize, inner: usize) {

@@ -61,6 +61,12 @@ pub struct NetPlanConfig {
     pub k_panel: KPanel,
     /// Register tile (e.g. the widened BNN 4×4 / TNN 2×4 tiles).
     pub tile: Tile,
+    /// Autotune each GEMM layer: [`NetPlan::build`] resolves the layer's
+    /// execution knobs per shape through [`crate::tune::resolve`] (the
+    /// persisted tuning store, falling back to cost-model ranking),
+    /// overriding the plan-wide `threading` / `k_panel` / `tile` for
+    /// those layers. Native backend only; ignored otherwise.
+    pub tuning: bool,
 }
 
 impl Default for NetPlanConfig {
@@ -70,6 +76,7 @@ impl Default for NetPlanConfig {
             threading: Threading::Single,
             k_panel: KPanel::Auto,
             tile: Tile::Auto,
+            tuning: false,
         }
     }
 }
@@ -92,6 +99,13 @@ impl NetPlanConfig {
 
     pub fn with_tile(mut self, tile: Tile) -> Self {
         self.tile = tile;
+        self
+    }
+
+    /// Enable per-layer autotuned config resolution (see
+    /// [`NetPlanConfig::tuning`]).
+    pub fn with_tuning(mut self, tuning: bool) -> Self {
+        self.tuning = tuning;
         self
     }
 }
@@ -342,6 +356,27 @@ impl NetPlan {
                     ((1, 1, l.weights.cols), Domain::F32)
                 }
             };
+            // With tuning enabled, re-resolve this layer's execution
+            // knobs now that its GEMM shape is known (tuning-store hit,
+            // else cost-model ranking). The backend is already applied
+            // above, so this second configure only moves knobs — it
+            // never repacks.
+            if cfg.tuning && cfg.backend == Backend::Native {
+                let gemm_shape = match &*layer {
+                    Layer::QConv(l) => Some((
+                        l.conv.kind.gemm_kind(),
+                        (out_dims.0 * out_dims.1, l.conv.c_out, l.conv.params.depth(l.conv.c_in)),
+                    )),
+                    Layer::QDense(l) => Some((l.kind.gemm_kind(), (1, l.out_features, l.in_features))),
+                    _ => None,
+                };
+                if let Some((kind, shape)) = gemm_shape {
+                    let choice = crate::tune::resolve(kind, shape);
+                    layer
+                        .configure_gemm(cfg.backend, choice.threading, choice.k_panel, choice.tile)
+                        .map_err(|error| NetError::Gemm { layer: i, error })?;
+                }
+            }
             let elems = out_dims.0 * out_dims.1 * out_dims.2;
             let parity = i % 2;
             if out_domain.is_quantized() {

@@ -1,0 +1,140 @@
+//! The microbenchmark refiner: time the top-k cost-model candidates
+//! through real [`GemmPlan::run`] calls under a bounded budget and
+//! return measured ns/iteration, fastest first.
+//!
+//! Measurement is optional by design — [`crate::tune::resolve`] never
+//! needs it — and bounded: `Budget` caps both how many candidates are
+//! timed and how long each one runs, so `repro tune --fast` stays
+//! CI-sized. Inputs are synthesized per kind exactly as
+//! `bench::grid::time_algorithm` does, so refined numbers are comparable
+//! to the paper-grid benches.
+
+use crate::gemm::{GemmError, GemmOut, GemmPlan, GemmScratch, Kind, Lhs, Weights};
+use crate::tune::Choice;
+use crate::util::mat::{MatF32, MatU8};
+use crate::util::timer::bench_loop;
+use crate::util::{MatI8, Rng};
+
+/// How much measuring [`refine`] may do.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// Number of candidates timed (the head of the predicted ranking).
+    pub top_k: usize,
+    /// Minimum wall-clock per candidate, seconds.
+    pub min_time_s: f64,
+    /// Iteration cap per candidate.
+    pub max_iters: usize,
+}
+
+impl Budget {
+    /// CI-sized: 2 candidates, ≤ 20 iterations or 50 ms each.
+    pub fn fast() -> Self {
+        Budget { top_k: 2, min_time_s: 0.05, max_iters: 20 }
+    }
+
+    /// The `repro tune` default: 4 candidates, ≤ 60 iterations or
+    /// 250 ms each.
+    pub fn full() -> Self {
+        Budget { top_k: 4, min_time_s: 0.25, max_iters: 60 }
+    }
+}
+
+/// Time the first `budget.top_k` of `cands` (pass them ranked — see
+/// [`crate::tune::rank_predicted`]) on synthesized inputs for
+/// `(kind, shape)`. Returns `(choice, ns_per_iteration)` sorted fastest
+/// first (stable: ties keep the incoming ranking order). Fails only on
+/// plan-construction errors, which a legal candidate cannot cause.
+pub fn refine(
+    kind: Kind,
+    shape: (usize, usize, usize),
+    cands: &[Choice],
+    budget: Budget,
+    seed: u64,
+) -> Result<Vec<(Choice, f64)>, GemmError> {
+    let (m, n, k) = shape;
+    let mut rng = Rng::new(seed);
+    // Synthesize (A, B) per kind, mirroring bench::grid::time_algorithm
+    // (same value domains and U8/U4 zero points).
+    let (a_i8, b_i8): (Option<MatI8>, Option<MatI8>) = match kind {
+        Kind::Bnn | Kind::DaBnn => {
+            (Some(MatI8::random_binary(m, k, &mut rng)), Some(MatI8::random_binary(k, n, &mut rng)))
+        }
+        Kind::Tnn => (Some(MatI8::random_ternary(m, k, &mut rng)), Some(MatI8::random_ternary(k, n, &mut rng))),
+        Kind::Tbn => (Some(MatI8::random_ternary(m, k, &mut rng)), Some(MatI8::random_binary(k, n, &mut rng))),
+        _ => (None, None),
+    };
+    let (a_u8, b_u8): (Option<MatU8>, Option<MatU8>) = match kind {
+        Kind::U8 => (Some(MatU8::random(m, k, &mut rng)), Some(MatU8::random(k, n, &mut rng))),
+        Kind::U4 => {
+            (Some(MatU8::random_below(m, k, 15, &mut rng)), Some(MatU8::random_below(k, n, 15, &mut rng)))
+        }
+        _ => (None, None),
+    };
+    let (a_f32, b_f32): (Option<MatF32>, Option<MatF32>) = match kind {
+        Kind::F32 => (Some(MatF32::random(m, k, &mut rng)), Some(MatF32::random(k, n, &mut rng))),
+        _ => (None, None),
+    };
+    let mut measured: Vec<(Choice, f64)> = Vec::new();
+    for &choice in cands.iter().take(budget.top_k) {
+        let config = choice.to_config(kind);
+        let plan = match (&b_i8, &b_u8, &b_f32) {
+            (Some(b), _, _) => GemmPlan::new(config, Weights::I8(b))?,
+            (_, Some(b), _) => GemmPlan::new(config, Weights::U8 { b, za: 3, zb: 5 })?,
+            (_, _, Some(b)) => GemmPlan::new(config, Weights::F32(b))?,
+            // Every kind fills exactly one matrix group above.
+            _ => return Err(GemmError::EmptyDim { dim: "k" }),
+        };
+        let lhs = match (&a_i8, &a_u8, &a_f32) {
+            (Some(a), _, _) => Lhs::I8(a),
+            (_, Some(a), _) => Lhs::U8(a),
+            (_, _, Some(a)) => Lhs::F32(a),
+            _ => return Err(GemmError::EmptyDim { dim: "m" }),
+        };
+        let mut out = if plan.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+        let mut scratch = GemmScratch::new();
+        // One validated run outside the timed loop: surfaces contract
+        // errors as a typed Result and warms the scratch arena, so the
+        // loop below measures steady state only.
+        plan.run(lhs, &mut out, &mut scratch)?;
+        let stats = bench_loop(budget.min_time_s, budget.max_iters, || {
+            // Validated above; per-iteration results are discarded.
+            let _ = plan.run(lhs, &mut out, &mut scratch);
+        });
+        measured.push((choice, stats.mean * 1e9));
+    }
+    measured.sort_by(|a, b| a.1.total_cmp(&b.1));
+    Ok(measured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::candidates;
+
+    /// A tiny budget against a tiny shape: refine must return one timing
+    /// per requested candidate, all positive.
+    #[test]
+    fn refine_times_top_k() {
+        let shape = (32, 16, 64);
+        let cands = candidates(Kind::Bnn, shape, 2);
+        let budget = Budget { top_k: 2, min_time_s: 0.0, max_iters: 2 };
+        let timed = refine(Kind::Bnn, shape, &cands, budget, 0xBEEF).expect("refine");
+        assert_eq!(timed.len(), 2.min(cands.len()));
+        assert!(timed.iter().all(|(_, ns)| *ns > 0.0));
+        // Sorted ascending.
+        assert!(timed.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    /// Every kind synthesizes a legal input set (the match in `refine`
+    /// covers all seven).
+    #[test]
+    fn refine_covers_all_kinds() {
+        let budget = Budget { top_k: 1, min_time_s: 0.0, max_iters: 1 };
+        for kind in Kind::ALL {
+            let shape = (16, 8, 256);
+            let cands = candidates(kind, shape, 1);
+            let timed = refine(kind, shape, &cands, budget, 7).expect("refine");
+            assert_eq!(timed.len(), 1, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Plan-time autotuning: cost-model-seeded, measurement-refined
+//! selection of the native execution config per `(kind, M, N, K)`.
+//!
+//! The paper's Table II gives per-iteration instruction counts for every
+//! microkernel; [`crate::costmodel::predict`] turns them into a cost
+//! predictor over full multiplication shapes *and* execution configs.
+//! This module closes the loop into a production scheduler:
+//!
+//! 1. [`candidates`] enumerates the legal config space for a shape —
+//!    tile × K-panel × threading cap, pruned to what the native dispatch
+//!    can actually execute (no `Wide` beyond `safe_k`, no threading for
+//!    U4 or row-dot, no caps the row-band split would collapse anyway).
+//! 2. [`rank_predicted`] orders candidates by predicted cycles
+//!    (deterministic: cached traces, stable sort).
+//! 3. [`crate::tune::measure`] optionally refines the top-k through real
+//!    [`crate::gemm::GemmPlan::run`] calls under a bounded budget.
+//! 4. [`crate::tune::store`] persists measured winners as versioned JSON
+//!    keyed by (host fingerprint, kind, shape bucket); `repro tune`
+//!    writes it, `TBGEMM_TUNE_FILE` points later processes at it.
+//! 5. [`resolve`] is the run-time entry point used by
+//!    [`Tile::Tuned`] plans and tuning-enabled
+//!    [`crate::nn::NetPlanConfig`]: store hit → stored choice; miss,
+//!    corrupt file, wrong host, or no file → cost-model-only ranking;
+//!    `TBGEMM_TUNE_DISABLE` → the default config.
+//!
+//! Every choice this module returns only moves the *execution knobs*
+//! (`threading` / `k_panel` / `tile`) of an already-packed plan — never
+//! the packed layout — so tuned plans stay bit-identical to
+//! `Backend::Reference` by the same argument as the hand-picked configs
+//! (pinned by `tests/tuner.rs` across all 7 kinds).
+
+pub mod measure;
+pub mod store;
+
+use crate::costmodel::predict::{predict, Cost};
+use crate::gemm::{safe_k, GemmConfig, KPanel, Kind, Threading, Tile};
+
+pub use store::{StoreEntry, StoreError, TuningStore, STORE_VERSION};
+
+/// One tunable execution config: the three knobs of [`GemmConfig`] that
+/// can change after packing. The default is the crate-wide default
+/// config (single thread, automatic K panels, per-kind default tile).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Choice {
+    pub threading: Threading,
+    pub k_panel: KPanel,
+    pub tile: Tile,
+}
+
+impl Choice {
+    /// The native [`GemmConfig`] this choice denotes for `kind`.
+    pub fn to_config(self, kind: Kind) -> GemmConfig {
+        GemmConfig::native(kind).with_threading(self.threading).with_k_panel(self.k_panel).with_tile(self.tile)
+    }
+
+    /// Compact human label, `tile/k_panel/threading` (e.g.
+    /// `wide/auto/fixed:4`) — the store's serialized vocabulary.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}",
+            store::tile_str(self.tile),
+            store::k_panel_str(self.k_panel),
+            store::threading_str(self.threading)
+        )
+    }
+}
+
+fn add(cands: &mut Vec<Choice>, choice: Choice) {
+    if !cands.contains(&choice) {
+        cands.push(choice);
+    }
+}
+
+/// Worker caps worth trying for an `m`-row product: powers of two up to
+/// `max_workers` plus `max_workers` itself, deduplicated by the worker
+/// count the row-band split actually resolves them to (a 20-row product
+/// can't use more workers than `Fixed(3)` would, however large the cap).
+fn thread_caps(m: usize, max_workers: usize) -> Vec<usize> {
+    let mut caps: Vec<usize> = Vec::new();
+    let mut effective: Vec<usize> = Vec::new();
+    let mut consider = |caps: &mut Vec<usize>, effective: &mut Vec<usize>, cap: usize| {
+        let workers = Threading::Fixed(cap).worker_count(m);
+        if workers > 1 && !effective.contains(&workers) {
+            caps.push(cap);
+            effective.push(workers);
+        }
+    };
+    let mut cap = 2usize;
+    while cap <= max_workers {
+        consider(&mut caps, &mut effective, cap);
+        cap *= 2;
+    }
+    if max_workers >= 2 {
+        consider(&mut caps, &mut effective, max_workers);
+    }
+    caps
+}
+
+/// Enumerate the legal candidate configs for one `(kind, shape)` given a
+/// `max_workers` budget (typically [`crate::util::pool::default_workers`]).
+///
+/// Deterministic: the same arguments always produce the same candidates
+/// in the same order, and the first candidate is always
+/// [`Choice::default`] — rankings built on this are reproducible and
+/// ties resolve toward the default config.
+pub fn candidates(kind: Kind, shape: (usize, usize, usize), max_workers: usize) -> Vec<Choice> {
+    let (m, _n, k) = shape;
+    let mut cands = Vec::new();
+    add(&mut cands, Choice::default());
+    // U4 has no execution knobs: fixed 16-bit-safe depth blocks,
+    // single-threaded by construction.
+    if kind == Kind::U4 {
+        return cands;
+    }
+    let caps = thread_caps(m, max_workers);
+    for &cap in &caps {
+        add(&mut cands, Choice { threading: Threading::Fixed(cap), ..Choice::default() });
+    }
+    // Widened register tiles: BNN/TNN, shallow-K only (the dispatch
+    // falls back past `safe_k`, so deeper candidates would be aliases).
+    if matches!(kind, Kind::Bnn | Kind::Tnn) && k <= safe_k(kind) {
+        add(&mut cands, Choice { tile: Tile::Wide, ..Choice::default() });
+        for &cap in &caps {
+            add(&mut cands, Choice { threading: Threading::Fixed(cap), tile: Tile::Wide, ..Choice::default() });
+        }
+    }
+    // The seed's row-dot baseline (single-threaded, single-panel): the
+    // cost model never picks it, but keeping it in the set lets the
+    // measurement refiner prove that — and catch hosts where the blocked
+    // path regresses.
+    if matches!(kind, Kind::Bnn | Kind::Tnn | Kind::Tbn) {
+        add(&mut cands, Choice { tile: Tile::Rowdot, ..Choice::default() });
+    }
+    // A forced half-depth K panel for deep products: predicted slower
+    // (spill passes), but cache-resident B panels can win on real
+    // hardware — exactly what measurement refinement is for.
+    if matches!(kind, Kind::Bnn | Kind::Tnn | Kind::Tbn) && k > 8192 {
+        add(&mut cands, Choice { k_panel: KPanel::Depth(4096), ..Choice::default() });
+        if let Some(&cap) = caps.last() {
+            add(
+                &mut cands,
+                Choice { threading: Threading::Fixed(cap), k_panel: KPanel::Depth(4096), ..Choice::default() },
+            );
+        }
+    }
+    cands
+}
+
+/// Rank `cands` by predicted cost, cheapest first. The sort is stable,
+/// so equal-cost candidates keep their [`candidates`] order and the
+/// ranking is deterministic end to end.
+pub fn rank_predicted(kind: Kind, shape: (usize, usize, usize), cands: &[Choice]) -> Vec<(Choice, Cost)> {
+    let mut ranked: Vec<(Choice, Cost)> =
+        cands.iter().map(|&c| (c, predict(kind, shape, &c.to_config(kind)))).collect();
+    ranked.sort_by(|a, b| a.1.total().total_cmp(&b.1.total()));
+    ranked
+}
+
+/// Order `cands` by a measurement table (ns per iteration, parallel to
+/// `cands`), fastest first; stable on ties. Extracted from the refiner
+/// so determinism is testable against a fixed table without timing.
+pub fn rank_measured(cands: &[Choice], measured_ns: &[f64]) -> Vec<Choice> {
+    let mut order: Vec<usize> = (0..cands.len().min(measured_ns.len())).collect();
+    order.sort_by(|&a, &b| measured_ns[a].total_cmp(&measured_ns[b]));
+    order.into_iter().map(|i| cands[i]).collect()
+}
+
+/// The best cost-model candidate for `(kind, shape)` under a worker
+/// budget — the store-miss fallback.
+pub fn best_predicted(kind: Kind, shape: (usize, usize, usize), max_workers: usize) -> Choice {
+    let cands = candidates(kind, shape, max_workers);
+    match rank_predicted(kind, shape, &cands).into_iter().next() {
+        Some((choice, _)) => choice,
+        // `candidates` always yields at least the default.
+        None => Choice::default(),
+    }
+}
+
+/// A stored choice can never contain `Tile::Tuned` (the store parser
+/// rejects the label), but resolution must not recurse regardless.
+fn sanitize(choice: Choice) -> Choice {
+    if choice.tile == Tile::Tuned {
+        Choice { tile: Tile::Auto, ..choice }
+    } else {
+        choice
+    }
+}
+
+/// Resolve the execution config for one native multiplication — the
+/// run-time entry point behind [`Tile::Tuned`] and tuning-enabled
+/// `NetPlan`s. Never fails: `TBGEMM_TUNE_DISABLE` → the default config;
+/// store hit → the persisted winner; anything else (no file, corrupt
+/// file, wrong host or version, unknown shape) → cost-model ranking
+/// against the full worker pool.
+pub fn resolve(kind: Kind, shape: (usize, usize, usize)) -> Choice {
+    if crate::util::env::tune_disable() {
+        return Choice::default();
+    }
+    if let Some(choice) = store::global().lookup(kind, shape) {
+        return sanitize(choice);
+    }
+    best_predicted(kind, shape, crate::util::pool::default_workers())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_always_first_candidate() {
+        for kind in Kind::ALL {
+            let cands = candidates(kind, (120, 48, 256), 8);
+            assert_eq!(cands[0], Choice::default(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn u4_has_no_knobs() {
+        assert_eq!(candidates(Kind::U4, (512, 512, 256), 8), vec![Choice::default()]);
+    }
+
+    #[test]
+    fn candidates_are_unique() {
+        for kind in Kind::ALL {
+            for &shape in &[(16, 8, 64), (256, 256, 2048), (128, 128, 40000)] {
+                let cands = candidates(kind, shape, 8);
+                for (i, a) in cands.iter().enumerate() {
+                    assert!(!cands[i + 1..].contains(a), "{kind:?} {shape:?} duplicates {a:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_m_gets_no_threaded_candidates() {
+        // 8 rows resolve to 1 worker at any cap — threading candidates
+        // would all alias the default.
+        for c in candidates(Kind::Bnn, (8, 64, 256), 8) {
+            assert_eq!(c.threading, Threading::Single, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn wide_candidates_respect_safe_k() {
+        let deep = safe_k(Kind::Bnn) + 1;
+        assert!(!candidates(Kind::Bnn, (256, 256, deep), 8).iter().any(|c| c.tile == Tile::Wide));
+        assert!(candidates(Kind::Bnn, (256, 256, 2048), 8).iter().any(|c| c.tile == Tile::Wide));
+    }
+
+    #[test]
+    fn thread_caps_dedupe_by_effective_workers() {
+        // 20 rows → at most 3 row bands: caps 4, 8, and the pool max all
+        // resolve to 3 workers, so only the first distinct cap survives.
+        let caps = thread_caps(20, 8);
+        assert_eq!(caps.len(), 2, "{caps:?}"); // 2 workers, then 3
+    }
+
+    #[test]
+    fn resolve_returns_a_legal_candidate() {
+        for kind in Kind::ALL {
+            let shape = (120, 48, 256);
+            let choice = resolve(kind, shape);
+            let legal = candidates(kind, shape, crate::util::pool::default_workers());
+            assert!(
+                choice == Choice::default() || legal.contains(&choice),
+                "{kind:?} resolved to {choice:?}, not in {legal:?}"
+            );
+        }
+    }
+}

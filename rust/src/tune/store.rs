@@ -1,0 +1,367 @@
+//! The persisted tuning store: versioned JSON keyed by host
+//! fingerprint, kind, and power-of-two shape bucket.
+//!
+//! File format (`STORE_VERSION` 1):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "host": "x86_64-linux-w8",
+//!   "entries": [
+//!     {"kind": "BNN", "m": 256, "n": 256, "k": 2048,
+//!      "threading": "fixed:4", "k_panel": "auto", "tile": "wide",
+//!      "measured_ns": 181250.0, "predicted_cycles": 412000.0}
+//!   ]
+//! }
+//! ```
+//!
+//! `m`/`n`/`k` are **bucketed** dimensions (next power of two), so one
+//! entry covers the neighborhood of shapes it was measured at. The host
+//! fingerprint ties measurements to the machine class that produced
+//! them; a mismatched file is rejected at load (and [`global`] then
+//! falls back to cost-model-only ranking, never an error). Tuning files
+//! are advisory by contract: every failure mode — missing, corrupt,
+//! wrong version, wrong host — degrades to the untuned prediction path.
+
+use crate::gemm::{KPanel, Kind, Threading, Tile};
+use crate::tune::Choice;
+use crate::util::json::{self, Json};
+use std::sync::OnceLock;
+
+/// Current tuning-file format version. Bump on any schema change — old
+/// readers reject newer files (and vice versa) instead of misreading.
+pub const STORE_VERSION: u64 = 1;
+
+/// The machine class a tuning file is valid for: architecture, OS, and
+/// the resolved worker-pool size (a 4-core measurement is wrong for the
+/// same binary on 64 cores).
+pub fn host_fingerprint() -> String {
+    format!("{}-{}-w{}", std::env::consts::ARCH, std::env::consts::OS, crate::util::pool::default_workers())
+}
+
+/// Bucket one dimension to the next power of two (minimum 1), so nearby
+/// shapes share a tuning entry.
+pub fn bucket(dim: usize) -> usize {
+    let d = dim.max(1);
+    d.checked_next_power_of_two().unwrap_or(d)
+}
+
+/// Bucket all three GEMM dimensions.
+pub fn bucket_shape(shape: (usize, usize, usize)) -> (usize, usize, usize) {
+    (bucket(shape.0), bucket(shape.1), bucket(shape.2))
+}
+
+/// One tuned record: the winning choice for a (kind, shape bucket).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreEntry {
+    pub kind: Kind,
+    /// Bucketed dimensions (see [`bucket_shape`]).
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub choice: Choice,
+    /// Measured ns/iteration of the winner (0 when cost-model-seeded
+    /// without refinement).
+    pub measured_ns: f64,
+    /// The cost model's predicted cycles for the winner, kept beside the
+    /// measurement so prediction drift is visible in the file itself.
+    pub predicted_cycles: f64,
+}
+
+/// An in-memory tuning store (see the module docs for the on-disk form).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningStore {
+    pub host: String,
+    pub entries: Vec<StoreEntry>,
+}
+
+/// Why a tuning file could not be used. All variants are non-fatal to
+/// resolution — [`global`] maps every one to the empty store.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoreError {
+    /// The file could not be read.
+    Io(String),
+    /// The file is not valid JSON or misses required fields.
+    Parse(String),
+    /// The file's format version is not [`STORE_VERSION`].
+    Version { got: u64 },
+    /// The file was tuned on a different machine class.
+    HostMismatch { got: String, want: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "tuning file unreadable: {e}"),
+            StoreError::Parse(e) => write!(f, "tuning file malformed: {e}"),
+            StoreError::Version { got } => {
+                write!(f, "tuning file version {got} (this build reads {STORE_VERSION})")
+            }
+            StoreError::HostMismatch { got, want } => {
+                write!(f, "tuning file for host {got}, this host is {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl TuningStore {
+    /// An empty store for this host.
+    pub fn empty() -> Self {
+        TuningStore { host: host_fingerprint(), entries: Vec::new() }
+    }
+
+    /// Insert or replace the entry for `entry`'s (kind, bucket) key.
+    pub fn insert(&mut self, entry: StoreEntry) {
+        let key = (entry.kind, entry.m, entry.n, entry.k);
+        if let Some(slot) = self.entries.iter_mut().find(|e| (e.kind, e.m, e.n, e.k) == key) {
+            *slot = entry;
+        } else {
+            self.entries.push(entry);
+        }
+    }
+
+    /// Record a winner for an (unbucketed) shape.
+    pub fn record(
+        &mut self,
+        kind: Kind,
+        shape: (usize, usize, usize),
+        choice: Choice,
+        measured_ns: f64,
+        predicted_cycles: f64,
+    ) {
+        let (m, n, k) = bucket_shape(shape);
+        self.insert(StoreEntry { kind, m, n, k, choice, measured_ns, predicted_cycles });
+    }
+
+    /// The stored choice for an (unbucketed) shape, if its bucket has one.
+    pub fn lookup(&self, kind: Kind, shape: (usize, usize, usize)) -> Option<Choice> {
+        let (m, n, k) = bucket_shape(shape);
+        self.entries.iter().find(|e| e.kind == kind && (e.m, e.n, e.k) == (m, n, k)).map(|e| e.choice)
+    }
+
+    /// Serialize to the versioned JSON file format.
+    pub fn to_json(&self) -> String {
+        let entries: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| {
+                format!(
+                    "    {{\"kind\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+                     \"threading\": \"{}\", \"k_panel\": \"{}\", \"tile\": \"{}\", \
+                     \"measured_ns\": {:.3}, \"predicted_cycles\": {:.3}}}",
+                    e.kind.label(),
+                    e.m,
+                    e.n,
+                    e.k,
+                    threading_str(e.choice.threading),
+                    k_panel_str(e.choice.k_panel),
+                    tile_str(e.choice.tile),
+                    e.measured_ns,
+                    e.predicted_cycles,
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"version\": {},\n  \"host\": \"{}\",\n  \"entries\": [\n{}\n  ]\n}}\n",
+            STORE_VERSION,
+            self.host,
+            entries.join(",\n")
+        )
+    }
+
+    /// Parse the JSON file format. Checks the version, not the host —
+    /// host validation happens at [`load`](TuningStore::load), where
+    /// "this process should use this file" is the question.
+    pub fn from_json(text: &str) -> Result<TuningStore, StoreError> {
+        let root = json::parse(text).map_err(|e| StoreError::Parse(e.to_string()))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| StoreError::Parse("missing or non-integer \"version\"".into()))?;
+        if version != STORE_VERSION {
+            return Err(StoreError::Version { got: version });
+        }
+        let host = root
+            .get("host")
+            .and_then(Json::as_str)
+            .ok_or_else(|| StoreError::Parse("missing \"host\"".into()))?
+            .to_string();
+        let list = root
+            .get("entries")
+            .and_then(Json::as_array)
+            .ok_or_else(|| StoreError::Parse("missing \"entries\" array".into()))?;
+        let mut entries = Vec::with_capacity(list.len());
+        for item in list {
+            entries.push(parse_entry(item)?);
+        }
+        Ok(TuningStore { host, entries })
+    }
+
+    /// Read and validate a tuning file for *this* process: parse,
+    /// version check, host-fingerprint check.
+    pub fn load<P: AsRef<std::path::Path>>(path: P) -> Result<TuningStore, StoreError> {
+        let text = std::fs::read_to_string(path).map_err(|e| StoreError::Io(e.to_string()))?;
+        let store = Self::from_json(&text)?;
+        let want = host_fingerprint();
+        if store.host != want {
+            return Err(StoreError::HostMismatch { got: store.host, want });
+        }
+        Ok(store)
+    }
+
+    /// Write the store to `path`.
+    pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// The process-wide store behind [`crate::tune::resolve`], loaded once:
+/// the file named by `TBGEMM_TUNE_FILE` when it loads cleanly, the
+/// empty store (→ cost-model-only ranking) on any failure or when the
+/// variable is unset. Failures are deliberately silent — a stale or
+/// foreign tuning file must never break inference.
+pub fn global() -> &'static TuningStore {
+    static STORE: OnceLock<TuningStore> = OnceLock::new();
+    STORE.get_or_init(|| match crate::util::env::tune_file() {
+        Some(path) => TuningStore::load(&path).unwrap_or_else(|_| TuningStore::empty()),
+        None => TuningStore::empty(),
+    })
+}
+
+pub fn threading_str(threading: Threading) -> String {
+    match threading {
+        Threading::Single => "single".into(),
+        Threading::Fixed(n) => format!("fixed:{n}"),
+        Threading::Auto => "auto".into(),
+    }
+}
+
+pub fn k_panel_str(k_panel: KPanel) -> String {
+    match k_panel {
+        KPanel::Auto => "auto".into(),
+        KPanel::Depth(d) => format!("depth:{d}"),
+    }
+}
+
+pub fn tile_str(tile: Tile) -> String {
+    match tile {
+        Tile::Auto => "auto".into(),
+        Tile::Rowdot => "rowdot".into(),
+        Tile::Wide => "wide".into(),
+        // Never serialized: a store resolves *to* concrete tiles. Kept
+        // total so `Choice::label` can print any value.
+        Tile::Tuned => "tuned".into(),
+    }
+}
+
+fn parse_kind(s: &str) -> Option<Kind> {
+    Kind::ALL.into_iter().find(|k| k.label() == s)
+}
+
+fn parse_threading(s: &str) -> Option<Threading> {
+    match s {
+        "single" => Some(Threading::Single),
+        "auto" => Some(Threading::Auto),
+        _ => s.strip_prefix("fixed:").and_then(|n| n.parse::<usize>().ok()).map(Threading::Fixed),
+    }
+}
+
+fn parse_k_panel(s: &str) -> Option<KPanel> {
+    match s {
+        "auto" => Some(KPanel::Auto),
+        _ => s.strip_prefix("depth:").and_then(|d| d.parse::<usize>().ok()).map(KPanel::Depth),
+    }
+}
+
+fn parse_tile(s: &str) -> Option<Tile> {
+    match s {
+        "auto" => Some(Tile::Auto),
+        "rowdot" => Some(Tile::Rowdot),
+        "wide" => Some(Tile::Wide),
+        // "tuned" is intentionally rejected: resolution must terminate.
+        _ => None,
+    }
+}
+
+fn parse_entry(item: &Json) -> Result<StoreEntry, StoreError> {
+    let field = |name: &'static str| {
+        item.get(name).ok_or_else(|| StoreError::Parse(format!("entry missing \"{name}\"")))
+    };
+    let str_field = |name: &'static str| {
+        field(name)?.as_str().map(str::to_string).ok_or_else(|| StoreError::Parse(format!("\"{name}\" not a string")))
+    };
+    let dim_field = |name: &'static str| {
+        field(name)?
+            .as_u64()
+            .map(|v| v as usize)
+            .ok_or_else(|| StoreError::Parse(format!("\"{name}\" not a non-negative integer")))
+    };
+    let kind_s = str_field("kind")?;
+    let kind = parse_kind(&kind_s).ok_or_else(|| StoreError::Parse(format!("unknown kind \"{kind_s}\"")))?;
+    let threading_s = str_field("threading")?;
+    let threading = parse_threading(&threading_s)
+        .ok_or_else(|| StoreError::Parse(format!("unknown threading \"{threading_s}\"")))?;
+    let k_panel_s = str_field("k_panel")?;
+    let k_panel =
+        parse_k_panel(&k_panel_s).ok_or_else(|| StoreError::Parse(format!("unknown k_panel \"{k_panel_s}\"")))?;
+    let tile_s = str_field("tile")?;
+    let tile = parse_tile(&tile_s).ok_or_else(|| StoreError::Parse(format!("unknown tile \"{tile_s}\"")))?;
+    Ok(StoreEntry {
+        kind,
+        m: dim_field("m")?,
+        n: dim_field("n")?,
+        k: dim_field("k")?,
+        choice: Choice { threading, k_panel, tile },
+        measured_ns: field("measured_ns")?.as_f64().unwrap_or(0.0),
+        predicted_cycles: field("predicted_cycles")?.as_f64().unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_powers_of_two() {
+        assert_eq!(bucket(0), 1);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(100), 128);
+        assert_eq!(bucket(128), 128);
+        assert_eq!(bucket_shape((120, 48, 256)), (128, 64, 256));
+    }
+
+    #[test]
+    fn insert_replaces_same_bucket() {
+        let mut s = TuningStore::empty();
+        s.record(Kind::Bnn, (120, 48, 256), Choice::default(), 1.0, 2.0);
+        s.record(Kind::Bnn, (100, 40, 200), Choice { tile: Tile::Wide, ..Choice::default() }, 3.0, 4.0);
+        assert_eq!(s.entries.len(), 1, "same bucket must replace");
+        assert_eq!(s.lookup(Kind::Bnn, (128, 64, 256)).map(|c| c.tile), Some(Tile::Wide));
+        assert_eq!(s.lookup(Kind::Bnn, (1000, 48, 256)), None);
+        assert_eq!(s.lookup(Kind::Tnn, (120, 48, 256)), None);
+    }
+
+    #[test]
+    fn choice_vocabulary_round_trips() {
+        let choices = [
+            Choice::default(),
+            Choice { threading: Threading::Fixed(4), ..Choice::default() },
+            Choice { threading: Threading::Auto, k_panel: KPanel::Depth(4096), tile: Tile::Wide },
+            Choice { tile: Tile::Rowdot, ..Choice::default() },
+        ];
+        for c in choices {
+            assert_eq!(parse_threading(&threading_str(c.threading)), Some(c.threading));
+            assert_eq!(parse_k_panel(&k_panel_str(c.k_panel)), Some(c.k_panel));
+            assert_eq!(parse_tile(&tile_str(c.tile)), Some(c.tile));
+        }
+        assert_eq!(parse_tile("tuned"), None, "a store must never resolve to Tuned");
+    }
+
+    #[test]
+    fn empty_store_serializes_and_parses() {
+        let s = TuningStore::empty();
+        assert_eq!(TuningStore::from_json(&s.to_json()), Ok(s));
+    }
+}

@@ -16,6 +16,11 @@
 //!   ([`force_scalar`]); the CI scalar lane sets this.
 //! * `TBGEMM_PROP_SEED` — property-suite base seed ([`prop_seed`]); the
 //!   CI property lane pins a second seed with it.
+//! * `TBGEMM_TUNE_FILE` — path to the persisted tuning store
+//!   ([`tune_file`]); `repro tune` writes it, [`crate::tune`] loads it.
+//! * `TBGEMM_TUNE_DISABLE` — kill switch for the autotuner
+//!   ([`tune_disable`]): `Tile::Tuned` and `NetPlanConfig` tuning
+//!   resolve to the default config instead.
 
 use std::sync::OnceLock;
 
@@ -50,6 +55,25 @@ pub fn prop_seed() -> Option<u64> {
     *VALUE.get_or_init(|| std::env::var("TBGEMM_PROP_SEED").ok().and_then(|s| s.trim().parse::<u64>().ok()))
 }
 
+/// `TBGEMM_TUNE_FILE`: path to the persisted tuning store consulted by
+/// [`crate::tune::resolve`]. `None` when unset or empty — tuned plans
+/// then fall back to cost-model-only ranking. Read lazily on first
+/// tuned resolution (not at startup), so a process may set it before
+/// building its first tuned plan.
+pub fn tune_file() -> Option<String> {
+    static VALUE: OnceLock<Option<String>> = OnceLock::new();
+    VALUE.get_or_init(|| std::env::var("TBGEMM_TUNE_FILE").ok().filter(|s| !s.is_empty())).clone()
+}
+
+/// `TBGEMM_TUNE_DISABLE`: true for any non-empty value other than `0`.
+/// Disables autotuned resolution entirely — `Tile::Tuned` plans and
+/// tuning-enabled `NetPlan`s run the default config, store or no store.
+/// The escape hatch for debugging a suspect tuning file.
+pub fn tune_disable() -> bool {
+    static VALUE: OnceLock<bool> = OnceLock::new();
+    *VALUE.get_or_init(|| matches!(std::env::var("TBGEMM_TUNE_DISABLE"), Ok(v) if !v.is_empty() && v != "0"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,13 +86,19 @@ mod tests {
     #[test]
     fn accessors_are_stable_across_calls() {
         let (p0, f0, s0) = (pool_threads(), force_scalar(), prop_seed());
+        let (t0, d0) = (tune_file(), tune_disable());
         for _ in 0..3 {
             assert_eq!(pool_threads(), p0);
             assert_eq!(force_scalar(), f0);
             assert_eq!(prop_seed(), s0);
+            assert_eq!(tune_file(), t0);
+            assert_eq!(tune_disable(), d0);
         }
         if let Some(n) = p0 {
             assert!(n >= 1, "pool_threads is clamped to >= 1");
+        }
+        if let Some(path) = &t0 {
+            assert!(!path.is_empty(), "tune_file filters empty values");
         }
     }
 }

@@ -10,6 +10,7 @@
 //! subset of their functionality the rest of the crate needs.
 
 pub mod env;
+pub mod json;
 pub mod mat;
 pub mod pool;
 pub mod prng;

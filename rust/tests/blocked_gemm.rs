@@ -143,6 +143,47 @@ fn u8_and_u4_all_backends_match_oracle() {
     }
 }
 
+/// `GemmConfig::tuned` resolves execution knobs at run time — from the
+/// cost model, or from the tuning file when `TBGEMM_TUNE_FILE` is set
+/// (CI re-runs this test exactly that way after `repro tune --fast`).
+/// Whatever the resolution source, every kind stays bit-identical to the
+/// untuned native plan on the adversarial shapes.
+#[test]
+fn tuned_plans_match_untuned_on_adversarial_shapes() {
+    let mut rng = Rng::new(0xB10);
+    for &(m, n, k) in &SHAPES {
+        let ab = MatI8::random_binary(m, k, &mut rng);
+        let bb = MatI8::random_binary(k, n, &mut rng);
+        let at = MatI8::random_ternary(m, k, &mut rng);
+        let bt = MatI8::random_ternary(k, n, &mut rng);
+        let a8 = MatU8::random_below(m, k, 15, &mut rng);
+        let b8 = MatU8::random_below(k, n, 15, &mut rng);
+        let af = MatF32::random(m, k, &mut rng);
+        let bf = MatF32::random(k, n, &mut rng);
+        for kind in Kind::ALL {
+            let (weights, lhs): (Weights<'_>, Lhs<'_>) = match kind {
+                Kind::Bnn | Kind::DaBnn => (Weights::I8(&bb), Lhs::I8(&ab)),
+                Kind::Tnn => (Weights::I8(&bt), Lhs::I8(&at)),
+                Kind::Tbn => (Weights::I8(&bb), Lhs::I8(&at)),
+                Kind::U8 | Kind::U4 => (Weights::U8 { b: &b8, za: 3, zb: 5 }, Lhs::U8(&a8)),
+                Kind::F32 => (Weights::F32(&bf), Lhs::F32(&af)),
+            };
+            let tuned = GemmPlan::new(GemmConfig::tuned(kind), weights).expect("tuned plan");
+            let native = GemmPlan::new(GemmConfig::native(kind), weights).expect("native plan");
+            let (got, want) = (run_plan(&tuned, lhs), run_plan(&native, lhs));
+            match (&got, &want) {
+                (GemmOut::I32(c), GemmOut::I32(w)) => {
+                    assert_eq!(c.data, w.data, "{kind:?} m={m} n={n} k={k}")
+                }
+                (GemmOut::F32(c), GemmOut::F32(w)) => {
+                    assert_eq!(c.data, w.data, "{kind:?} m={m} n={n} k={k}")
+                }
+                _ => panic!("{kind:?}: output variants diverged"),
+            }
+        }
+    }
+}
+
 /// Worker-pool stress: many caller threads hammer multithreaded
 /// `GemmPlan::run`s through the one process-wide pool **concurrently**
 /// (shared plans, per-caller scratch — exactly the serving stack's

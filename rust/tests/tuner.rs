@@ -1,0 +1,261 @@
+//! Contract tests for the plan-time autotuner (`tbgemm::tune`): the
+//! tuning store's JSON round-trip, every loader failure mode degrading
+//! to a typed error (never a panic), deterministic candidate rankings,
+//! and the headline differential — tuned plans bit-identical to
+//! `Backend::Reference` across all 7 kinds, at both the GEMM and the
+//! network level.
+
+use tbgemm::conv::tensor::Tensor3;
+use tbgemm::gemm::{
+    Backend, GemmConfig, GemmOut, GemmPlan, GemmScratch, KPanel, Kind, Lhs, Threading, Tile, Weights,
+};
+use tbgemm::nn::builder::plan_from_config;
+use tbgemm::nn::{NetConfig, NetOut, NetPlanConfig};
+use tbgemm::tune::{self, measure, Choice, StoreError, TuningStore};
+use tbgemm::util::mat::{MatF32, MatI8, MatU8};
+use tbgemm::util::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tbgemm_tuner_{}_{name}.json", std::process::id()))
+}
+
+// ---- the persisted store ------------------------------------------------
+
+/// The full serialized vocabulary survives a JSON round-trip: every tile,
+/// K-panel, and threading spelling, plus measurement floats (values exact
+/// at the 3-decimal precision `to_json` writes).
+#[test]
+fn store_json_round_trips() {
+    let mut s = TuningStore::empty();
+    s.record(
+        Kind::Bnn,
+        (120, 48, 256),
+        Choice { tile: Tile::Wide, threading: Threading::Fixed(4), ..Choice::default() },
+        1812.5,
+        41200.0,
+    );
+    s.record(
+        Kind::Tnn,
+        (256, 256, 2048),
+        Choice { k_panel: KPanel::Depth(4096), ..Choice::default() },
+        0.0,
+        99.125,
+    );
+    s.record(Kind::Tbn, (16, 8, 64), Choice { tile: Tile::Rowdot, ..Choice::default() }, 3.0, 4.0);
+    s.record(Kind::U4, (16, 8, 64), Choice::default(), 3.5, 4.75);
+    s.record(Kind::F32, (1, 10, 256), Choice { threading: Threading::Auto, ..Choice::default() }, 7.5, 8.25);
+    assert_eq!(TuningStore::from_json(&s.to_json()), Ok(s));
+}
+
+/// Every way a tuning file can be unusable is a typed `StoreError`, and a
+/// file this host wrote loads back equal. `resolve` maps each failure to
+/// the empty store, so none of these can break inference.
+#[test]
+fn loader_failure_modes_are_typed() {
+    // Missing file.
+    let missing = tmp("missing");
+    let _ = std::fs::remove_file(&missing);
+    assert!(matches!(TuningStore::load(&missing), Err(StoreError::Io(_))));
+
+    // Corrupt JSON.
+    let corrupt = tmp("corrupt");
+    std::fs::write(&corrupt, "{not json").expect("write corrupt");
+    assert!(matches!(TuningStore::load(&corrupt), Err(StoreError::Parse(_))));
+    std::fs::remove_file(&corrupt).expect("cleanup");
+
+    // Unknown format version.
+    let vers = tmp("version");
+    std::fs::write(&vers, "{\"version\": 99, \"host\": \"x\", \"entries\": []}").expect("write version");
+    assert_eq!(TuningStore::load(&vers), Err(StoreError::Version { got: 99 }));
+    std::fs::remove_file(&vers).expect("cleanup");
+
+    // A `"tile": "tuned"` entry is rejected (resolution must terminate).
+    let tuned = tmp("tuned_tile");
+    std::fs::write(
+        &tuned,
+        format!(
+            "{{\"version\": 1, \"host\": \"{}\", \"entries\": [{{\"kind\": \"BNN\", \
+             \"m\": 16, \"n\": 8, \"k\": 64, \"threading\": \"single\", \"k_panel\": \"auto\", \
+             \"tile\": \"tuned\", \"measured_ns\": 0, \"predicted_cycles\": 0}}]}}",
+            tune::store::host_fingerprint()
+        ),
+    )
+    .expect("write tuned-tile");
+    assert!(matches!(TuningStore::load(&tuned), Err(StoreError::Parse(_))));
+    std::fs::remove_file(&tuned).expect("cleanup");
+
+    // Wrong host fingerprint: parses, but this process must not use it.
+    let alien = tmp("host");
+    let mut s = TuningStore::empty();
+    s.host = "alien-arch-w999".into();
+    s.save(&alien).expect("write alien");
+    match TuningStore::load(&alien) {
+        Err(StoreError::HostMismatch { got, want }) => {
+            assert_eq!(got, "alien-arch-w999");
+            assert_eq!(want, tune::store::host_fingerprint());
+        }
+        other => panic!("expected HostMismatch, got {other:?}"),
+    }
+    std::fs::remove_file(&alien).expect("cleanup");
+
+    // A file written by this host loads back equal.
+    let good = tmp("good");
+    let mut s = TuningStore::empty();
+    s.record(Kind::Bnn, (120, 48, 256), Choice { tile: Tile::Wide, ..Choice::default() }, 100.0, 200.0);
+    s.save(&good).expect("write good");
+    assert_eq!(TuningStore::load(&good), Ok(s));
+    std::fs::remove_file(&good).expect("cleanup");
+}
+
+// ---- deterministic rankings ---------------------------------------------
+
+/// Candidate enumeration and both rankings are bit-reproducible, and the
+/// measured ranking is the exact stable order of its timing table.
+#[test]
+fn rankings_are_deterministic() {
+    for kind in Kind::ALL {
+        for &shape in &[(120usize, 48usize, 256usize), (256, 256, 2048)] {
+            let c1 = tune::candidates(kind, shape, 8);
+            let c2 = tune::candidates(kind, shape, 8);
+            assert_eq!(c1, c2, "{kind:?} {shape:?} candidates");
+            assert_eq!(
+                tune::rank_predicted(kind, shape, &c1),
+                tune::rank_predicted(kind, shape, &c2),
+                "{kind:?} {shape:?} predicted ranking"
+            );
+        }
+    }
+    // Fixed measurement table → exact order; the 3.0 tie keeps input
+    // order (stable sort), and a short table truncates the ranking.
+    let c0 = Choice::default();
+    let c1 = Choice { threading: Threading::Fixed(2), ..Choice::default() };
+    let c2 = Choice { threading: Threading::Fixed(4), ..Choice::default() };
+    let c3 = Choice { tile: Tile::Wide, ..Choice::default() };
+    assert_eq!(tune::rank_measured(&[c0, c1, c2, c3], &[5.0, 3.0, 3.0, 1.0]), vec![c3, c1, c2, c0]);
+    assert_eq!(tune::rank_measured(&[c0, c1, c2, c3], &[2.0]), vec![c0]);
+}
+
+/// The whole pipeline at API level: enumerate → rank → refine → record →
+/// look up from a bucketed neighbor shape.
+#[test]
+fn refine_and_record_round_trip() {
+    let shape = (48, 32, 256);
+    let cands = tune::candidates(Kind::Tnn, shape, 4);
+    let ranked = tune::rank_predicted(Kind::Tnn, shape, &cands);
+    let top: Vec<Choice> = ranked.iter().map(|(c, _)| *c).collect();
+    let budget = measure::Budget { top_k: 2, min_time_s: 0.0, max_iters: 2 };
+    let timed = measure::refine(Kind::Tnn, shape, &top, budget, 42).expect("refine");
+    let (winner, ns) = timed[0];
+    let mut store = TuningStore::empty();
+    store.record(Kind::Tnn, shape, winner, ns, ranked[0].1.total());
+    // (40, 20, 250) buckets to the same (64, 32, 256) key.
+    assert_eq!(store.lookup(Kind::Tnn, (40, 20, 250)), Some(winner));
+    assert_eq!(store.lookup(Kind::Tnn, (400, 20, 250)), None);
+}
+
+// ---- tuned ≡ reference differentials ------------------------------------
+
+/// `GemmConfig::tuned` resolves per-shape execution knobs at run time,
+/// and the result stays bit-identical to the untuned native plan for
+/// every kind (tuning never moves the packed layout) and to
+/// `Backend::Reference` (exactly for integer kinds; f32 kinds within the
+/// blocked-accumulation tolerance the backend differential tests use).
+#[test]
+fn tuned_plans_match_reference_all_kinds() {
+    let mut rng = Rng::new(0x7E57);
+    for &(m, n, k) in &[(13usize, 31usize, 130usize), (65, 24, 512)] {
+        let b_bin = MatI8::random_binary(k, n, &mut rng);
+        let b_ter = MatI8::random_ternary(k, n, &mut rng);
+        let b_u8 = MatU8::random_below(k, n, 15, &mut rng);
+        let b_f32 = MatF32::random(k, n, &mut rng);
+        let a_bin = MatI8::random_binary(m, k, &mut rng);
+        let a_ter = MatI8::random_ternary(m, k, &mut rng);
+        let a_u8 = MatU8::random_below(m, k, 15, &mut rng);
+        let a_f32 = MatF32::random(m, k, &mut rng);
+        for kind in Kind::ALL {
+            let weights = match kind {
+                Kind::Bnn | Kind::Tbn | Kind::DaBnn => Weights::I8(&b_bin),
+                Kind::Tnn => Weights::I8(&b_ter),
+                Kind::U8 | Kind::U4 => Weights::U8 { b: &b_u8, za: 3, zb: 5 },
+                Kind::F32 => Weights::F32(&b_f32),
+            };
+            let lhs = match kind {
+                Kind::Bnn | Kind::DaBnn => Lhs::I8(&a_bin),
+                Kind::Tnn | Kind::Tbn => Lhs::I8(&a_ter),
+                Kind::U8 | Kind::U4 => Lhs::U8(&a_u8),
+                Kind::F32 => Lhs::F32(&a_f32),
+            };
+            let tuned = GemmPlan::new(GemmConfig::tuned(kind), weights).expect("tuned plan");
+            let native = GemmPlan::new(GemmConfig::native(kind), weights).expect("native plan");
+            let reference = GemmPlan::new(GemmConfig::reference(kind), weights).expect("reference plan");
+            let mut scratch = GemmScratch::new();
+            let mut out_t = if tuned.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+            let mut out_n = if tuned.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+            let mut out_r = if tuned.output_is_f32() { GemmOut::new_f32() } else { GemmOut::new_i32() };
+            tuned.run(lhs, &mut out_t, &mut scratch).expect("tuned run");
+            native.run(lhs, &mut out_n, &mut scratch).expect("native run");
+            reference.run(lhs, &mut out_r, &mut scratch).expect("reference run");
+            // Tuning only moves execution knobs of the packed plan: the
+            // tuned output is bit-identical to the untuned native one.
+            match (&out_t, &out_n) {
+                (GemmOut::I32(c), GemmOut::I32(w)) => assert_eq!(c.data, w.data, "{kind:?} {m}x{n}x{k} vs native"),
+                (GemmOut::F32(c), GemmOut::F32(w)) => assert_eq!(c.data, w.data, "{kind:?} {m}x{n}x{k} vs native"),
+                _ => panic!("{kind:?}: output variants diverged"),
+            }
+            match (&out_t, &out_r) {
+                (GemmOut::I32(c), GemmOut::I32(w)) => {
+                    assert_eq!(c.data, w.data, "{kind:?} {m}x{n}x{k} vs reference")
+                }
+                (GemmOut::F32(c), GemmOut::F32(w)) => {
+                    for (x, y) in c.data.iter().zip(&w.data) {
+                        assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{kind:?} {m}x{n}x{k}: {x} vs {y}");
+                    }
+                }
+                _ => panic!("{kind:?}: output variants diverged"),
+            }
+        }
+    }
+}
+
+/// A store-driven choice (the path `resolve` takes on a store hit) runs
+/// through the plan API and stays exact against the reference oracle.
+#[test]
+fn store_choice_drives_the_plan() {
+    let mut store = TuningStore::empty();
+    let shape = (65, 24, 512);
+    let choice = Choice { tile: Tile::Wide, threading: Threading::Fixed(2), ..Choice::default() };
+    store.record(Kind::Bnn, shape, choice, 0.0, 0.0);
+    let resolved = store.lookup(Kind::Bnn, (70, 20, 500)).expect("same bucket");
+    assert_eq!(resolved, choice);
+    let mut rng = Rng::new(0x57);
+    let a = MatI8::random_binary(65, 512, &mut rng);
+    let b = MatI8::random_binary(512, 24, &mut rng);
+    let plan = GemmPlan::new(resolved.to_config(Kind::Bnn), Weights::I8(&b)).expect("tuned-choice plan");
+    let oracle = GemmPlan::new(GemmConfig::reference(Kind::Bnn), Weights::I8(&b)).expect("reference plan");
+    let (mut out, mut want) = (GemmOut::new_i32(), GemmOut::new_i32());
+    let mut scratch = GemmScratch::new();
+    plan.run(Lhs::I8(&a), &mut out, &mut scratch).expect("tuned-choice run");
+    oracle.run(Lhs::I8(&a), &mut want, &mut scratch).expect("reference run");
+    assert_eq!(out.as_i32().expect("i32 out").data, want.as_i32().expect("i32 out").data);
+}
+
+/// `NetPlanConfig::with_tuning(true)` resolves every GEMM layer's config
+/// through the tuner and the whole-network logits stay bit-identical to
+/// the Reference backend — the issue's acceptance differential.
+#[test]
+fn tuned_net_plan_logits_match_reference() {
+    let cfg = NetConfig::tiny_tnn(8, 8, 1, 3);
+    let tuned =
+        plan_from_config(&cfg, 0xBEEF, NetPlanConfig::default().with_tuning(true)).expect("tuned plan");
+    let reference = plan_from_config(&cfg, 0xBEEF, NetPlanConfig::default().with_backend(Backend::Reference))
+        .expect("reference plan");
+    let (mut out_t, mut out_r) = (NetOut::new(), NetOut::new());
+    let (mut s_t, mut s_r) = (tuned.make_scratch(), reference.make_scratch());
+    let mut rng = Rng::new(0x11);
+    for i in 0..4 {
+        let img = Tensor3::random(8, 8, 1, &mut rng);
+        tuned.run(&img, &mut out_t, &mut s_t).expect("tuned run");
+        reference.run(&img, &mut out_r, &mut s_r).expect("reference run");
+        assert_eq!(out_t.logits, out_r.logits, "image {i}");
+    }
+}
